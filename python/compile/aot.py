@@ -1,0 +1,66 @@
+"""AOT lowering: JAX → HLO text artifacts for the Rust PJRT runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids, so text round-trips cleanly. Lowered with
+`return_tuple=True`; the Rust side unwraps with `Literal::to_tuple`.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, *args) -> str:
+    """Lower a function to HLO text via StableHLO → XlaComputation."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_specs():
+    """(name, fn, example_args) for every artifact."""
+    f32 = jnp.float32
+    bp = jax.ShapeDtypeStruct((model.SCORE_BATCH, model.SCORE_PORTS), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    return [
+        ("tera_score", model.score_batch, (bp, bp, bp, scalar)),
+        (
+            "analytic",
+            model.analytic_grid,
+            (jax.ShapeDtypeStruct((model.ANALYTIC_K,), f32),),
+        ),
+        (
+            "telemetry",
+            model.telemetry,
+            (jax.ShapeDtypeStruct((model.TELEMETRY_N,), f32), scalar),
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name, fn, ex in artifact_specs():
+        text = to_hlo_text(fn, *ex)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Layer-1 Pallas kernel: the Appendix-B throughput surface
+`T(p) = 1 / (1 + 1/p)` evaluated over a grid of main-link ratios.
+
+Tiny by design — the value of compiling it is that the Figure-4 bench and
+the Rust CLI evaluate the paper's analytic model through the same AOT
+artifact path as the scoring kernel (one code path, one validation story).
+Elementwise VPU math, one VMEM tile; `interpret=True` for CPU-PJRT
+executability.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _analytic_kernel(p_ref, o_ref):
+    p = p_ref[...]
+    safe = jnp.where(p > 0.0, p, 1.0)
+    est = 1.0 / (1.0 + 1.0 / safe)
+    o_ref[...] = jnp.where(p > 0.0, est, 0.0)
+
+
+@jax.jit
+def analytic_throughput(p):
+    """Elementwise `1/(1+1/p)` with `T(0) = 0`; f32[K] → f32[K]."""
+    (k,) = p.shape
+    return pl.pallas_call(
+        _analytic_kernel,
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.float32),
+        interpret=True,
+    )(p.astype(jnp.float32))

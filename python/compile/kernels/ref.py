@@ -1,0 +1,59 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: `pytest python/tests` checks every
+Pallas kernel against its oracle across shape/value sweeps (hypothesis), and
+the Rust side re-validates the AOT artifacts against its own reimplementation
+(`tera-net validate-artifacts`).
+"""
+
+import jax.numpy as jnp
+
+# Weight assigned to masked-out (invalid) candidate ports. Large enough to
+# never win, small enough to stay exactly representable in f32 arithmetic.
+INF = 1.0e30
+
+
+def tera_score_ref(occ, direct, valid, q):
+    """Algorithm-1 port scoring, batched.
+
+    Args:
+      occ:    f32[B, P] — output-port occupancy in flits.
+      direct: f32[B, P] — 1.0 where the port connects to the destination.
+      valid:  f32[B, P] — 1.0 where the port is a legal candidate.
+      q:      f32[]     — non-minimal penalty (the paper's q = 54).
+
+    Returns:
+      f32[2, B]: row 0 = argmin port index (first minimum, as f32),
+                 row 1 = the winning weight.
+    """
+    w = occ + q * (1.0 - direct) + INF * (1.0 - valid)
+    choice = jnp.argmin(w, axis=1).astype(jnp.float32)
+    weight = jnp.min(w, axis=1)
+    return jnp.stack([choice, weight])
+
+
+def analytic_ref(p):
+    """Appendix-B throughput estimate `1 / (1 + 1/p)` elementwise.
+
+    `p` is the main-topology link ratio; p = 0 (a service-only switch) maps
+    to 0 throughput.
+    """
+    safe = jnp.where(p > 0.0, p, 1.0)
+    est = 1.0 / (1.0 + 1.0 / safe)
+    return jnp.where(p > 0.0, est, 0.0)
+
+
+def telemetry_ref(x, count):
+    """Jain index + load moments over the first `count` entries of x.
+
+    Padding entries (index >= count) must be zero; with non-negative loads
+    the sums and the max are then unaffected by padding.
+
+    Returns f32[3]: [jain, mean, max].
+    """
+    s = jnp.sum(x)
+    s2 = jnp.sum(x * x)
+    jain = jnp.where(s2 > 0.0, s * s / (count * s2), 1.0)
+    mean = s / count
+    mx = jnp.max(x)
+    return jnp.stack([jain, mean, mx])

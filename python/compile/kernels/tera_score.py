@@ -1,0 +1,62 @@
+"""Layer-1 Pallas kernel: batched TERA port scoring (Algorithm 1's weight
+computation + masked argmin over candidate ports).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): this is a VPU reduction, not
+an MXU matmul. One grid step holds the whole [B, P] tile in VMEM
+(64×64 f32 ≈ 16 KiB per operand, far under the ~16 MiB budget); for larger
+switch batches the BlockSpec tiles the batch dimension (`block_b`) so each
+step stays VMEM-resident. `interpret=True` keeps the kernel executable on
+the CPU PJRT plugin (real-TPU lowering emits a Mosaic custom-call the CPU
+client cannot run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INF
+
+
+def _score_kernel(occ_ref, direct_ref, valid_ref, q_ref, o_ref):
+    """One batch tile: weight = occ + q·(1−direct) + INF·(1−valid)."""
+    occ = occ_ref[...]
+    direct = direct_ref[...]
+    valid = valid_ref[...]
+    q = q_ref[0]
+    w = occ + q * (1.0 - direct) + INF * (1.0 - valid)
+    # First-minimum argmin (matches RustScorer's tie-break exactly).
+    choice = jnp.argmin(w, axis=1).astype(jnp.float32)
+    weight = jnp.min(w, axis=1)
+    o_ref[0, :] = choice
+    o_ref[1, :] = weight
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def tera_score(occ, direct, valid, q, *, block_b=None):
+    """Batched Algorithm-1 scoring; returns f32[2, B] (choices, weights).
+
+    `block_b` tiles the batch dimension through VMEM; the default uses a
+    single tile (the artifact shape 64×64 fits trivially).
+    """
+    b, p = occ.shape
+    if block_b is None or block_b >= b:
+        block_b = b
+    assert b % block_b == 0, "batch must divide the block size"
+    grid = (b // block_b,)
+    q_arr = jnp.reshape(q.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, p), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, p), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, p), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((2, block_b), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((2, b), jnp.float32),
+        interpret=True,
+    )(occ.astype(jnp.float32), direct.astype(jnp.float32),
+      valid.astype(jnp.float32), q_arr)

@@ -1,0 +1,51 @@
+"""Layer-2 JAX model: the computations the Rust coordinator consumes,
+composed from the Layer-1 Pallas kernels.
+
+Three exported functions (all lowered by `aot.py`):
+
+* `score_batch`   — Algorithm-1 routing decisions over a 64×64 batch
+                    (calls the `tera_score` Pallas kernel);
+* `analytic_grid` — the Figure-4 throughput surface (calls the `analytic`
+                    Pallas kernel);
+* `telemetry`     — Jain fairness index + load moments (pure jnp reduction;
+                    there is no hot-spot to kernelize here).
+
+Python never runs at simulation time: these lower once to HLO text and the
+Rust runtime executes them through PJRT.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.analytic import analytic_throughput
+from .kernels.tera_score import tera_score
+
+# Fixed AOT shapes (mirrored by rust/src/runtime/: TeraScorer::{BATCH,PORTS},
+# AnalyticModel::K, Telemetry::N).
+SCORE_BATCH = 64
+SCORE_PORTS = 64
+ANALYTIC_K = 64
+TELEMETRY_N = 4096
+
+
+def score_batch(occ, direct, valid, q):
+    """Route a batch of head packets: f32[B,P]×3 + f32[] → f32[2,B]."""
+    return tera_score(occ, direct, valid, q)
+
+
+def analytic_grid(p):
+    """Figure-4 curve evaluation: f32[K] → f32[K]."""
+    return analytic_throughput(p)
+
+
+def telemetry(x, count):
+    """Jain index, mean and max of the first `count` per-server loads.
+
+    `x` is zero-padded to TELEMETRY_N; loads are non-negative so the padded
+    sums/max are exact. Returns f32[3].
+    """
+    s = jnp.sum(x)
+    s2 = jnp.sum(x * x)
+    jain = jnp.where(s2 > 0.0, s * s / (count * s2), 1.0)
+    mean = s / count
+    mx = jnp.max(x)
+    return jnp.stack([jain, mean, mx])

@@ -1,0 +1,129 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; `assert_allclose` against ref.py is the
+core correctness signal of the build-time Python layer.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+from numpy.testing import assert_allclose
+
+from compile.kernels.analytic import analytic_throughput
+from compile.kernels.ref import analytic_ref, telemetry_ref, tera_score_ref
+from compile.kernels.tera_score import tera_score
+from compile import model
+
+
+def _random_batch(rng, b, p, q):
+    occ = rng.integers(0, 400, size=(b, p)).astype(np.float32)
+    direct = (rng.random((b, p)) < 0.1).astype(np.float32)
+    valid = (rng.random((b, p)) < 0.8).astype(np.float32)
+    # Every row needs at least one valid port for a meaningful argmin
+    # (all-invalid rows are still well-defined: weight ≈ INF, port 0).
+    valid[np.arange(b), rng.integers(0, p, size=b)] = 1.0
+    return occ, direct, valid, np.float32(q)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 8, 64]),
+    p=st.sampled_from([2, 8, 63, 64]),
+    q=st.sampled_from([0.0, 16.0, 54.0, 128.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_tera_score_matches_ref(b, p, q, seed):
+    rng = np.random.default_rng(seed)
+    occ, direct, valid, qq = _random_batch(rng, b, p, q)
+    got = np.asarray(tera_score(jnp.asarray(occ), jnp.asarray(direct),
+                                jnp.asarray(valid), jnp.asarray(qq)))
+    want = np.asarray(tera_score_ref(jnp.asarray(occ), jnp.asarray(direct),
+                                     jnp.asarray(valid), jnp.asarray(qq)))
+    assert got.shape == (2, b)
+    # Choices must agree exactly; weights to f32 round-off.
+    assert_allclose(got[0], want[0], rtol=0, atol=0)
+    assert_allclose(got[1], want[1], rtol=1e-6)
+
+
+def test_tera_score_blocked_grid_matches_single_tile():
+    rng = np.random.default_rng(7)
+    occ, direct, valid, q = _random_batch(rng, 64, 64, 54.0)
+    whole = np.asarray(tera_score(jnp.asarray(occ), jnp.asarray(direct),
+                                  jnp.asarray(valid), jnp.asarray(q)))
+    tiled = np.asarray(tera_score(jnp.asarray(occ), jnp.asarray(direct),
+                                  jnp.asarray(valid), jnp.asarray(q),
+                                  block_b=16))
+    assert_allclose(whole, tiled, rtol=0, atol=0)
+
+
+def test_tera_score_prefers_direct_under_penalty():
+    occ = jnp.asarray([[40.0, 10.0, 0.0, 0.0]], dtype=jnp.float32)
+    direct = jnp.asarray([[1.0, 0.0, 0.0, 0.0]], dtype=jnp.float32)
+    valid = jnp.ones((1, 4), dtype=jnp.float32)
+    out = np.asarray(tera_score(occ, direct, valid, jnp.float32(54.0)))
+    assert out[0, 0] == 0.0  # direct wins: 40 < min(64, 54, 54)
+    assert out[1, 0] == 40.0
+
+
+def test_tera_score_deroutes_when_congested():
+    occ = jnp.asarray([[100.0, 10.0, 20.0, 5.0]], dtype=jnp.float32)
+    direct = jnp.asarray([[1.0, 0.0, 0.0, 0.0]], dtype=jnp.float32)
+    valid = jnp.ones((1, 4), dtype=jnp.float32)
+    out = np.asarray(tera_score(occ, direct, valid, jnp.float32(54.0)))
+    assert out[0, 0] == 3.0  # 5 + 54 = 59 < 100
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.sampled_from([1, 7, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_analytic_matches_ref(k, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.random(k).astype(np.float32)
+    p[rng.random(k) < 0.1] = 0.0  # exercise the p=0 guard
+    got = np.asarray(analytic_throughput(jnp.asarray(p)))
+    want = np.asarray(analytic_ref(jnp.asarray(p)))
+    assert_allclose(got, want, rtol=1e-6)
+
+
+def test_analytic_known_values():
+    p = jnp.asarray([1.0, 0.5, 0.0], dtype=jnp.float32)
+    got = np.asarray(analytic_throughput(p))
+    assert_allclose(got, [0.5, 1.0 / 3.0, 0.0], rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([1, 10, 1000]), seed=st.integers(0, 2**16))
+def test_telemetry_matches_ref_and_numpy(n, seed):
+    rng = np.random.default_rng(seed)
+    x = np.zeros(model.TELEMETRY_N, dtype=np.float32)
+    loads = rng.integers(0, 100, size=n).astype(np.float32)
+    x[:n] = loads
+    got = np.asarray(model.telemetry(jnp.asarray(x), jnp.float32(n)))
+    want = np.asarray(telemetry_ref(jnp.asarray(x), jnp.float32(n)))
+    assert_allclose(got, want, rtol=1e-6)
+    # Cross-check against numpy-computed Jain.
+    s, s2 = loads.sum(), (loads.astype(np.float64) ** 2).sum()
+    if s2 > 0:
+        assert_allclose(got[0], s * s / (n * s2), rtol=1e-4)
+    assert_allclose(got[1], loads.sum() / n, rtol=1e-4)
+    assert_allclose(got[2], loads.max() if n else 0.0, rtol=0)
+
+
+def test_telemetry_uniform_load_is_perfectly_fair():
+    x = np.zeros(model.TELEMETRY_N, dtype=np.float32)
+    x[:100] = 5.0
+    got = np.asarray(model.telemetry(jnp.asarray(x), jnp.float32(100)))
+    assert_allclose(got, [1.0, 5.0, 5.0], rtol=1e-6)
+
+
+def test_score_shapes_match_rust_constants():
+    # rust/src/runtime/scorer.rs pins BATCH=64, PORTS=64; keep in sync.
+    assert model.SCORE_BATCH == 64
+    assert model.SCORE_PORTS == 64
+    assert model.ANALYTIC_K == 64
+    assert model.TELEMETRY_N == 4096

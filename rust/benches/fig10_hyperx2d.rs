@@ -1,0 +1,31 @@
+//! Figure 10 — 2D-HyperX evaluation: All2All and All-reduce completion
+//! under DOR-TERA-HX3 (1 VC), O1TURN-TERA-HX3 (2 VCs), Dim-WAR (2 VCs),
+//! Omni-WAR (4 VCs).
+//!
+//! Paper expectations (§6.5): DOR-TERA competitive with minimal resources;
+//! O1TURN-TERA near Omni-WAR at half the buffers and up to ~32% better
+//! than Dim-WAR at equal buffers.
+
+use tera_net::coordinator::figures::{self, Scale};
+use tera_net::util::Timer;
+
+fn main() {
+    let t = Timer::start();
+    let scale = Scale::from_env(false);
+    match figures::fig10(scale, 1) {
+        Ok(report) => {
+            print!("{report}");
+            println!(
+                "\npaper-vs-measured checklist (§6.5):\n\
+                 [shape 1] DOR-TERA (1 VC) within striking distance of the rest\n\
+                 [shape 2] O1TURN-TERA (2 VCs) ≈ Omni-WAR (4 VCs)\n\
+                 [shape 3] O1TURN-TERA ≤ Dim-WAR at the same VC count"
+            );
+        }
+        Err(e) => {
+            eprintln!("fig10 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!("fig10 bench wall time: {:.1}s ({scale:?})", t.elapsed_secs());
+}

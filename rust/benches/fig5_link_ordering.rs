@@ -1,0 +1,33 @@
+//! Figure 5 — link-ordering schemes under fixed generation
+//! (shift / complement / RSP bursts).
+//!
+//! Paper expectations (§6.1): sRINR ≤ bRINR completion time everywhere
+//! (~9× faster on shift, ~3.8× on RSP); complement is the worst case for
+//! both orderings (> 2.3× Valiant); Valiant is the best of the
+//! non-minimal baselines on these adversarial patterns (at 2× the buffer
+//! cost). Set FULL=1 for the paper-scale FM64 × 64 servers × 1250 pkts.
+
+use tera_net::coordinator::figures::{self, Scale};
+use tera_net::util::Timer;
+
+fn main() {
+    let t = Timer::start();
+    let scale = Scale::from_env(false);
+    match figures::fig5(scale, 1) {
+        Ok(report) => {
+            print!("{report}");
+            println!(
+                "\npaper-vs-measured checklist (§6.1):\n\
+                 [shape 1] sRINR faster than bRINR on shift (paper: ~9x)\n\
+                 [shape 2] sRINR faster than bRINR on RSP (paper: ~3.8x)\n\
+                 [shape 3] complement is the hardest pattern for both orderings\n\
+                 [shape 4] Valiant beats both orderings on complement (2 VCs)"
+            );
+        }
+        Err(e) => {
+            eprintln!("fig5 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!("fig5 bench wall time: {:.1}s ({scale:?})", t.elapsed_secs());
+}

@@ -1,0 +1,32 @@
+//! Figure 6 — TERA service-topology selection (RSP + FR bursts, FM size
+//! sweep).
+//!
+//! Paper expectations (§6.2): under RSP the Path service is fastest (most
+//! main links) and HX2 slowest, with the gap narrowing as n grows; under
+//! FR the asymmetric services (Path, 4-Tree) collapse — their root/center
+//! bottlenecks dominate — making the symmetric HyperX family the overall
+//! choice.
+
+use tera_net::coordinator::figures::{self, Scale};
+use tera_net::util::Timer;
+
+fn main() {
+    let t = Timer::start();
+    let scale = Scale::from_env(false);
+    match figures::fig6(scale, 1) {
+        Ok(report) => {
+            print!("{report}");
+            println!(
+                "\npaper-vs-measured checklist (§6.2):\n\
+                 [shape 1] RSP: Path fastest, HX2 slowest, gap narrows with n\n\
+                 [shape 2] FR: Path/Tree4 worst (asymmetry), HyperX family robust\n\
+                 [shape 3] HX2/HX3 close to Path on RSP at the largest size"
+            );
+        }
+        Err(e) => {
+            eprintln!("fig6 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!("fig6 bench wall time: {:.1}s ({scale:?})", t.elapsed_secs());
+}

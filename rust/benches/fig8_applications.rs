@@ -1,0 +1,32 @@
+//! Figure 8 — application-kernel completion times (All2All, Stencil 2D/3D,
+//! FFT3D, Rabenseifner All-reduce).
+//!
+//! Paper expectations (§6.4): Omni-WAR best overall (2 VCs, unrestricted
+//! non-minimal bandwidth; ~10% ahead on the stencils); TERA-HX2/HX3 within
+//! ~7% of Omni-WAR on average despite using a single VC; TERA beats UGAL
+//! clearly (up to ~47% on All-reduce).
+
+use tera_net::coordinator::figures::{self, Scale};
+use tera_net::util::Timer;
+
+fn main() {
+    let t = Timer::start();
+    let scale = Scale::from_env(false);
+    match figures::fig8(scale, 1) {
+        Ok(report) => {
+            print!("{report}");
+            println!(
+                "\npaper-vs-measured checklist (§6.4):\n\
+                 [shape 1] Omni-WAR fastest or tied on every kernel\n\
+                 [shape 2] TERA trails Omni-WAR by a small margin (paper: ≤~7%)\n\
+                 [shape 3] TERA beats UGAL, largest gap on Allreduce\n\
+                 [shape 4] MIN competitive only on neighbor-local stencils"
+            );
+        }
+        Err(e) => {
+            eprintln!("fig8 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!("fig8 bench wall time: {:.1}s ({scale:?})", t.elapsed_secs());
+}

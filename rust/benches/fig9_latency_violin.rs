@@ -1,0 +1,32 @@
+//! Figure 9 — packet-latency distributions per application kernel
+//! (violin densities exported to bench_out/fig9_violin.csv; the table
+//! reports mean / p99 / p99.9 / p99.99 / max).
+//!
+//! Paper expectations (§6.4): TERA-HX2/HX3 lowest mean and p99 in most
+//! kernels (less buffering → shorter queues); UGAL consistently the worst
+//! tail (single random Valiant candidate); at p99.9+ TERA stays on top
+//! except Stencil3D where it matches Omni-WAR.
+
+use tera_net::coordinator::figures::{self, Scale};
+use tera_net::util::Timer;
+
+fn main() {
+    let t = Timer::start();
+    let scale = Scale::from_env(false);
+    match figures::fig9(scale, 1) {
+        Ok(report) => {
+            print!("{report}");
+            println!(
+                "\npaper-vs-measured checklist (§6.4, Fig 9):\n\
+                 [shape 1] TERA lowest mean/p99 in most kernels\n\
+                 [shape 2] UGAL highest latency across the board\n\
+                 [shape 3] violin densities written to bench_out/fig9_violin.csv"
+            );
+        }
+        Err(e) => {
+            eprintln!("fig9 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    println!("fig9 bench wall time: {:.1}s ({scale:?})", t.elapsed_secs());
+}

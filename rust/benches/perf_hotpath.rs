@@ -1,0 +1,125 @@
+//! §Perf — hot-path micro/macro benchmarks for the L3 simulator.
+//!
+//! Reports:
+//!   * simulated Mcycles/s and packet-throughput of `Network::step` on the
+//!     Fig-7 RSP workload (the end-to-end hot path);
+//!   * routing decisions/second per algorithm (allocation inner loop);
+//!   * PJRT batched-scorer latency (the artifact decision path).
+//!
+//! Before/after numbers across optimization iterations are recorded in
+//! EXPERIMENTS.md §Perf.
+
+use std::sync::Arc;
+
+use tera_net::config::spec::{topology_by_name, routing_by_name, ExperimentSpec, TrafficSpec};
+use tera_net::sim::{Network, RunOpts, SimConfig};
+use tera_net::util::Timer;
+
+fn sim_throughput(routing: &str, load: f64, pattern: &str) -> (f64, f64) {
+    let horizon = 12_000u64;
+    let spec = ExperimentSpec {
+        name: format!("perf-{routing}"),
+        topology: "fm64".into(),
+        servers_per_switch: 16,
+        routing: routing.into(),
+        traffic: TrafficSpec::Bernoulli {
+            pattern: pattern.into(),
+            load,
+            horizon,
+        },
+        warmup: 0,
+        seed: 7,
+        ..Default::default()
+    };
+    let t = Timer::start();
+    let stats = spec.run().expect("run");
+    let wall = t.elapsed_secs();
+    let mcps = horizon as f64 / wall / 1e6;
+    let pkts_per_sec = stats.delivered_packets as f64 / wall;
+    (mcps, pkts_per_sec)
+}
+
+fn decision_rate(routing: &str) -> f64 {
+    // Drive the router in a saturated network and count allocation-cycle
+    // work indirectly via wall time per simulated cycle at high load.
+    let topo = Arc::new(topology_by_name("fm64").unwrap());
+    let router = routing_by_name(routing, topo.clone(), 54).unwrap();
+    let cfg = SimConfig {
+        servers_per_switch: 16,
+        seed: 3,
+        ..SimConfig::default()
+    };
+    let mut net = Network::new(topo, router, cfg);
+    let mut workload = ExperimentSpec {
+        topology: "fm64".into(),
+        servers_per_switch: 16,
+        traffic: TrafficSpec::Bernoulli {
+            pattern: "rsp".into(),
+            load: 1.0,
+            horizon: 6_000,
+        },
+        seed: 3,
+        ..Default::default()
+    }
+    .build_workload(&net.topo)
+    .unwrap();
+    let t = Timer::start();
+    let stats = net
+        .run(
+            workload.as_mut(),
+            &RunOpts {
+                max_cycles: 6_000,
+                warmup: 0,
+                window: None,
+                stop_when_drained: false,
+            },
+        )
+        .expect("run");
+    // Approximate decisions by delivered hops (each hop = ≥1 grant).
+    let hops: f64 = stats.delivered_packets as f64 * stats.mean_hops().max(1.0);
+    hops / t.elapsed_secs()
+}
+
+fn main() {
+    println!("== §Perf hot-path benchmarks (fm64 × 16 srv/sw) ==\n");
+    println!(
+        "{:<12} {:>12} {:>16}",
+        "routing", "Mcycles/s", "delivered pkt/s"
+    );
+    for r in ["min", "srinr", "tera-hx2", "ugal", "omniwar", "valiant"] {
+        let (mcps, pps) = sim_throughput(r, 0.7, "rsp");
+        println!("{r:<12} {mcps:>12.3} {pps:>16.0}");
+    }
+
+    println!("\nrouting decision throughput (saturated RSP):");
+    for r in ["min", "srinr", "tera-hx2", "omniwar"] {
+        let d = decision_rate(r);
+        println!("  {r:<12} {:>12.2} M grants/s", d / 1e6);
+    }
+
+    // PJRT batched scorer (decision path through the artifact).
+    if std::path::Path::new("artifacts/tera_score.hlo.txt").exists() {
+        use tera_net::runtime::{Engine, ScoreBatch, TeraScorer};
+        let engine = Engine::cpu().unwrap();
+        let scorer = TeraScorer::load(&engine).unwrap();
+        let mut b = ScoreBatch::zeros(TeraScorer::BATCH, TeraScorer::PORTS, 54.0);
+        for i in 0..b.occ.len() {
+            b.occ[i] = (i % 97) as f32;
+            b.valid[i] = 1.0;
+            b.direct[i] = f32::from(i % 63 == 0);
+        }
+        let t = Timer::start();
+        let iters = 500;
+        for _ in 0..iters {
+            scorer.score(&b).unwrap();
+        }
+        let per_call_ms = t.elapsed_ms() / iters as f64;
+        println!(
+            "\npjrt tera_score: {per_call_ms:.3} ms / 64-switch batch \
+             ({:.2} M decisions/s)",
+            (TeraScorer::BATCH as f64 / (per_call_ms / 1e3)) / 1e6
+        );
+    } else {
+        println!("\n(pjrt scorer skipped: run `make artifacts`)");
+    }
+}

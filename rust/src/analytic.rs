@@ -1,0 +1,97 @@
+//! Appendix-B analytic throughput model (generates Figure 4).
+//!
+//! Under Random Switch Permutation traffic, TERA's estimated accepted
+//! throughput per server is `1 / (1 + p⁻¹) + O(1/n)`, where `p` is the
+//! fraction of links belonging to the main topology (equivalently the main
+//! degree over `n − 1`).
+//!
+//! This module is the pure-Rust reference; the identical computation is
+//! also compiled AOT from the Pallas kernel (`python/compile/kernels/
+//! analytic.py`) and executed through PJRT by [`crate::runtime`] — the two
+//! are cross-checked bit-tight by `tera-net validate-artifacts` and the
+//! integration tests.
+
+use crate::service::ServiceTopology;
+
+/// Estimated saturation throughput (flits/cycle/server) for a main-link
+/// ratio `p` (Appendix B, dominant term).
+pub fn throughput_estimate(p: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p));
+    if p == 0.0 {
+        return 0.0;
+    }
+    1.0 / (1.0 + 1.0 / p)
+}
+
+/// Main-topology ratio `p` for a service topology embedded in `FM_n`:
+/// `p = 1 − 2·links(S) / (n(n−1))`.
+pub fn main_ratio(svc: &dyn ServiceTopology) -> f64 {
+    let n = svc.n() as f64;
+    1.0 - 2.0 * svc.num_links() as f64 / (n * (n - 1.0))
+}
+
+/// Main ratio from the service degree sequence shortcut used in Figure 4:
+/// for a regular service topology of degree `d_s`, `p = 1 − d_s/(n−1)`.
+pub fn main_ratio_regular(n: usize, service_degree: usize) -> f64 {
+    1.0 - service_degree as f64 / (n as f64 - 1.0)
+}
+
+/// One Figure-4 curve: estimated throughput of TERA with a given service
+/// family across FM sizes.
+pub fn fig4_curve(
+    family: &str,
+    sizes: &[usize],
+) -> anyhow::Result<Vec<(usize, f64)>> {
+    sizes
+        .iter()
+        .map(|&n| {
+            let svc = crate::service::by_name(family, n)?;
+            Ok((n, throughput_estimate(main_ratio(svc.as_ref()))))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{HyperXService, MeshService};
+
+    #[test]
+    fn estimate_monotone_in_p() {
+        let mut last = -1.0;
+        for i in 0..=10 {
+            let p = i as f64 / 10.0;
+            let t = throughput_estimate(p);
+            assert!(t >= last);
+            last = t;
+        }
+        assert_eq!(throughput_estimate(0.0), 0.0);
+        assert!((throughput_estimate(1.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn path_service_nearly_half() {
+        // Path embeds n−1 links: p = 1 − 2/n → throughput → 0.5 as n grows.
+        let svc = MeshService::path(64);
+        let t = throughput_estimate(main_ratio(&svc));
+        assert!(t > 0.47 && t < 0.5, "t={t}");
+    }
+
+    #[test]
+    fn hyperx_service_converges_with_n() {
+        // Fig 4: curves converge for large FM sizes.
+        let t_small = throughput_estimate(main_ratio(&HyperXService::square(64).unwrap()));
+        let t_large = throughput_estimate(main_ratio(&HyperXService::square(1024).unwrap()));
+        let ref_small = throughput_estimate(main_ratio(&MeshService::path(64)));
+        let ref_large = throughput_estimate(main_ratio(&MeshService::path(1024)));
+        assert!((t_large - ref_large).abs() < (t_small - ref_small).abs());
+    }
+
+    #[test]
+    fn regular_shortcut_matches_exact_for_hx2() {
+        let svc = HyperXService::square(64).unwrap();
+        let exact = main_ratio(&svc);
+        let short = main_ratio_regular(64, 14); // 2*(8-1) service degree
+        assert!((exact - short).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,117 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline crate set).
+//!
+//! Grammar: `tera-net <command> [--flag value]... [--switch]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            anyhow::ensure!(
+                !cmd.starts_with('-'),
+                "expected a command before flags, got '{cmd}'"
+            );
+            out.command = cmd;
+        }
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                anyhow::bail!("unexpected positional argument '{arg}'");
+            };
+            // `--key=value` or `--key value` or bare switch.
+            if let Some((k, v)) = name.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                out.flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                out.switches.push(name.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse("run --topology fm64 --load 0.5 --full");
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("topology"), Some("fm64"));
+        assert_eq!(a.get_f64("load", 0.0).unwrap(), 0.5);
+        assert!(a.has("full"));
+        assert!(!a.has("quick"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse("fig7 --seed=42 --full");
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+        assert!(a.has("full"));
+    }
+
+    #[test]
+    fn rejects_positional_after_command() {
+        assert!(Args::parse(["run".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_or("routing", "tera-hx2"), "tera-hx2");
+        assert_eq!(a.get_usize("spc", 4).unwrap(), 4);
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment configuration: a TOML-subset parser (serde is not in the
+//! offline crate set — see DESIGN.md Substitution 5) plus the typed
+//! experiment spec the coordinator consumes.
+
+pub mod parser;
+pub mod spec;
+
+pub use parser::{parse, ParseError, Value};
+pub use spec::ExperimentSpec;

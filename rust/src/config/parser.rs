@@ -1,0 +1,315 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supported: `[table]` / `[table.sub]` headers, `key = value` pairs,
+//! strings (`"…"` with `\"`/`\\`/`\n`/`\t` escapes), integers, floats,
+//! booleans, and homogeneous inline arrays (`[1, 2, 3]`); `#` comments.
+//! Unsupported TOML (dates, multi-line strings, array-of-tables) fails
+//! loudly with line numbers.
+
+use std::collections::BTreeMap;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `get("sim.seed")`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError {
+        line,
+        msg: msg.into(),
+    })
+}
+
+/// Parse a TOML-subset document into a root table.
+pub fn parse(src: &str) -> Result<Value, ParseError> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(inner) = rest.strip_suffix(']') else {
+                return err(line_no, "unterminated table header");
+            };
+            let path: Vec<String> = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return err(line_no, "empty table name component");
+            }
+            ensure_table(&mut root, &path, line_no)?;
+            current_path = path;
+            continue;
+        }
+        let Some(eq) = find_top_level_eq(line) else {
+            return err(line_no, format!("expected `key = value`, got '{line}'"));
+        };
+        let key = line[..eq].trim();
+        let val_src = line[eq + 1..].trim();
+        if key.is_empty() {
+            return err(line_no, "empty key");
+        }
+        let value = parse_value(val_src, line_no)?;
+        let table = ensure_table(&mut root, &current_path, line_no)?;
+        if table.insert(key.to_string(), value).is_some() {
+            return err(line_no, format!("duplicate key '{key}'"));
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+/// Strip a `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_escape => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    line
+}
+
+/// Find the first `=` outside string literals.
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_escape => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    None
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, ParseError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        match entry {
+            Value::Table(t) => cur = t,
+            _ => {
+                return err(line, format!("'{part}' is not a table"));
+            }
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(src: &str, line: usize) -> Result<Value, ParseError> {
+    let src = src.trim();
+    if src.is_empty() {
+        return err(line, "missing value");
+    }
+    if let Some(rest) = src.strip_prefix('"') {
+        return parse_string(rest, line);
+    }
+    if src.starts_with('[') {
+        return parse_array(src, line);
+    }
+    match src {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = src.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    err(line, format!("cannot parse value '{src}'"))
+}
+
+fn parse_string(rest: &str, line: usize) -> Result<Value, ParseError> {
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                let trailing: String = chars.collect();
+                if !trailing.trim().is_empty() {
+                    return err(line, "trailing characters after string");
+                }
+                return Ok(Value::Str(out));
+            }
+            '\\' => match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => return err(line, format!("bad escape '\\{other:?}'")),
+            },
+            c => out.push(c),
+        }
+    }
+    err(line, "unterminated string")
+}
+
+fn parse_array(src: &str, line: usize) -> Result<Value, ParseError> {
+    let inner = src
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or(ParseError {
+            line,
+            msg: "unterminated array".into(),
+        })?;
+    let mut items = Vec::new();
+    // Split on top-level commas (strings may contain commas).
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut prev_escape = false;
+    let mut start = 0usize;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' if !prev_escape => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                let part = inner[start..i].trim();
+                if !part.is_empty() {
+                    items.push(parse_value(part, line)?);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    let last = inner[start..].trim();
+    if !last.is_empty() {
+        items.push(parse_value(last, line)?);
+    }
+    Ok(Value::Array(items))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let v = parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_int(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_float(), Some(2.5));
+        assert_eq!(v.get("c").unwrap().as_str(), Some("hi"));
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_tables_and_dotted_lookup() {
+        let v = parse("[sim]\nseed = 42\n[sim.sub]\nx = 1\n").unwrap();
+        assert_eq!(v.get("sim.seed").unwrap().as_int(), Some(42));
+        assert_eq!(v.get("sim.sub.x").unwrap().as_int(), Some(1));
+        assert!(v.get("sim.missing").is_none());
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse("loads = [0.1, 0.2, 0.3]\nnames = [\"a\", \"b\"]\n").unwrap();
+        let loads = v.get("loads").unwrap().as_array().unwrap();
+        assert_eq!(loads.len(), 3);
+        assert_eq!(loads[1].as_float(), Some(0.2));
+        let names = v.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let v = parse("# header\nn = 80_000 # trailing\ns = \"a#b\"\n").unwrap();
+        assert_eq!(v.get("n").unwrap().as_int(), Some(80_000));
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = parse("good = 1\nbad =").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("x = \"unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("x = 1\nx = 2").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#"s = "a\"b\\c\nd""#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a\"b\\c\nd"));
+    }
+}

@@ -1,0 +1,400 @@
+//! Typed experiment specification: the single entry point the CLI, the
+//! coordinator sweeps, the benches and the examples all share.
+
+use std::sync::Arc;
+
+use super::Value;
+use crate::metrics::SimStats;
+use crate::routing::{self, Router};
+use crate::sim::{Network, RunOpts, SimConfig, SimError};
+use crate::topology::{full_mesh, hyperx, PhysTopology};
+use crate::traffic::kernels::{self, KernelWorkload, Mapping};
+use crate::traffic::{BernoulliWorkload, FixedWorkload, TrafficPattern, Workload};
+use crate::util::Rng;
+
+/// How traffic is generated (§5).
+#[derive(Clone, Debug)]
+pub enum TrafficSpec {
+    /// Fixed generation: a burst of `packets_per_server`, run to drain.
+    Fixed {
+        pattern: String,
+        packets_per_server: usize,
+    },
+    /// Bernoulli generation at `load` flits/cycle/server for `horizon`
+    /// cycles.
+    Bernoulli {
+        pattern: String,
+        load: f64,
+        horizon: u64,
+    },
+    /// Application kernel, run to completion.
+    Kernel {
+        kernel: String,
+        iters: usize,
+        pkts_per_msg: u16,
+        mapping: Mapping,
+    },
+}
+
+/// A full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    pub name: String,
+    /// `fm<N>` (e.g. `fm64`) or `hx<A>x<B>` (e.g. `hx8x8`).
+    pub topology: String,
+    pub servers_per_switch: usize,
+    /// Routing algorithm name, see [`routing_by_name`] for the vocabulary.
+    pub routing: String,
+    /// TERA / link-ordering non-minimal penalty (§5: 54).
+    pub q: u32,
+    pub traffic: TrafficSpec,
+    pub seed: u64,
+    pub warmup: u64,
+    pub max_cycles: u64,
+}
+
+impl Default for ExperimentSpec {
+    fn default() -> Self {
+        Self {
+            name: "experiment".into(),
+            topology: "fm16".into(),
+            servers_per_switch: 4,
+            routing: "tera-hx2".into(),
+            q: crate::routing::tera::DEFAULT_Q,
+            traffic: TrafficSpec::Bernoulli {
+                pattern: "uniform".into(),
+                load: 0.5,
+                horizon: 10_000,
+            },
+            seed: 1,
+            warmup: 1_000,
+            max_cycles: 2_000_000,
+        }
+    }
+}
+
+/// Parse `fm64` / `hx8x8` into a physical topology.
+pub fn topology_by_name(name: &str) -> anyhow::Result<PhysTopology> {
+    let lower = name.to_ascii_lowercase();
+    if let Some(n) = lower.strip_prefix("fm") {
+        let n: usize = n.parse()?;
+        anyhow::ensure!(n >= 2, "fm size must be >= 2");
+        return Ok(full_mesh(n));
+    }
+    if let Some(rest) = lower.strip_prefix("hx") {
+        let dims: Vec<usize> = rest
+            .split('x')
+            .map(|s| s.parse::<usize>())
+            .collect::<Result<_, _>>()?;
+        anyhow::ensure!(!dims.is_empty(), "hyperx needs dimensions");
+        return Ok(hyperx(&dims));
+    }
+    anyhow::bail!("unknown topology '{name}' (expected fm<N> or hx<A>x<B>)")
+}
+
+/// Build a router by figure-name.
+///
+/// Full-mesh: `min`, `valiant`, `ugal`, `omniwar`, `brinr`, `srinr`,
+/// `tera-path`, `tera-mesh2`, `tera-tree2`, `tera-tree4`, `tera-hc`,
+/// `tera-hx2`, `tera-hx3`.
+/// 2D-HyperX: `min`, `omniwar-hx`, `dimwar`, `dor-tera`, `o1turn-tera`.
+pub fn routing_by_name(
+    name: &str,
+    topo: Arc<PhysTopology>,
+    q: u32,
+) -> anyhow::Result<Arc<dyn Router>> {
+    let lower = name.to_ascii_lowercase();
+    Ok(match lower.as_str() {
+        "min" => Arc::new(routing::MinRouter::new(topo)),
+        "valiant" => Arc::new(routing::ValiantRouter::new(topo)),
+        "ugal" => Arc::new(routing::UgalRouter::new(topo)),
+        "omniwar" | "omni-war" => Arc::new(routing::OmniWarRouter::new(topo)),
+        "brinr" => Arc::new(routing::LinkOrderRouter::brinr(topo, q)),
+        "srinr" => Arc::new(routing::LinkOrderRouter::srinr(topo, q)),
+        "omniwar-hx" => Arc::new(routing::OmniWarHxRouter::new(topo)),
+        "dimwar" | "dim-war" => Arc::new(routing::DimWarRouter::new(topo)),
+        "dor-tera" | "dor-tera-hx3" => {
+            let a = sub_fm_size(&topo)?;
+            let svc = sub_service(a)?;
+            Arc::new(routing::DorTeraRouter::new(topo, svc, q))
+        }
+        "o1turn-tera" | "o1turn-tera-hx3" => {
+            let a = sub_fm_size(&topo)?;
+            let svc = sub_service(a)?;
+            Arc::new(routing::O1TurnTeraRouter::new(topo, svc, q))
+        }
+        _ => {
+            if let Some(svc_name) = lower.strip_prefix("tera-") {
+                let svc: Arc<dyn crate::service::ServiceTopology> =
+                    Arc::from(crate::service::by_name(svc_name, topo.n)?);
+                Arc::new(routing::TeraRouter::new(topo, svc, q))
+            } else {
+                anyhow::bail!("unknown routing '{name}'")
+            }
+        }
+    })
+}
+
+fn sub_fm_size(topo: &PhysTopology) -> anyhow::Result<usize> {
+    match &topo.kind {
+        crate::topology::TopoKind::HyperX { dims }
+            if dims.len() == 2 && dims[0] == dims[1] =>
+        {
+            Ok(dims[0])
+        }
+        _ => anyhow::bail!("DOR/O1TURN-TERA need a square 2D-HyperX"),
+    }
+}
+
+/// Service topology for the per-dimension FM_a of DOR/O1TURN-TERA:
+/// the paper's HX3 (hypercube for a = 8); falls back to a path when `a`
+/// is not a power of two.
+fn sub_service(a: usize) -> anyhow::Result<Arc<dyn crate::service::ServiceTopology>> {
+    if a.is_power_of_two() && a >= 4 {
+        Ok(Arc::new(crate::service::HyperXService::hypercube(a)?))
+    } else {
+        Ok(Arc::new(crate::service::MeshService::path(a)))
+    }
+}
+
+impl ExperimentSpec {
+    /// Construct the workload for this spec.
+    pub fn build_workload(&self, topo: &PhysTopology) -> anyhow::Result<Box<dyn Workload>> {
+        let n = topo.n;
+        let spc = self.servers_per_switch;
+        let mut rng = Rng::derive(self.seed, 0x7AFF_1C);
+        Ok(match &self.traffic {
+            TrafficSpec::Fixed {
+                pattern,
+                packets_per_server,
+            } => {
+                let pat = TrafficPattern::by_name(pattern, n, spc, &mut rng)?;
+                Box::new(FixedWorkload::new(&pat, n, spc, *packets_per_server, &mut rng))
+            }
+            TrafficSpec::Bernoulli {
+                pattern,
+                load,
+                horizon,
+            } => {
+                let pat = TrafficPattern::by_name(pattern, n, spc, &mut rng)?;
+                Box::new(BernoulliWorkload::new(
+                    pat, n, spc, *load, 16, *horizon, self.seed,
+                ))
+            }
+            TrafficSpec::Kernel {
+                kernel,
+                iters,
+                pkts_per_msg,
+                mapping,
+            } => {
+                let ranks = n * spc;
+                let prog = match kernel.to_ascii_lowercase().as_str() {
+                    "all2all" => kernels::all2all(ranks, *pkts_per_msg),
+                    "stencil2d" => kernels::stencil2d(ranks, *iters, *pkts_per_msg),
+                    "stencil3d" => kernels::stencil3d(ranks, *iters, *pkts_per_msg),
+                    "fft3d" => kernels::fft3d(ranks, *pkts_per_msg),
+                    "allreduce" => kernels::allreduce_rabenseifner(
+                        ranks,
+                        (*pkts_per_msg).max(1) * 8,
+                    ),
+                    other => anyhow::bail!("unknown kernel '{other}'"),
+                };
+                Box::new(KernelWorkload::new(prog, ranks, *mapping, &mut rng))
+            }
+        })
+    }
+
+    /// Build the simulator network for this spec.
+    pub fn build_network(&self) -> anyhow::Result<Network> {
+        let topo = Arc::new(topology_by_name(&self.topology)?);
+        let router = routing_by_name(&self.routing, topo.clone(), self.q)?;
+        let cfg = SimConfig {
+            servers_per_switch: self.servers_per_switch,
+            seed: self.seed,
+            ..SimConfig::default()
+        };
+        Ok(Network::new(topo, router, cfg))
+    }
+
+    /// Execute the experiment end-to-end.
+    pub fn run(&self) -> anyhow::Result<SimStats> {
+        let mut net = self.build_network()?;
+        let mut workload = self.build_workload(&net.topo)?;
+        let opts = match &self.traffic {
+            TrafficSpec::Bernoulli { horizon, .. } => RunOpts {
+                max_cycles: *horizon,
+                warmup: self.warmup.min(*horizon / 4),
+                window: None,
+                stop_when_drained: false,
+            },
+            _ => RunOpts {
+                max_cycles: self.max_cycles,
+                warmup: 0,
+                window: None,
+                stop_when_drained: true,
+            },
+        };
+        let stats = net.run(workload.as_mut(), &opts)?;
+        Ok(stats)
+    }
+
+    /// Run, mapping deadlock to a value (used by tests that *expect*
+    /// deadlocks).
+    pub fn run_expect(&self) -> anyhow::Result<Result<SimStats, SimError>> {
+        let mut net = self.build_network()?;
+        let mut workload = self.build_workload(&net.topo)?;
+        let opts = RunOpts {
+            max_cycles: self.max_cycles,
+            warmup: 0,
+            window: None,
+            stop_when_drained: !matches!(self.traffic, TrafficSpec::Bernoulli { .. }),
+        };
+        Ok(net.run(workload.as_mut(), &opts))
+    }
+
+    /// Parse a spec from a parsed config [`Value`] (the `[experiment]`
+    /// table of a config file).
+    pub fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let mut spec = Self::default();
+        let get_str = |k: &str| v.get(k).and_then(Value::as_str).map(str::to_string);
+        let get_int = |k: &str| v.get(k).and_then(Value::as_int);
+        if let Some(s) = get_str("name") {
+            spec.name = s;
+        }
+        if let Some(s) = get_str("topology") {
+            spec.topology = s;
+        }
+        if let Some(i) = get_int("servers_per_switch") {
+            spec.servers_per_switch = i as usize;
+        }
+        if let Some(s) = get_str("routing") {
+            spec.routing = s;
+        }
+        if let Some(i) = get_int("q") {
+            spec.q = i as u32;
+        }
+        if let Some(i) = get_int("seed") {
+            spec.seed = i as u64;
+        }
+        if let Some(i) = get_int("warmup") {
+            spec.warmup = i as u64;
+        }
+        if let Some(i) = get_int("max_cycles") {
+            spec.max_cycles = i as u64;
+        }
+        let mode = get_str("mode").unwrap_or_else(|| "bernoulli".into());
+        spec.traffic = match mode.as_str() {
+            "fixed" => TrafficSpec::Fixed {
+                pattern: get_str("pattern").unwrap_or_else(|| "uniform".into()),
+                packets_per_server: get_int("packets_per_server").unwrap_or(100) as usize,
+            },
+            "bernoulli" => TrafficSpec::Bernoulli {
+                pattern: get_str("pattern").unwrap_or_else(|| "uniform".into()),
+                load: v.get("load").and_then(Value::as_float).unwrap_or(0.5),
+                horizon: get_int("horizon").unwrap_or(20_000) as u64,
+            },
+            "kernel" => TrafficSpec::Kernel {
+                kernel: get_str("kernel").unwrap_or_else(|| "all2all".into()),
+                iters: get_int("iters").unwrap_or(2) as usize,
+                pkts_per_msg: get_int("pkts_per_msg").unwrap_or(1) as u16,
+                mapping: match get_str("mapping").as_deref() {
+                    Some("random") => Mapping::Random,
+                    _ => Mapping::Linear,
+                },
+            },
+            other => anyhow::bail!("unknown traffic mode '{other}'"),
+        };
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_parsing() {
+        assert_eq!(topology_by_name("fm16").unwrap().n, 16);
+        assert_eq!(topology_by_name("hx8x8").unwrap().n, 64);
+        assert_eq!(topology_by_name("hx4x4x4").unwrap().n, 64);
+        assert!(topology_by_name("ring5").is_err());
+    }
+
+    #[test]
+    fn all_fm_routings_construct() {
+        for r in [
+            "min",
+            "valiant",
+            "ugal",
+            "omniwar",
+            "brinr",
+            "srinr",
+            "tera-path",
+            "tera-hc",
+            "tera-hx2",
+            "tera-hx3",
+            "tera-tree4",
+        ] {
+            let topo = Arc::new(topology_by_name("fm64").unwrap());
+            let router = routing_by_name(r, topo, 54).unwrap();
+            assert!(!router.name().is_empty(), "{r}");
+        }
+    }
+
+    #[test]
+    fn all_hx_routings_construct() {
+        for r in ["min", "omniwar-hx", "dimwar", "dor-tera", "o1turn-tera"] {
+            let topo = Arc::new(topology_by_name("hx8x8").unwrap());
+            let router = routing_by_name(r, topo, 54).unwrap();
+            assert!(!router.name().is_empty(), "{r}");
+        }
+    }
+
+    #[test]
+    fn vc_counts_match_paper_table() {
+        let fm = || Arc::new(topology_by_name("fm64").unwrap());
+        let hx = || Arc::new(topology_by_name("hx8x8").unwrap());
+        // §5: 1 VC for MIN/bRINR/sRINR/TERA, 2 for Omni-WAR/UGAL/Valiant.
+        for (r, vcs) in [
+            ("min", 1),
+            ("brinr", 1),
+            ("srinr", 1),
+            ("tera-hx3", 1),
+            ("ugal", 2),
+            ("valiant", 2),
+            ("omniwar", 2),
+        ] {
+            assert_eq!(routing_by_name(r, fm(), 54).unwrap().num_vcs(), vcs, "{r}");
+        }
+        // §6.5: Omni-WAR 4, Dim-WAR 2, O1TURN-TERA 2, DOR-TERA 1.
+        for (r, vcs) in [
+            ("omniwar-hx", 4),
+            ("dimwar", 2),
+            ("o1turn-tera", 2),
+            ("dor-tera", 1),
+        ] {
+            assert_eq!(routing_by_name(r, hx(), 54).unwrap().num_vcs(), vcs, "{r}");
+        }
+    }
+
+    #[test]
+    fn spec_from_config_value() {
+        let cfg = crate::config::parse(
+            "topology = \"fm16\"\nrouting = \"tera-hx2\"\nmode = \"fixed\"\npattern = \"rsp\"\npackets_per_server = 50\nseed = 9\n",
+        )
+        .unwrap();
+        let spec = ExperimentSpec::from_value(&cfg).unwrap();
+        assert_eq!(spec.topology, "fm16");
+        assert_eq!(spec.seed, 9);
+        match &spec.traffic {
+            TrafficSpec::Fixed {
+                pattern,
+                packets_per_server,
+            } => {
+                assert_eq!(pattern, "rsp");
+                assert_eq!(*packets_per_server, 50);
+            }
+            _ => panic!("wrong mode"),
+        }
+    }
+}

@@ -1,0 +1,662 @@
+//! Figure/table runners: one function per paper artifact (Table 1,
+//! Figures 4–10), shared by the CLI (`tera-net fig7 …`) and the bench
+//! binaries (`cargo bench --bench fig7_bernoulli`).
+//!
+//! Scale: the paper simulates FM64 × 64 servers (4096 endpoints, 80K-cycle
+//! horizons, 1250-packet bursts). `Scale::Paper` reproduces that;
+//! `Scale::Quick` (default) shrinks the network and horizons so the whole
+//! suite completes in minutes while preserving every qualitative
+//! relationship (crossover shapes are scale-stable — see EXPERIMENTS.md).
+
+use crate::analytic;
+use crate::config::spec::{ExperimentSpec, TrafficSpec};
+use crate::coordinator::report::{ascii_bars, write_csv, Table};
+use crate::coordinator::sweep::{default_threads, run_sweep, SweepResult};
+use crate::metrics::jain_index;
+use crate::service;
+use crate::traffic::kernels::Mapping;
+
+/// Experiment scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Paper,
+}
+
+impl Scale {
+    /// From the environment (`FULL=1`) or an explicit flag.
+    pub fn from_env(full_flag: bool) -> Self {
+        if full_flag || std::env::var("FULL").map_or(false, |v| v == "1") {
+            Scale::Paper
+        } else {
+            Scale::Quick
+        }
+    }
+}
+
+fn fm(scale: Scale) -> (String, usize) {
+    // Quick keeps the paper's 64-switch Full-mesh (service topologies need
+    // n to factor as a square/cube/power-of-two; 64 is all three) but
+    // halves the concentration and shortens horizons. Concentration must
+    // stay comparable to the switch degree (the paper uses 64 servers vs
+    // 63 links) or adversarial patterns stop stressing the network.
+    match scale {
+        Scale::Quick => ("fm64".into(), 32),
+        Scale::Paper => ("fm64".into(), 64),
+    }
+}
+
+fn burst(scale: Scale) -> usize {
+    match scale {
+        Scale::Quick => 100,
+        Scale::Paper => 1250,
+    }
+}
+
+fn horizon(scale: Scale) -> u64 {
+    match scale {
+        Scale::Quick => 12_000,
+        Scale::Paper => 80_000,
+    }
+}
+
+fn fmt_err(r: &SweepResult) -> String {
+    match &r.stats {
+        Ok(_) => unreachable!(),
+        Err(e) => format!("FAILED({e})"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table 1 — service topology properties
+// ---------------------------------------------------------------------
+
+pub fn table1(n: usize) -> anyhow::Result<String> {
+    let mut t = Table::new(
+        &format!("Table 1 — service topology properties (FM_{n})"),
+        &["Topology", "Symmetric", "Diameter", "Links", "Routing", "main p"],
+    );
+    for (name, routing) in [
+        ("path", "DOR"),
+        ("mesh2", "DOR"),
+        ("tree2", "Up*/Down*"),
+        ("tree4", "Up*/Down*"),
+        ("hypercube", "DOR"),
+        ("hx2", "DOR"),
+        ("hx3", "DOR"),
+    ] {
+        let Ok(svc) = service::by_name(name, n) else {
+            continue; // size not factorizable for this family
+        };
+        let p = analytic::main_ratio(svc.as_ref());
+        t.row(vec![
+            svc.name(),
+            if svc.symmetric() { "yes" } else { "no" }.into(),
+            svc.diameter().to_string(),
+            svc.num_links().to_string(),
+            routing.into(),
+            format!("{p:.3}"),
+        ]);
+    }
+    write_csv("table1.csv", &t.to_csv())?;
+    Ok(t.render())
+}
+
+// ---------------------------------------------------------------------
+// Figure 4 — analytic throughput estimate per service topology
+// ---------------------------------------------------------------------
+
+/// `use_pjrt`: evaluate through the AOT artifact (the paper-accurate
+/// three-layer path); falls back to the pure-Rust model when artifacts are
+/// missing.
+pub fn fig4(use_pjrt: bool) -> anyhow::Result<String> {
+    let families = ["path", "tree4", "hypercube", "hx2", "hx3"];
+    let sizes = [16usize, 64, 144, 256, 400, 576, 1024, 4096];
+    let mut t = Table::new(
+        "Figure 4 — estimated TERA throughput (flits/cycle/server) under RSP",
+        &["service", "n", "p(main)", "estimate"],
+    );
+    let pjrt = if use_pjrt {
+        let engine = crate::runtime::Engine::cpu()?;
+        Some(crate::runtime::AnalyticModel::load(&engine)?)
+    } else {
+        None
+    };
+    for fam in families {
+        let mut ps = Vec::new();
+        let mut rows = Vec::new();
+        for &n in &sizes {
+            if let Ok(svc) = service::by_name(fam, n) {
+                let p = analytic::main_ratio(svc.as_ref());
+                ps.push(p);
+                rows.push((n, p));
+            }
+        }
+        let ests: Vec<f64> = match &pjrt {
+            Some(model) => model.throughput(&ps)?,
+            None => ps.iter().map(|&p| analytic::throughput_estimate(p)).collect(),
+        };
+        for ((n, p), e) in rows.into_iter().zip(ests) {
+            t.row(vec![
+                fam.to_string(),
+                n.to_string(),
+                format!("{p:.4}"),
+                format!("{e:.4}"),
+            ]);
+        }
+    }
+    write_csv("fig4.csv", &t.to_csv())?;
+    let backend = if pjrt.is_some() { "PJRT artifact" } else { "pure Rust" };
+    Ok(format!("(backend: {backend})\n{}", t.render()))
+}
+
+// ---------------------------------------------------------------------
+// Figure 5 — link-ordering schemes, fixed generation
+// ---------------------------------------------------------------------
+
+pub fn fig5(scale: Scale, seed: u64) -> anyhow::Result<String> {
+    let (topo, spc) = fm(scale);
+    let pkts = burst(scale);
+    let routings = ["min", "brinr", "srinr", "valiant"];
+    let patterns = ["shift", "complement", "rsp"];
+    let mut specs = Vec::new();
+    for pat in patterns {
+        for r in routings {
+            specs.push(ExperimentSpec {
+                name: format!("fig5-{pat}-{r}"),
+                topology: topo.clone(),
+                servers_per_switch: spc,
+                routing: r.into(),
+                traffic: TrafficSpec::Fixed {
+                    pattern: pat.into(),
+                    packets_per_server: pkts,
+                },
+                seed,
+                max_cycles: 80_000_000,
+                ..Default::default()
+            });
+        }
+    }
+    let results = run_sweep(specs, default_threads());
+    let mut t = Table::new(
+        &format!("Figure 5 — cycles to consume {pkts} pkts/server ({topo}, {spc} srv/sw)"),
+        &["pattern", "routing", "cycles", "mean hops"],
+    );
+    let mut out = String::new();
+    for (pi, pat) in patterns.iter().enumerate() {
+        let mut bars = Vec::new();
+        for (ri, r) in routings.iter().enumerate() {
+            let res = &results[pi * routings.len() + ri];
+            match &res.stats {
+                Ok(s) => {
+                    t.row(vec![
+                        pat.to_string(),
+                        r.to_string(),
+                        s.finish_cycle.to_string(),
+                        format!("{:.2}", s.mean_hops()),
+                    ]);
+                    bars.push((r.to_string(), s.finish_cycle as f64));
+                }
+                Err(_) => t.row(vec![
+                    pat.to_string(),
+                    r.to_string(),
+                    fmt_err(res),
+                    "-".into(),
+                ]),
+            }
+        }
+        out.push_str(&format!("\n[{pat}]\n{}", ascii_bars(&bars, 40)));
+    }
+    write_csv("fig5.csv", &t.to_csv())?;
+    Ok(format!("{}\n{out}", t.render()))
+}
+
+// ---------------------------------------------------------------------
+// Figure 6 — service topology selection (RSP + FR, FM size sweep)
+// ---------------------------------------------------------------------
+
+pub fn fig6(scale: Scale, seed: u64) -> anyhow::Result<String> {
+    let sizes: &[usize] = match scale {
+        Scale::Quick => &[16, 64],
+        Scale::Paper => &[16, 64, 256],
+    };
+    let pkts = burst(scale);
+    let services = ["path", "tree4", "hypercube", "hx2", "hx3"];
+    let patterns = ["rsp", "fr"];
+    let mut specs = Vec::new();
+    let mut labels = Vec::new();
+    for pat in patterns {
+        for &n in sizes {
+            for svc in services {
+                if service::by_name(svc, n).is_err() {
+                    continue;
+                }
+                labels.push((pat, n, svc));
+                specs.push(ExperimentSpec {
+                    name: format!("fig6-{pat}-{n}-{svc}"),
+                    topology: format!("fm{n}"),
+                    // Concentration must track the switch degree or the
+                    // burst is absorbable by any routing (§5 uses spc = n).
+                    servers_per_switch: match scale {
+                        Scale::Quick => (n / 2).max(4),
+                        Scale::Paper => n.min(64),
+                    },
+                    routing: format!("tera-{svc}"),
+                    traffic: TrafficSpec::Fixed {
+                        pattern: pat.into(),
+                        packets_per_server: pkts,
+                    },
+                    seed,
+                    max_cycles: 80_000_000,
+                    ..Default::default()
+                });
+            }
+        }
+    }
+    let results = run_sweep(specs, default_threads());
+    let mut t = Table::new(
+        &format!("Figure 6 — TERA service-topology comparison ({pkts} pkts/server burst)"),
+        &["pattern", "FM size", "service", "cycles", "mean hops"],
+    );
+    for ((pat, n, svc), res) in labels.iter().zip(&results) {
+        match &res.stats {
+            Ok(s) => t.row(vec![
+                pat.to_string(),
+                n.to_string(),
+                svc.to_string(),
+                s.finish_cycle.to_string(),
+                format!("{:.2}", s.mean_hops()),
+            ]),
+            Err(_) => t.row(vec![
+                pat.to_string(),
+                n.to_string(),
+                svc.to_string(),
+                fmt_err(res),
+                "-".into(),
+            ]),
+        }
+    }
+    write_csv("fig6.csv", &t.to_csv())?;
+    Ok(t.render())
+}
+
+// ---------------------------------------------------------------------
+// Figure 7 — Bernoulli generation: throughput / latency vs offered load
+// ---------------------------------------------------------------------
+
+pub fn fig7(scale: Scale, seed: u64) -> anyhow::Result<String> {
+    let (topo, spc) = fm(scale);
+    let hz = horizon(scale);
+    let routings = [
+        "min", "srinr", "tera-hx2", "tera-hx3", "ugal", "omniwar", "valiant",
+    ];
+    let loads: &[f64] = match scale {
+        Scale::Quick => &[0.2, 0.4, 0.6, 0.8, 1.0],
+        Scale::Paper => &[0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0],
+    };
+    let patterns = ["uniform", "rsp"];
+    let mut specs = Vec::new();
+    let mut labels = Vec::new();
+    for pat in patterns {
+        for r in routings {
+            for &load in loads {
+                labels.push((pat, r, load));
+                specs.push(ExperimentSpec {
+                    name: format!("fig7-{pat}-{r}-{load}"),
+                    topology: topo.clone(),
+                    servers_per_switch: spc,
+                    routing: r.into(),
+                    traffic: TrafficSpec::Bernoulli {
+                        pattern: pat.into(),
+                        load,
+                        horizon: hz,
+                    },
+                    warmup: hz / 4,
+                    seed,
+                    ..Default::default()
+                });
+            }
+        }
+    }
+    let results = run_sweep(specs, default_threads());
+    let mut t = Table::new(
+        &format!("Figure 7 — Bernoulli traffic on {topo} ({spc} srv/sw, horizon {hz})"),
+        &[
+            "pattern", "routing", "offered", "accepted", "latency", "p99", "jain",
+            "h1%", "h2%", "h3+%",
+        ],
+    );
+    for ((pat, r, load), res) in labels.iter().zip(&results) {
+        match &res.stats {
+            Ok(s) => {
+                let h3plus: f64 = (3..s.hops.len()).map(|h| s.hop_fraction(h)).sum();
+                t.row(vec![
+                    pat.to_string(),
+                    r.to_string(),
+                    format!("{load:.2}"),
+                    format!("{:.3}", s.accepted_throughput()),
+                    format!("{:.1}", s.mean_latency()),
+                    s.latency.percentile(99.0).to_string(),
+                    format!("{:.3}", s.jain()),
+                    format!("{:.1}", 100.0 * s.hop_fraction(1)),
+                    format!("{:.1}", 100.0 * s.hop_fraction(2)),
+                    format!("{:.2}", 100.0 * h3plus),
+                ]);
+            }
+            Err(_) => t.row(vec![
+                pat.to_string(),
+                r.to_string(),
+                format!("{load:.2}"),
+                fmt_err(res),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    write_csv("fig7.csv", &t.to_csv())?;
+    Ok(t.render())
+}
+
+// ---------------------------------------------------------------------
+// Figures 8 & 9 — application kernels (completion time; latency tails)
+// ---------------------------------------------------------------------
+
+fn kernel_specs(
+    scale: Scale,
+    seed: u64,
+    routings: &[&str],
+    mapping: Mapping,
+) -> (Vec<(String, String)>, Vec<ExperimentSpec>) {
+    // Rank-count requirements: square (stencil2d/fft3d), cube (stencil3d),
+    // power of two (allreduce). Quick: FM16×4 = 64 ranks; paper: FM64×64 =
+    // 4096 ranks. Both satisfy all three.
+    let (topo, spc) = match scale {
+        Scale::Quick => ("fm16".to_string(), 4usize),
+        Scale::Paper => ("fm64".to_string(), 64usize),
+    };
+    let kernels = ["all2all", "stencil2d", "stencil3d", "fft3d", "allreduce"];
+    let n_switches: usize = if topo == "fm16" { 16 } else { 64 };
+    let mut specs = Vec::new();
+    let mut labels = Vec::new();
+    for k in kernels {
+        for r in routings {
+            // Skip service topologies the switch count cannot host
+            // (e.g. tera-hx3 needs a cubic n; fm16 is not).
+            if let Some(svc) = r.strip_prefix("tera-") {
+                if crate::service::by_name(svc, n_switches).is_err() {
+                    continue;
+                }
+            }
+            labels.push((k.to_string(), r.to_string()));
+            specs.push(ExperimentSpec {
+                name: format!("fig8-{k}-{r}"),
+                topology: topo.clone(),
+                servers_per_switch: spc,
+                routing: (*r).into(),
+                traffic: TrafficSpec::Kernel {
+                    kernel: k.into(),
+                    iters: match scale {
+                        Scale::Quick => 2,
+                        Scale::Paper => 4,
+                    },
+                    pkts_per_msg: 2,
+                    mapping,
+                },
+                seed,
+                max_cycles: 80_000_000,
+                ..Default::default()
+            });
+        }
+    }
+    (labels, specs)
+}
+
+pub fn fig8(scale: Scale, seed: u64) -> anyhow::Result<String> {
+    let routings = ["min", "valiant", "ugal", "omniwar", "tera-hx2", "tera-hx3"];
+    let (labels, specs) = kernel_specs(scale, seed, &routings, Mapping::Linear);
+    let results = run_sweep(specs, default_threads());
+    let mut t = Table::new(
+        "Figure 8 — application kernel completion (cycles, linear mapping)",
+        &["kernel", "routing", "cycles", "mean hops"],
+    );
+    for ((k, r), res) in labels.iter().zip(&results) {
+        match &res.stats {
+            Ok(s) => t.row(vec![
+                k.clone(),
+                r.clone(),
+                s.finish_cycle.to_string(),
+                format!("{:.2}", s.mean_hops()),
+            ]),
+            Err(_) => t.row(vec![k.clone(), r.clone(), fmt_err(res), "-".into()]),
+        }
+    }
+    write_csv("fig8.csv", &t.to_csv())?;
+    Ok(t.render())
+}
+
+pub fn fig9(scale: Scale, seed: u64) -> anyhow::Result<String> {
+    let routings = ["ugal", "omniwar", "tera-hx2", "tera-hx3"];
+    let (labels, specs) = kernel_specs(scale, seed, &routings, Mapping::Linear);
+    let results = run_sweep(specs, default_threads());
+    let mut t = Table::new(
+        "Figure 9 — packet latency distribution per kernel (linear mapping)",
+        &["kernel", "routing", "mean", "p99", "p99.9", "p99.99", "max"],
+    );
+    let mut violins = String::from("kernel,routing,latency,density\n");
+    for ((k, r), res) in labels.iter().zip(&results) {
+        match &res.stats {
+            Ok(s) => {
+                t.row(vec![
+                    k.clone(),
+                    r.clone(),
+                    format!("{:.1}", s.latency.mean()),
+                    s.latency.percentile(99.0).to_string(),
+                    s.latency.percentile(99.9).to_string(),
+                    s.latency.percentile(99.99).to_string(),
+                    s.latency.max().to_string(),
+                ]);
+                for (lat, w) in s.latency.density() {
+                    violins.push_str(&format!("{k},{r},{lat},{w:.6}\n"));
+                }
+            }
+            Err(_) => t.row(vec![
+                k.clone(),
+                r.clone(),
+                fmt_err(res),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    write_csv("fig9.csv", &t.to_csv())?;
+    write_csv("fig9_violin.csv", &violins)?;
+    Ok(t.render())
+}
+
+// ---------------------------------------------------------------------
+// Figure 10 — 2D-HyperX evaluation
+// ---------------------------------------------------------------------
+
+pub fn fig10(scale: Scale, seed: u64) -> anyhow::Result<String> {
+    let (topo, spc) = match scale {
+        Scale::Quick => ("hx4x4".to_string(), 4usize),
+        Scale::Paper => ("hx8x8".to_string(), 8usize),
+    };
+    let routings = ["dor-tera", "o1turn-tera", "dimwar", "omniwar-hx"];
+    let kernels = ["all2all", "allreduce"];
+    let mut specs = Vec::new();
+    let mut labels = Vec::new();
+    for k in kernels {
+        for r in routings {
+            labels.push((k, r));
+            specs.push(ExperimentSpec {
+                name: format!("fig10-{k}-{r}"),
+                topology: topo.clone(),
+                servers_per_switch: spc,
+                routing: (*r).into(),
+                traffic: TrafficSpec::Kernel {
+                    kernel: k.into(),
+                    iters: 2,
+                    pkts_per_msg: 2,
+                    mapping: Mapping::Linear,
+                },
+                seed,
+                max_cycles: 80_000_000,
+                ..Default::default()
+            });
+        }
+    }
+    let results = run_sweep(specs, default_threads());
+    let mut t = Table::new(
+        &format!("Figure 10 — 2D-HyperX {topo} ({spc} srv/sw): kernel completion"),
+        &["kernel", "routing", "VCs", "cycles", "mean hops"],
+    );
+    for ((k, r), res) in labels.iter().zip(&results) {
+        let vcs = match *r {
+            "dor-tera" => 1,
+            "o1turn-tera" | "dimwar" => 2,
+            _ => 4,
+        };
+        match &res.stats {
+            Ok(s) => t.row(vec![
+                k.to_string(),
+                r.to_string(),
+                vcs.to_string(),
+                s.finish_cycle.to_string(),
+                format!("{:.2}", s.mean_hops()),
+            ]),
+            Err(_) => t.row(vec![
+                k.to_string(),
+                r.to_string(),
+                vcs.to_string(),
+                fmt_err(res),
+                "-".into(),
+            ]),
+        }
+    }
+    write_csv("fig10.csv", &t.to_csv())?;
+    Ok(t.render())
+}
+
+// ---------------------------------------------------------------------
+// Ablation — the q penalty (§5 fixes q = 54 "after an experimental sweep")
+// ---------------------------------------------------------------------
+
+/// Re-run the §5 calibration sweep: TERA-HX2 under RSP across q values.
+/// The paper's q = 54 (≈3.4 packets) should sit on the plateau: far lower
+/// q over-deroutes under benign traffic, far higher q under-adapts under
+/// adversarial traffic.
+pub fn ablation_q(scale: Scale, seed: u64) -> anyhow::Result<String> {
+    let (topo, spc) = fm(scale);
+    let hz = horizon(scale);
+    let qs = [0u32, 8, 16, 32, 54, 96, 160, 256];
+    let mut specs = Vec::new();
+    let mut labels = Vec::new();
+    for pat in ["uniform", "rsp"] {
+        for &q in &qs {
+            labels.push((pat, q));
+            specs.push(ExperimentSpec {
+                name: format!("ablation-q{q}-{pat}"),
+                topology: topo.clone(),
+                servers_per_switch: spc,
+                routing: "tera-hx2".into(),
+                q,
+                traffic: TrafficSpec::Bernoulli {
+                    pattern: pat.into(),
+                    load: 0.7,
+                    horizon: hz,
+                },
+                warmup: hz / 4,
+                seed,
+                ..Default::default()
+            });
+        }
+    }
+    let results = run_sweep(specs, default_threads());
+    let mut t = Table::new(
+        "Ablation — TERA-HX2 non-minimal penalty q (load 0.7)",
+        &["pattern", "q", "accepted", "latency", "2hop%"],
+    );
+    for ((pat, q), res) in labels.iter().zip(&results) {
+        match &res.stats {
+            Ok(s) => t.row(vec![
+                pat.to_string(),
+                q.to_string(),
+                format!("{:.3}", s.accepted_throughput()),
+                format!("{:.1}", s.mean_latency()),
+                format!("{:.1}", 100.0 * s.hop_fraction(2)),
+            ]),
+            Err(_) => t.row(vec![
+                pat.to_string(),
+                q.to_string(),
+                fmt_err(res),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    write_csv("ablation_q.csv", &t.to_csv())?;
+    Ok(t.render())
+}
+
+// ---------------------------------------------------------------------
+// Service/main link utilization (§6.3, last paragraph)
+// ---------------------------------------------------------------------
+
+pub fn link_utilization(scale: Scale, seed: u64) -> anyhow::Result<String> {
+    let (topo, spc) = fm(scale);
+    let hz = horizon(scale);
+    let mut out = String::new();
+    for pat in ["uniform", "rsp"] {
+        let spec = ExperimentSpec {
+            name: format!("util-{pat}"),
+            topology: topo.clone(),
+            servers_per_switch: spc,
+            routing: "tera-hx3".into(),
+            traffic: TrafficSpec::Bernoulli {
+                pattern: pat.into(),
+                load: 0.7,
+                horizon: hz,
+            },
+            warmup: hz / 4,
+            seed,
+            ..Default::default()
+        };
+        let net = spec.build_network()?;
+        let n = net.topo.n;
+        let svc = service::by_name("hx3", n)?;
+        let emb = crate::service::Embedding::new(&net.topo, svc.as_ref());
+        let stats = spec.run()?;
+        let maxdeg = net.topo.max_degree();
+        let (mut svc_flits, mut svc_arcs, mut main_flits, mut main_arcs) = (0u64, 0u64, 0u64, 0u64);
+        for s in 0..n {
+            for p in 0..net.topo.degree(s) {
+                let d = net.topo.neighbor(s, p);
+                let f = stats.link_flits[s * maxdeg + p];
+                if emb.is_service(s, d) {
+                    svc_flits += f;
+                    svc_arcs += 1;
+                } else {
+                    main_flits += f;
+                    main_arcs += 1;
+                }
+            }
+        }
+        let per_svc = svc_flits as f64 / svc_arcs.max(1) as f64;
+        let per_main = main_flits as f64 / main_arcs.max(1) as f64;
+        let loads: Vec<f64> = stats.injected_per_server.iter().map(|&x| x as f64).collect();
+        out.push_str(&format!(
+            "[{pat}] TERA-HX3 link utilization: service {per_svc:.0} flits/arc ({svc_arcs} arcs), \
+             main {per_main:.0} flits/arc ({main_arcs} arcs), ratio {:.2}; jain={:.3}\n",
+            per_svc / per_main.max(1e-9),
+            jain_index(&loads),
+        ));
+    }
+    Ok(out)
+}

@@ -1,0 +1,11 @@
+//! Experiment coordinator: fans a set of [`ExperimentSpec`]s out over
+//! worker threads (tokio is not in the offline crate set; std threads are a
+//! perfect fit for CPU-bound simulation), collects the results in
+//! submission order, and renders figure-shaped reports.
+
+pub mod figures;
+pub mod report;
+pub mod sweep;
+
+pub use report::{ascii_bars, ascii_curve, write_csv, Table};
+pub use sweep::{run_sweep, SweepResult};

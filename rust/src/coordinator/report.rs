@@ -1,0 +1,190 @@
+//! Report rendering: aligned ASCII tables, bar/curve plots for terminal
+//! figures, and CSV export for external plotting.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let _ = write!(s, " {:<w$} |", cells[i], w = widths[i]);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.headers);
+        let _ = writeln!(
+            out,
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// Write as CSV next to the rendered form.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+}
+
+/// Horizontal ASCII bar chart (used for the completion-time figures).
+pub fn ascii_bars(items: &[(String, f64)], width: usize) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max);
+    let label_w = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (label, v) in items {
+        let filled = if max > 0.0 {
+            ((v / max) * width as f64).round() as usize
+        } else {
+            0
+        };
+        let _ = writeln!(
+            out,
+            "{:<label_w$} | {:<width$} {v:.1}",
+            label,
+            "█".repeat(filled.min(width)),
+        );
+    }
+    out
+}
+
+/// ASCII scatter/curve plot: series of (x, y) per named line (used for the
+/// throughput/latency-vs-load figures).
+pub fn ascii_curve(series: &[(String, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, pts)| pts.clone()).collect();
+    if all.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let (mut xmin, mut xmax, mut ymin, mut ymax) =
+        (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(x, y) in &all {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    const MARKS: [char; 8] = ['o', '+', 'x', '*', '#', '@', '%', '&'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in pts {
+            let cx = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "y: {ymin:.3} .. {ymax:.3}");
+    for row in grid {
+        let _ = writeln!(out, "|{}", row.into_iter().collect::<String>());
+    }
+    let _ = writeln!(out, "+{}", "-".repeat(width));
+    let _ = writeln!(out, " x: {xmin:.3} .. {xmax:.3}");
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "   {} = {name}", MARKS[si % MARKS.len()]);
+    }
+    out
+}
+
+/// Write CSV content under `bench_out/` (created on demand).
+pub fn write_csv(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| longer | 2.5   |"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("name,value\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn bars_scale_to_max() {
+        let s = ascii_bars(
+            &[("x".into(), 10.0), ("y".into(), 5.0)],
+            20,
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        let count = |l: &str| l.matches('█').count();
+        assert_eq!(count(lines[0]), 20);
+        assert_eq!(count(lines[1]), 10);
+    }
+
+    #[test]
+    fn curve_draws_markers() {
+        let s = ascii_curve(
+            &[("t".into(), vec![(0.0, 0.0), (1.0, 1.0)])],
+            20,
+            10,
+        );
+        assert!(s.matches('o').count() >= 2);
+    }
+}

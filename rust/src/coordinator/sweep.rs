@@ -1,0 +1,120 @@
+//! Threaded parameter sweeps over experiment specs.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::config::ExperimentSpec;
+use crate::metrics::SimStats;
+
+/// Result of one sweep point.
+pub struct SweepResult {
+    pub spec: ExperimentSpec,
+    pub stats: anyhow::Result<SimStats>,
+    /// Wall-clock seconds the point took to simulate.
+    pub wall_secs: f64,
+}
+
+/// Run all specs, `threads`-wide, returning results in submission order.
+///
+/// Deadlocks and build errors are reported per-point (they don't abort the
+/// sweep — Fig-5-style comparisons legitimately include algorithms that
+/// fail on some patterns).
+pub fn run_sweep(specs: Vec<ExperimentSpec>, threads: usize) -> Vec<SweepResult> {
+    let threads = threads.max(1);
+    let n = specs.len();
+    let work: Arc<Mutex<std::vec::IntoIter<(usize, ExperimentSpec)>>> = Arc::new(Mutex::new(
+        specs
+            .into_iter()
+            .enumerate()
+            .collect::<Vec<_>>()
+            .into_iter(),
+    ));
+    let (tx, rx) = mpsc::channel::<(usize, SweepResult)>();
+    let mut handles = Vec::new();
+    for _ in 0..threads.min(n.max(1)) {
+        let work = Arc::clone(&work);
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let next = work.lock().unwrap().next();
+            let Some((idx, spec)) = next else { break };
+            let t0 = std::time::Instant::now();
+            let stats = spec.run().map_err(anyhow::Error::from);
+            let wall_secs = t0.elapsed().as_secs_f64();
+            let _ = tx.send((
+                idx,
+                SweepResult {
+                    spec,
+                    stats,
+                    wall_secs,
+                },
+            ));
+        }));
+    }
+    drop(tx);
+    let mut slots: Vec<Option<SweepResult>> = (0..n).map(|_| None).collect();
+    for (idx, res) in rx {
+        slots[idx] = Some(res);
+    }
+    for h in handles {
+        h.join().expect("sweep worker panicked");
+    }
+    slots.into_iter().map(|s| s.expect("missing result")).collect()
+}
+
+/// Default parallelism: physical cores minus one (leave a core for the OS),
+/// at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::TrafficSpec;
+
+    fn tiny_spec(routing: &str, seed: u64) -> ExperimentSpec {
+        ExperimentSpec {
+            topology: "fm8".into(),
+            servers_per_switch: 2,
+            routing: routing.into(),
+            traffic: TrafficSpec::Fixed {
+                pattern: "uniform".into(),
+                packets_per_server: 5,
+            },
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_preserves_order_and_runs_all() {
+        let specs = vec![
+            tiny_spec("min", 1),
+            tiny_spec("tera-path", 2),
+            tiny_spec("valiant", 3),
+        ];
+        let results = run_sweep(specs, 3);
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].spec.routing, "min");
+        assert_eq!(results[1].spec.routing, "tera-path");
+        assert_eq!(results[2].spec.routing, "valiant");
+        for r in &results {
+            let stats = r.stats.as_ref().expect("run ok");
+            assert_eq!(stats.delivered_packets, 8 * 2 * 5);
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let mk = || vec![tiny_spec("tera-path", 7), tiny_spec("min", 7)];
+        let a = run_sweep(mk(), 1);
+        let b = run_sweep(mk(), 4);
+        for (x, y) in a.iter().zip(&b) {
+            let (sx, sy) = (x.stats.as_ref().unwrap(), y.stats.as_ref().unwrap());
+            assert_eq!(sx.finish_cycle, sy.finish_cycle);
+            assert_eq!(sx.delivered_flits, sy.delivered_flits);
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! # tera-net
+//!
+//! Reproduction of **"Deadlock-free routing for Full-mesh networks without
+//! using Virtual Channels"** (Cano, Camarero, Martínez, Beivide — HOTI'25).
+//!
+//! The crate provides, as a library:
+//!
+//! * a flit-level, cycle-driven interconnection-network simulator
+//!   ([`sim`]) with the switch microarchitecture the paper specifies
+//!   (per-VC input FIFOs, output queues, 2× speedup random allocator,
+//!   credit-based flow control);
+//! * the physical topologies of the evaluation ([`topology`]): Full-mesh
+//!   and d-dimensional HyperX;
+//! * service topologies and their Full-mesh embedding ([`service`]),
+//!   with DOR / Up*/Down* minimal routing and a channel-dependency-graph
+//!   deadlock checker;
+//! * every routing algorithm of the evaluation ([`routing`]): MIN,
+//!   Valiant, UGAL, Omni-WAR, bRINR, sRINR, **TERA** (the paper's
+//!   contribution, Algorithm 1) and the 2D-HyperX variants
+//!   (Dim-WAR, DOR-TERA, O1TURN-TERA);
+//! * the traffic patterns, generation modes, and application kernels of
+//!   §5 ([`traffic`]);
+//! * metrics ([`metrics`]): throughput, latency percentiles, hop
+//!   distribution, Jain fairness index;
+//! * the Appendix-B analytic throughput model ([`analytic`]), also
+//!   available as an AOT-compiled XLA artifact executed through PJRT
+//!   ([`runtime`]);
+//! * an experiment coordinator ([`coordinator`]) that fans parameter
+//!   sweeps out over threads and renders the paper's tables and figures.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod analytic;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod routing;
+pub mod runtime;
+pub mod service;
+pub mod sim;
+pub mod testing;
+pub mod topology;
+pub mod traffic;
+pub mod util;

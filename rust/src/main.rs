@@ -1,0 +1,241 @@
+//! `tera-net` — CLI front-end for the TERA reproduction.
+//!
+//! ```text
+//! tera-net run        --topology fm64 --routing tera-hx2 --pattern rsp
+//!                     [--mode bernoulli|fixed|kernel] [--load 0.5]
+//!                     [--spc 16] [--seed 1] [--q 54] ...
+//! tera-net table1     [--n 64]
+//! tera-net fig4       [--pjrt]
+//! tera-net fig5..fig10  [--full] [--seed 1]
+//! tera-net linkutil   [--full]           # §6.3 service/main utilization
+//! tera-net validate-artifacts            # PJRT vs pure-Rust cross-check
+//! tera-net config     --file exp.toml    # run an experiment from a file
+//! ```
+
+use tera_net::cli::Args;
+use tera_net::config::spec::{ExperimentSpec, TrafficSpec};
+use tera_net::coordinator::figures::{self, Scale};
+use tera_net::traffic::kernels::Mapping;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let scale = Scale::from_env(args.has("full"));
+    let seed = args.get_u64("seed", 1)?;
+    match args.command.as_str() {
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+        }
+        "run" => cmd_run(&args)?,
+        "config" => cmd_config(&args)?,
+        "table1" => print!("{}", figures::table1(args.get_usize("n", 64)?)?),
+        "fig4" => print!("{}", figures::fig4(args.has("pjrt"))?),
+        "fig5" => print!("{}", figures::fig5(scale, seed)?),
+        "fig6" => print!("{}", figures::fig6(scale, seed)?),
+        "fig7" => print!("{}", figures::fig7(scale, seed)?),
+        "fig8" => print!("{}", figures::fig8(scale, seed)?),
+        "fig9" => print!("{}", figures::fig9(scale, seed)?),
+        "fig10" => print!("{}", figures::fig10(scale, seed)?),
+        "linkutil" => print!("{}", figures::link_utilization(scale, seed)?),
+        "ablation-q" => print!("{}", figures::ablation_q(scale, seed)?),
+        "figs" => {
+            // Everything, in paper order.
+            print!("{}", figures::table1(64)?);
+            print!("{}", figures::fig4(args.has("pjrt"))?);
+            print!("{}", figures::fig5(scale, seed)?);
+            print!("{}", figures::fig6(scale, seed)?);
+            print!("{}", figures::fig7(scale, seed)?);
+            print!("{}", figures::fig8(scale, seed)?);
+            print!("{}", figures::fig9(scale, seed)?);
+            print!("{}", figures::fig10(scale, seed)?);
+            print!("{}", figures::link_utilization(scale, seed)?);
+        }
+        "validate-artifacts" => cmd_validate()?,
+        other => anyhow::bail!("unknown command '{other}' (try `tera-net help`)"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let mode = args.get_or("mode", "bernoulli");
+    let traffic = match mode {
+        "bernoulli" => TrafficSpec::Bernoulli {
+            pattern: args.get_or("pattern", "uniform").into(),
+            load: args.get_f64("load", 0.5)?,
+            horizon: args.get_u64("horizon", 20_000)?,
+        },
+        "fixed" => TrafficSpec::Fixed {
+            pattern: args.get_or("pattern", "uniform").into(),
+            packets_per_server: args.get_usize("packets", 100)?,
+        },
+        "kernel" => TrafficSpec::Kernel {
+            kernel: args.get_or("kernel", "all2all").into(),
+            iters: args.get_usize("iters", 2)?,
+            pkts_per_msg: args.get_usize("pkts-per-msg", 1)? as u16,
+            mapping: if args.get_or("mapping", "linear") == "random" {
+                Mapping::Random
+            } else {
+                Mapping::Linear
+            },
+        },
+        other => anyhow::bail!("unknown mode '{other}'"),
+    };
+    let spec = ExperimentSpec {
+        name: "cli-run".into(),
+        topology: args.get_or("topology", "fm16").into(),
+        servers_per_switch: args.get_usize("spc", 4)?,
+        routing: args.get_or("routing", "tera-hx2").into(),
+        q: args.get_usize("q", 54)? as u32,
+        traffic,
+        seed: args.get_u64("seed", 1)?,
+        warmup: args.get_u64("warmup", 2_000)?,
+        max_cycles: args.get_u64("max-cycles", 10_000_000)?,
+    };
+    report_one(&spec)
+}
+
+fn cmd_config(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("file")
+        .ok_or_else(|| anyhow::anyhow!("config requires --file <path>"))?;
+    let src = std::fs::read_to_string(path)?;
+    let value = tera_net::config::parse(&src)?;
+    let root = value.get("experiment").unwrap_or(&value);
+    let spec = ExperimentSpec::from_value(root)?;
+    report_one(&spec)
+}
+
+fn report_one(spec: &ExperimentSpec) -> anyhow::Result<()> {
+    eprintln!(
+        "running {} on {} ({} srv/sw, routing {}, seed {})",
+        spec.name, spec.topology, spec.servers_per_switch, spec.routing, spec.seed
+    );
+    let t0 = std::time::Instant::now();
+    let stats = spec.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("finish_cycle        {}", stats.finish_cycle);
+    println!("delivered_packets   {}", stats.delivered_packets);
+    println!(
+        "accepted_throughput {:.4} flits/cycle/server",
+        stats.accepted_throughput()
+    );
+    println!("mean_latency        {:.1} cycles", stats.mean_latency());
+    println!("p99_latency         {}", stats.latency.percentile(99.0));
+    println!("p99.9_latency       {}", stats.latency.percentile(99.9));
+    println!("mean_hops           {:.3}", stats.mean_hops());
+    for h in 1..6 {
+        let f = stats.hop_fraction(h);
+        if f > 0.0 {
+            println!("  hops={h}            {:.2}%", 100.0 * f);
+        }
+    }
+    println!("jain_index          {:.4}", stats.jain());
+    println!("wall_time           {wall:.2}s");
+    Ok(())
+}
+
+fn cmd_validate() -> anyhow::Result<()> {
+    use tera_net::runtime::{Engine, RustScorer, ScoreBatch, TeraScorer};
+    use tera_net::util::Rng;
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 1. Analytic model vs pure Rust.
+    let model = tera_net::runtime::AnalyticModel::load(&engine)?;
+    let ps: Vec<f64> = (1..=32).map(|i| i as f64 / 32.0).collect();
+    let got = model.throughput(&ps)?;
+    let mut max_err = 0f64;
+    for (&p, &g) in ps.iter().zip(&got) {
+        let want = tera_net::analytic::throughput_estimate(p);
+        max_err = max_err.max((want - g).abs());
+    }
+    anyhow::ensure!(max_err < 1e-6, "analytic artifact mismatch: {max_err}");
+    println!(
+        "analytic.hlo.txt     OK (max |err| = {max_err:.2e} over {} ratios)",
+        ps.len()
+    );
+
+    // 2. TERA scorer vs pure Rust, randomized batches.
+    let scorer = TeraScorer::load(&engine)?;
+    let mut rng = Rng::new(0xA11CE);
+    let mut checked = 0usize;
+    for round in 0..8 {
+        let mut b = ScoreBatch::zeros(TeraScorer::BATCH, TeraScorer::PORTS, 54.0);
+        for i in 0..b.occ.len() {
+            b.occ[i] = rng.gen_range(400) as f32;
+            b.direct[i] = f32::from(rng.gen_bool(0.1));
+            b.valid[i] = f32::from(rng.gen_bool(0.8));
+        }
+        // Ensure each row has at least one valid port.
+        for r in 0..b.batch {
+            let i = r * b.ports + rng.gen_range(b.ports);
+            b.valid[i] = 1.0;
+        }
+        let want = RustScorer.score(&b);
+        let got = scorer.score(&b)?;
+        anyhow::ensure!(
+            want.choice == got.choice,
+            "scorer choice mismatch in round {round}"
+        );
+        for (w, g) in want.weight.iter().zip(&got.weight) {
+            anyhow::ensure!((w - g).abs() < 1e-3, "scorer weight mismatch: {w} vs {g}");
+        }
+        checked += b.batch;
+    }
+    println!("tera_score.hlo.txt   OK ({checked} decisions, exact choice agreement)");
+
+    // 3. Telemetry vs pure Rust Jain.
+    let tele = tera_net::runtime::Telemetry::load(&engine)?;
+    let loads: Vec<f64> = (0..1000).map(|_| rng.gen_range(100) as f64).collect();
+    let (jain, mean, max) = tele.summarize(&loads)?;
+    let want_jain = tera_net::metrics::jain_index(&loads);
+    let want_mean = loads.iter().sum::<f64>() / loads.len() as f64;
+    let want_max = loads.iter().cloned().fold(0.0, f64::max);
+    anyhow::ensure!(
+        (jain - want_jain).abs() < 1e-5,
+        "jain mismatch {jain} vs {want_jain}"
+    );
+    anyhow::ensure!(
+        (mean - want_mean).abs() < 1e-3 * want_mean.max(1.0),
+        "mean mismatch"
+    );
+    anyhow::ensure!((max - want_max).abs() < 1e-3, "max mismatch");
+    println!(
+        "telemetry.hlo.txt    OK (jain={jain:.6}, Δ={:.2e})",
+        (jain - want_jain).abs()
+    );
+    println!("all artifacts validated");
+    Ok(())
+}
+
+const HELP: &str = "\
+tera-net — TERA (HOTI'25) reproduction: VC-less deadlock-free routing on Full-mesh
+
+USAGE: tera-net <command> [flags]
+
+COMMANDS:
+  run                 single experiment (see flags below)
+  config --file F     run the [experiment] table of a TOML config
+  table1              Table 1 (service topology properties)
+  fig4 [--pjrt]       analytic throughput estimate (optionally via PJRT artifact)
+  fig5 .. fig10       reproduce each evaluation figure   [--full] [--seed N]
+  figs                all tables + figures in paper order
+  linkutil            §6.3 service/main link utilization
+  validate-artifacts  cross-check AOT artifacts against pure-Rust references
+  help                this text
+
+RUN FLAGS:
+  --topology fm64|hx8x8   --routing min|valiant|ugal|omniwar|brinr|srinr|
+                          tera-<svc>|dor-tera|o1turn-tera|dimwar|omniwar-hx
+  --mode bernoulli|fixed|kernel    --pattern uniform|rsp|fr|shift|complement
+  --load 0.5 --horizon 20000       (bernoulli)
+  --packets 100                    (fixed)
+  --kernel all2all|stencil2d|stencil3d|fft3d|allreduce --mapping linear|random
+  --spc N (servers/switch)  --q 54  --seed 1
+";

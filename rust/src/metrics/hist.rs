@@ -1,0 +1,197 @@
+//! Streaming latency histogram with exact tail percentiles.
+//!
+//! Fig 9 plots violin latency distributions with markers at the mean, p99,
+//! p99.9 and p99.99. We keep a log-bucketed histogram (2% relative error,
+//! HdrHistogram-style) which is O(1) per sample and compact enough to keep
+//! per-run, plus exact min/max/mean.
+
+/// Log-bucketed latency histogram.
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    /// Buckets: index i covers [floor(GROWTH^i), floor(GROWTH^{i+1})).
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: u64,
+    max: u64,
+}
+
+/// Relative bucket growth: 2% error on percentile estimates.
+const GROWTH: f64 = 1.02;
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self {
+            counts: Vec::new(),
+            total: 0,
+            sum: 0.0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(value: u64) -> usize {
+        if value <= 1 {
+            return 0;
+        }
+        ((value as f64).ln() / GROWTH.ln()) as usize
+    }
+
+    /// Lower edge of bucket `i`.
+    fn bucket_lo(i: usize) -> u64 {
+        GROWTH.powi(i as i32) as u64
+    }
+
+    #[inline]
+    pub fn record(&mut self, value: u64) {
+        let b = Self::bucket_of(value);
+        if b >= self.counts.len() {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += value as f64;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Percentile estimate (`p` in [0, 100]); 2% relative error.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // Midpoint of the bucket, clamped to observed extremes.
+                let lo = Self::bucket_lo(i);
+                let hi = Self::bucket_lo(i + 1);
+                return ((lo + hi) / 2).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, &c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Density samples for violin plots: (latency, weight) per non-empty
+    /// bucket.
+    pub fn density(&self) -> Vec<(u64, f64)> {
+        if self.total == 0 {
+            return Vec::new();
+        }
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let mid = (Self::bucket_lo(i) + Self::bucket_lo(i + 1)) / 2;
+                (mid, c as f64 / self.total as f64)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_hist() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = LatencyHist::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+        assert_eq!(h.min(), 10);
+        assert_eq!(h.max(), 30);
+    }
+
+    #[test]
+    fn percentiles_within_tolerance() {
+        let mut h = LatencyHist::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        for (p, expect) in [(50.0, 5_000u64), (99.0, 9_900), (99.9, 9_990)] {
+            let got = h.percentile(p);
+            let err = (got as f64 - expect as f64).abs() / expect as f64;
+            assert!(err < 0.05, "p{p}: got {got} expect {expect}");
+        }
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        a.record(10);
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 10);
+        assert_eq!(a.max(), 1000);
+    }
+
+    #[test]
+    fn density_sums_to_one() {
+        let mut h = LatencyHist::new();
+        for v in [5u64, 5, 50, 500, 500, 500] {
+            h.record(v);
+        }
+        let total: f64 = h.density().iter().map(|(_, w)| w).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

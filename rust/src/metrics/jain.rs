@@ -1,0 +1,53 @@
+//! Jain fairness index [Jain et al. 1984], as used in §5:
+//! `J(x) = (Σ x_i)^2 / (n · Σ x_i^2)`. 1.0 = perfect equity.
+
+/// Compute the Jain index of a load vector. Returns 1.0 for empty or
+/// all-zero input (vacuous fairness).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if s2 == 0.0 {
+        return 1.0;
+    }
+    s * s / (xs.len() as f64 * s2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_equity() {
+        assert!((jain_index(&[3.0; 10]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_hot_server() {
+        // One server gets everything: J = 1/n.
+        let mut xs = vec![0.0; 10];
+        xs[0] = 5.0;
+        assert!((jain_index(&xs) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_value() {
+        // x = [1, 2, 3]: (6)^2 / (3 * 14) = 36/42.
+        assert!((jain_index(&[1.0, 2.0, 3.0]) - 36.0 / 42.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounds() {
+        let xs = [0.2, 0.9, 0.4, 0.7];
+        let j = jain_index(&xs);
+        assert!(j > 1.0 / 4.0 && j <= 1.0);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Performance metrics of §5: accepted throughput, packet latency
+//! (mean + tail percentiles for the Fig-9 violins), hop distribution, and
+//! the Jain fairness index over per-server generated load.
+
+pub mod hist;
+pub mod jain;
+
+pub use hist::LatencyHist;
+pub use jain::jain_index;
+
+/// Aggregate statistics for one simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    /// Flits delivered to servers within the measurement window.
+    pub delivered_flits: u64,
+    /// Packets delivered within the measurement window.
+    pub delivered_packets: u64,
+    /// Packets injected (entered a switch) within the window, per server.
+    pub injected_per_server: Vec<u64>,
+    /// End-to-end packet latency (generation → tail ejected), cycles.
+    pub latency: LatencyHist,
+    /// `hops[h]` — packets delivered that took `h` switch-to-switch hops.
+    pub hops: Vec<u64>,
+    /// Per-link utilization: flits carried per inter-switch arc.
+    pub link_flits: Vec<u64>,
+    /// Measurement window length in cycles.
+    pub window_cycles: u64,
+    /// Cycle at which the run finished (fixed generation: completion time).
+    pub finish_cycle: u64,
+}
+
+impl SimStats {
+    pub fn new(num_servers: usize, num_arcs: usize) -> Self {
+        Self {
+            injected_per_server: vec![0; num_servers],
+            hops: vec![0; 16],
+            link_flits: vec![0; num_arcs],
+            ..Default::default()
+        }
+    }
+
+    /// Accepted throughput in flits/cycle/server (the paper's y-axis).
+    pub fn accepted_throughput(&self) -> f64 {
+        if self.window_cycles == 0 || self.injected_per_server.is_empty() {
+            return 0.0;
+        }
+        self.delivered_flits as f64
+            / self.window_cycles as f64
+            / self.injected_per_server.len() as f64
+    }
+
+    /// Mean end-to-end latency in cycles.
+    pub fn mean_latency(&self) -> f64 {
+        self.latency.mean()
+    }
+
+    /// Jain fairness index over per-server generated load (§5).
+    pub fn jain(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .injected_per_server
+            .iter()
+            .map(|&x| x as f64)
+            .collect();
+        jain_index(&xs)
+    }
+
+    /// Fraction of delivered packets that took exactly `h` hops.
+    pub fn hop_fraction(&self, h: usize) -> f64 {
+        let total: u64 = self.hops.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        *self.hops.get(h).unwrap_or(&0) as f64 / total as f64
+    }
+
+    /// Mean hops per delivered packet.
+    pub fn mean_hops(&self) -> f64 {
+        let total: u64 = self.hops.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let weighted: u64 = self
+            .hops
+            .iter()
+            .enumerate()
+            .map(|(h, &c)| h as u64 * c)
+            .sum();
+        weighted as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_normalization() {
+        let mut s = SimStats::new(4, 0);
+        s.delivered_flits = 800;
+        s.window_cycles = 100;
+        assert!((s.accepted_throughput() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hop_fraction_sums_to_one() {
+        let mut s = SimStats::new(2, 0);
+        s.hops[1] = 90;
+        s.hops[2] = 10;
+        assert!((s.hop_fraction(1) - 0.9).abs() < 1e-12);
+        assert!((s.hop_fraction(2) - 0.1).abs() < 1e-12);
+        assert!((s.mean_hops() - 1.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,353 @@
+//! Link-ordering (path-restriction) schemes without VCs — §3.
+//!
+//! Every directed link (arc) gets a label; a 2-hop path `s → m → d` is
+//! allowed iff `L(s,m) < L(m,d)`, which makes the channel dependency graph
+//! acyclic (labels strictly increase along any path) and hence deadlock-free
+//! with a single buffer class.
+//!
+//! * **sRINR** (Definition 3.3): `L(i,j) = (j − i) mod n`. Balanced: every
+//!   link is usable by the same number of source/destination pairs, at the
+//!   Theorem-3.2 cost of only `½·n(n−1)(n−2)` allowed paths; each pair keeps
+//!   ≥ `(n−4)/2` intermediates (Claim 3.4).
+//! * **bRINR** [Kwauk et al., BoomGate]: maximizes allowed paths. We use the
+//!   canonical ⅔-maximal ordering — all "up" arcs (`i<j`) ordered by
+//!   ascending tail first, then all "down" arcs ordered by descending tail —
+//!   which attains exactly `⅔·n(n−1)(n−2)` allowed paths (the figure the
+//!   paper quotes) and exhibits the hotspot imbalance §3 criticizes:
+//!   high-id switches serve far more pairs than low-id ones
+//!   (see DESIGN.md, Substitution 3).
+
+use std::sync::Arc;
+
+use super::{select_weighted_or_escape, Decision, Router};
+use crate::sim::packet::Packet;
+use crate::sim::SwitchView;
+use crate::topology::{PhysTopology, TopoKind};
+use crate::util::Rng;
+
+/// Arc labels for an n-switch Full-mesh: `labels[i * n + j] = L(i → j)`.
+pub type ArcLabels = Vec<u32>;
+
+/// sRINR labels (Definition 3.3): `L(i,j) ≡ (j − i) mod n`.
+pub fn srinr_labels(n: usize) -> ArcLabels {
+    let mut l = vec![0u32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                l[i * n + j] = ((j + n - i) % n) as u32;
+            }
+        }
+    }
+    l
+}
+
+/// bRINR labels: the ⅔-maximal ordering. Up-arcs (`i<j`) take labels
+/// `0..m`, ordered lexicographically by `(i, j)`; down-arcs (`i>j`) take
+/// labels `m..2m`, ordered by `(−i, −j)` (descending tail, then descending
+/// head).
+pub fn brinr_labels(n: usize) -> ArcLabels {
+    let m = n * (n - 1) / 2;
+    let mut l = vec![0u32; n * n];
+    let mut next = 0u32;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            l[i * n + j] = next;
+            next += 1;
+        }
+    }
+    debug_assert_eq!(next as usize, m);
+    for i in (0..n).rev() {
+        for j in (0..i).rev() {
+            l[i * n + j] = next;
+            next += 1;
+        }
+    }
+    debug_assert_eq!(next as usize, 2 * m);
+    l
+}
+
+/// Count all allowed 2-hop paths under a labeling (Theorem 3.2 analysis).
+pub fn count_allowed_paths(labels: &ArcLabels, n: usize) -> u64 {
+    let mut count = 0u64;
+    for s in 0..n {
+        for m in 0..n {
+            if m == s {
+                continue;
+            }
+            for d in 0..n {
+                if d == s || d == m {
+                    continue;
+                }
+                if labels[s * n + m] < labels[m * n + d] {
+                    count += 1;
+                }
+            }
+        }
+    }
+    count
+}
+
+/// Number of allowed intermediates for every (s, d) pair.
+pub fn intermediates_per_pair(labels: &ArcLabels, n: usize) -> Vec<u32> {
+    let mut out = vec![0u32; n * n];
+    for s in 0..n {
+        for d in 0..n {
+            if s == d {
+                continue;
+            }
+            let mut c = 0;
+            for m in 0..n {
+                if m != s && m != d && labels[s * n + m] < labels[m * n + d] {
+                    c += 1;
+                }
+            }
+            out[s * n + d] = c;
+        }
+    }
+    out
+}
+
+/// Per-arc utilization: how many (s,d) pairs may use each arc (the
+/// imbalance metric behind Theorem 3.2).
+pub fn arc_utilization(labels: &ArcLabels, n: usize) -> Vec<u32> {
+    let mut util = vec![0u32; n * n];
+    for s in 0..n {
+        for m in 0..n {
+            if m == s {
+                continue;
+            }
+            for d in 0..n {
+                if d == s || d == m {
+                    continue;
+                }
+                if labels[s * n + m] < labels[m * n + d] {
+                    util[s * n + m] += 1;
+                    util[m * n + d] += 1;
+                }
+            }
+        }
+    }
+    util
+}
+
+/// Adaptive link-ordering router: at the source it weighs the direct link
+/// against every allowed intermediate (occupancy + `q` penalty, Algorithm-1
+/// style weighting, which the paper's simulator applies uniformly); after
+/// the first hop the packet must finish minimally.
+pub struct LinkOrderRouter {
+    topo: Arc<PhysTopology>,
+    labels: ArcLabels,
+    /// Allowed intermediates per (s,d), precomputed: `allowed[s*n+d]`.
+    allowed: Vec<Vec<u32>>,
+    /// Non-minimal penalty in flits (§5: q = 54).
+    pub q: u32,
+    name: String,
+}
+
+impl LinkOrderRouter {
+    pub fn new(topo: Arc<PhysTopology>, labels: ArcLabels, name: &str, q: u32) -> Self {
+        assert_eq!(topo.kind, TopoKind::FullMesh, "LinkOrderRouter is FM-only");
+        let n = topo.n;
+        assert_eq!(labels.len(), n * n);
+        let mut allowed = vec![Vec::new(); n * n];
+        for s in 0..n {
+            for d in 0..n {
+                if s == d {
+                    continue;
+                }
+                for m in 0..n {
+                    if m != s && m != d && labels[s * n + m] < labels[m * n + d] {
+                        allowed[s * n + d].push(m as u32);
+                    }
+                }
+            }
+        }
+        Self {
+            topo,
+            labels,
+            allowed,
+            q,
+            name: name.to_string(),
+        }
+    }
+
+    pub fn srinr(topo: Arc<PhysTopology>, q: u32) -> Self {
+        let labels = srinr_labels(topo.n);
+        Self::new(topo, labels, "sRINR", q)
+    }
+
+    pub fn brinr(topo: Arc<PhysTopology>, q: u32) -> Self {
+        let labels = brinr_labels(topo.n);
+        Self::new(topo, labels, "bRINR", q)
+    }
+
+    pub fn labels(&self) -> &ArcLabels {
+        &self.labels
+    }
+}
+
+impl Router for LinkOrderRouter {
+    fn num_vcs(&self) -> usize {
+        1 // the whole point
+    }
+
+    fn route(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+    ) -> Option<Decision> {
+        let n = self.topo.n;
+        let s = view.sw;
+        let d = pkt.dst_sw as usize;
+        let direct = self.topo.port_to(s, d).expect("full mesh");
+        if !at_injection {
+            // Monotone labels guaranteed by the injection-time choice.
+            debug_assert!(
+                pkt.scratch == 0 || self.labels[s * n + d] + 1 > pkt.scratch,
+                "label monotonicity violated"
+            );
+            return if view.has_space(direct, 0) {
+                pkt.scratch = self.labels[s * n + d] + 1;
+                Some((direct, 0))
+            } else {
+                None
+            };
+        }
+        // Source: direct (no penalty) vs every allowed intermediate (+q).
+        // No escape port: label monotonicity makes waiting on the
+        // min-weight port deadlock-safe (arcs drain in decreasing label
+        // order).
+        let mut cands: Vec<(usize, usize, u32)> =
+            Vec::with_capacity(1 + self.allowed[s * n + d].len());
+        cands.push((direct, 0, view.occ_flits(direct)));
+        for &m in &self.allowed[s * n + d] {
+            let p = self.topo.port_to(s, m as usize).expect("full mesh");
+            cands.push((p, 0, view.occ_flits(p) + self.q));
+        }
+        let pick = select_weighted_or_escape(view, &cands, None, rng)?;
+        let to = self.topo.neighbor(s, pick.0);
+        pkt.scratch = self.labels[s * n + to] + 1;
+        Some(pick)
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn max_hops(&self) -> usize {
+        2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn srinr_labels_match_definition() {
+        let n = 8;
+        let l = srinr_labels(n);
+        assert_eq!(l[1 * n + 3], 2); // D(1,3) = 2
+        assert_eq!(l[3 * n + 1], 6); // D(3,1) = (1-3) mod 8 = 6
+    }
+
+    /// Theorem 3.2 realized by sRINR: a balanced ordering allows
+    /// ½·n(n−1)(n−2) paths in the idealized count; with the
+    /// distinct-vertex constraint (s ≠ m ≠ d ≠ s, which the theorem's Φ
+    /// zeroes out) the exact count is (n(n−1)(n−3) + n)/2 — within O(n²)
+    /// of the bound and strictly below it.
+    #[test]
+    fn srinr_attains_theorem_3_2_bound() {
+        for n in [6usize, 8, 16, 32] {
+            let l = srinr_labels(n);
+            let exact = (n * (n - 1) * (n - 3) + n) as u64 / 2;
+            let got = count_allowed_paths(&l, n);
+            assert_eq!(got, exact, "n={n}");
+            // …and never exceeds the theorem's balanced-ordering ceiling.
+            let bound = (n * (n - 1) * (n - 2)) as u64 / 2;
+            assert!(got <= bound, "n={n}: {got} > bound {bound}");
+        }
+    }
+
+    /// sRINR is balanced: every arc serves the same number of pairs up to
+    /// the ±1 self-exclusion correction (arcs of label n/2 serve n−2,
+    /// every other arc serves n−3).
+    #[test]
+    fn srinr_is_balanced() {
+        let n = 16;
+        let util = arc_utilization(&srinr_labels(n), n);
+        let vals: Vec<u32> = (0..n * n)
+            .filter(|&ij| ij / n != ij % n)
+            .map(|ij| util[ij])
+            .collect();
+        let min = *vals.iter().min().unwrap();
+        let max = *vals.iter().max().unwrap();
+        assert_eq!(min as usize, n - 3);
+        assert_eq!(max as usize, n - 2);
+        let at_max = vals.iter().filter(|&&v| v as usize == n - 2).count();
+        assert_eq!(at_max, n, "only the n label-n/2 arcs reach n−2");
+    }
+
+    /// Claim 3.4: sRINR's minimum intermediates = (n−4)/2 for even n.
+    #[test]
+    fn srinr_min_intermediates_claim_3_4() {
+        for n in [8usize, 16, 32, 64] {
+            let inter = intermediates_per_pair(&srinr_labels(n), n);
+            let min = (0..n * n)
+                .filter(|&ij| ij / n != ij % n)
+                .map(|ij| inter[ij])
+                .min()
+                .unwrap();
+            assert_eq!(min as usize, (n - 4) / 2, "n={n}");
+        }
+    }
+
+    /// bRINR attains the ⅔ maximum of allowed paths.
+    #[test]
+    fn brinr_attains_two_thirds_max() {
+        for n in [6usize, 8, 16, 32] {
+            let l = brinr_labels(n);
+            let total = (n * (n - 1) * (n - 2)) as u64;
+            assert_eq!(count_allowed_paths(&l, n), total * 2 / 3, "n={n}");
+        }
+    }
+
+    /// bRINR is imbalanced (the paper's §3 criticism): arc utilization
+    /// spread is wide, unlike sRINR.
+    #[test]
+    fn brinr_is_imbalanced() {
+        let n = 16;
+        let util = arc_utilization(&brinr_labels(n), n);
+        let vals: Vec<u32> = (0..n * n)
+            .filter(|&ij| ij / n != ij % n)
+            .map(|ij| util[ij])
+            .collect();
+        let min = *vals.iter().min().unwrap();
+        let max = *vals.iter().max().unwrap();
+        assert!(max >= 2 * min.max(1), "expected hotspots, got {min}..{max}");
+    }
+
+    /// Labels must produce an acyclic channel dependency graph (the
+    /// deadlock-freedom argument of §3).
+    #[test]
+    fn link_order_cdg_is_acyclic() {
+        use crate::service::cdg::ChannelDepGraph;
+        let n = 12;
+        for labels in [srinr_labels(n), brinr_labels(n)] {
+            let mut g = ChannelDepGraph::new();
+            for s in 0..n {
+                for m in 0..n {
+                    for d in 0..n {
+                        if s != m && m != d && s != d && labels[s * n + m] < labels[m * n + d]
+                        {
+                            g.add_route(&[s, m, d]);
+                        }
+                    }
+                }
+            }
+            assert!(g.is_acyclic());
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Minimal routing (MIN) — the deadlock-free, 1-VC baseline.
+//!
+//! In a Full-mesh this is the single direct link (§1: "inherently
+//! deadlock-free", great under uniform traffic, collapses under adversarial
+//! patterns). On a HyperX the minimal route is resolved in dimension order
+//! (DOR), which stays deadlock-free with a single buffer class.
+
+use std::sync::Arc;
+
+use super::{Decision, Router};
+use crate::sim::packet::Packet;
+use crate::sim::SwitchView;
+use crate::topology::{coords, coords_to_id, PhysTopology, TopoKind};
+use crate::util::Rng;
+
+pub struct MinRouter {
+    topo: Arc<PhysTopology>,
+}
+
+impl MinRouter {
+    pub fn new(topo: Arc<PhysTopology>) -> Self {
+        Self { topo }
+    }
+
+    /// The DOR-minimal next switch toward `dst` from `cur`.
+    pub fn next_switch(&self, cur: usize, dst: usize) -> usize {
+        match &self.topo.kind {
+            TopoKind::FullMesh => dst,
+            TopoKind::HyperX { dims } => {
+                let c = coords(cur, dims);
+                let d = coords(dst, dims);
+                for dim in 0..dims.len() {
+                    if c[dim] != d[dim] {
+                        let mut cc = c.clone();
+                        cc[dim] = d[dim];
+                        return coords_to_id(&cc, dims);
+                    }
+                }
+                unreachable!("cur == dst")
+            }
+        }
+    }
+}
+
+impl Router for MinRouter {
+    fn num_vcs(&self) -> usize {
+        1
+    }
+
+    fn route(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        _at_injection: bool,
+        _rng: &mut Rng,
+    ) -> Option<Decision> {
+        let nxt = self.next_switch(view.sw, pkt.dst_sw as usize);
+        let port = self
+            .topo
+            .port_to(view.sw, nxt)
+            .expect("DOR next hop must be adjacent");
+        if view.has_space(port, 0) {
+            Some((port, 0))
+        } else {
+            None
+        }
+    }
+
+    fn name(&self) -> String {
+        "MIN".into()
+    }
+
+    fn max_hops(&self) -> usize {
+        self.topo.diameter()
+    }
+}

@@ -1,0 +1,156 @@
+//! Routing algorithms of the evaluation (§5–§6).
+//!
+//! Every algorithm implements [`Router`]: given the head packet of an input
+//! FIFO, the router picks an output `(port, vc)` among the candidates its
+//! policy allows, weighted by output occupancy (congestion-adaptive), or
+//! returns `None` when every allowed candidate is currently full (the packet
+//! waits and the decision is re-evaluated next cycle — CAMINOS semantics).
+//!
+//! | Algorithm | VCs | Module |
+//! |---|---|---|
+//! | MIN | 1 | [`min`] |
+//! | Valiant (VLB) | 2 | [`valiant`] |
+//! | UGAL | 2 | [`ugal`] |
+//! | Omni-WAR | 2 | [`omniwar`] |
+//! | bRINR / sRINR (link ordering) | 1 | [`linkorder`] |
+//! | **TERA** (Algorithm 1) | 1 | [`tera`] |
+//! | Dim-WAR / DOR-TERA / O1TURN-TERA (2D-HyperX) | 2/1/2 | [`hyperx2d`] |
+
+pub mod hyperx2d;
+pub mod linkorder;
+pub mod min;
+pub mod omniwar;
+pub mod tera;
+pub mod ugal;
+pub mod valiant;
+
+pub use hyperx2d::{DimWarRouter, DorTeraRouter, O1TurnTeraRouter, OmniWarHxRouter};
+pub use linkorder::{brinr_labels, srinr_labels, LinkOrderRouter};
+pub use min::MinRouter;
+pub use omniwar::OmniWarRouter;
+pub use tera::TeraRouter;
+pub use ugal::UgalRouter;
+pub use valiant::ValiantRouter;
+
+use crate::sim::packet::Packet;
+use crate::sim::SwitchView;
+use crate::util::Rng;
+
+/// A routing decision: output port and virtual channel at the current switch.
+pub type Decision = (usize, usize);
+
+/// Interface every routing algorithm implements.
+pub trait Router: Send + Sync {
+    /// Number of virtual channels this algorithm needs per port.
+    /// The paper's central claim: TERA and the link orderings need **1**,
+    /// Valiant/UGAL/Omni-WAR need **2** (4 for Omni-WAR on 2D-HyperX).
+    fn num_vcs(&self) -> usize;
+
+    /// Route the head packet at switch `view.sw`.
+    ///
+    /// * `at_injection` — the packet sits in an injection port of its source
+    ///   switch (Algorithm 1 widens the candidate set exactly there).
+    /// * Returns `None` if every allowed output is full this cycle.
+    ///
+    /// The router may record routing state in the packet
+    /// (e.g. `intermediate`, `last_label`).
+    fn route(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+    ) -> Option<Decision>;
+
+    /// Algorithm name as it appears in the paper's figures.
+    fn name(&self) -> String;
+
+    /// Livelock bound: the maximum switch-to-switch hops any packet may take
+    /// (asserted by the simulator on every delivery).
+    fn max_hops(&self) -> usize;
+}
+
+/// Weighted adaptive selection used by most algorithms here: pick the
+/// candidate with minimum weight among those with buffer space, breaking
+/// ties randomly (used by the WAR-style algorithms, which spray across
+/// their VC-protected candidate sets by design).
+///
+/// Candidates are `(port, vc, weight)`.
+pub fn select_min_weight(
+    view: &SwitchView,
+    candidates: &[(usize, usize, u32)],
+    rng: &mut Rng,
+) -> Option<Decision> {
+    let mut best: Option<Decision> = None;
+    let mut best_w = u32::MAX;
+    let mut ties = 0u32;
+    for &(port, vc, w) in candidates {
+        if !view.has_space(port, vc) {
+            continue;
+        }
+        if w < best_w {
+            best_w = w;
+            best = Some((port, vc));
+            ties = 1;
+        } else if w == best_w {
+            // Reservoir-sample among equal-weight candidates for an unbiased
+            // random tie-break without collecting them.
+            ties += 1;
+            if rng.gen_range(ties as usize) == 0 {
+                best = Some((port, vc));
+            }
+        }
+    }
+    best
+}
+
+/// Algorithm-1 selection: pick the minimum-weight candidate **without**
+/// masking full ports — occupancy already encodes fullness, and a packet
+/// whose best port is full should *wait* for it rather than spray across
+/// equally-saturated alternatives (waiting on a full port at overload is
+/// what keeps TERA MIN-like under uniform traffic, §6.3).
+///
+/// Deadlock-safety is restored by the caller-provided `escape` port (the
+/// service next hop): when the best port is full but the escape has space,
+/// the packet takes the escape — this is precisely the §4 argument
+/// ("sufficient buffer space will eventually free up in the service
+/// path"). Link orderings pass no escape: label monotonicity alone makes
+/// waiting safe (arcs drain in decreasing label order).
+pub fn select_weighted_or_escape(
+    view: &SwitchView,
+    candidates: &[(usize, usize, u32)],
+    escape: Option<(usize, usize)>,
+    rng: &mut Rng,
+) -> Option<Decision> {
+    let mut best: Option<Decision> = None;
+    let mut best_w = u32::MAX;
+    let mut ties = 0u32;
+    for &(port, vc, w) in candidates {
+        if w < best_w {
+            best_w = w;
+            best = Some((port, vc));
+            ties = 1;
+        } else if w == best_w {
+            ties += 1;
+            if rng.gen_range(ties as usize) == 0 {
+                best = Some((port, vc));
+            }
+        }
+    }
+    let (bp, bvc) = best?;
+    if view.has_space(bp, bvc) {
+        return Some((bp, bvc));
+    }
+    if let Some((ep, evc)) = escape {
+        if view.has_space(ep, evc) {
+            return Some((ep, evc));
+        }
+    }
+    None // wait: the winner (and escape, if any) are full this cycle
+}
+
+#[cfg(test)]
+mod tests {
+    // `select_min_weight` is exercised through the routing integration tests
+    // (it needs a live SwitchView); see rust/tests/.
+}

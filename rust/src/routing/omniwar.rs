@@ -1,0 +1,91 @@
+//! Omni-WAR [McDonald et al., SC'19] on a Full-mesh: fully adaptive
+//! weighted routing. At the source switch the packet weighs the minimal
+//! port against EVERY possible intermediate (occupancy doubled — two hops —
+//! plus a bias), and takes the lightest. 2 VCs (hop-indexed) make it
+//! deadlock-free. The paper uses it as the state-of-the-art VC-based
+//! reference (§6.3: best RSP performance, at 2× TERA's buffer cost).
+
+use std::sync::Arc;
+
+use super::{Decision, Router};
+use crate::sim::packet::Packet;
+use crate::sim::SwitchView;
+use crate::topology::{PhysTopology, TopoKind};
+use crate::util::Rng;
+
+pub struct OmniWarRouter {
+    topo: Arc<PhysTopology>,
+    /// Static bias (flits) added to non-minimal candidates so minimal wins
+    /// at low load.
+    pub bias: u32,
+}
+
+impl OmniWarRouter {
+    pub fn new(topo: Arc<PhysTopology>) -> Self {
+        assert_eq!(topo.kind, TopoKind::FullMesh, "OmniWarRouter is FM-only");
+        Self { topo, bias: 16 }
+    }
+}
+
+impl Router for OmniWarRouter {
+    fn num_vcs(&self) -> usize {
+        2
+    }
+
+    fn route(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+    ) -> Option<Decision> {
+        let dst = pkt.dst_sw as usize;
+        let min_port = self.topo.port_to(view.sw, dst).expect("full mesh");
+        if !at_injection {
+            // At the intermediate: finish minimally on VC 1.
+            return if view.has_space(min_port, 1) {
+                Some((min_port, 1))
+            } else {
+                None
+            };
+        }
+        // Source switch: weigh the direct port against every intermediate.
+        let mut best: Option<Decision> = None;
+        let mut best_w = u32::MAX;
+        let mut ties = 0usize;
+        let degree = view.degree;
+        for port in 0..degree {
+            let to = self.topo.neighbor(view.sw, port);
+            let w = if port == min_port {
+                view.occ_flits(port)
+            } else {
+                if to == dst {
+                    unreachable!("single link per pair in a full mesh");
+                }
+                2 * view.occ_flits(port) + self.bias
+            };
+            if w > best_w || !view.has_space(port, 0) {
+                continue;
+            }
+            if w < best_w {
+                best_w = w;
+                best = Some((port, 0));
+                ties = 1;
+            } else {
+                ties += 1;
+                if rng.gen_range(ties) == 0 {
+                    best = Some((port, 0));
+                }
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> String {
+        "Omni-WAR".into()
+    }
+
+    fn max_hops(&self) -> usize {
+        2
+    }
+}

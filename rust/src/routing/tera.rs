@@ -1,0 +1,212 @@
+//! **TERA** — Topology-Embedded Routing Algorithm (§4, Algorithm 1).
+//!
+//! The Full-mesh is split into an embedded *service* topology (with a
+//! VC-less deadlock-free minimal routing: DOR or Up*/Down*) and the *main*
+//! topology (all remaining links). Routing, verbatim from Algorithm 1:
+//!
+//! ```text
+//! ports ← R_serv(current, destination)
+//! if packet is at an injection port:
+//!     ports ← ports ∪ R_main(current)
+//! else:
+//!     ports ← ports ∪ R_min(current, destination)
+//! weight(p) = occupancy[p]            if p connects to destination
+//!           = occupancy[p] + q        otherwise
+//! take the min-weight port, ties broken randomly
+//! ```
+//!
+//! Deadlock freedom: every packet always has the service-path option, and
+//! the service topology's routing is deadlock-free, so buffer space along
+//! service paths keeps draining — a *physical* escape subnetwork in the
+//! sense of Duato's theory, with zero extra VCs. Livelock freedom: hops ≤
+//! 1 + diameter(service), asserted per delivery by the simulator.
+
+use std::sync::Arc;
+
+use super::{Decision, Router};
+use crate::service::{Embedding, ServiceTopology};
+use crate::sim::packet::Packet;
+use crate::sim::SwitchView;
+use crate::topology::{PhysTopology, TopoKind};
+use crate::util::Rng;
+
+/// The §5 calibration: q = 54 flits ≈ 3.4 packets of 16 flits.
+pub const DEFAULT_Q: u32 = 54;
+
+/// Allocation attempts a head packet waits on its committed port before
+/// becoming eligible for the service escape. Keeps TERA MIN-like under
+/// benign overload (§6.3) while preserving the §4 escape guarantee (a
+/// permanently blocked packet is escape-eligible forever after).
+pub const ESCAPE_PATIENCE: u16 = 48;
+
+pub struct TeraRouter {
+    topo: Arc<PhysTopology>,
+    svc: Arc<dyn ServiceTopology>,
+    emb: Embedding,
+    /// Service next-hop port table: `svc_port[cur * n + dst]`.
+    svc_port: Vec<u32>,
+    /// Non-minimal penalty (flits).
+    pub q: u32,
+}
+
+impl TeraRouter {
+    pub fn new(topo: Arc<PhysTopology>, svc: Arc<dyn ServiceTopology>, q: u32) -> Self {
+        assert_eq!(topo.kind, TopoKind::FullMesh, "TeraRouter hosts on a FM");
+        let n = topo.n;
+        let emb = Embedding::new(&topo, svc.as_ref());
+        let mut svc_port = vec![u32::MAX; n * n];
+        for cur in 0..n {
+            for dst in 0..n {
+                if cur != dst {
+                    let nh = svc.next_hop(cur, dst);
+                    debug_assert!(
+                        emb.is_service(cur, nh),
+                        "service next hop must ride a service link"
+                    );
+                    svc_port[cur * n + dst] =
+                        topo.port_to(cur, nh).expect("full mesh") as u32;
+                }
+            }
+        }
+        Self {
+            topo,
+            svc,
+            emb,
+            svc_port,
+            q,
+        }
+    }
+
+    /// Convenience constructor with the §5 default penalty.
+    pub fn with_service(topo: Arc<PhysTopology>, svc: Arc<dyn ServiceTopology>) -> Self {
+        Self::new(topo, svc, DEFAULT_Q)
+    }
+
+    pub fn service(&self) -> &dyn ServiceTopology {
+        self.svc.as_ref()
+    }
+
+    pub fn embedding(&self) -> &Embedding {
+        &self.emb
+    }
+
+    /// The Appendix-B parameter p: main-degree / (n−1).
+    pub fn main_ratio(&self) -> f64 {
+        self.emb.main_ratio()
+    }
+}
+
+impl Router for TeraRouter {
+    fn num_vcs(&self) -> usize {
+        1 // the paper's headline: deadlock-free non-minimal routing, 1 VC
+    }
+
+    fn route(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+    ) -> Option<Decision> {
+        let n = self.topo.n;
+        let s = view.sw;
+        let d = pkt.dst_sw as usize;
+        let svc_p = self.svc_port[s * n + d] as usize;
+
+        let weight = |p: usize| -> u32 {
+            let direct = self.topo.neighbor(s, p) == d;
+            if direct {
+                view.occ_flits(p)
+            } else {
+                view.occ_flits(p) + self.q
+            }
+        };
+
+        // Commit-once adaptivity: the weight comparison happens when the
+        // packet reaches the head of its FIFO; afterwards it waits for the
+        // committed port rather than re-rolling every cycle (re-evaluation
+        // degenerates into a deroute storm at overload). The commitment is
+        // cached in `scratch` as (switch << 8) | (port + 1).
+        let committed = {
+            let tag = pkt.scratch;
+            (tag != 0 && (tag >> 8) as usize == s).then(|| (tag & 0xFF) as usize - 1)
+        };
+        if let Some(port) = committed {
+            if pkt.blocked < ESCAPE_PATIENCE {
+                return if view.has_space(port, 0) {
+                    Some((port, 0))
+                } else {
+                    None // wait on the committed port
+                };
+            }
+            // Patience exhausted: the service escape (§4) takes over.
+            if view.has_space(svc_p, 0) {
+                return Some((svc_p, 0));
+            }
+            return if view.has_space(port, 0) {
+                Some((port, 0))
+            } else {
+                None
+            };
+        }
+        // Fresh decision: min weight over the Algorithm-1 candidate set
+        // (unmasked — fullness is already encoded in the occupancy),
+        // committed via scratch, granted only if the port has space.
+        let best = if at_injection {
+            // ports ← R_serv ∪ R_main (the direct link is always included:
+            // it is either a main link or the service next hop itself).
+            let main = &self.emb.main_ports[s];
+            let mut best = (svc_p, weight(svc_p));
+            let mut ties = 1usize;
+            for &p in main {
+                let w = weight(p);
+                if w < best.1 {
+                    best = (p, w);
+                    ties = 1;
+                } else if w == best.1 {
+                    ties += 1;
+                    if rng.gen_range(ties) == 0 {
+                        best = (p, w);
+                    }
+                }
+            }
+            best.0
+        } else {
+            // ports ← R_serv ∪ R_min.
+            let direct = self.topo.port_to(s, d).expect("full mesh");
+            if direct == svc_p || weight(svc_p) <= weight(direct) {
+                svc_p
+            } else {
+                direct
+            }
+        };
+        pkt.scratch = ((s as u32) << 8) | (best as u32 + 1);
+        if view.has_space(best, 0) {
+            Some((best, 0))
+        } else {
+            None // wait on the committed port
+        }
+    }
+
+    fn name(&self) -> String {
+        // Figure naming: TERA-HX2, TERA-HX3, TERA-Path, …
+        let svc = self.svc.name();
+        let short = if let Some(rest) = svc.strip_prefix("HX2[") {
+            let _ = rest;
+            "HX2".to_string()
+        } else if svc.starts_with("HX3[") {
+            "HX3".to_string()
+        } else if svc.starts_with("Hypercube") {
+            "HC".to_string()
+        } else if svc.starts_with("Path") {
+            "Path".to_string()
+        } else {
+            svc
+        };
+        format!("TERA-{short}")
+    }
+
+    fn max_hops(&self) -> usize {
+        1 + self.svc.diameter()
+    }
+}

@@ -1,0 +1,93 @@
+//! UGAL [Singh '05] on a Full-mesh: at the source switch, compare the
+//! queue of the minimal port against the (distance-weighted) queue toward
+//! ONE randomly drawn Valiant intermediate, and take the cheaper. Needs
+//! 2 VCs (§2.1.2: VC0 carries minimal or first non-minimal hops, VC1 only
+//! second non-minimal hops).
+//!
+//! §6.4 attributes UGAL's tail latency to exactly this single-candidate
+//! limitation — TERA and Omni-WAR adaptively consider many intermediates.
+
+use std::sync::Arc;
+
+use super::{Decision, Router};
+use crate::sim::packet::{Packet, NO_SWITCH};
+use crate::sim::SwitchView;
+use crate::topology::{PhysTopology, TopoKind};
+use crate::util::Rng;
+
+pub struct UgalRouter {
+    topo: Arc<PhysTopology>,
+    /// Decision threshold in flits (UGAL's `T`): non-minimal is taken when
+    /// `2·q_nonmin + threshold < q_min`.
+    pub threshold: u32,
+}
+
+impl UgalRouter {
+    pub fn new(topo: Arc<PhysTopology>) -> Self {
+        assert_eq!(topo.kind, TopoKind::FullMesh, "UgalRouter is FM-only");
+        Self {
+            topo,
+            threshold: 16, // one packet of hysteresis toward MIN
+        }
+    }
+}
+
+impl Router for UgalRouter {
+    fn num_vcs(&self) -> usize {
+        2
+    }
+
+    fn route(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+    ) -> Option<Decision> {
+        let dst = pkt.dst_sw as usize;
+        if !at_injection {
+            // In transit (at the Valiant intermediate): final hop on VC 1.
+            let port = self.topo.port_to(view.sw, dst).expect("full mesh");
+            return if view.has_space(port, 1) {
+                Some((port, 1))
+            } else {
+                None
+            };
+        }
+        // Source decision, re-evaluated each stalled cycle with a fresh
+        // random candidate (UGAL-L behaviour).
+        let n = self.topo.n;
+        let min_port = self.topo.port_to(view.sw, dst).expect("full mesh");
+        let m = loop {
+            let m = rng.gen_range(n);
+            if m != view.sw && m != dst {
+                break m;
+            }
+        };
+        let nonmin_port = self.topo.port_to(view.sw, m).expect("full mesh");
+        let q_min = view.occ_flits(min_port);
+        let q_nonmin = view.occ_flits(nonmin_port);
+        // H_min·q_min ≤ H_nonmin·q_nonmin + T  →  go minimal.
+        let go_min = q_min <= 2 * q_nonmin + self.threshold;
+        if go_min {
+            if view.has_space(min_port, 0) {
+                pkt.intermediate = NO_SWITCH;
+                return Some((min_port, 0));
+            }
+            // Fall through: minimal full, try the non-minimal candidate.
+        }
+        if view.has_space(nonmin_port, 0) {
+            pkt.intermediate = m as u32;
+            return Some((nonmin_port, 0));
+        }
+        None
+    }
+
+    fn name(&self) -> String {
+        "UGAL".into()
+    }
+
+    fn max_hops(&self) -> usize {
+        2
+    }
+}

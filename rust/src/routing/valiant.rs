@@ -1,0 +1,83 @@
+//! Valiant load balancing (VLB) [Valiant & Brebner '81] on a Full-mesh:
+//! every packet detours through a uniformly random intermediate switch.
+//! Needs 2 VCs for deadlock freedom (hop index = VC index); used by the
+//! paper as the non-adaptive non-minimal baseline.
+
+use std::sync::Arc;
+
+use super::{Decision, Router};
+use crate::sim::packet::{Packet, NO_SWITCH};
+use crate::sim::SwitchView;
+use crate::topology::{PhysTopology, TopoKind};
+use crate::util::Rng;
+
+pub struct ValiantRouter {
+    topo: Arc<PhysTopology>,
+}
+
+impl ValiantRouter {
+    pub fn new(topo: Arc<PhysTopology>) -> Self {
+        assert_eq!(topo.kind, TopoKind::FullMesh, "ValiantRouter is FM-only");
+        Self { topo }
+    }
+
+    /// Random intermediate, excluding source and destination.
+    fn pick_intermediate(&self, s: usize, d: usize, rng: &mut Rng) -> u32 {
+        let n = self.topo.n;
+        loop {
+            let m = rng.gen_range(n);
+            if m != s && m != d {
+                return m as u32;
+            }
+        }
+    }
+}
+
+impl Router for ValiantRouter {
+    fn num_vcs(&self) -> usize {
+        2
+    }
+
+    fn route(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+    ) -> Option<Decision> {
+        let dst = pkt.dst_sw as usize;
+        if at_injection {
+            // Commit to a random intermediate once; keep it across stalled
+            // cycles so the packet doesn't rebalance away from congestion
+            // (pure VLB is oblivious by design).
+            if pkt.intermediate == NO_SWITCH {
+                pkt.intermediate = self.pick_intermediate(view.sw, dst, rng);
+            }
+            let port = self
+                .topo
+                .port_to(view.sw, pkt.intermediate as usize)
+                .expect("full mesh");
+            if view.has_space(port, 0) {
+                Some((port, 0))
+            } else {
+                None
+            }
+        } else {
+            // Second (final) hop on VC 1.
+            let port = self.topo.port_to(view.sw, dst).expect("full mesh");
+            if view.has_space(port, 1) {
+                Some((port, 1))
+            } else {
+                None
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        "Valiant".into()
+    }
+
+    fn max_hops(&self) -> usize {
+        2
+    }
+}

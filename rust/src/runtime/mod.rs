@@ -1,0 +1,183 @@
+//! PJRT runtime: loads the AOT-compiled XLA artifacts produced by
+//! `python/compile/aot.py` (HLO **text** — see DESIGN.md) and executes them
+//! from Rust. Python never runs at simulation/serving time; `make
+//! artifacts` is a build-time step.
+//!
+//! Artifacts:
+//!
+//! | File | L1/L2 source | Rust-side consumer |
+//! |---|---|---|
+//! | `tera_score.hlo.txt` | Pallas masked-argmin port scorer | [`TeraScorer`] (batched Algorithm-1 decisions; validated against [`crate::routing::tera`]) |
+//! | `analytic.hlo.txt` | Pallas throughput-surface kernel | Fig-4 bench ([`AnalyticModel`]) |
+//! | `telemetry.hlo.txt` | jnp Jain/moment reduction | report telemetry ([`Telemetry`]) |
+
+pub mod scorer;
+
+pub use scorer::{RustScorer, ScoreBatch, TeraScorer};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Default artifact directory (`make artifacts` output).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("TERA_NET_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// A compiled XLA computation on the PJRT CPU client.
+pub struct LoadedFn {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+/// PJRT engine: one CPU client, many loaded executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, path: &Path) -> Result<LoadedFn> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedFn {
+            exe,
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Load `<artifacts>/<name>.hlo.txt`.
+    pub fn load_artifact(&self, name: &str) -> Result<LoadedFn> {
+        let path = artifacts_dir().join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {} missing — run `make artifacts` first",
+            path.display()
+        );
+        self.load(&path)
+    }
+}
+
+impl LoadedFn {
+    /// Execute with f32 inputs of the given shapes; returns the flattened
+    /// f32 contents of every tuple output (aot.py lowers with
+    /// `return_tuple=True`).
+    pub fn call_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .context("reshaping input literal")?;
+            lits.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let parts = result.to_tuple().context("decomposing result tuple")?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+/// The Fig-4 analytic model served through PJRT.
+pub struct AnalyticModel {
+    f: LoadedFn,
+    /// Grid size the artifact was lowered for.
+    pub k: usize,
+}
+
+impl AnalyticModel {
+    pub const K: usize = 64;
+
+    pub fn load(engine: &Engine) -> Result<Self> {
+        Ok(Self {
+            f: engine.load_artifact("analytic")?,
+            k: Self::K,
+        })
+    }
+
+    /// Evaluate `1/(1+1/p)` for up to `K` ratios (padded internally).
+    pub fn throughput(&self, ps: &[f64]) -> Result<Vec<f64>> {
+        anyhow::ensure!(ps.len() <= self.k, "at most {} ratios per call", self.k);
+        let mut buf = vec![1.0f32; self.k];
+        for (i, &p) in ps.iter().enumerate() {
+            buf[i] = p as f32;
+        }
+        let out = self.f.call_f32(&[(&buf, &[self.k as i64])])?;
+        Ok(out[0][..ps.len()].iter().map(|&x| x as f64).collect())
+    }
+}
+
+/// Telemetry reductions (Jain index + load moments) through PJRT.
+pub struct Telemetry {
+    f: LoadedFn,
+    pub n: usize,
+}
+
+impl Telemetry {
+    pub const N: usize = 4096;
+
+    pub fn load(engine: &Engine) -> Result<Self> {
+        Ok(Self {
+            f: engine.load_artifact("telemetry")?,
+            n: Self::N,
+        })
+    }
+
+    /// Returns `(jain, mean, max)` of a per-server load vector (zero-padded
+    /// to the artifact width; the artifact computes the Jain index over the
+    /// *observed* count which is passed alongside).
+    pub fn summarize(&self, loads: &[f64]) -> Result<(f64, f64, f64)> {
+        anyhow::ensure!(
+            loads.len() <= self.n,
+            "at most {} servers per call",
+            self.n
+        );
+        let mut buf = vec![0f32; self.n];
+        for (i, &x) in loads.iter().enumerate() {
+            buf[i] = x as f32;
+        }
+        let count = vec![loads.len() as f32];
+        let out = self.f.call_f32(&[
+            (&buf, &[self.n as i64]),
+            (&count, &[]),
+        ])?;
+        let s = &out[0];
+        Ok((s[0] as f64, s[1] as f64, s[2] as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine-level integration tests live in rust/tests/runtime.rs (they
+    // need `make artifacts` to have run). Here: path plumbing only.
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("TERA_NET_ARTIFACTS", "/tmp/xyz");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/xyz"));
+        std::env::remove_var("TERA_NET_ARTIFACTS");
+        assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+    }
+}

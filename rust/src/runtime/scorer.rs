@@ -1,0 +1,167 @@
+//! Batched TERA port scoring: the Algorithm-1 weight computation
+//! (`occupancy + q·non-minimal`, masked argmin) over a batch of switches.
+//!
+//! Two interchangeable backends:
+//! * [`RustScorer`] — the pure-Rust reference (first-minimum tie-break);
+//! * [`TeraScorer`] — the PJRT-loaded artifact compiled from the Pallas
+//!   kernel `python/compile/kernels/tera_score.py`.
+//!
+//! `tera-net validate-artifacts` and the integration tests drive both on
+//! the same batches and require exact agreement of choices and weights.
+//! (The in-simulator router breaks ties *randomly* per Algorithm 1; the
+//! batched scorers pin the tie-break to the lowest index so the two
+//! implementations are comparable bit-for-bit.)
+
+use anyhow::Result;
+
+use super::{Engine, LoadedFn};
+
+/// A batch of routing decisions: `batch × ports` candidate matrices.
+#[derive(Clone, Debug)]
+pub struct ScoreBatch {
+    pub batch: usize,
+    pub ports: usize,
+    /// Occupancy (flits), row-major `[batch][ports]`.
+    pub occ: Vec<f32>,
+    /// 1.0 where the port connects directly to the destination.
+    pub direct: Vec<f32>,
+    /// 1.0 where the port is a legal candidate.
+    pub valid: Vec<f32>,
+    /// Non-minimal penalty q.
+    pub q: f32,
+}
+
+impl ScoreBatch {
+    pub fn zeros(batch: usize, ports: usize, q: f32) -> Self {
+        Self {
+            batch,
+            ports,
+            occ: vec![0.0; batch * ports],
+            direct: vec![0.0; batch * ports],
+            valid: vec![0.0; batch * ports],
+            q,
+        }
+    }
+}
+
+/// Result per batch row: chosen port index and its weight.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScoreResult {
+    pub choice: Vec<u32>,
+    pub weight: Vec<f32>,
+}
+
+/// Pure-Rust reference implementation.
+pub struct RustScorer;
+
+impl RustScorer {
+    pub fn score(&self, b: &ScoreBatch) -> ScoreResult {
+        const INF: f32 = 1e30;
+        let mut choice = Vec::with_capacity(b.batch);
+        let mut weight = Vec::with_capacity(b.batch);
+        for r in 0..b.batch {
+            let row = r * b.ports;
+            let mut best = 0u32;
+            let mut best_w = INF;
+            for p in 0..b.ports {
+                let i = row + p;
+                let w = b.occ[i] + b.q * (1.0 - b.direct[i]) + INF * (1.0 - b.valid[i]);
+                if w < best_w {
+                    best_w = w;
+                    best = p as u32;
+                }
+            }
+            choice.push(best);
+            weight.push(best_w);
+        }
+        ScoreResult { choice, weight }
+    }
+}
+
+/// The PJRT-backed scorer. Shapes are fixed at AOT time:
+/// `batch = 64`, `ports = 64` (FM64's switch radix, padded).
+pub struct TeraScorer {
+    f: LoadedFn,
+    pub batch: usize,
+    pub ports: usize,
+}
+
+impl TeraScorer {
+    pub const BATCH: usize = 64;
+    pub const PORTS: usize = 64;
+
+    pub fn load(engine: &Engine) -> Result<Self> {
+        Ok(Self {
+            f: engine.load_artifact("tera_score")?,
+            batch: Self::BATCH,
+            ports: Self::PORTS,
+        })
+    }
+
+    /// Score a batch (must match the artifact shape; pad with
+    /// `valid = 0` rows/cols — an all-invalid row picks port 0 at weight
+    /// ~INF, same as [`RustScorer`]).
+    pub fn score(&self, b: &ScoreBatch) -> Result<ScoreResult> {
+        anyhow::ensure!(
+            b.batch == self.batch && b.ports == self.ports,
+            "batch shape {}x{} != artifact shape {}x{}",
+            b.batch,
+            b.ports,
+            self.batch,
+            self.ports
+        );
+        let shape = [b.batch as i64, b.ports as i64];
+        let q = [b.q];
+        let out = self.f.call_f32(&[
+            (&b.occ, &shape),
+            (&b.direct, &shape),
+            (&b.valid, &shape),
+            (&q, &[]),
+        ])?;
+        // Artifact returns a single f32[2, batch]: row 0 = choices, row 1 =
+        // weights (single-output keeps the tuple plumbing trivial).
+        let packed = &out[0];
+        anyhow::ensure!(packed.len() == 2 * b.batch, "bad artifact output size");
+        Ok(ScoreResult {
+            choice: packed[..b.batch].iter().map(|&x| x as u32).collect(),
+            weight: packed[b.batch..].to_vec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rust_scorer_prefers_direct_under_q() {
+        let mut b = ScoreBatch::zeros(1, 4, 54.0);
+        b.valid = vec![1.0; 4];
+        b.occ = vec![40.0, 10.0, 0.0, 0.0]; // ports 2,3 empty but non-direct
+        b.direct = vec![1.0, 0.0, 0.0, 0.0];
+        let r = RustScorer.score(&b);
+        // direct w=40; others 10+54=64, 54, 54 → direct wins.
+        assert_eq!(r.choice, vec![0]);
+        assert!((r.weight[0] - 40.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rust_scorer_deroutes_when_direct_congested() {
+        let mut b = ScoreBatch::zeros(1, 4, 54.0);
+        b.valid = vec![1.0; 4];
+        b.occ = vec![100.0, 10.0, 20.0, 5.0];
+        b.direct = vec![1.0, 0.0, 0.0, 0.0];
+        let r = RustScorer.score(&b);
+        // direct 100; others 64, 74, 59 → port 3.
+        assert_eq!(r.choice, vec![3]);
+    }
+
+    #[test]
+    fn invalid_ports_never_chosen() {
+        let mut b = ScoreBatch::zeros(2, 3, 54.0);
+        b.valid = vec![0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        b.occ = vec![0.0; 6];
+        let r = RustScorer.score(&b);
+        assert_eq!(r.choice, vec![1, 2]);
+    }
+}

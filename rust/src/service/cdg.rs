@@ -1,0 +1,224 @@
+//! Channel Dependency Graph (CDG) construction and acyclicity checking
+//! [Dally & Seitz; Dally & Towles ch. 14].
+//!
+//! A routing function is deadlock-free on wormhole/VCT networks iff its
+//! channel dependency graph is acyclic (for the single-buffer-class case).
+//! We use this to *prove* in tests that:
+//!   * every service topology's minimal routing is deadlock-free (acyclic),
+//!   * link-ordering schemes (bRINR/sRINR) are deadlock-free,
+//!   * unrestricted 2-hop non-minimal routing in a Full-mesh is NOT
+//!     (cyclic) — the problem statement of the paper,
+//! and to validate user-supplied custom service topologies at runtime
+//! (`examples/custom_service_topology.rs`).
+
+use std::collections::HashMap;
+
+/// A directed channel (arc) between two switches.
+pub type Arc = (usize, usize);
+
+/// Channel dependency graph over the arcs of a topology.
+pub struct ChannelDepGraph {
+    /// Arc → dense index.
+    index: HashMap<Arc, usize>,
+    arcs: Vec<Arc>,
+    /// Adjacency: dependencies `a → b` meaning a packet may hold `a` while
+    /// requesting `b`.
+    deps: Vec<Vec<usize>>,
+}
+
+impl ChannelDepGraph {
+    pub fn new() -> Self {
+        Self {
+            index: HashMap::new(),
+            arcs: Vec::new(),
+            deps: Vec::new(),
+        }
+    }
+
+    fn arc_id(&mut self, a: Arc) -> usize {
+        if let Some(&i) = self.index.get(&a) {
+            return i;
+        }
+        let i = self.arcs.len();
+        self.index.insert(a, i);
+        self.arcs.push(a);
+        self.deps.push(Vec::new());
+        i
+    }
+
+    /// Record that some route uses `from` immediately followed by `to`.
+    pub fn add_dependency(&mut self, from: Arc, to: Arc) {
+        debug_assert_eq!(from.1, to.0, "non-consecutive arcs {from:?} {to:?}");
+        let f = self.arc_id(from);
+        let t = self.arc_id(to);
+        self.deps[f].push(t);
+    }
+
+    /// Record a whole route (sequence of switches) as pairwise dependencies.
+    pub fn add_route(&mut self, route: &[usize]) {
+        for w in route.windows(3) {
+            self.add_dependency((w[0], w[1]), (w[1], w[2]));
+        }
+        // Single-hop routes still occupy their arc: make sure it exists so
+        // the graph knows about it (no dependency added).
+        if route.len() == 2 {
+            self.arc_id((route[0], route[1]));
+        }
+    }
+
+    pub fn num_arcs(&self) -> usize {
+        self.arcs.len()
+    }
+
+    pub fn num_dependencies(&self) -> usize {
+        self.deps.iter().map(Vec::len).sum()
+    }
+
+    /// Is the dependency graph acyclic? (iterative three-color DFS)
+    pub fn is_acyclic(&self) -> bool {
+        self.find_cycle().is_none()
+    }
+
+    /// Find a cycle of arcs, if any, for diagnostics.
+    pub fn find_cycle(&self) -> Option<Vec<Arc>> {
+        #[derive(Clone, Copy, PartialEq)]
+        enum Color {
+            White,
+            Gray,
+            Black,
+        }
+        let n = self.arcs.len();
+        let mut color = vec![Color::White; n];
+        let mut parent = vec![usize::MAX; n];
+        for start in 0..n {
+            if color[start] != Color::White {
+                continue;
+            }
+            // Iterative DFS with explicit stack of (node, next-child-index).
+            let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+            color[start] = Color::Gray;
+            while let Some(&mut (u, ref mut ci)) = stack.last_mut() {
+                if *ci < self.deps[u].len() {
+                    let v = self.deps[u][*ci];
+                    *ci += 1;
+                    match color[v] {
+                        Color::White => {
+                            color[v] = Color::Gray;
+                            parent[v] = u;
+                            stack.push((v, 0));
+                        }
+                        Color::Gray => {
+                            // Found a cycle: unwind from u back to v.
+                            let mut cyc = vec![self.arcs[v]];
+                            let mut x = u;
+                            while x != v {
+                                cyc.push(self.arcs[x]);
+                                x = parent[x];
+                            }
+                            cyc.reverse();
+                            return Some(cyc);
+                        }
+                        Color::Black => {}
+                    }
+                } else {
+                    color[u] = Color::Black;
+                    stack.pop();
+                }
+            }
+        }
+        None
+    }
+}
+
+impl Default for ChannelDepGraph {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Build the CDG of a service topology by walking every minimal route.
+pub fn service_cdg(svc: &dyn super::ServiceTopology) -> ChannelDepGraph {
+    let n = svc.n();
+    let mut g = ChannelDepGraph::new();
+    for s in 0..n {
+        for d in 0..n {
+            if s == d {
+                continue;
+            }
+            let mut route = vec![s];
+            let mut cur = s;
+            while cur != d {
+                cur = svc.next_hop(cur, d);
+                route.push(cur);
+            }
+            g.add_route(&route);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{HyperXService, MeshService, ServiceTopology, TreeService};
+
+    #[test]
+    fn simple_cycle_detected() {
+        let mut g = ChannelDepGraph::new();
+        g.add_dependency((0, 1), (1, 2));
+        g.add_dependency((1, 2), (2, 0));
+        g.add_dependency((2, 0), (0, 1));
+        assert!(!g.is_acyclic());
+        let cyc = g.find_cycle().unwrap();
+        assert!(cyc.len() >= 2);
+    }
+
+    #[test]
+    fn chain_is_acyclic() {
+        let mut g = ChannelDepGraph::new();
+        g.add_route(&[0, 1, 2, 3, 4]);
+        assert!(g.is_acyclic());
+        assert_eq!(g.num_arcs(), 4);
+        assert_eq!(g.num_dependencies(), 3);
+    }
+
+    #[test]
+    fn all_service_topologies_are_deadlock_free() {
+        let topos: Vec<Box<dyn ServiceTopology>> = vec![
+            Box::new(MeshService::path(16)),
+            Box::new(MeshService::square(16).unwrap()),
+            Box::new(TreeService::new(16, 2)),
+            Box::new(TreeService::new(64, 4)),
+            Box::new(HyperXService::hypercube(16).unwrap()),
+            Box::new(HyperXService::square(64).unwrap()),
+            Box::new(HyperXService::cube(64).unwrap()),
+        ];
+        for t in &topos {
+            let g = service_cdg(t.as_ref());
+            assert!(
+                g.is_acyclic(),
+                "service topology {} has a cyclic CDG: {:?}",
+                t.name(),
+                g.find_cycle()
+            );
+        }
+    }
+
+    #[test]
+    fn unrestricted_nonminimal_fullmesh_is_cyclic() {
+        // The paper's motivation: allowing ALL 2-hop paths in K_n without
+        // VCs deadlocks. n=4 suffices.
+        let n = 4;
+        let mut g = ChannelDepGraph::new();
+        for s in 0..n {
+            for m in 0..n {
+                for d in 0..n {
+                    if s != m && m != d && s != d {
+                        g.add_route(&[s, m, d]);
+                    }
+                }
+            }
+        }
+        assert!(!g.is_acyclic(), "unrestricted VLB in K_n must be cyclic");
+    }
+}

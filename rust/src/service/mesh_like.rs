@@ -1,0 +1,290 @@
+//! Mesh and HyperX service topologies with Dimension-Order Routing (DOR).
+//!
+//! DOR resolves dimensions in a fixed order; within a dimension a mesh moves
+//! ±1 per hop while a HyperX jumps directly to the target coordinate (each
+//! dimension is a complete graph). DOR is deadlock-free without VCs on both:
+//! channel dependencies only go from lower- to higher-indexed dimensions, and
+//! within a mesh dimension from lower to higher coordinates (monotone), so
+//! the channel dependency graph is acyclic — verified by `cdg` tests.
+
+use super::ServiceTopology;
+use crate::topology::{coords, coords_to_id};
+use crate::util::iroot;
+
+/// d-dimensional mesh with DOR. `dims = [n]` is the paper's Path (2-tree /
+/// 1D-mesh) service topology.
+#[derive(Clone, Debug)]
+pub struct MeshService {
+    pub dims: Vec<usize>,
+}
+
+impl MeshService {
+    pub fn new(dims: Vec<usize>) -> Self {
+        assert!(!dims.is_empty() && dims.iter().all(|&d| d >= 2));
+        Self { dims }
+    }
+
+    /// 1D mesh (a path) over `n` switches.
+    pub fn path(n: usize) -> Self {
+        Self::new(vec![n])
+    }
+
+    /// Square 2D mesh; requires `n` to be a perfect square.
+    pub fn square(n: usize) -> anyhow::Result<Self> {
+        let a = iroot(n, 2);
+        anyhow::ensure!(a * a == n, "n={n} is not a perfect square");
+        Ok(Self::new(vec![a, a]))
+    }
+
+    /// Cubic 3D mesh; requires `n` to be a perfect cube.
+    pub fn cube(n: usize) -> anyhow::Result<Self> {
+        let a = iroot(n, 3);
+        anyhow::ensure!(a * a * a == n, "n={n} is not a perfect cube");
+        Ok(Self::new(vec![a, a, a]))
+    }
+}
+
+impl ServiceTopology for MeshService {
+    fn n(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn name(&self) -> String {
+        if self.dims.len() == 1 {
+            format!("Path{}", self.dims[0])
+        } else {
+            let d: Vec<String> = self.dims.iter().map(|x| x.to_string()).collect();
+            format!("Mesh[{}]", d.join("x"))
+        }
+    }
+
+    fn edges(&self) -> Vec<(usize, usize)> {
+        let n = self.n();
+        let mut e = Vec::new();
+        for id in 0..n {
+            let c = coords(id, &self.dims);
+            for (dim, &radix) in self.dims.iter().enumerate() {
+                if c[dim] + 1 < radix {
+                    let mut cc = c.clone();
+                    cc[dim] += 1;
+                    e.push((id, coords_to_id(&cc, &self.dims)));
+                }
+            }
+        }
+        e
+    }
+
+    fn next_hop(&self, cur: usize, dst: usize) -> usize {
+        debug_assert_ne!(cur, dst);
+        let c = coords(cur, &self.dims);
+        let d = coords(dst, &self.dims);
+        for dim in 0..self.dims.len() {
+            if c[dim] != d[dim] {
+                let mut cc = c.clone();
+                cc[dim] = if c[dim] < d[dim] {
+                    c[dim] + 1
+                } else {
+                    c[dim] - 1
+                };
+                return coords_to_id(&cc, &self.dims);
+            }
+        }
+        unreachable!("cur == dst")
+    }
+
+    fn distance(&self, a: usize, b: usize) -> usize {
+        let ca = coords(a, &self.dims);
+        let cb = coords(b, &self.dims);
+        ca.iter()
+            .zip(&cb)
+            .map(|(&x, &y)| x.abs_diff(y))
+            .sum()
+    }
+
+    fn diameter(&self) -> usize {
+        self.dims.iter().map(|&d| d - 1).sum()
+    }
+
+    fn symmetric(&self) -> bool {
+        false // meshes have boundary asymmetry (Table 1)
+    }
+}
+
+/// d-dimensional HyperX (incl. hypercube when every radix is 2) with DOR.
+#[derive(Clone, Debug)]
+pub struct HyperXService {
+    pub dims: Vec<usize>,
+}
+
+impl HyperXService {
+    pub fn new(dims: Vec<usize>) -> Self {
+        assert!(!dims.is_empty() && dims.iter().all(|&d| d >= 2));
+        Self { dims }
+    }
+
+    /// 2D-HyperX (the paper's preferred service topology).
+    pub fn square(n: usize) -> anyhow::Result<Self> {
+        let a = iroot(n, 2);
+        anyhow::ensure!(a * a == n, "n={n} is not a perfect square");
+        Ok(Self::new(vec![a, a]))
+    }
+
+    /// 3D-HyperX.
+    pub fn cube(n: usize) -> anyhow::Result<Self> {
+        let a = iroot(n, 3);
+        anyhow::ensure!(a * a * a == n, "n={n} is not a perfect cube");
+        Ok(Self::new(vec![a, a, a]))
+    }
+
+    /// Hypercube `Q_log2(n)` — a HyperX with all radices 2.
+    pub fn hypercube(n: usize) -> anyhow::Result<Self> {
+        let d = crate::util::log2_exact(n)
+            .ok_or_else(|| anyhow::anyhow!("n={n} is not a power of two"))?;
+        Ok(Self::new(vec![2; d as usize]))
+    }
+
+    fn is_hypercube(&self) -> bool {
+        self.dims.iter().all(|&d| d == 2)
+    }
+}
+
+impl ServiceTopology for HyperXService {
+    fn n(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn name(&self) -> String {
+        if self.is_hypercube() {
+            format!("Hypercube{}", self.n())
+        } else {
+            let d: Vec<String> = self.dims.iter().map(|x| x.to_string()).collect();
+            format!("HX{}[{}]", self.dims.len(), d.join("x"))
+        }
+    }
+
+    fn edges(&self) -> Vec<(usize, usize)> {
+        let n = self.n();
+        let mut e = Vec::new();
+        for id in 0..n {
+            let c = coords(id, &self.dims);
+            for (dim, &radix) in self.dims.iter().enumerate() {
+                for v in (c[dim] + 1)..radix {
+                    let mut cc = c.clone();
+                    cc[dim] = v;
+                    e.push((id, coords_to_id(&cc, &self.dims)));
+                }
+            }
+        }
+        e
+    }
+
+    fn next_hop(&self, cur: usize, dst: usize) -> usize {
+        debug_assert_ne!(cur, dst);
+        let c = coords(cur, &self.dims);
+        let d = coords(dst, &self.dims);
+        for dim in 0..self.dims.len() {
+            if c[dim] != d[dim] {
+                let mut cc = c.clone();
+                cc[dim] = d[dim]; // complete graph per dimension: jump directly
+                return coords_to_id(&cc, &self.dims);
+            }
+        }
+        unreachable!("cur == dst")
+    }
+
+    fn distance(&self, a: usize, b: usize) -> usize {
+        let ca = coords(a, &self.dims);
+        let cb = coords(b, &self.dims);
+        ca.iter().zip(&cb).filter(|(x, y)| x != y).count()
+    }
+
+    fn diameter(&self) -> usize {
+        self.dims.len()
+    }
+
+    fn symmetric(&self) -> bool {
+        true // vertex- and edge-symmetric (Table 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn walk(svc: &dyn ServiceTopology, s: usize, d: usize) -> usize {
+        let mut cur = s;
+        let mut hops = 0;
+        while cur != d {
+            cur = svc.next_hop(cur, d);
+            hops += 1;
+            assert!(hops <= svc.diameter(), "exceeded diameter");
+        }
+        hops
+    }
+
+    #[test]
+    fn path_routing_is_minimal() {
+        let svc = MeshService::path(16);
+        for s in 0..16 {
+            for d in 0..16 {
+                if s != d {
+                    assert_eq!(walk(&svc, s, d), svc.distance(s, d));
+                }
+            }
+        }
+        assert_eq!(svc.diameter(), 15);
+        assert_eq!(svc.num_links(), 15);
+    }
+
+    #[test]
+    fn mesh2_routing_is_minimal() {
+        let svc = MeshService::square(16).unwrap();
+        for s in 0..16 {
+            for d in 0..16 {
+                if s != d {
+                    assert_eq!(walk(&svc, s, d), svc.distance(s, d));
+                }
+            }
+        }
+        assert_eq!(svc.diameter(), 6);
+    }
+
+    #[test]
+    fn hx2_routing_is_minimal_diameter_2() {
+        let svc = HyperXService::square(64).unwrap();
+        assert_eq!(svc.diameter(), 2);
+        for s in 0..64 {
+            for d in 0..64 {
+                if s != d {
+                    assert_eq!(walk(&svc, s, d), svc.distance(s, d));
+                }
+            }
+        }
+        // 8x8 HyperX: 448 links (Table 1: O(d n^{1+1/d})).
+        assert_eq!(svc.num_links(), 448);
+    }
+
+    #[test]
+    fn hypercube_properties() {
+        let svc = HyperXService::hypercube(64).unwrap();
+        assert_eq!(svc.diameter(), 6);
+        assert_eq!(svc.num_links(), 192); // n log2 n / 2
+        assert!(svc.symmetric());
+        for s in 0..64 {
+            for d in 0..64 {
+                if s != d {
+                    assert_eq!(walk(&svc, s, d), svc.distance(s, d));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hx3_on_64() {
+        let svc = HyperXService::cube(64).unwrap();
+        assert_eq!(svc.n(), 64);
+        assert_eq!(svc.diameter(), 3);
+        // 4x4x4 HyperX: per switch 3*(4-1)=9 neighbors → 64*9/2 = 288 links.
+        assert_eq!(svc.num_links(), 288);
+    }
+}

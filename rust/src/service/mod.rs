@@ -1,0 +1,187 @@
+//! Service topologies (Definition 4.1) and their embedding into a Full-mesh.
+//!
+//! A *service topology* `S` is a spanning subgraph of the Full-mesh with a
+//! deadlock-free VC-less minimal routing (DOR for meshes / hypercubes /
+//! HyperX, Up*/Down* for trees). The *main topology* `M` is everything else.
+//! TERA (Algorithm 1) routes freely over `M` for at most one hop and then
+//! escapes over `S`, whose routing guarantees forward progress.
+
+pub mod cdg;
+pub mod mesh_like;
+pub mod tree;
+
+pub use cdg::ChannelDepGraph;
+pub use mesh_like::{HyperXService, MeshService};
+pub use tree::TreeService;
+
+use crate::topology::PhysTopology;
+
+/// A spanning service topology over switches `0..n` with a deterministic,
+/// deadlock-free, minimal routing function.
+pub trait ServiceTopology: Send + Sync {
+    /// Number of switches spanned (must equal the Full-mesh size).
+    fn n(&self) -> usize;
+
+    /// Human-readable name, e.g. `HX2[8x8]`, `Path64`, `Tree4`.
+    fn name(&self) -> String;
+
+    /// Undirected service edges; each must exist in the host topology.
+    fn edges(&self) -> Vec<(usize, usize)>;
+
+    /// The deadlock-free minimal next hop from `cur` toward `dst`
+    /// (`cur != dst`); must be service-adjacent to `cur`.
+    fn next_hop(&self, cur: usize, dst: usize) -> usize;
+
+    /// All next hops the routing may adaptively pick from (default: the
+    /// single deterministic one — DOR and Up*/Down* are deterministic).
+    fn next_hops(&self, cur: usize, dst: usize) -> Vec<usize> {
+        vec![self.next_hop(cur, dst)]
+    }
+
+    /// Service-path length between two switches.
+    fn distance(&self, a: usize, b: usize) -> usize;
+
+    /// Diameter of the service topology (max `distance` over pairs).
+    fn diameter(&self) -> usize;
+
+    /// Whether the topology is vertex- and edge-symmetric (§4.1 criterion).
+    fn symmetric(&self) -> bool;
+
+    /// Number of undirected service links (Table 1 column).
+    fn num_links(&self) -> usize {
+        self.edges().len()
+    }
+}
+
+/// A service topology embedded into a physical Full-mesh: pre-computed
+/// service/main split of every arc plus per-switch main-port lists.
+pub struct Embedding {
+    pub n: usize,
+    /// `service_adj[a * n + b]` — is `{a,b}` a service link?
+    service_adj: Vec<bool>,
+    /// Per switch: the physical ports whose links belong to the main topology.
+    pub main_ports: Vec<Vec<usize>>,
+    /// Per switch: the physical ports whose links belong to the service topology.
+    pub service_ports: Vec<Vec<usize>>,
+}
+
+impl Embedding {
+    /// Embed `service` into `phys`. Panics if a service edge is missing from
+    /// the physical topology (cannot happen for a Full-mesh host, by K_n
+    /// completeness — checked anyway so custom hosts fail loudly).
+    pub fn new(phys: &PhysTopology, service: &dyn ServiceTopology) -> Self {
+        let n = phys.n;
+        assert_eq!(
+            service.n(),
+            n,
+            "service topology must span all {} switches (got {})",
+            n,
+            service.n()
+        );
+        let mut service_adj = vec![false; n * n];
+        for (a, b) in service.edges() {
+            assert!(a != b && a < n && b < n, "bad service edge ({a},{b})");
+            assert!(
+                phys.port_to(a, b).is_some(),
+                "service edge ({a},{b}) not present in host topology"
+            );
+            service_adj[a * n + b] = true;
+            service_adj[b * n + a] = true;
+        }
+        let mut main_ports = vec![Vec::new(); n];
+        let mut service_ports = vec![Vec::new(); n];
+        for s in 0..n {
+            for p in 0..phys.degree(s) {
+                let d = phys.neighbor(s, p);
+                if service_adj[s * n + d] {
+                    service_ports[s].push(p);
+                } else {
+                    main_ports[s].push(p);
+                }
+            }
+        }
+        Self {
+            n,
+            service_adj,
+            main_ports,
+            service_ports,
+        }
+    }
+
+    /// Is `{a,b}` a service link?
+    #[inline]
+    pub fn is_service(&self, a: usize, b: usize) -> bool {
+        self.service_adj[a * self.n + b]
+    }
+
+    /// Degree of the main topology at switch `s`.
+    #[inline]
+    pub fn main_degree(&self, s: usize) -> usize {
+        self.main_ports[s].len()
+    }
+
+    /// Ratio `p` = average main degree / (n-1) — the Appendix-B parameter.
+    pub fn main_ratio(&self) -> f64 {
+        let total: usize = self.main_ports.iter().map(Vec::len).sum();
+        total as f64 / (self.n * (self.n - 1)) as f64
+    }
+}
+
+/// Factory: construct one of the paper's service topologies by name.
+///
+/// Recognized names (case-insensitive): `path`, `mesh2`, `mesh3`, `tree2`,
+/// `tree4`, `hypercube`, `hx2`, `hx3`.
+pub fn by_name(name: &str, n: usize) -> anyhow::Result<Box<dyn ServiceTopology>> {
+    let lower = name.to_ascii_lowercase();
+    Ok(match lower.as_str() {
+        "path" | "mesh1" | "2-tree" => Box::new(MeshService::path(n)),
+        "mesh2" => Box::new(MeshService::square(n)?),
+        "mesh3" => Box::new(MeshService::cube(n)?),
+        "tree2" => Box::new(TreeService::new(n, 2)),
+        "tree4" => Box::new(TreeService::new(n, 4)),
+        "hypercube" | "hc" => Box::new(HyperXService::hypercube(n)?),
+        "hx2" => Box::new(HyperXService::square(n)?),
+        "hx3" => Box::new(HyperXService::cube(n)?),
+        _ => anyhow::bail!("unknown service topology '{name}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::full_mesh;
+
+    #[test]
+    fn embedding_splits_all_links() {
+        let phys = full_mesh(16);
+        let svc = MeshService::path(16);
+        let emb = Embedding::new(&phys, &svc);
+        for s in 0..16 {
+            assert_eq!(
+                emb.main_ports[s].len() + emb.service_ports[s].len(),
+                phys.degree(s)
+            );
+        }
+        // Path over 16 nodes: 15 edges, 30 arcs.
+        let svc_total: usize = emb.service_ports.iter().map(Vec::len).sum();
+        assert_eq!(svc_total, 30);
+    }
+
+    #[test]
+    fn main_ratio_matches_formula() {
+        let phys = full_mesh(64);
+        let svc = HyperXService::square(64).unwrap();
+        let emb = Embedding::new(&phys, &svc);
+        // HX2 on 64 = 8x8: degree 14 service, main degree 63-14=49.
+        assert!((emb.main_ratio() - 49.0 / 63.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn by_name_all_known() {
+        for name in ["path", "mesh2", "tree2", "tree4", "hypercube", "hx2", "hx3"] {
+            let svc = by_name(name, 64).unwrap();
+            assert_eq!(svc.n(), 64);
+        }
+        assert!(by_name("nonsense", 64).is_err());
+    }
+}

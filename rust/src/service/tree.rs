@@ -1,0 +1,197 @@
+//! k-ary tree service topology with Up*/Down* routing [Schroeder et al. '91].
+//!
+//! Switches are numbered breadth-first: the parent of node `i > 0` is
+//! `(i - 1) / k`. The unique tree path climbs to the lowest common ancestor
+//! and descends — "up" hops (toward the root) always precede "down" hops,
+//! so channel dependencies go up-arcs → down-arcs and never back: acyclic,
+//! hence deadlock-free with a single buffer class.
+//!
+//! Table 1 lists the k-tree as an asymmetric, `O(log_k n)`-diameter,
+//! `O(n)`-link candidate; §6.2 shows its root bottleneck hurts under FR.
+
+use super::ServiceTopology;
+
+#[derive(Clone, Debug)]
+pub struct TreeService {
+    n: usize,
+    k: usize,
+    /// Depth of each node in the tree (root = 0).
+    depth: Vec<usize>,
+    diameter: usize,
+}
+
+impl TreeService {
+    pub fn new(n: usize, k: usize) -> Self {
+        assert!(n >= 2 && k >= 2, "need n >= 2 and k >= 2");
+        let mut depth = vec![0usize; n];
+        for i in 1..n {
+            depth[i] = depth[(i - 1) / k] + 1;
+        }
+        // Diameter: deepest leaf to deepest leaf through the root (the two
+        // deepest nodes may share ancestors, so compute exactly).
+        let mut diameter = 0;
+        // Tree is small (n ≤ a few hundred in our experiments): brute force
+        // over the two deepest levels is unnecessary — just scan all pairs of
+        // leaves at max depth via LCA arithmetic for exactness.
+        let maxd = *depth.iter().max().unwrap();
+        for a in 0..n {
+            if depth[a] + maxd < diameter {
+                continue;
+            }
+            for b in (a + 1)..n {
+                let d = Self::dist_static(k, &depth, a, b);
+                diameter = diameter.max(d);
+            }
+        }
+        Self {
+            n,
+            k,
+            depth,
+            diameter,
+        }
+    }
+
+    #[inline]
+    fn parent(&self, i: usize) -> usize {
+        debug_assert!(i > 0);
+        (i - 1) / self.k
+    }
+
+    fn dist_static(k: usize, depth: &[usize], mut a: usize, mut b: usize) -> usize {
+        let mut d = 0;
+        while depth[a] > depth[b] {
+            a = (a - 1) / k;
+            d += 1;
+        }
+        while depth[b] > depth[a] {
+            b = (b - 1) / k;
+            d += 1;
+        }
+        while a != b {
+            a = (a - 1) / k;
+            b = (b - 1) / k;
+            d += 2;
+        }
+        d
+    }
+
+    /// Is `anc` an ancestor of (or equal to) `x`?
+    fn is_ancestor(&self, anc: usize, mut x: usize) -> bool {
+        loop {
+            if x == anc {
+                return true;
+            }
+            if x == 0 {
+                return false;
+            }
+            x = self.parent(x);
+        }
+    }
+}
+
+impl ServiceTopology for TreeService {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn name(&self) -> String {
+        format!("Tree{}", self.k)
+    }
+
+    fn edges(&self) -> Vec<(usize, usize)> {
+        (1..self.n).map(|i| (self.parent(i), i)).collect()
+    }
+
+    fn next_hop(&self, cur: usize, dst: usize) -> usize {
+        debug_assert_ne!(cur, dst);
+        // Down phase: if dst is in cur's subtree, step to the child on the
+        // path; otherwise go up toward the LCA.
+        if self.is_ancestor(cur, dst) {
+            // Find the child of cur that is an ancestor of dst: walk dst's
+            // ancestor chain until its parent is cur.
+            let mut x = dst;
+            while self.parent(x) != cur {
+                x = self.parent(x);
+            }
+            x
+        } else {
+            self.parent(cur)
+        }
+    }
+
+    fn distance(&self, a: usize, b: usize) -> usize {
+        Self::dist_static(self.k, &self.depth, a, b)
+    }
+
+    fn diameter(&self) -> usize {
+        self.diameter
+    }
+
+    fn symmetric(&self) -> bool {
+        false // the root is special (Table 1; §6.2 FR bottleneck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn walk(svc: &TreeService, s: usize, d: usize) -> usize {
+        let mut cur = s;
+        let mut hops = 0;
+        while cur != d {
+            cur = svc.next_hop(cur, d);
+            hops += 1;
+            assert!(hops <= svc.diameter());
+        }
+        hops
+    }
+
+    #[test]
+    fn binary_tree_structure() {
+        let t = TreeService::new(7, 2);
+        assert_eq!(t.edges().len(), 6);
+        assert_eq!(t.depth, vec![0, 1, 1, 2, 2, 2, 2]);
+        assert_eq!(t.diameter(), 4); // leaf → root → leaf
+    }
+
+    #[test]
+    fn updown_routing_is_minimal() {
+        for (n, k) in [(15usize, 2usize), (64, 4), (21, 4), (64, 2)] {
+            let t = TreeService::new(n, k);
+            for s in 0..n {
+                for d in 0..n {
+                    if s != d {
+                        assert_eq!(walk(&t, s, d), t.distance(s, d), "n={n} k={k} {s}->{d}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn up_phase_before_down_phase() {
+        // Verify the up*/down* invariant along every route: once a packet
+        // moves down (away from root), it never moves up again.
+        let t = TreeService::new(64, 4);
+        for s in 0..64 {
+            for d in 0..64 {
+                if s == d {
+                    continue;
+                }
+                let mut cur = s;
+                let mut descended = false;
+                while cur != d {
+                    let nxt = t.next_hop(cur, d);
+                    let going_up = t.depth[nxt] < t.depth[cur];
+                    if going_up {
+                        assert!(!descended, "up after down on {s}->{d}");
+                    } else {
+                        descended = true;
+                    }
+                    cur = nxt;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,538 @@
+//! Flit-level, cycle-driven interconnection network simulator.
+//!
+//! Substitute for the CAMINOS simulator the paper uses (§5): an event-driven
+//! simulator and a cycle-driven one are equivalent at this abstraction level
+//! because every CAMINOS event fires on a cycle edge (see DESIGN.md,
+//! Substitution 1). The microarchitecture follows §5 exactly:
+//!
+//! * 16-flit packets;
+//! * input ports with per-VC FIFOs of 10 packets, output queues of
+//!   5 packets per VC;
+//! * crossbar with 2× speedup and a random (rotating-priority) allocator;
+//! * credit-based flow control;
+//! * servers attached through injection/ejection ports serialized at one
+//!   flit per cycle.
+//!
+//! Virtual cut-through timing: a packet becomes routable at the downstream
+//! switch as soon as its header arrives (flits stream behind it at link
+//! rate), and a buffer slot is occupied from header arrival until the
+//! crossbar grant releases it upstream via a credit.
+
+pub mod packet;
+pub mod switch;
+
+pub use packet::{Packet, PacketArena, PacketId, NO_SWITCH};
+pub use switch::{InputPort, OutputPort, Switch, SwitchView};
+
+use std::sync::Arc;
+
+use crate::metrics::SimStats;
+use crate::routing::Router;
+use crate::topology::PhysTopology;
+use crate::traffic::Workload;
+use crate::util::Rng;
+
+/// Simulator parameters (§5 defaults).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Input buffer capacity, packets per VC (paper: 10).
+    pub input_cap_pkts: usize,
+    /// Output queue capacity, packets per VC (paper: 5).
+    pub output_cap_pkts: usize,
+    /// Flits per packet (paper: 16).
+    pub pkt_flits: u16,
+    /// Link latency in cycles (header fly time).
+    pub link_latency: u64,
+    /// Crossbar speedup (paper: 2×).
+    pub speedup: u64,
+    /// Servers (injection/ejection port pairs) per switch.
+    pub servers_per_switch: usize,
+    /// Master seed; every stochastic component derives from it.
+    pub seed: u64,
+    /// Cycles without any flit movement (while packets are live) after
+    /// which the run is declared deadlocked.
+    pub watchdog_cycles: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            input_cap_pkts: 10,
+            output_cap_pkts: 5,
+            pkt_flits: 16,
+            link_latency: 1,
+            speedup: 2,
+            servers_per_switch: 4,
+            seed: 1,
+            watchdog_cycles: 20_000,
+        }
+    }
+}
+
+/// Run control.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// Hard cycle limit.
+    pub max_cycles: u64,
+    /// Cycles before the measurement window opens.
+    pub warmup: u64,
+    /// Measurement window length (None = measure until the end).
+    pub window: Option<u64>,
+    /// Stop as soon as the workload is exhausted and the network drained
+    /// (fixed generation / application kernels).
+    pub stop_when_drained: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        Self {
+            max_cycles: 1_000_000,
+            warmup: 0,
+            window: None,
+            stop_when_drained: true,
+        }
+    }
+}
+
+/// Simulation failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    #[error("deadlock detected at cycle {cycle}: {live} packets stalled (no flit moved for {idle} cycles)")]
+    Deadlock { cycle: u64, live: usize, idle: u64 },
+    #[error("cycle limit {0} reached before the workload drained")]
+    CycleLimit(u64),
+}
+
+/// Events scheduled on the timing wheel.
+enum Event {
+    /// Packet header reaches input `(sw, port)` on `vc`.
+    Arrive {
+        sw: u32,
+        port: u32,
+        vc: u8,
+        pkt: PacketId,
+    },
+    /// Packet tail reaches its destination server.
+    Deliver { pkt: PacketId },
+}
+
+/// Per-server injection state.
+struct ServerState {
+    /// Generated-but-not-injected packets: `(dst_server, gen_cycle)`.
+    queue: std::collections::VecDeque<(u32, u64)>,
+    /// NIC serialization: next cycle this server may inject a packet.
+    free_at: u64,
+}
+
+const WHEEL: usize = 64;
+
+/// The simulated network: topology + switches + servers + router.
+pub struct Network {
+    pub topo: Arc<PhysTopology>,
+    pub router: Arc<dyn Router>,
+    pub cfg: SimConfig,
+    switches: Vec<Switch>,
+    servers: Vec<ServerState>,
+    arena: PacketArena,
+    wheel: Vec<Vec<Event>>,
+    credit_returns: Vec<(u32, u32, u8)>,
+    rng: Rng,
+    now: u64,
+    stats: SimStats,
+    warmup: u64,
+    window_end: u64,
+    last_progress: u64,
+    /// Packets sitting in server source queues (fast drain check).
+    pending_sources: usize,
+    max_hops: usize,
+    max_degree: usize,
+}
+
+impl Network {
+    pub fn new(topo: Arc<PhysTopology>, router: Arc<dyn Router>, cfg: SimConfig) -> Self {
+        let n = topo.n;
+        let vcs = router.num_vcs();
+        let spc = cfg.servers_per_switch;
+        let mut switches = Vec::with_capacity(n);
+        for s in 0..n {
+            let deg = topo.degree(s);
+            let mut inputs = Vec::with_capacity(deg + spc);
+            for p in 0..deg {
+                let up_sw = topo.neighbor(s, p) as u32;
+                let up_port = topo.reverse_port(s, p) as u32;
+                inputs.push(InputPort::new(vcs, Some((up_sw, up_port))));
+            }
+            for _ in 0..spc {
+                inputs.push(InputPort::new(vcs, None));
+            }
+            let mut outputs = Vec::with_capacity(deg + spc);
+            for _ in 0..deg {
+                outputs.push(OutputPort::new(vcs, cfg.input_cap_pkts as u32, false));
+            }
+            for _ in 0..spc {
+                outputs.push(OutputPort::new(vcs, u32::MAX / 2, true));
+            }
+            switches.push(Switch {
+                inputs,
+                outputs,
+                degree: deg,
+            });
+        }
+        let servers = (0..n * spc)
+            .map(|_| ServerState {
+                queue: std::collections::VecDeque::new(),
+                free_at: 0,
+            })
+            .collect();
+        let max_degree = topo.max_degree();
+        let max_hops = router.max_hops();
+        let stats = SimStats::new(n * spc, n * max_degree);
+        Self {
+            topo,
+            router,
+            rng: Rng::derive(cfg.seed, 0xC0FFEE),
+            cfg,
+            switches,
+            servers,
+            arena: PacketArena::with_capacity(4096),
+            wheel: (0..WHEEL).map(|_| Vec::new()).collect(),
+            credit_returns: Vec::new(),
+            now: 0,
+            stats,
+            warmup: 0,
+            window_end: u64::MAX,
+            last_progress: 0,
+            pending_sources: 0,
+            max_hops,
+            max_degree,
+        }
+    }
+
+    /// Current simulation cycle.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Packets currently inside the network (injected, not delivered).
+    pub fn live_packets(&self) -> usize {
+        self.arena.live()
+    }
+
+    #[inline]
+    fn in_window(&self, cycle: u64) -> bool {
+        cycle >= self.warmup && cycle < self.window_end
+    }
+
+    /// Run the simulation. Returns collected statistics or a deadlock /
+    /// cycle-limit error.
+    pub fn run(&mut self, workload: &mut dyn Workload, opts: &RunOpts) -> Result<SimStats, SimError> {
+        self.warmup = opts.warmup;
+        self.window_end = opts.warmup.saturating_add(opts.window.unwrap_or(u64::MAX / 2));
+        self.last_progress = self.now;
+        loop {
+            if opts.stop_when_drained
+                && workload.exhausted()
+                && self.arena.live() == 0
+                && self.pending_sources == 0
+            {
+                break;
+            }
+            if self.now >= opts.max_cycles {
+                if opts.stop_when_drained {
+                    return Err(SimError::CycleLimit(opts.max_cycles));
+                }
+                break;
+            }
+            self.step(workload)?;
+        }
+        let mut stats = std::mem::replace(
+            &mut self.stats,
+            SimStats::new(self.servers.len(), self.topo.n * self.max_degree),
+        );
+        stats.finish_cycle = self.now;
+        stats.window_cycles = self.now.min(self.window_end).saturating_sub(self.warmup);
+        Ok(stats)
+    }
+
+    /// One simulated cycle.
+    fn step(&mut self, workload: &mut dyn Workload) -> Result<(), SimError> {
+        let now = self.now;
+        let flits = self.cfg.pkt_flits as u64;
+
+        // ---- Phase 1: timing-wheel events (arrivals, deliveries). ----
+        let slot = (now % WHEEL as u64) as usize;
+        let events = std::mem::take(&mut self.wheel[slot]);
+        for ev in events {
+            match ev {
+                Event::Arrive { sw, port, vc, pkt } => {
+                    self.switches[sw as usize].inputs[port as usize].vcs[vc as usize]
+                        .push_back(pkt);
+                }
+                Event::Deliver { pkt } => {
+                    let p = self.arena.get(pkt);
+                    debug_assert!(
+                        (p.hops as usize) <= self.max_hops,
+                        "livelock bound violated: {} hops > {} ({})",
+                        p.hops,
+                        self.max_hops,
+                        self.router.name()
+                    );
+                    if self.in_window(now) {
+                        self.stats.delivered_flits += p.flits as u64;
+                        self.stats.delivered_packets += 1;
+                    }
+                    if self.in_window(p.gen_cycle) {
+                        self.stats.latency.record(now - p.gen_cycle);
+                        let h = (p.hops as usize).min(self.stats.hops.len() - 1);
+                        self.stats.hops[h] += 1;
+                    }
+                    let (src, dst) = (p.src_server, p.dst_server);
+                    self.arena.free(pkt);
+                    workload.on_delivered(src, dst, now);
+                }
+            }
+        }
+
+        // ---- Phase 2: workload generation into source queues. ----
+        {
+            let servers = &mut self.servers;
+            let pending = &mut self.pending_sources;
+            workload.poll(now, &mut |src: u32, dst: u32| {
+                servers[src as usize].queue.push_back((dst, now));
+                *pending += 1;
+            });
+        }
+
+        // ---- Phase 3: injection (server NIC → switch input FIFO). ----
+        let spc = self.cfg.servers_per_switch;
+        for srv in 0..self.servers.len() {
+            let st = &mut self.servers[srv];
+            if st.free_at > now || st.queue.is_empty() {
+                continue;
+            }
+            let sw = srv / spc;
+            let local = srv % spc;
+            let port = self.switches[sw].degree + local;
+            // Injection always lands on VC 0 (cf. §2.1.2: MIN packets must
+            // enter on the lowest-ordered VC).
+            if self.switches[sw].inputs[port].vcs[0].len() >= self.cfg.input_cap_pkts {
+                continue; // backpressure into the source queue
+            }
+            let (dst, gen_cycle) = st.queue.pop_front().unwrap();
+            st.free_at = now + flits;
+            self.pending_sources -= 1;
+            let dst_sw = (dst as usize / spc) as u32;
+            let pkt = self.arena.alloc(Packet {
+                src_server: srv as u32,
+                dst_server: dst,
+                src_sw: sw as u32,
+                dst_sw,
+                intermediate: NO_SWITCH,
+                hops: 0,
+                vc: 0,
+                scratch: 0,
+                blocked: 0,
+                gen_cycle,
+                inject_cycle: now,
+                flits: self.cfg.pkt_flits,
+            });
+            self.switches[sw].inputs[port].vcs[0].push_back(pkt);
+            if self.in_window(now) {
+                self.stats.injected_per_server[srv] += 1;
+            }
+        }
+
+        // ---- Phase 4: switch allocation (random rotating priority). ----
+        for s in 0..self.switches.len() {
+            self.allocate_switch(s);
+        }
+
+        // ---- Phase 5: link transmission. ----
+        for s in 0..self.switches.len() {
+            self.transmit_switch(s);
+        }
+
+        // ---- Phase 6: apply deferred credit returns. ----
+        for i in 0..self.credit_returns.len() {
+            let (sw, port, vc) = self.credit_returns[i];
+            let op = &mut self.switches[sw as usize].outputs[port as usize];
+            op.credits[vc as usize] += 1;
+        }
+        self.credit_returns.clear();
+
+        // ---- Watchdog. ----
+        if self.arena.live() > 0 && now - self.last_progress > self.cfg.watchdog_cycles {
+            return Err(SimError::Deadlock {
+                cycle: now,
+                live: self.arena.live(),
+                idle: now - self.last_progress,
+            });
+        }
+
+        self.now += 1;
+        Ok(())
+    }
+
+    /// Crossbar allocation for one switch: rotating-priority scan of input
+    /// ports, one grant per input port, ≤ speedup grants per output port.
+    fn allocate_switch(&mut self, s: usize) {
+        let now = self.now;
+        let num_inputs = self.switches[s].inputs.len();
+        let vcs = self.router.num_vcs();
+        let degree = self.switches[s].degree;
+        let spc = self.cfg.servers_per_switch;
+        let offset = self.rng.gen_range(num_inputs);
+        let xbar_cycles =
+            (self.cfg.pkt_flits as u64 + self.cfg.speedup - 1) / self.cfg.speedup;
+
+        for k in 0..num_inputs {
+            let i = (k + offset) % num_inputs;
+            if self.switches[s].inputs[i].busy_until > now
+                || self.switches[s].inputs[i].occupancy() == 0
+            {
+                continue;
+            }
+            let at_injection = i >= degree;
+            let vc_off = if vcs > 1 { self.rng.gen_range(vcs) } else { 0 };
+            'vc_scan: for kv in 0..vcs {
+                let vc = (kv + vc_off) % vcs;
+                let Some(&pkt_id) = self.switches[s].inputs[i].vcs[vc].front() else {
+                    continue;
+                };
+                // Routing decision (borrow outputs immutably, packet mutably).
+                let decision = {
+                    let view = SwitchView {
+                        sw: s,
+                        degree,
+                        now,
+                        speedup: self.cfg.speedup,
+                        outputs: &self.switches[s].outputs,
+                        output_cap_pkts: self.cfg.output_cap_pkts,
+                    };
+                    let pkt = self.arena.get_mut(pkt_id);
+                    if pkt.dst_sw as usize == s {
+                        // Eject toward the destination server, keeping the
+                        // packet's current VC.
+                        let local = pkt.dst_server as usize % spc;
+                        let port = degree + local;
+                        if view.has_space(port, pkt.vc as usize) {
+                            Some((port, pkt.vc as usize))
+                        } else {
+                            None
+                        }
+                    } else {
+                        self.router.route(&view, pkt, at_injection, &mut self.rng)
+                    }
+                };
+                let Some((out_port, out_vc)) = decision else {
+                    // Head packet stays blocked: bump its patience counter
+                    // (escape-based routers consult it).
+                    let pkt = self.arena.get_mut(pkt_id);
+                    pkt.blocked = pkt.blocked.saturating_add(1);
+                    continue 'vc_scan;
+                };
+                // Commit the grant (routers only return grantable ports —
+                // SwitchView::has_space folds in the speedup limit).
+                {
+                    let op = &mut self.switches[s].outputs[out_port];
+                    if op.last_grant_cycle != now {
+                        op.last_grant_cycle = now;
+                        op.grants_this_cycle = 0;
+                    }
+                    debug_assert!(op.vcs[out_vc].len() < self.cfg.output_cap_pkts);
+                    debug_assert!((op.grants_this_cycle as u64) < self.cfg.speedup);
+                    op.grants_this_cycle += 1;
+                    op.vcs[out_vc].push_back(pkt_id);
+                    op.occ_flits += self.cfg.pkt_flits as u32;
+                }
+                let inp = &mut self.switches[s].inputs[i];
+                inp.vcs[vc].pop_front();
+                inp.busy_until = now + xbar_cycles;
+                if let Some((usw, uport)) = inp.upstream {
+                    self.credit_returns.push((usw, uport, vc as u8));
+                }
+                let pkt = self.arena.get_mut(pkt_id);
+                pkt.vc = out_vc as u8;
+                pkt.blocked = 0;
+                if out_port < degree {
+                    pkt.hops += 1;
+                    debug_assert!(
+                        (pkt.hops as usize) <= self.max_hops,
+                        "hop bound exceeded at switch {s}: {} hops (router {})",
+                        pkt.hops,
+                        self.router.name()
+                    );
+                }
+                self.last_progress = now;
+                break 'vc_scan; // one grant per input port per cycle
+            }
+        }
+    }
+
+    /// Outgoing-link scheduling for one switch: per free link, pick a ready
+    /// VC (non-empty queue + downstream credit) at random rotation.
+    fn transmit_switch(&mut self, s: usize) {
+        let now = self.now;
+        let flits = self.cfg.pkt_flits as u64;
+        let num_outputs = self.switches[s].outputs.len();
+        let degree = self.switches[s].degree;
+        let vcs = self.router.num_vcs();
+        for o in 0..num_outputs {
+            let op = &mut self.switches[s].outputs[o];
+            if op.link_free_at > now || op.queued() == 0 {
+                continue;
+            }
+            let vc_off = if vcs > 1 { self.rng.gen_range(vcs) } else { 0 };
+            let mut chosen: Option<usize> = None;
+            for kv in 0..vcs {
+                let vc = (kv + vc_off) % vcs;
+                if !op.vcs[vc].is_empty() && op.credits[vc] > 0 {
+                    chosen = Some(vc);
+                    break;
+                }
+            }
+            let Some(vc) = chosen else { continue };
+            let pkt_id = op.vcs[vc].pop_front().unwrap();
+            op.link_free_at = now + flits;
+            // Occupancy is the *output queue* depth in flits (the paper's
+            // Algorithm-1 occupancy[p]; q = 54 is calibrated against the
+            // 5-packet output buffer): the packet leaves the queue now.
+            op.occ_flits = op.occ_flits.saturating_sub(flits as u32);
+            if o < degree {
+                op.credits[vc] -= 1;
+                if self.in_window(now) {
+                    self.stats.link_flits[s * self.max_degree + o] += flits;
+                }
+                let dst_sw = self.topo.neighbor(s, o) as u32;
+                let dst_port = self.topo.reverse_port(s, o) as u32;
+                let when = now + self.cfg.link_latency;
+                self.schedule(
+                    when,
+                    Event::Arrive {
+                        sw: dst_sw,
+                        port: dst_port,
+                        vc: vc as u8,
+                        pkt: pkt_id,
+                    },
+                );
+            } else {
+                // Ejection: the server consumes at line rate; the tail is
+                // received `flits` cycles from now.
+                self.schedule(now + flits, Event::Deliver { pkt: pkt_id });
+            }
+            self.last_progress = now;
+        }
+    }
+
+    #[inline]
+    fn schedule(&mut self, when: u64, ev: Event) {
+        debug_assert!(when > self.now && when - self.now < WHEEL as u64);
+        self.wheel[(when % WHEEL as u64) as usize].push(ev);
+    }
+
+    /// Total occupancy snapshot (flits buffered per output port of a
+    /// switch) — used by the artifact-validation harness and tests.
+    pub fn occupancy_snapshot(&self, s: usize) -> Vec<u32> {
+        self.switches[s].outputs.iter().map(|o| o.occ_flits).collect()
+    }
+}

@@ -1,0 +1,129 @@
+//! Packet records. Flits are not separate heap objects: each packet carries
+//! its flit count and the switch/link models account for serialization time
+//! (one flit per link per cycle), which reproduces virtual-cut-through
+//! timing at a fraction of the memory traffic (see DESIGN.md).
+
+/// Dense packet id into the [`PacketArena`].
+pub type PacketId = u32;
+
+pub const NO_SWITCH: u32 = u32::MAX;
+
+/// One in-flight packet.
+#[derive(Clone, Debug)]
+pub struct Packet {
+    /// Source / destination servers (global server ids).
+    pub src_server: u32,
+    pub dst_server: u32,
+    /// Source / destination switches.
+    pub src_sw: u32,
+    pub dst_sw: u32,
+    /// Valiant-style intermediate switch chosen by the router
+    /// (NO_SWITCH if none / not chosen yet).
+    pub intermediate: u32,
+    /// Switch-to-switch hops taken so far.
+    pub hops: u8,
+    /// Virtual channel the packet currently occupies.
+    pub vc: u8,
+    /// Router-owned scratch state (a packet is handled by exactly one
+    /// routing algorithm): link orderings store `label + 1` of the last arc
+    /// taken (0 = none yet); the 2D-HyperX routers store per-dimension
+    /// progress bit flags.
+    pub scratch: u32,
+    /// Consecutive allocation attempts the packet has spent blocked at the
+    /// head of its FIFO (reset on every grant). Escape-based routers take
+    /// their service escape only after sustained blocking — the selection-
+    /// function analogue of Duato-style escape channels.
+    pub blocked: u16,
+    /// Cycle the packet was generated (source queue entry).
+    pub gen_cycle: u64,
+    /// Cycle the packet entered the network (left the source queue).
+    pub inject_cycle: u64,
+    /// Flits in the packet (16 throughout the paper).
+    pub flits: u16,
+}
+
+/// Slab allocator for packets — no per-packet heap allocation in the
+/// steady state; freed slots are recycled through a free list.
+pub struct PacketArena {
+    slots: Vec<Packet>,
+    free: Vec<PacketId>,
+    live: usize,
+}
+
+impl PacketArena {
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            slots: Vec::with_capacity(cap),
+            free: Vec::new(),
+            live: 0,
+        }
+    }
+
+    pub fn alloc(&mut self, p: Packet) -> PacketId {
+        self.live += 1;
+        if let Some(id) = self.free.pop() {
+            self.slots[id as usize] = p;
+            id
+        } else {
+            self.slots.push(p);
+            (self.slots.len() - 1) as PacketId
+        }
+    }
+
+    pub fn free(&mut self, id: PacketId) {
+        debug_assert!(self.live > 0);
+        self.live -= 1;
+        self.free.push(id);
+    }
+
+    #[inline]
+    pub fn get(&self, id: PacketId) -> &Packet {
+        &self.slots[id as usize]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: PacketId) -> &mut Packet {
+        &mut self.slots[id as usize]
+    }
+
+    /// Packets currently allocated (in flight somewhere in the network).
+    pub fn live(&self) -> usize {
+        self.live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(src: u32, dst: u32) -> Packet {
+        Packet {
+            src_server: src,
+            dst_server: dst,
+            src_sw: 0,
+            dst_sw: 1,
+            intermediate: NO_SWITCH,
+            hops: 0,
+            vc: 0,
+            scratch: 0,
+            blocked: 0,
+            gen_cycle: 0,
+            inject_cycle: 0,
+            flits: 16,
+        }
+    }
+
+    #[test]
+    fn arena_reuses_slots() {
+        let mut a = PacketArena::with_capacity(4);
+        let p1 = a.alloc(mk(0, 1));
+        let p2 = a.alloc(mk(2, 3));
+        assert_eq!(a.live(), 2);
+        a.free(p1);
+        assert_eq!(a.live(), 1);
+        let p3 = a.alloc(mk(4, 5));
+        assert_eq!(p3, p1, "slot should be recycled");
+        assert_eq!(a.get(p3).src_server, 4);
+        assert_eq!(a.get(p2).src_server, 2);
+    }
+}

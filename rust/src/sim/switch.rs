@@ -1,0 +1,132 @@
+//! Switch microarchitecture (§5): per-VC input FIFOs (10 packets), per-VC
+//! output queues (5 packets), a crossbar with 2× speedup and a random
+//! allocator, credit-based flow control toward the downstream input buffers.
+
+use std::collections::VecDeque;
+
+use super::packet::PacketId;
+
+/// One input port (from an upstream switch or from a local server).
+#[derive(Debug)]
+pub struct InputPort {
+    /// Per-VC FIFO of packets whose headers have arrived.
+    pub vcs: Vec<VecDeque<PacketId>>,
+    /// Crossbar serialization: next cycle this port may start a transfer
+    /// (16 flits at 2× speedup ⇒ 8 cycles per packet).
+    pub busy_until: u64,
+    /// `(switch, output port)` feeding this input, or `None` for injection.
+    pub upstream: Option<(u32, u32)>,
+}
+
+impl InputPort {
+    pub fn new(vcs: usize, upstream: Option<(u32, u32)>) -> Self {
+        Self {
+            vcs: (0..vcs).map(|_| VecDeque::new()).collect(),
+            busy_until: 0,
+            upstream,
+        }
+    }
+
+    /// Total packets buffered across VCs.
+    pub fn occupancy(&self) -> usize {
+        self.vcs.iter().map(VecDeque::len).sum()
+    }
+}
+
+/// One output port (toward a downstream switch or a local server).
+#[derive(Debug)]
+pub struct OutputPort {
+    /// Per-VC output queue (capacity `output_cap_pkts`).
+    pub vcs: Vec<VecDeque<PacketId>>,
+    /// Next cycle the outgoing link is free (16-cycle packet serialization).
+    pub link_free_at: u64,
+    /// Credits: free packet slots in the downstream input FIFO, per VC.
+    /// Ejection ports use a virtually infinite credit pool (the server
+    /// always consumes).
+    pub credits: Vec<u32>,
+    /// Congestion signal fed to adaptive routing: flits currently queued
+    /// in this output port's buffers (Algorithm 1's `occupancy[p]`; the
+    /// §5 penalty q = 54 is calibrated against this 5-packet buffer).
+    pub occ_flits: u32,
+    /// Crossbar output speedup accounting: grants accepted this cycle.
+    pub grants_this_cycle: u8,
+    pub last_grant_cycle: u64,
+    /// True for server ejection ports.
+    pub is_ejection: bool,
+}
+
+impl OutputPort {
+    pub fn new(vcs: usize, credits_per_vc: u32, is_ejection: bool) -> Self {
+        Self {
+            vcs: (0..vcs).map(|_| VecDeque::new()).collect(),
+            link_free_at: 0,
+            credits: vec![credits_per_vc; vcs],
+            occ_flits: 0,
+            grants_this_cycle: 0,
+            last_grant_cycle: u64::MAX,
+            is_ejection: false || is_ejection,
+        }
+    }
+
+    /// Packets queued across VCs.
+    pub fn queued(&self) -> usize {
+        self.vcs.iter().map(VecDeque::len).sum()
+    }
+}
+
+/// A switch: `degree` inter-switch ports followed by `servers` local ports.
+#[derive(Debug)]
+pub struct Switch {
+    pub inputs: Vec<InputPort>,
+    pub outputs: Vec<OutputPort>,
+    /// Inter-switch ports count (local ports start at this index).
+    pub degree: usize,
+}
+
+/// Read-only view of a switch's output side handed to routing algorithms.
+pub struct SwitchView<'a> {
+    /// Current switch id.
+    pub sw: usize,
+    /// Inter-switch degree of this switch.
+    pub degree: usize,
+    /// Current cycle (for crossbar grant accounting).
+    pub now: u64,
+    /// Crossbar speedup (max grants per output port per cycle).
+    pub speedup: u64,
+    pub(super) outputs: &'a [OutputPort],
+    pub(super) output_cap_pkts: usize,
+}
+
+impl<'a> SwitchView<'a> {
+    /// Congestion estimate for an output port, in flits (queued locally +
+    /// held downstream). This is the `occupancy[p]` of Algorithm 1.
+    #[inline]
+    pub fn occ_flits(&self, port: usize) -> u32 {
+        self.outputs[port].occ_flits
+    }
+
+    /// Can a packet be granted into output queue `(port, vc)` right now?
+    /// Accounts for both queue capacity and the crossbar's per-cycle output
+    /// grant limit, so a `Some` decision from a router always commits.
+    #[inline]
+    pub fn has_space(&self, port: usize, vc: usize) -> bool {
+        let op = &self.outputs[port];
+        op.vcs[vc].len() < self.output_cap_pkts
+            && (op.last_grant_cycle != self.now || (op.grants_this_cycle as u64) < self.speedup)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ports_initialize_empty() {
+        let ip = InputPort::new(2, None);
+        assert_eq!(ip.occupancy(), 0);
+        let op = OutputPort::new(2, 10, false);
+        assert_eq!(op.queued(), 0);
+        assert_eq!(op.credits, vec![10, 10]);
+        assert!(!op.is_ejection);
+    }
+}

@@ -1,0 +1,112 @@
+//! Mini property-testing framework (proptest is not in the offline crate
+//! set — DESIGN.md Substitution 5).
+//!
+//! [`check`] runs a property closure over `cases` seeded RNGs; on failure it
+//! reports the failing seed so the case can be replayed deterministically:
+//!
+//! ```
+//! use tera_net::testing::check;
+//! use tera_net::util::Rng;
+//! check("addition commutes", 64, |rng: &mut Rng| {
+//!     let (a, b) = (rng.gen_range(100) as i64, rng.gen_range(100) as i64);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Run `prop` against `cases` independently-seeded RNGs; panic with the
+/// failing seed on the first violated property.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed on case {case} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Generator helpers for property tests.
+pub mod gen {
+    use crate::util::Rng;
+
+    /// A random Full-mesh size from a sensible evaluation range.
+    pub fn fm_size(rng: &mut Rng) -> usize {
+        // Mixed: small sizes shake out edge cases, larger ones exercise
+        // balance properties.
+        const SIZES: [usize; 8] = [4, 6, 8, 9, 12, 16, 25, 32];
+        SIZES[rng.gen_range(SIZES.len())]
+    }
+
+    /// A random service-topology name valid for size `n`.
+    pub fn service_name(rng: &mut Rng, n: usize) -> &'static str {
+        let mut opts: Vec<&'static str> = vec!["path", "tree2", "tree4"];
+        let r2 = crate::util::iroot(n, 2);
+        if r2 * r2 == n {
+            opts.push("hx2");
+            opts.push("mesh2");
+        }
+        let r3 = crate::util::iroot(n, 3);
+        if r3 * r3 * r3 == n {
+            opts.push("hx3");
+        }
+        if n.is_power_of_two() {
+            opts.push("hypercube");
+        }
+        opts[rng.gen_range(opts.len())]
+    }
+
+    /// A random traffic-pattern name.
+    pub fn pattern_name(rng: &mut Rng) -> &'static str {
+        const P: [&str; 5] = ["uniform", "rsp", "fr", "shift", "complement"];
+        P[rng.gen_range(P.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 10, |rng| {
+            let x = rng.gen_range(10);
+            assert!(x < 10);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 3, |_rng| {
+                panic!("boom");
+            });
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn generators_produce_valid_configs() {
+        check("gen validity", 32, |rng| {
+            let n = gen::fm_size(rng);
+            let svc = gen::service_name(rng, n);
+            let s = crate::service::by_name(svc, n).unwrap();
+            assert_eq!(s.n(), n);
+        });
+    }
+}

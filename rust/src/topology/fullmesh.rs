@@ -1,0 +1,56 @@
+//! Full-mesh (complete graph `K_n`) physical topology — Definition 3.1.
+//!
+//! Every pair of distinct switches is connected, so there are
+//! `m = n(n-1)/2` links, one minimal path per pair, and `n-2` two-hop
+//! non-minimal paths per pair (n(n-1)(n-2) in total).
+
+use super::{PhysTopology, TopoKind};
+
+/// Build `K_n`. Port `p` of switch `s` connects to switch `p` if `p < s`,
+/// else to `p + 1` (i.e. neighbors sorted ascending, which
+/// [`PhysTopology::from_adjacency`] guarantees).
+pub fn full_mesh(n: usize) -> PhysTopology {
+    assert!(n >= 2, "a full mesh needs at least 2 switches");
+    let neighbors: Vec<Vec<usize>> = (0..n)
+        .map(|s| (0..n).filter(|&d| d != s).collect())
+        .collect();
+    PhysTopology::from_adjacency(neighbors, TopoKind::FullMesh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k4_structure() {
+        let t = full_mesh(4);
+        assert_eq!(t.n, 4);
+        assert_eq!(t.num_links(), 6);
+        for s in 0..4 {
+            assert_eq!(t.degree(s), 3);
+        }
+        assert_eq!(t.port_to(0, 1), Some(0));
+        assert_eq!(t.port_to(1, 0), Some(0));
+        assert_eq!(t.port_to(3, 2), Some(2));
+        assert_eq!(t.port_to(2, 2), None);
+    }
+
+    #[test]
+    fn link_count_formula() {
+        for n in [2usize, 3, 8, 16, 64] {
+            let t = full_mesh(n);
+            assert_eq!(t.num_links(), n * (n - 1) / 2);
+            assert_eq!(t.diameter(), 1);
+        }
+    }
+
+    #[test]
+    fn all_pairs_distance_one() {
+        let t = full_mesh(8);
+        for a in 0..8 {
+            for b in 0..8 {
+                assert_eq!(t.distance(a, b), usize::from(a != b));
+            }
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! d-dimensional HyperX physical topology [Ahn et al., SC'09].
+//!
+//! Switches are the points of a mixed-radix grid `dims[0] × … × dims[d-1]`;
+//! along every dimension, the switches sharing the other coordinates form a
+//! complete graph. A 1D HyperX is exactly a Full-mesh; the paper's §6.5
+//! network is an 8×8 2D-HyperX (diameter 2).
+
+use super::{coords, coords_to_id, PhysTopology, TopoKind};
+
+/// Build a d-dimensional HyperX with the given per-dimension radices.
+pub fn hyperx(dims: &[usize]) -> PhysTopology {
+    assert!(!dims.is_empty(), "hyperx needs at least one dimension");
+    assert!(dims.iter().all(|&d| d >= 2), "each dimension needs radix >= 2");
+    let n: usize = dims.iter().product();
+    let mut neighbors: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for id in 0..n {
+        let c = coords(id, dims);
+        for (dim, &radix) in dims.iter().enumerate() {
+            for v in 0..radix {
+                if v != c[dim] {
+                    let mut cc = c.clone();
+                    cc[dim] = v;
+                    neighbors[id].push(coords_to_id(&cc, dims));
+                }
+            }
+        }
+    }
+    PhysTopology::from_adjacency(
+        neighbors,
+        TopoKind::HyperX {
+            dims: dims.to_vec(),
+        },
+    )
+}
+
+/// Convenience: square 2D-HyperX `a × a` (the §6.5 testbed uses 8×8).
+pub fn hyperx2d(a: usize) -> PhysTopology {
+    hyperx(&[a, a])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hyperx_1d_is_full_mesh_shaped() {
+        let t = hyperx(&[6]);
+        assert_eq!(t.n, 6);
+        assert_eq!(t.num_links(), 15);
+        assert_eq!(t.diameter(), 1);
+    }
+
+    #[test]
+    fn hyperx2d_8x8_structure() {
+        let t = hyperx2d(8);
+        assert_eq!(t.n, 64);
+        // Each switch: 7 row + 7 col neighbors.
+        for s in 0..64 {
+            assert_eq!(t.degree(s), 14);
+        }
+        // Links: 8 rows * C(8,2) + 8 cols * C(8,2) = 8*28*2 = 448.
+        assert_eq!(t.num_links(), 448);
+        assert_eq!(t.diameter(), 2);
+    }
+
+    #[test]
+    fn hyperx2d_distances() {
+        let t = hyperx2d(4);
+        // same row
+        assert_eq!(t.distance(0, 3), 1);
+        // same col
+        assert_eq!(t.distance(0, 12), 1);
+        // different row+col
+        assert_eq!(t.distance(0, 5), 2);
+        assert_eq!(t.distance(0, 0), 0);
+    }
+
+    #[test]
+    fn hyperx3d_degree() {
+        let t = hyperx(&[4, 4, 4]);
+        assert_eq!(t.n, 64);
+        for s in 0..64 {
+            assert_eq!(t.degree(s), 9);
+        }
+        assert_eq!(t.diameter(), 3);
+    }
+
+    #[test]
+    fn hypercube_as_hyperx() {
+        let t = hyperx(&[2, 2, 2, 2, 2, 2]);
+        assert_eq!(t.n, 64);
+        for s in 0..64 {
+            assert_eq!(t.degree(s), 6);
+        }
+        assert_eq!(t.num_links(), 64 * 6 / 2);
+    }
+}

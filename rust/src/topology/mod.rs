@@ -1,0 +1,192 @@
+//! Physical topologies the simulator runs on.
+//!
+//! The paper evaluates a Full-mesh (complete graph, §3) extensively and an
+//! 8×8 2D-HyperX (§6.5). Both are represented by [`PhysTopology`]: a switch
+//! graph with a dense port map, plus enough semantic structure (`kind`) for
+//! the routing algorithms that need coordinates (HyperX) or completeness
+//! guarantees (Full-mesh).
+//!
+//! Port numbering convention: switch `s` has `neighbors[s].len()` inter-switch
+//! ports (port `p` connects to `neighbors[s][p]`), followed by the servers'
+//! injection/ejection ports, which the simulator manages separately.
+
+pub mod fullmesh;
+pub mod hyperx;
+
+pub use fullmesh::full_mesh;
+pub use hyperx::{hyperx, hyperx2d};
+
+/// Semantic kind of a physical topology (what routing algorithms may assume).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TopoKind {
+    /// Complete graph `K_n`: every pair of switches is adjacent.
+    FullMesh,
+    /// d-dimensional HyperX: switches are points of a mixed-radix grid and
+    /// each "row" along every dimension is a complete graph.
+    HyperX { dims: Vec<usize> },
+}
+
+/// A physical switch-to-switch topology with O(1) port lookup.
+#[derive(Clone, Debug)]
+pub struct PhysTopology {
+    /// Number of switches.
+    pub n: usize,
+    /// `neighbors[s]` — sorted list of switches adjacent to `s`;
+    /// the index within the list is the port number.
+    pub neighbors: Vec<Vec<usize>>,
+    /// Dense `n × n` port map: `port_to[s * n + d]` is the port of `s` that
+    /// connects directly to `d`, or `NO_PORT`.
+    port_to: Vec<u32>,
+    pub kind: TopoKind,
+}
+
+pub const NO_PORT: u32 = u32::MAX;
+
+impl PhysTopology {
+    /// Build from an adjacency list (neighbors get sorted; port map derived).
+    pub fn from_adjacency(neighbors: Vec<Vec<usize>>, kind: TopoKind) -> Self {
+        let n = neighbors.len();
+        let mut neighbors = neighbors;
+        for l in &mut neighbors {
+            l.sort_unstable();
+            l.dedup();
+        }
+        let mut port_to = vec![NO_PORT; n * n];
+        for (s, l) in neighbors.iter().enumerate() {
+            for (p, &d) in l.iter().enumerate() {
+                assert!(d < n && d != s, "bad neighbor {d} of {s}");
+                port_to[s * n + d] = p as u32;
+            }
+        }
+        Self {
+            n,
+            neighbors,
+            port_to,
+            kind,
+        }
+    }
+
+    /// Number of inter-switch ports at switch `s` (its degree).
+    #[inline]
+    pub fn degree(&self, s: usize) -> usize {
+        self.neighbors[s].len()
+    }
+
+    /// Maximum degree over all switches (used to size port arrays).
+    pub fn max_degree(&self) -> usize {
+        self.neighbors.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// The switch on the other end of `(s, port)`.
+    #[inline]
+    pub fn neighbor(&self, s: usize, port: usize) -> usize {
+        self.neighbors[s][port]
+    }
+
+    /// Port of `s` that connects directly to `d` (None if not adjacent).
+    #[inline]
+    pub fn port_to(&self, s: usize, d: usize) -> Option<usize> {
+        let p = self.port_to[s * self.n + d];
+        if p == NO_PORT {
+            None
+        } else {
+            Some(p as usize)
+        }
+    }
+
+    /// The port at the *receiving* side of the link `(s, port)`, i.e. the
+    /// port of `neighbor(s, port)` that points back at `s`.
+    #[inline]
+    pub fn reverse_port(&self, s: usize, port: usize) -> usize {
+        let d = self.neighbor(s, port);
+        self.port_to(d, s).expect("links are bidirectional")
+    }
+
+    /// Total number of undirected inter-switch links.
+    pub fn num_links(&self) -> usize {
+        self.neighbors.iter().map(Vec::len).sum::<usize>() / 2
+    }
+
+    /// Hop distance between two switches (BFS; exact for any topology, O(1)
+    /// specializations for the kinds we know).
+    pub fn distance(&self, a: usize, b: usize) -> usize {
+        if a == b {
+            return 0;
+        }
+        match &self.kind {
+            TopoKind::FullMesh => 1,
+            TopoKind::HyperX { dims } => {
+                let ca = coords(a, dims);
+                let cb = coords(b, dims);
+                ca.iter().zip(&cb).filter(|(x, y)| x != y).count()
+            }
+        }
+    }
+
+    /// Network diameter.
+    pub fn diameter(&self) -> usize {
+        match &self.kind {
+            TopoKind::FullMesh => 1,
+            TopoKind::HyperX { dims } => dims.len(),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match &self.kind {
+            TopoKind::FullMesh => format!("FM{}", self.n),
+            TopoKind::HyperX { dims } => {
+                let d: Vec<String> = dims.iter().map(|x| x.to_string()).collect();
+                format!("HyperX[{}]", d.join("x"))
+            }
+        }
+    }
+}
+
+/// Mixed-radix decomposition of a switch id: `id = c0 + c1*d0 + c2*d0*d1...`
+pub fn coords(id: usize, dims: &[usize]) -> Vec<usize> {
+    let mut c = Vec::with_capacity(dims.len());
+    let mut rest = id;
+    for &d in dims {
+        c.push(rest % d);
+        rest /= d;
+    }
+    c
+}
+
+/// Inverse of [`coords`].
+pub fn coords_to_id(c: &[usize], dims: &[usize]) -> usize {
+    let mut id = 0;
+    let mut mul = 1;
+    for (i, &d) in dims.iter().enumerate() {
+        debug_assert!(c[i] < d);
+        id += c[i] * mul;
+        mul *= d;
+    }
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_roundtrip() {
+        let dims = [4usize, 3, 5];
+        for id in 0..60 {
+            assert_eq!(coords_to_id(&coords(id, &dims), &dims), id);
+        }
+    }
+
+    #[test]
+    fn reverse_port_is_involution() {
+        let t = full_mesh(8);
+        for s in 0..t.n {
+            for p in 0..t.degree(s) {
+                let d = t.neighbor(s, p);
+                let rp = t.reverse_port(s, p);
+                assert_eq!(t.neighbor(d, rp), s);
+                assert_eq!(t.reverse_port(d, rp), p);
+            }
+        }
+    }
+}

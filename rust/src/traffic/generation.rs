@@ -1,0 +1,171 @@
+//! Generation modes (§5): fixed generation (a burst of `k` packets per
+//! server, time-to-consume measured — Figs 5, 6) and Bernoulli generation
+//! (continuous injection at a given offered load for a fixed horizon —
+//! Fig 7).
+
+use super::patterns::TrafficPattern;
+use super::Workload;
+use crate::util::Rng;
+
+/// Fixed generation: every server starts with `packets_per_server` packets
+/// drawn from a pattern; the run ends when all are delivered.
+pub struct FixedWorkload {
+    /// Per-server remaining packets (generated lazily but all offered at
+    /// cycle 0 — source queues are unbounded).
+    batches: Vec<Vec<u32>>,
+    offered: bool,
+    outstanding: u64,
+}
+
+impl FixedWorkload {
+    pub fn new(
+        pattern: &TrafficPattern,
+        n_switches: usize,
+        spc: usize,
+        packets_per_server: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let n_servers = n_switches * spc;
+        let mut batches = Vec::with_capacity(n_servers);
+        let mut outstanding = 0u64;
+        for src in 0..n_servers {
+            let dsts: Vec<u32> = (0..packets_per_server)
+                .map(|_| pattern.dest(src, n_switches, spc, rng))
+                .collect();
+            outstanding += dsts.len() as u64;
+            batches.push(dsts);
+        }
+        Self {
+            batches,
+            offered: false,
+            outstanding,
+        }
+    }
+
+    /// Packets still undelivered.
+    pub fn outstanding(&self) -> u64 {
+        self.outstanding
+    }
+}
+
+impl Workload for FixedWorkload {
+    fn poll(&mut self, _cycle: u64, offer: &mut dyn FnMut(u32, u32)) {
+        if self.offered {
+            return;
+        }
+        self.offered = true;
+        for (src, dsts) in self.batches.iter().enumerate() {
+            for &d in dsts {
+                offer(src as u32, d);
+            }
+        }
+    }
+
+    fn on_delivered(&mut self, _src: u32, _dst: u32, _cycle: u64) {
+        self.outstanding -= 1;
+    }
+
+    fn exhausted(&self) -> bool {
+        self.offered
+    }
+}
+
+/// Bernoulli generation: each server offers a packet with probability
+/// `load / pkt_flits` per cycle (so `load` is in flits/cycle/server), for
+/// `horizon` cycles.
+pub struct BernoulliWorkload {
+    pattern: TrafficPattern,
+    n_switches: usize,
+    spc: usize,
+    /// Probability of a packet per server per cycle.
+    p: f64,
+    horizon: u64,
+    rng: Rng,
+}
+
+impl BernoulliWorkload {
+    pub fn new(
+        pattern: TrafficPattern,
+        n_switches: usize,
+        spc: usize,
+        load_flits_per_cycle: f64,
+        pkt_flits: u16,
+        horizon: u64,
+        seed: u64,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&load_flits_per_cycle));
+        Self {
+            pattern,
+            n_switches,
+            spc,
+            p: load_flits_per_cycle / pkt_flits as f64,
+            horizon,
+            rng: Rng::derive(seed, 0xBE12_0011),
+        }
+    }
+}
+
+impl Workload for BernoulliWorkload {
+    fn poll(&mut self, cycle: u64, offer: &mut dyn FnMut(u32, u32)) {
+        if cycle >= self.horizon {
+            return;
+        }
+        let n_servers = self.n_switches * self.spc;
+        for src in 0..n_servers {
+            if self.rng.gen_bool(self.p) {
+                let d = self.pattern.dest(src, self.n_switches, self.spc, &mut self.rng);
+                offer(src as u32, d);
+            }
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        false // run is horizon-bound, not drain-bound
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_offers_everything_once() {
+        let mut rng = Rng::new(1);
+        let pat = TrafficPattern::Shift;
+        let mut w = FixedWorkload::new(&pat, 4, 2, 10, &mut rng);
+        let mut count = 0;
+        w.poll(0, &mut |_, _| count += 1);
+        assert_eq!(count, 4 * 2 * 10);
+        assert!(w.exhausted());
+        let mut count2 = 0;
+        w.poll(1, &mut |_, _| count2 += 1);
+        assert_eq!(count2, 0);
+        assert_eq!(w.outstanding(), 80);
+        w.on_delivered(0, 2, 5);
+        assert_eq!(w.outstanding(), 79);
+    }
+
+    #[test]
+    fn bernoulli_rate_is_calibrated() {
+        let pat = TrafficPattern::Uniform;
+        let mut w = BernoulliWorkload::new(pat, 4, 4, 0.8, 16, 10_000, 7);
+        let mut count = 0u64;
+        for c in 0..10_000 {
+            w.poll(c, &mut |_, _| count += 1);
+        }
+        // Expected: 16 servers * 10_000 cycles * 0.05 = 8000 packets.
+        let expect = 16.0 * 10_000.0 * 0.8 / 16.0;
+        let err = (count as f64 - expect).abs() / expect;
+        assert!(err < 0.05, "count={count} expect≈{expect}");
+    }
+
+    #[test]
+    fn bernoulli_stops_at_horizon() {
+        let pat = TrafficPattern::Uniform;
+        let mut w = BernoulliWorkload::new(pat, 4, 4, 1.0, 16, 100, 7);
+        let mut count = 0u64;
+        w.poll(100, &mut |_, _| count += 1);
+        w.poll(5000, &mut |_, _| count += 1);
+        assert_eq!(count, 0);
+    }
+}

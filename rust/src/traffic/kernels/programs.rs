@@ -1,0 +1,279 @@
+//! Builders for the five application kernels of §5.
+
+use super::{KernelProgram, Phase};
+use crate::util::iroot;
+
+/// All2All: the classical send loop — in iteration `i`, task `t` sends to
+/// `t + i` and receives from `t - i` [Thakur et al.].
+pub fn all2all(ranks: usize, pkts_per_msg: u16) -> KernelProgram {
+    assert!(ranks >= 2);
+    let programs = (0..ranks)
+        .map(|t| {
+            (1..ranks)
+                .map(|i| Phase {
+                    sends: vec![(((t + i) % ranks) as u32, pkts_per_msg)],
+                    expect: pkts_per_msg as u32,
+                })
+                .collect()
+        })
+        .collect();
+    KernelProgram {
+        name: "All2All".into(),
+        ranks,
+        programs,
+    }
+}
+
+/// Moore neighborhood of a point in a non-periodic grid (any dimension).
+fn moore_neighbors(coord: &[usize], dims: &[usize]) -> Vec<usize> {
+    let d = dims.len();
+    let mut out = Vec::new();
+    let mut offs = vec![-1i64; d];
+    loop {
+        if offs.iter().any(|&o| o != 0) {
+            let mut ok = true;
+            let mut id = 0usize;
+            let mut mul = 1usize;
+            for k in 0..d {
+                let c = coord[k] as i64 + offs[k];
+                if c < 0 || c >= dims[k] as i64 {
+                    ok = false;
+                    break;
+                }
+                id += c as usize * mul;
+                mul *= dims[k];
+            }
+            if ok {
+                out.push(id);
+            }
+        }
+        // increment odometer
+        let mut k = 0;
+        loop {
+            if k == d {
+                return out;
+            }
+            offs[k] += 1;
+            if offs[k] <= 1 {
+                break;
+            }
+            offs[k] = -1;
+            k += 1;
+        }
+    }
+}
+
+fn grid_coord(id: usize, dims: &[usize]) -> Vec<usize> {
+    let mut c = Vec::with_capacity(dims.len());
+    let mut rest = id;
+    for &d in dims {
+        c.push(rest % d);
+        rest /= d;
+    }
+    c
+}
+
+/// Iterated stencil over a grid: every iteration, each rank sends one
+/// message to every Moore neighbor and waits for one from each.
+fn stencil(name: &str, dims: &[usize], iters: usize, pkts_per_msg: u16) -> KernelProgram {
+    let ranks: usize = dims.iter().product();
+    let neigh: Vec<Vec<usize>> = (0..ranks)
+        .map(|r| moore_neighbors(&grid_coord(r, dims), dims))
+        .collect();
+    let programs = (0..ranks)
+        .map(|r| {
+            (0..iters)
+                .map(|_| Phase {
+                    sends: neigh[r]
+                        .iter()
+                        .map(|&p| (p as u32, pkts_per_msg))
+                        .collect(),
+                    expect: (neigh[r].len() as u32) * pkts_per_msg as u32,
+                })
+                .collect()
+        })
+        .collect();
+    KernelProgram {
+        name: name.into(),
+        ranks,
+        programs,
+    }
+}
+
+/// Stencil 2D (§5): ranks in a 2D grid, 8-point Moore neighborhood.
+pub fn stencil2d(ranks: usize, iters: usize, pkts_per_msg: u16) -> KernelProgram {
+    let a = iroot(ranks, 2);
+    assert_eq!(a * a, ranks, "stencil2d needs a square rank count");
+    stencil("Stencil2D", &[a, a], iters, pkts_per_msg)
+}
+
+/// Stencil 3D (§5): ranks in a 3D grid, 26-point Moore neighborhood.
+pub fn stencil3d(ranks: usize, iters: usize, pkts_per_msg: u16) -> KernelProgram {
+    let a = iroot(ranks, 3);
+    assert_eq!(a * a * a, ranks, "stencil3d needs a cubic rank count");
+    stencil("Stencil3D", &[a, a, a], iters, pkts_per_msg)
+}
+
+/// FFT3D with pencil decomposition [Orozco et al.]: a √P×√P process grid;
+/// partial transposes are All2Alls across each row, then across each column.
+pub fn fft3d(ranks: usize, pkts_per_msg: u16) -> KernelProgram {
+    let a = iroot(ranks, 2);
+    assert_eq!(a * a, ranks, "fft3d needs a square process grid");
+    let row = |r: usize| r / a;
+    let col = |r: usize| r % a;
+    let programs = (0..ranks)
+        .map(|r| {
+            let mut phases = Vec::with_capacity(2 * (a - 1));
+            // Row all2all: iteration i sends to the rank in my row with
+            // column (col + i) mod a.
+            for i in 1..a {
+                let peer = row(r) * a + (col(r) + i) % a;
+                phases.push(Phase {
+                    sends: vec![(peer as u32, pkts_per_msg)],
+                    expect: pkts_per_msg as u32,
+                });
+            }
+            // Column all2all.
+            for i in 1..a {
+                let peer = ((row(r) + i) % a) * a + col(r);
+                phases.push(Phase {
+                    sends: vec![(peer as u32, pkts_per_msg)],
+                    expect: pkts_per_msg as u32,
+                });
+            }
+            phases
+        })
+        .collect();
+    KernelProgram {
+        name: "FFT3D".into(),
+        ranks,
+        programs,
+    }
+}
+
+/// All-reduce, Rabenseifner's algorithm [Rabenseifner 2004]: a
+/// reduce-scatter by recursive halving followed by an all-gather by
+/// recursive doubling. Bandwidth-optimal for power-of-two rank counts.
+///
+/// `base_pkts` is the message size (packets) of the first halving exchange;
+/// each subsequent halving round moves half as much data (min 1 packet).
+pub fn allreduce_rabenseifner(ranks: usize, base_pkts: u16) -> KernelProgram {
+    assert!(
+        ranks.is_power_of_two() && ranks >= 2,
+        "Rabenseifner all-reduce needs a power-of-two rank count"
+    );
+    let rounds = ranks.trailing_zeros() as usize;
+    let size_at = |round: usize| -> u16 { (base_pkts >> round).max(1) };
+    let programs = (0..ranks)
+        .map(|r| {
+            let mut phases = Vec::with_capacity(2 * rounds);
+            // Reduce-scatter: round k exchanges with partner r ^ 2^k,
+            // message size halves each round.
+            for k in 0..rounds {
+                let peer = (r ^ (1 << k)) as u32;
+                let pk = size_at(k);
+                phases.push(Phase {
+                    sends: vec![(peer, pk)],
+                    expect: pk as u32,
+                });
+            }
+            // All-gather: reverse order, message size doubles back.
+            for k in (0..rounds).rev() {
+                let peer = (r ^ (1 << k)) as u32;
+                let pk = size_at(k);
+                phases.push(Phase {
+                    sends: vec![(peer, pk)],
+                    expect: pk as u32,
+                });
+            }
+            phases
+        })
+        .collect();
+    KernelProgram {
+        name: "Allreduce".into(),
+        ranks,
+        programs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::run_ideal;
+    use super::*;
+
+    #[test]
+    fn all2all_counts() {
+        let p = all2all(8, 1);
+        assert!(p.is_balanced());
+        assert_eq!(p.total_packets(), 8 * 7);
+        assert_eq!(run_ideal(p, 8), 56);
+    }
+
+    #[test]
+    fn stencil2d_interior_has_8_neighbors() {
+        let p = stencil2d(16, 2, 1);
+        assert!(p.is_balanced());
+        // 4x4 grid: corners 3 neighbors ×4, edges 5 ×8, interior 8 ×4.
+        let per_iter = 4 * 3 + 8 * 5 + 4 * 8;
+        assert_eq!(p.total_packets(), (2 * per_iter) as u64);
+        run_ideal(p, 16);
+    }
+
+    #[test]
+    fn stencil3d_interior_has_26_neighbors() {
+        let p = stencil3d(64, 1, 1);
+        assert!(p.is_balanced());
+        let counts: Vec<usize> = (0..64)
+            .map(|r| moore_neighbors(&grid_coord(r, &[4, 4, 4]), &[4, 4, 4]).len())
+            .collect();
+        assert_eq!(*counts.iter().max().unwrap(), 26);
+        assert_eq!(*counts.iter().min().unwrap(), 7); // corners
+        run_ideal(p, 64);
+    }
+
+    #[test]
+    fn fft3d_phases() {
+        let p = fft3d(16, 2);
+        assert!(p.is_balanced());
+        // per rank: 2*(4-1) phases, 2 pkts each.
+        assert_eq!(p.total_packets(), (16 * 6 * 2) as u64);
+        run_ideal(p, 16);
+    }
+
+    #[test]
+    fn allreduce_message_sizes_halve() {
+        let p = allreduce_rabenseifner(8, 8);
+        assert!(p.is_balanced());
+        // Per rank: halving 8,4,2 + gathering 2,4,8 = 28 packets.
+        assert_eq!(p.total_packets(), 8 * 28);
+        run_ideal(p, 8);
+    }
+
+    #[test]
+    fn allreduce_requires_pow2() {
+        let r = std::panic::catch_unwind(|| allreduce_rabenseifner(6, 4));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn kernels_complete_under_random_mapping() {
+        use crate::traffic::kernels::{KernelWorkload, Mapping};
+        use crate::traffic::Workload;
+        use crate::util::Rng;
+        let mut rng = Rng::new(5);
+        let mut w = KernelWorkload::new(all2all(8, 1), 16, Mapping::Random, &mut rng);
+        let mut cycle = 0;
+        loop {
+            let mut batch = Vec::new();
+            w.poll(cycle, &mut |s, d| batch.push((s, d)));
+            if batch.is_empty() && w.all_ranks_done() {
+                break;
+            }
+            for (s, d) in batch {
+                w.on_delivered(s, d, cycle);
+            }
+            cycle += 1;
+            assert!(cycle < 10_000);
+        }
+    }
+}

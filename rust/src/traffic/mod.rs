@@ -1,0 +1,26 @@
+//! Traffic: synthetic patterns, generation modes, and application kernels
+//! (§5 Methodology).
+
+pub mod generation;
+pub mod kernels;
+pub mod patterns;
+
+pub use generation::{BernoulliWorkload, FixedWorkload};
+pub use patterns::TrafficPattern;
+
+/// A workload drives packet generation and observes deliveries.
+///
+/// The simulator calls [`Workload::poll`] once per cycle before injection;
+/// the workload offers `(src_server, dst_server)` packets which enter the
+/// source queue of `src_server`. Delivery notifications let application
+/// kernels (task graphs) release dependent sends.
+pub trait Workload: Send {
+    /// Offer packets for this cycle via `offer(src_server, dst_server)`.
+    fn poll(&mut self, cycle: u64, offer: &mut dyn FnMut(u32, u32));
+
+    /// A packet from `src` to `dst` was fully delivered at `cycle`.
+    fn on_delivered(&mut self, _src: u32, _dst: u32, _cycle: u64) {}
+
+    /// True when no more packets will ever be offered.
+    fn exhausted(&self) -> bool;
+}

@@ -1,0 +1,183 @@
+//! Synthetic traffic patterns (§5): Uniform, Random Switch Permutation,
+//! Fixed Random, and the switch Cartesian transforms (shift, complement).
+//!
+//! A pattern maps a *source server* to a *destination server*; the
+//! switch-level patterns (RSP, shift, complement) map all servers of switch
+//! `x` onto the servers of switch `f(x)`, preserving the local index — the
+//! pattern that matters for FM routing is the switch-level flow.
+
+use crate::util::Rng;
+
+/// A destination-selection rule over `n_servers = n_switches × spc` servers.
+#[derive(Clone, Debug)]
+pub enum TrafficPattern {
+    /// Uniform (UN): every packet picks a fresh random destination server.
+    Uniform,
+    /// Random switch permutation (RSP): a random permutation `π` of
+    /// switches, fixed for the run; server `(x, k) → (π(x), k)`.
+    RandomSwitchPerm { perm: Vec<u32> },
+    /// Fixed random (FR): each server picked one random destination server
+    /// at time zero and always sends there (endpoint bottlenecks).
+    FixedRandom { dst: Vec<u32> },
+    /// Shift: switch `x → x + 1 (mod n)`.
+    Shift,
+    /// Complement: switch `x → −x − 1 (mod n)`.
+    Complement,
+}
+
+impl TrafficPattern {
+    /// Construct by figure-name. `uniform|un`, `rsp`, `fr`, `shift`,
+    /// `complement`.
+    pub fn by_name(
+        name: &str,
+        n_switches: usize,
+        spc: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Self> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "uniform" | "un" => Self::Uniform,
+            "rsp" => Self::random_switch_perm(n_switches, rng),
+            "fr" | "fixedrandom" => Self::fixed_random(n_switches * spc, rng),
+            "shift" => Self::Shift,
+            "complement" => Self::Complement,
+            other => anyhow::bail!("unknown traffic pattern '{other}'"),
+        })
+    }
+
+    /// Fresh RSP: a uniformly random permutation of switches.
+    pub fn random_switch_perm(n_switches: usize, rng: &mut Rng) -> Self {
+        let perm = rng
+            .permutation(n_switches)
+            .into_iter()
+            .map(|x| x as u32)
+            .collect();
+        Self::RandomSwitchPerm { perm }
+    }
+
+    /// Fresh FR assignment: every server draws one random destination
+    /// (≠ itself) and keeps it.
+    pub fn fixed_random(n_servers: usize, rng: &mut Rng) -> Self {
+        let dst = (0..n_servers)
+            .map(|s| {
+                let mut d = rng.gen_range(n_servers - 1);
+                if d >= s {
+                    d += 1;
+                }
+                d as u32
+            })
+            .collect();
+        Self::FixedRandom { dst }
+    }
+
+    /// Destination server for a packet from `src` (server id).
+    ///
+    /// `spc` = servers per switch; `n_switches` = switch count.
+    pub fn dest(&self, src: usize, n_switches: usize, spc: usize, rng: &mut Rng) -> u32 {
+        let n_servers = n_switches * spc;
+        match self {
+            Self::Uniform => {
+                // random server != src
+                let mut d = rng.gen_range(n_servers - 1);
+                if d >= src {
+                    d += 1;
+                }
+                d as u32
+            }
+            Self::RandomSwitchPerm { perm } => {
+                let (sw, k) = (src / spc, src % spc);
+                perm[sw] * spc as u32 + k as u32
+            }
+            Self::FixedRandom { dst } => dst[src],
+            Self::Shift => {
+                let (sw, k) = (src / spc, src % spc);
+                (((sw + 1) % n_switches) * spc + k) as u32
+            }
+            Self::Complement => {
+                let (sw, k) = (src / spc, src % spc);
+                // f(x) = -x-1 mod n  ==  n-1-x
+                ((n_switches - 1 - sw) * spc + k) as u32
+            }
+        }
+    }
+
+    /// Name as used in the figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Uniform => "UN",
+            Self::RandomSwitchPerm { .. } => "RSP",
+            Self::FixedRandom { .. } => "FR",
+            Self::Shift => "shift",
+            Self::Complement => "complement",
+        }
+    }
+
+    /// Is the pattern admissible at full injection (no endpoint
+    /// oversubscription)? FR is not — that is its point.
+    pub fn admissible(&self) -> bool {
+        !matches!(self, Self::FixedRandom { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shift_maps_switch_plus_one() {
+        let p = TrafficPattern::Shift;
+        let mut rng = Rng::new(1);
+        // 4 switches, 2 servers each: server 0 (sw0,k0) → sw1 server 2.
+        assert_eq!(p.dest(0, 4, 2, &mut rng), 2);
+        assert_eq!(p.dest(1, 4, 2, &mut rng), 3);
+        // wraparound: sw3 → sw0
+        assert_eq!(p.dest(6, 4, 2, &mut rng), 0);
+    }
+
+    #[test]
+    fn complement_is_involution_on_switches() {
+        let p = TrafficPattern::Complement;
+        let mut rng = Rng::new(1);
+        for sw in 0..8usize {
+            let d = p.dest(sw * 2, 8, 2, &mut rng) as usize / 2;
+            let dd = p.dest(d * 2, 8, 2, &mut rng) as usize / 2;
+            assert_eq!(dd, sw);
+        }
+    }
+
+    #[test]
+    fn rsp_is_switch_permutation() {
+        let mut rng = Rng::new(7);
+        let p = TrafficPattern::random_switch_perm(16, &mut rng);
+        let TrafficPattern::RandomSwitchPerm { perm } = &p else {
+            unreachable!()
+        };
+        let mut sorted: Vec<u32> = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..16).collect::<Vec<u32>>());
+        // local index preserved
+        let d = p.dest(5 * 4 + 2, 16, 4, &mut rng);
+        assert_eq!(d % 4, 2);
+        assert_eq!(d / 4, perm[5]);
+    }
+
+    #[test]
+    fn uniform_never_self() {
+        let p = TrafficPattern::Uniform;
+        let mut rng = Rng::new(3);
+        for src in 0..32usize {
+            for _ in 0..50 {
+                assert_ne!(p.dest(src, 8, 4, &mut rng) as usize, src);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_random_is_fixed() {
+        let mut rng = Rng::new(9);
+        let p = TrafficPattern::fixed_random(64, &mut rng);
+        let d1 = p.dest(10, 16, 4, &mut rng);
+        let d2 = p.dest(10, 16, 4, &mut rng);
+        assert_eq!(d1, d2);
+        assert!(!p.admissible());
+    }
+}

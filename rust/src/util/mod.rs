@@ -1,0 +1,92 @@
+//! Shared utilities: deterministic RNG, small math helpers, timers.
+
+pub mod rng;
+
+pub use rng::{Rng, SplitMix64};
+
+/// Integer ceiling division.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// `true` if `n` is a power of two (and nonzero).
+#[inline]
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+/// Integer log2 of a power of two.
+#[inline]
+pub fn log2_exact(n: usize) -> Option<u32> {
+    if is_pow2(n) {
+        Some(n.trailing_zeros())
+    } else {
+        None
+    }
+}
+
+/// Integer k-th root: the largest `r` with `r^k <= n`.
+pub fn iroot(n: usize, k: u32) -> usize {
+    if k == 1 {
+        return n;
+    }
+    let mut r = (n as f64).powf(1.0 / k as f64).round() as usize;
+    while r.checked_pow(k).map_or(true, |p| p > n) {
+        r -= 1;
+    }
+    while (r + 1).checked_pow(k).map_or(false, |p| p <= n) {
+        r += 1;
+    }
+    r
+}
+
+/// Monotonic wall-clock timer for the hand-rolled bench harness.
+pub struct Timer {
+    start: std::time::Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self {
+            start: std::time::Instant::now(),
+        }
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_works() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 16), 1);
+    }
+
+    #[test]
+    fn pow2_checks() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(64));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(63));
+        assert_eq!(log2_exact(64), Some(6));
+        assert_eq!(log2_exact(65), None);
+    }
+
+    #[test]
+    fn iroot_exact_and_inexact() {
+        assert_eq!(iroot(64, 2), 8);
+        assert_eq!(iroot(64, 3), 4);
+        assert_eq!(iroot(63, 2), 7);
+        assert_eq!(iroot(1, 3), 1);
+        assert_eq!(iroot(27, 3), 3);
+    }
+}

@@ -1,0 +1,298 @@
+//! Cross-module invariant tests: packet conservation, livelock bounds,
+//! determinism, TERA structural properties, and the Appendix-B analytic
+//! model against measured saturation throughput.
+
+use std::sync::Arc;
+
+use tera_net::analytic;
+use tera_net::config::spec::{routing_by_name, topology_by_name, ExperimentSpec, TrafficSpec};
+use tera_net::service;
+use tera_net::testing;
+use tera_net::util::Rng;
+
+fn fixed_spec(routing: &str, pattern: &str, seed: u64) -> ExperimentSpec {
+    ExperimentSpec {
+        topology: "fm16".into(),
+        servers_per_switch: 16,
+        routing: routing.into(),
+        traffic: TrafficSpec::Fixed {
+            pattern: pattern.into(),
+            packets_per_server: 80,
+        },
+        seed,
+        max_cycles: 5_000_000,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn packet_conservation_across_routings() {
+    // Every injected packet is delivered exactly once, for every algorithm
+    // and pattern (the delivery counter equals the generated total).
+    testing::check("conservation", 12, |rng| {
+        let routings = [
+            "min", "valiant", "ugal", "omniwar", "srinr", "brinr", "tera-hx2", "tera-path",
+        ];
+        let routing = routings[rng.gen_range(routings.len())];
+        let pattern = testing::gen::pattern_name(rng);
+        let stats = fixed_spec(routing, pattern, rng.next_u64()).run().unwrap();
+        assert_eq!(
+            stats.delivered_packets as usize,
+            16 * 16 * 80,
+            "{routing}/{pattern}"
+        );
+        // Latency was recorded for every delivered packet (window = all).
+        assert_eq!(stats.latency.count(), stats.delivered_packets);
+    });
+}
+
+#[test]
+fn livelock_bound_tera() {
+    // §4: TERA's max hops = 1 + diameter(service). The simulator asserts
+    // this per delivery in debug builds; here we verify the recorded hop
+    // histogram in release too, for several service topologies.
+    for (svc, max) in [("hx2", 3usize), ("path", 16), ("hc", 5), ("tree4", 5)] {
+        let spec = fixed_spec(&format!("tera-{svc}"), "rsp", 3);
+        let stats = spec.run().unwrap();
+        let svc_topo = service::by_name(svc, 16).unwrap();
+        let bound = 1 + svc_topo.diameter();
+        assert!(bound <= max + 1);
+        for h in (bound + 1)..stats.hops.len() {
+            assert_eq!(
+                stats.hops[h], 0,
+                "tera-{svc}: {h}-hop packets exceed livelock bound {bound}"
+            );
+        }
+    }
+}
+
+#[test]
+fn two_hop_bound_for_fm_baselines() {
+    for routing in ["valiant", "ugal", "omniwar", "srinr", "brinr"] {
+        let stats = fixed_spec(routing, "complement", 5).run().unwrap();
+        for h in 3..stats.hops.len() {
+            assert_eq!(stats.hops[h], 0, "{routing} exceeded 2 hops");
+        }
+    }
+}
+
+#[test]
+fn same_seed_same_result_different_seed_different() {
+    let a = fixed_spec("tera-hx2", "rsp", 42).run().unwrap();
+    let b = fixed_spec("tera-hx2", "rsp", 42).run().unwrap();
+    assert_eq!(a.finish_cycle, b.finish_cycle);
+    assert_eq!(a.delivered_flits, b.delivered_flits);
+    assert_eq!(a.injected_per_server, b.injected_per_server);
+    let c = fixed_spec("tera-hx2", "rsp", 43).run().unwrap();
+    assert_ne!(
+        (a.finish_cycle, a.delivered_flits.wrapping_add(1)),
+        (c.finish_cycle, c.delivered_flits.wrapping_add(1) + 1)
+    );
+    assert!(
+        a.finish_cycle != c.finish_cycle || a.mean_latency() != c.mean_latency(),
+        "different seeds should perturb results"
+    );
+}
+
+#[test]
+fn tera_uses_mostly_short_paths_under_uniform() {
+    // §6.3: under UN, TERA routes ≥80% of packets minimally and 3+hop
+    // paths are <1%.
+    let spec = ExperimentSpec {
+        topology: "fm16".into(),
+        servers_per_switch: 16,
+        routing: "tera-hx2".into(),
+        traffic: TrafficSpec::Bernoulli {
+            pattern: "uniform".into(),
+            load: 0.5,
+            horizon: 15_000,
+        },
+        warmup: 3_000,
+        seed: 7,
+        ..Default::default()
+    };
+    let stats = spec.run().unwrap();
+    let intra = stats.hop_fraction(0);
+    let one = stats.hop_fraction(1);
+    assert!(
+        one / (1.0 - intra) > 0.8,
+        "minimal share too low: {}",
+        one / (1.0 - intra)
+    );
+    let three_plus: f64 = (3..stats.hops.len()).map(|h| stats.hop_fraction(h)).sum();
+    assert!(three_plus < 0.01, "3+hop share {three_plus} ≥ 1%");
+}
+
+#[test]
+fn appendix_b_estimate_brackets_measured_saturation() {
+    // Appendix B: TERA's RSP saturation ≈ 1/(1+1/p), derived assuming a
+    // reasonable balance of routes — an upper-bound-flavored estimate the
+    // paper uses to *rank* service topologies. We check the measured
+    // TERA-HX2 saturation lands within a generous band of the estimate.
+    //
+    // (TERA-Path is deliberately NOT used here: under *sustained*
+    // over-saturation its long service chain spreads congestion and
+    // collapses — the §4.1 "low diameter" criterion made measurable; see
+    // EXPERIMENTS.md. The estimate only holds pre-collapse.)
+    let spec = ExperimentSpec {
+        topology: "fm16".into(),
+        servers_per_switch: 16,
+        routing: "tera-hx2".into(),
+        traffic: TrafficSpec::Bernoulli {
+            pattern: "rsp".into(),
+            load: 1.0,
+            horizon: 20_000,
+        },
+        warmup: 5_000,
+        seed: 11,
+        ..Default::default()
+    };
+    let stats = spec.run().unwrap();
+    let svc = service::by_name("hx2", 16).unwrap();
+    let est = analytic::throughput_estimate(analytic::main_ratio(svc.as_ref()));
+    let got = stats.accepted_throughput();
+    assert!(
+        got > 0.5 * est && got < 1.2 * est,
+        "measured {got:.3} vs estimate {est:.3} outside band"
+    );
+}
+
+#[test]
+fn appendix_b_ordering_holds_at_saturation() {
+    // Figure 4's whole point: the analytic estimate *ranks* service
+    // topologies. At FM16 the Path service (p = 1−2/n, est 0.467) must
+    // out-saturate HX2 (p = 0.6, est 0.375) under RSP, and both must land
+    // within a generous band of their estimates.
+    let run = |routing: &str| -> f64 {
+        ExperimentSpec {
+            topology: "fm16".into(),
+            servers_per_switch: 16,
+            routing: routing.into(),
+            traffic: TrafficSpec::Bernoulli {
+                pattern: "rsp".into(),
+                load: 1.0,
+                horizon: 15_000,
+            },
+            warmup: 4_000,
+            seed: 11,
+            ..Default::default()
+        }
+        .run()
+        .unwrap()
+        .accepted_throughput()
+    };
+    let hx2 = run("tera-hx2");
+    let path = run("tera-path");
+    assert!(
+        path > hx2,
+        "Fig-4 ordering violated at saturation (path={path:.3}, hx2={hx2:.3})"
+    );
+    for (got, svc_name) in [(hx2, "hx2"), (path, "path")] {
+        let svc = service::by_name(svc_name, 16).unwrap();
+        let est = analytic::throughput_estimate(analytic::main_ratio(svc.as_ref()));
+        assert!(
+            got > 0.5 * est && got < 1.2 * est,
+            "{svc_name}: measured {got:.3} vs estimate {est:.3} outside band"
+        );
+    }
+}
+
+#[test]
+fn embedding_partitions_every_fm_link() {
+    testing::check("embedding partition", 16, |rng| {
+        let n = testing::gen::fm_size(rng);
+        let svc_name = testing::gen::service_name(rng, n);
+        let topo = Arc::new(topology_by_name(&format!("fm{n}")).unwrap());
+        let svc = service::by_name(svc_name, n).unwrap();
+        let emb = service::Embedding::new(&topo, svc.as_ref());
+        let mut svc_links = 0usize;
+        for s in 0..n {
+            assert_eq!(
+                emb.main_ports[s].len() + emb.service_ports[s].len(),
+                topo.degree(s)
+            );
+            svc_links += emb.service_ports[s].len();
+        }
+        assert_eq!(svc_links / 2, svc.num_links());
+        // p ratio consistent with the analytic module.
+        let p = emb.main_ratio();
+        assert!((p - analytic::main_ratio(svc.as_ref())).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn router_factory_rejects_mismatched_topologies() {
+    // HyperX-only routers refuse Full-mesh hosts and vice versa (panic or
+    // Err, both acceptable — the point is they never construct silently).
+    let rejects = |routing: &'static str, topo: &'static str| -> bool {
+        std::panic::catch_unwind(|| {
+            let t = Arc::new(topology_by_name(topo).unwrap());
+            routing_by_name(routing, t, 54).map(|_| ())
+        })
+        .map(|r| r.is_err())
+        .unwrap_or(true)
+    };
+    assert!(rejects("dimwar", "fm16"));
+    assert!(rejects("omniwar-hx", "fm16"));
+    assert!(rejects("valiant", "hx4x4"));
+    assert!(rejects("srinr", "hx4x4"));
+    assert!(rejects("tera-hx2", "hx4x4"));
+}
+
+#[test]
+fn service_links_carry_less_traffic_than_main_under_rsp() {
+    // §6.3 last paragraph: under RSP, service links see about half the
+    // utilization of main links for TERA-HX (they are only escapes and
+    // direct links).
+    // Paper setting (§6.3): FM64 with the HX3 service (192 of 2016 links);
+    // under RSP service links see roughly half the main-link utilization.
+    let spec = ExperimentSpec {
+        topology: "fm64".into(),
+        servers_per_switch: 8,
+        routing: "tera-hx3".into(),
+        traffic: TrafficSpec::Bernoulli {
+            pattern: "rsp".into(),
+            load: 0.6,
+            horizon: 6_000,
+        },
+        warmup: 1_500,
+        seed: 13,
+        ..Default::default()
+    };
+    let net = spec.build_network().unwrap();
+    let topo = net.topo.clone();
+    let stats = spec.run().unwrap();
+    let svc = service::by_name("hx3", 64).unwrap();
+    let emb = service::Embedding::new(&topo, svc.as_ref());
+    let maxdeg = topo.max_degree();
+    let (mut s_fl, mut s_n, mut m_fl, mut m_n) = (0u64, 0u64, 0u64, 0u64);
+    for s in 0..topo.n {
+        for p in 0..topo.degree(s) {
+            let d = topo.neighbor(s, p);
+            let f = stats.link_flits[s * maxdeg + p];
+            if emb.is_service(s, d) {
+                s_fl += f;
+                s_n += 1;
+            } else {
+                m_fl += f;
+                m_n += 1;
+            }
+        }
+    }
+    let per_s = s_fl as f64 / s_n as f64;
+    let per_m = m_fl as f64 / m_n as f64;
+    assert!(
+        per_s < per_m,
+        "service links should be lighter: {per_s:.0} vs {per_m:.0}"
+    );
+}
+
+#[test]
+fn rng_streams_are_stable_across_runs() {
+    // Guard against accidental nondeterminism creeping into the sweep.
+    let mut r1 = Rng::derive(123, 7);
+    let mut r2 = Rng::derive(123, 7);
+    let v1: Vec<u64> = (0..32).map(|_| r1.next_u64()).collect();
+    let v2: Vec<u64> = (0..32).map(|_| r2.next_u64()).collect();
+    assert_eq!(v1, v2);
+}

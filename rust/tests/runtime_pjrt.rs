@@ -1,0 +1,142 @@
+//! PJRT runtime integration: artifacts round-trip from JAX through HLO
+//! text into the Rust client and agree with the pure-Rust references.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a
+//! stderr note) when the artifacts are absent so `cargo test` stays green
+//! in a fresh checkout.
+
+use tera_net::runtime::{artifacts_dir, AnalyticModel, Engine, RustScorer, ScoreBatch, TeraScorer, Telemetry};
+use tera_net::util::Rng;
+
+fn artifacts_present() -> bool {
+    let ok = artifacts_dir().join("analytic.hlo.txt").exists();
+    if !ok {
+        eprintln!("skipping PJRT test: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn analytic_artifact_matches_rust_model() {
+    if !artifacts_present() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = AnalyticModel::load(&engine).unwrap();
+    let ps: Vec<f64> = (1..=64).map(|i| i as f64 / 64.0).collect();
+    let got = model.throughput(&ps).unwrap();
+    for (&p, &g) in ps.iter().zip(&got) {
+        let want = tera_net::analytic::throughput_estimate(p);
+        assert!((want - g).abs() < 1e-6, "p={p}: {want} vs {g}");
+    }
+}
+
+#[test]
+fn analytic_artifact_handles_partial_batches() {
+    if !artifacts_present() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let model = AnalyticModel::load(&engine).unwrap();
+    let got = model.throughput(&[0.5]).unwrap();
+    assert_eq!(got.len(), 1);
+    assert!((got[0] - 1.0 / 3.0).abs() < 1e-6);
+}
+
+#[test]
+fn scorer_artifact_agrees_with_rust_on_random_batches() {
+    if !artifacts_present() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let scorer = TeraScorer::load(&engine).unwrap();
+    let mut rng = Rng::new(0xDEC1DE);
+    for q in [0.0f32, 16.0, 54.0] {
+        let mut b = ScoreBatch::zeros(TeraScorer::BATCH, TeraScorer::PORTS, q);
+        for i in 0..b.occ.len() {
+            b.occ[i] = rng.gen_range(500) as f32;
+            b.direct[i] = f32::from(rng.gen_bool(0.15));
+            b.valid[i] = f32::from(rng.gen_bool(0.7));
+        }
+        for r in 0..b.batch {
+            b.valid[r * b.ports + rng.gen_range(b.ports)] = 1.0;
+        }
+        let want = RustScorer.score(&b);
+        let got = scorer.score(&b).unwrap();
+        assert_eq!(want.choice, got.choice, "q={q}");
+    }
+}
+
+#[test]
+fn scorer_artifact_replays_live_simulator_occupancies() {
+    if !artifacts_present() {
+        return;
+    }
+    // Drive a real FM64 simulation, snapshot output-port occupancies, and
+    // score Algorithm-1 candidate sets through both backends.
+    use tera_net::config::spec::{ExperimentSpec, TrafficSpec};
+    let spec = ExperimentSpec {
+        topology: "fm64".into(),
+        servers_per_switch: 8,
+        routing: "tera-hx2".into(),
+        traffic: TrafficSpec::Bernoulli {
+            pattern: "rsp".into(),
+            load: 0.7,
+            horizon: 2_000,
+        },
+        warmup: 0,
+        seed: 17,
+        ..Default::default()
+    };
+    let mut net = spec.build_network().unwrap();
+    let mut wl = spec.build_workload(&net.topo).unwrap();
+    net.run(
+        wl.as_mut(),
+        &tera_net::sim::RunOpts {
+            max_cycles: 2_000,
+            warmup: 0,
+            window: None,
+            stop_when_drained: false,
+        },
+    )
+    .unwrap();
+
+    let engine = Engine::cpu().unwrap();
+    let scorer = TeraScorer::load(&engine).unwrap();
+    let mut b = ScoreBatch::zeros(TeraScorer::BATCH, TeraScorer::PORTS, 54.0);
+    for sw in 0..64 {
+        let occ = net.occupancy_snapshot(sw);
+        for p in 0..63 {
+            let i = sw * b.ports + p;
+            b.occ[i] = occ[p] as f32;
+            b.valid[i] = 1.0;
+            // Pretend destination is switch (sw+1)%64 → its direct port.
+            let dst = (sw + 1) % 64;
+            let direct_port = net.topo.port_to(sw, dst).unwrap();
+            b.direct[sw * b.ports + direct_port] = 1.0;
+        }
+    }
+    let want = RustScorer.score(&b);
+    let got = scorer.score(&b).unwrap();
+    assert_eq!(want.choice, got.choice, "live-occupancy scoring diverged");
+}
+
+#[test]
+fn telemetry_artifact_matches_jain() {
+    if !artifacts_present() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let tele = Telemetry::load(&engine).unwrap();
+    let mut rng = Rng::new(5);
+    for n in [1usize, 10, 512, 4096] {
+        let loads: Vec<f64> = (0..n).map(|_| rng.gen_range(50) as f64).collect();
+        let (jain, mean, max) = tele.summarize(&loads).unwrap();
+        let want = tera_net::metrics::jain_index(&loads);
+        assert!((jain - want).abs() < 1e-4, "n={n}: {jain} vs {want}");
+        let want_mean = loads.iter().sum::<f64>() / n as f64;
+        assert!((mean - want_mean).abs() < 1e-2 * want_mean.max(1.0));
+        let want_max = loads.iter().cloned().fold(0.0, f64::max);
+        assert!((max - want_max).abs() < 1e-3);
+    }
+}
