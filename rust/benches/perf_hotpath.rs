@@ -1,26 +1,39 @@
 //! §Perf — hot-path micro/macro benchmarks for the L3 simulator.
 //!
 //! Reports:
-//!   * simulated Mcycles/s and packet-throughput of `Network::step` on the
+//!   * **idle-heavy** simulated Mcycles/s on a low-load fm32 sweep — the
+//!     active-set engine's headline case: most switches idle most cycles,
+//!     and idle components must cost zero (DESIGN.md, "Active-set
+//!     invariants"). This is the number the active-set refactor is gated
+//!     on (≥ 2× over the scan-everything engine);
+//!   * saturated Mcycles/s and packet throughput of `Network::step` on the
 //!     Fig-7 RSP workload (the end-to-end hot path);
 //!   * routing decisions/second per algorithm (allocation inner loop);
-//!   * PJRT batched-scorer latency (the artifact decision path).
+//!   * PJRT batched-scorer latency (the artifact decision path, `pjrt`
+//!     builds only).
 //!
 //! Before/after numbers across optimization iterations are recorded in
-//! EXPERIMENTS.md §Perf.
+//! DESIGN.md §Perf.
 
 use std::sync::Arc;
 
-use tera_net::config::spec::{topology_by_name, routing_by_name, ExperimentSpec, TrafficSpec};
+use tera_net::config::spec::{routing_by_name, topology_by_name, ExperimentSpec, TrafficSpec};
+use tera_net::engine::Engine;
 use tera_net::sim::{Network, RunOpts, SimConfig};
 use tera_net::util::Timer;
 
-fn sim_throughput(routing: &str, load: f64, pattern: &str) -> (f64, f64) {
-    let horizon = 12_000u64;
-    let spec = ExperimentSpec {
-        name: format!("perf-{routing}"),
-        topology: "fm64".into(),
-        servers_per_switch: 16,
+fn bernoulli_spec(
+    topo: &str,
+    spc: usize,
+    routing: &str,
+    pattern: &str,
+    load: f64,
+    horizon: u64,
+) -> ExperimentSpec {
+    ExperimentSpec {
+        name: format!("perf-{routing}-{load}"),
+        topology: topo.into(),
+        servers_per_switch: spc,
         routing: routing.into(),
         traffic: TrafficSpec::Bernoulli {
             pattern: pattern.into(),
@@ -30,13 +43,20 @@ fn sim_throughput(routing: &str, load: f64, pattern: &str) -> (f64, f64) {
         warmup: 0,
         seed: 7,
         ..Default::default()
+    }
+}
+
+/// Simulated Mcycles/s and delivered packets/s of one spec, single thread.
+fn sim_throughput(spec: &ExperimentSpec) -> (f64, f64) {
+    let TrafficSpec::Bernoulli { horizon, .. } = &spec.traffic else {
+        panic!("perf specs are Bernoulli");
     };
+    let cycles = *horizon as f64;
+    let engine = Engine::single_threaded();
     let t = Timer::start();
-    let stats = spec.run().expect("run");
+    let stats = engine.run_one(spec).expect("run");
     let wall = t.elapsed_secs();
-    let mcps = horizon as f64 / wall / 1e6;
-    let pkts_per_sec = stats.delivered_packets as f64 / wall;
-    (mcps, pkts_per_sec)
+    (cycles / wall / 1e6, stats.delivered_packets as f64 / wall)
 }
 
 fn decision_rate(routing: &str) -> f64 {
@@ -81,13 +101,29 @@ fn decision_rate(routing: &str) -> f64 {
 }
 
 fn main() {
-    println!("== §Perf hot-path benchmarks (fm64 × 16 srv/sw) ==\n");
+    // ---- Idle-heavy: the active-set acceptance workload. ----
+    // fm32 × 8 servers at very low uniform load: a handful of packets in
+    // flight, the overwhelming majority of the 32 switches idle on any
+    // given cycle. Wall time here is dominated by per-cycle fixed costs.
+    println!("== idle-heavy low-load sweep (fm32 × 8 srv/sw, uniform) ==\n");
+    println!("{:<8} {:>12} {:>14}", "load", "Mcycles/s", "delivered pkt/s");
+    let horizon = 300_000u64;
+    for load in [0.01, 0.02, 0.05, 0.10] {
+        let spec = bernoulli_spec("fm32", 8, "tera-hx2", "uniform", load, horizon);
+        let (mcps, pps) = sim_throughput(&spec);
+        println!("{load:<8} {mcps:>12.3} {pps:>14.0}");
+    }
+
+    // ---- Saturated end-to-end hot path (Fig-7 shape). ----
+    println!("\n== saturated hot path (fm64 × 16 srv/sw, RSP 0.7) ==\n");
     println!(
         "{:<12} {:>12} {:>16}",
         "routing", "Mcycles/s", "delivered pkt/s"
     );
+    let hz = 12_000u64;
     for r in ["min", "srinr", "tera-hx2", "ugal", "omniwar", "valiant"] {
-        let (mcps, pps) = sim_throughput(r, 0.7, "rsp");
+        let spec = bernoulli_spec("fm64", 16, r, "rsp", 0.7, hz);
+        let (mcps, pps) = sim_throughput(&spec);
         println!("{r:<12} {mcps:>12.3} {pps:>16.0}");
     }
 
@@ -98,9 +134,9 @@ fn main() {
     }
 
     // PJRT batched scorer (decision path through the artifact).
-    if std::path::Path::new("artifacts/tera_score.hlo.txt").exists() {
-        use tera_net::runtime::{Engine, ScoreBatch, TeraScorer};
-        let engine = Engine::cpu().unwrap();
+    if cfg!(feature = "pjrt") && std::path::Path::new("artifacts/tera_score.hlo.txt").exists() {
+        use tera_net::runtime::{Engine as PjrtEngine, ScoreBatch, TeraScorer};
+        let engine = PjrtEngine::cpu().unwrap();
         let scorer = TeraScorer::load(&engine).unwrap();
         let mut b = ScoreBatch::zeros(TeraScorer::BATCH, TeraScorer::PORTS, 54.0);
         for i in 0..b.occ.len() {
@@ -120,6 +156,6 @@ fn main() {
             (TeraScorer::BATCH as f64 / (per_call_ms / 1e3)) / 1e6
         );
     } else {
-        println!("\n(pjrt scorer skipped: run `make artifacts`)");
+        println!("\n(pjrt scorer skipped: needs --features pjrt and `make artifacts`)");
     }
 }

@@ -1,16 +1,17 @@
-//! Typed experiment specification: the single entry point the CLI, the
-//! coordinator sweeps, the benches and the examples all share.
+//! Typed experiment specification — the declarative half of an experiment.
+//! Execution (topology/router/workload construction, run loops, batching)
+//! lives in [`crate::engine`]; the methods here are thin delegates kept for
+//! API stability.
 
 use std::sync::Arc;
 
 use super::Value;
 use crate::metrics::SimStats;
 use crate::routing::{self, Router};
-use crate::sim::{Network, RunOpts, SimConfig, SimError};
+use crate::sim::{Network, SimError};
 use crate::topology::{full_mesh, hyperx, PhysTopology};
-use crate::traffic::kernels::{self, KernelWorkload, Mapping};
-use crate::traffic::{BernoulliWorkload, FixedWorkload, TrafficPattern, Workload};
-use crate::util::Rng;
+use crate::traffic::kernels::Mapping;
+use crate::traffic::Workload;
 
 /// How traffic is generated (§5).
 #[derive(Clone, Debug)]
@@ -158,98 +159,25 @@ fn sub_service(a: usize) -> anyhow::Result<Arc<dyn crate::service::ServiceTopolo
 }
 
 impl ExperimentSpec {
-    /// Construct the workload for this spec.
+    /// Construct the workload for this spec (delegates to the engine).
     pub fn build_workload(&self, topo: &PhysTopology) -> anyhow::Result<Box<dyn Workload>> {
-        let n = topo.n;
-        let spc = self.servers_per_switch;
-        let mut rng = Rng::derive(self.seed, 0x7AFF_1C);
-        Ok(match &self.traffic {
-            TrafficSpec::Fixed {
-                pattern,
-                packets_per_server,
-            } => {
-                let pat = TrafficPattern::by_name(pattern, n, spc, &mut rng)?;
-                Box::new(FixedWorkload::new(&pat, n, spc, *packets_per_server, &mut rng))
-            }
-            TrafficSpec::Bernoulli {
-                pattern,
-                load,
-                horizon,
-            } => {
-                let pat = TrafficPattern::by_name(pattern, n, spc, &mut rng)?;
-                Box::new(BernoulliWorkload::new(
-                    pat, n, spc, *load, 16, *horizon, self.seed,
-                ))
-            }
-            TrafficSpec::Kernel {
-                kernel,
-                iters,
-                pkts_per_msg,
-                mapping,
-            } => {
-                let ranks = n * spc;
-                let prog = match kernel.to_ascii_lowercase().as_str() {
-                    "all2all" => kernels::all2all(ranks, *pkts_per_msg),
-                    "stencil2d" => kernels::stencil2d(ranks, *iters, *pkts_per_msg),
-                    "stencil3d" => kernels::stencil3d(ranks, *iters, *pkts_per_msg),
-                    "fft3d" => kernels::fft3d(ranks, *pkts_per_msg),
-                    "allreduce" => kernels::allreduce_rabenseifner(
-                        ranks,
-                        (*pkts_per_msg).max(1) * 8,
-                    ),
-                    other => anyhow::bail!("unknown kernel '{other}'"),
-                };
-                Box::new(KernelWorkload::new(prog, ranks, *mapping, &mut rng))
-            }
-        })
+        crate::engine::build_workload(self, topo)
     }
 
-    /// Build the simulator network for this spec.
+    /// Build the simulator network for this spec (delegates to the engine).
     pub fn build_network(&self) -> anyhow::Result<Network> {
-        let topo = Arc::new(topology_by_name(&self.topology)?);
-        let router = routing_by_name(&self.routing, topo.clone(), self.q)?;
-        let cfg = SimConfig {
-            servers_per_switch: self.servers_per_switch,
-            seed: self.seed,
-            ..SimConfig::default()
-        };
-        Ok(Network::new(topo, router, cfg))
+        crate::engine::build_network(self)
     }
 
-    /// Execute the experiment end-to-end.
+    /// Execute the experiment end-to-end (delegates to the engine).
     pub fn run(&self) -> anyhow::Result<SimStats> {
-        let mut net = self.build_network()?;
-        let mut workload = self.build_workload(&net.topo)?;
-        let opts = match &self.traffic {
-            TrafficSpec::Bernoulli { horizon, .. } => RunOpts {
-                max_cycles: *horizon,
-                warmup: self.warmup.min(*horizon / 4),
-                window: None,
-                stop_when_drained: false,
-            },
-            _ => RunOpts {
-                max_cycles: self.max_cycles,
-                warmup: 0,
-                window: None,
-                stop_when_drained: true,
-            },
-        };
-        let stats = net.run(workload.as_mut(), &opts)?;
-        Ok(stats)
+        crate::engine::Engine::single_threaded().run_one(self)
     }
 
     /// Run, mapping deadlock to a value (used by tests that *expect*
-    /// deadlocks).
+    /// deadlocks; delegates to the engine).
     pub fn run_expect(&self) -> anyhow::Result<Result<SimStats, SimError>> {
-        let mut net = self.build_network()?;
-        let mut workload = self.build_workload(&net.topo)?;
-        let opts = RunOpts {
-            max_cycles: self.max_cycles,
-            warmup: 0,
-            window: None,
-            stop_when_drained: !matches!(self.traffic, TrafficSpec::Bernoulli { .. }),
-        };
-        Ok(net.run(workload.as_mut(), &opts))
+        crate::engine::run_expect(self)
     }
 
     /// Parse a spec from a parsed config [`Value`] (the `[experiment]`

@@ -11,7 +11,8 @@
 use crate::analytic;
 use crate::config::spec::{ExperimentSpec, TrafficSpec};
 use crate::coordinator::report::{ascii_bars, write_csv, Table};
-use crate::coordinator::sweep::{default_threads, run_sweep, SweepResult};
+use crate::coordinator::sweep::SweepResult;
+use crate::engine::Engine;
 use crate::metrics::jain_index;
 use crate::service;
 use crate::traffic::kernels::Mapping;
@@ -177,7 +178,7 @@ pub fn fig5(scale: Scale, seed: u64) -> anyhow::Result<String> {
             });
         }
     }
-    let results = run_sweep(specs, default_threads());
+    let results = Engine::new().run_batch(specs);
     let mut t = Table::new(
         &format!("Figure 5 — cycles to consume {pkts} pkts/server ({topo}, {spc} srv/sw)"),
         &["pattern", "routing", "cycles", "mean hops"],
@@ -253,7 +254,7 @@ pub fn fig6(scale: Scale, seed: u64) -> anyhow::Result<String> {
             }
         }
     }
-    let results = run_sweep(specs, default_threads());
+    let results = Engine::new().run_batch(specs);
     let mut t = Table::new(
         &format!("Figure 6 — TERA service-topology comparison ({pkts} pkts/server burst)"),
         &["pattern", "FM size", "service", "cycles", "mean hops"],
@@ -318,7 +319,7 @@ pub fn fig7(scale: Scale, seed: u64) -> anyhow::Result<String> {
             }
         }
     }
-    let results = run_sweep(specs, default_threads());
+    let results = Engine::new().run_batch(specs);
     let mut t = Table::new(
         &format!("Figure 7 — Bernoulli traffic on {topo} ({spc} srv/sw, horizon {hz})"),
         &[
@@ -418,7 +419,7 @@ fn kernel_specs(
 pub fn fig8(scale: Scale, seed: u64) -> anyhow::Result<String> {
     let routings = ["min", "valiant", "ugal", "omniwar", "tera-hx2", "tera-hx3"];
     let (labels, specs) = kernel_specs(scale, seed, &routings, Mapping::Linear);
-    let results = run_sweep(specs, default_threads());
+    let results = Engine::new().run_batch(specs);
     let mut t = Table::new(
         "Figure 8 — application kernel completion (cycles, linear mapping)",
         &["kernel", "routing", "cycles", "mean hops"],
@@ -441,7 +442,7 @@ pub fn fig8(scale: Scale, seed: u64) -> anyhow::Result<String> {
 pub fn fig9(scale: Scale, seed: u64) -> anyhow::Result<String> {
     let routings = ["ugal", "omniwar", "tera-hx2", "tera-hx3"];
     let (labels, specs) = kernel_specs(scale, seed, &routings, Mapping::Linear);
-    let results = run_sweep(specs, default_threads());
+    let results = Engine::new().run_batch(specs);
     let mut t = Table::new(
         "Figure 9 — packet latency distribution per kernel (linear mapping)",
         &["kernel", "routing", "mean", "p99", "p99.9", "p99.99", "max"],
@@ -512,7 +513,7 @@ pub fn fig10(scale: Scale, seed: u64) -> anyhow::Result<String> {
             });
         }
     }
-    let results = run_sweep(specs, default_threads());
+    let results = Engine::new().run_batch(specs);
     let mut t = Table::new(
         &format!("Figure 10 — 2D-HyperX {topo} ({spc} srv/sw): kernel completion"),
         &["kernel", "routing", "VCs", "cycles", "mean hops"],
@@ -578,7 +579,7 @@ pub fn ablation_q(scale: Scale, seed: u64) -> anyhow::Result<String> {
             });
         }
     }
-    let results = run_sweep(specs, default_threads());
+    let results = Engine::new().run_batch(specs);
     let mut t = Table::new(
         "Ablation — TERA-HX2 non-minimal penalty q (load 0.7)",
         &["pattern", "q", "accepted", "latency", "2hop%"],

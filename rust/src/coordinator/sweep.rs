@@ -1,18 +1,11 @@
-//! Threaded parameter sweeps over experiment specs.
-
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+//! Threaded parameter sweeps over experiment specs — a thin client of
+//! [`crate::engine`], kept as the coordinator-facing name for batch runs.
 
 use crate::config::ExperimentSpec;
-use crate::metrics::SimStats;
+use crate::engine::Engine;
 
-/// Result of one sweep point.
-pub struct SweepResult {
-    pub spec: ExperimentSpec,
-    pub stats: anyhow::Result<SimStats>,
-    /// Wall-clock seconds the point took to simulate.
-    pub wall_secs: f64,
-}
+/// Result of one sweep point (the engine's batch result).
+pub type SweepResult = crate::engine::RunResult;
 
 /// Run all specs, `threads`-wide, returning results in submission order.
 ///
@@ -20,53 +13,13 @@ pub struct SweepResult {
 /// sweep — Fig-5-style comparisons legitimately include algorithms that
 /// fail on some patterns).
 pub fn run_sweep(specs: Vec<ExperimentSpec>, threads: usize) -> Vec<SweepResult> {
-    let threads = threads.max(1);
-    let n = specs.len();
-    let work: Arc<Mutex<std::vec::IntoIter<(usize, ExperimentSpec)>>> = Arc::new(Mutex::new(
-        specs
-            .into_iter()
-            .enumerate()
-            .collect::<Vec<_>>()
-            .into_iter(),
-    ));
-    let (tx, rx) = mpsc::channel::<(usize, SweepResult)>();
-    let mut handles = Vec::new();
-    for _ in 0..threads.min(n.max(1)) {
-        let work = Arc::clone(&work);
-        let tx = tx.clone();
-        handles.push(std::thread::spawn(move || loop {
-            let next = work.lock().unwrap().next();
-            let Some((idx, spec)) = next else { break };
-            let t0 = std::time::Instant::now();
-            let stats = spec.run().map_err(anyhow::Error::from);
-            let wall_secs = t0.elapsed().as_secs_f64();
-            let _ = tx.send((
-                idx,
-                SweepResult {
-                    spec,
-                    stats,
-                    wall_secs,
-                },
-            ));
-        }));
-    }
-    drop(tx);
-    let mut slots: Vec<Option<SweepResult>> = (0..n).map(|_| None).collect();
-    for (idx, res) in rx {
-        slots[idx] = Some(res);
-    }
-    for h in handles {
-        h.join().expect("sweep worker panicked");
-    }
-    slots.into_iter().map(|s| s.expect("missing result")).collect()
+    Engine::with_threads(threads).run_batch(specs)
 }
 
 /// Default parallelism: physical cores minus one (leave a core for the OS),
 /// at least 1.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get().saturating_sub(1).max(1))
-        .unwrap_or(1)
+    crate::engine::default_threads()
 }
 
 #[cfg(test)]

@@ -1,0 +1,402 @@
+//! The experiment engine: the single spec→topology→router→workload→network
+//! construction-and-execution path shared by the CLI, the coordinator
+//! sweeps, the figure runners, the benches and the examples.
+//!
+//! Before this module existed the build/run/report pipeline was duplicated
+//! across `config::spec`, `coordinator::sweep` and `coordinator::figures`.
+//! Now everything funnels through [`Engine`]:
+//!
+//! * [`Engine::build`] — materialize an [`Instance`] (network + workload +
+//!   run options) from an [`ExperimentSpec`];
+//! * [`Engine::run_one`] — build and run a single spec;
+//! * [`Engine::run_batch`] — fan a batch out over worker threads (tokio is
+//!   not in the offline crate set; std threads are a perfect fit for
+//!   CPU-bound simulation), results in submission order, deterministic for
+//!   any thread count (each point owns its seeded RNGs);
+//! * [`Engine::run_replicas`] — multi-seed replica batching: the same
+//!   experiment across derived seeds, aggregated into a
+//!   [`ReplicaSummary`] (mean/σ throughput, merged latency histogram).
+
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::config::spec::{routing_by_name, topology_by_name, ExperimentSpec, TrafficSpec};
+use crate::metrics::{LatencyHist, SimStats};
+use crate::sim::{Network, RunOpts, SimConfig, SimError};
+use crate::topology::PhysTopology;
+use crate::traffic::kernels::{self, KernelWorkload};
+use crate::traffic::{BernoulliWorkload, FixedWorkload, TrafficPattern, Workload};
+use crate::util::Rng;
+
+/// Default parallelism: physical cores minus one (leave a core for the OS),
+/// at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+/// Build the workload for a spec on a given physical topology.
+pub fn build_workload(
+    spec: &ExperimentSpec,
+    topo: &PhysTopology,
+) -> anyhow::Result<Box<dyn Workload>> {
+    let n = topo.n;
+    let spc = spec.servers_per_switch;
+    let mut rng = Rng::derive(spec.seed, 0x7AFF_1C);
+    Ok(match &spec.traffic {
+        TrafficSpec::Fixed {
+            pattern,
+            packets_per_server,
+        } => {
+            let pat = TrafficPattern::by_name(pattern, n, spc, &mut rng)?;
+            Box::new(FixedWorkload::new(&pat, n, spc, *packets_per_server, &mut rng))
+        }
+        TrafficSpec::Bernoulli {
+            pattern,
+            load,
+            horizon,
+        } => {
+            let pat = TrafficPattern::by_name(pattern, n, spc, &mut rng)?;
+            Box::new(BernoulliWorkload::new(
+                pat, n, spc, *load, 16, *horizon, spec.seed,
+            ))
+        }
+        TrafficSpec::Kernel {
+            kernel,
+            iters,
+            pkts_per_msg,
+            mapping,
+        } => {
+            let ranks = n * spc;
+            let prog = match kernel.to_ascii_lowercase().as_str() {
+                "all2all" => kernels::all2all(ranks, *pkts_per_msg),
+                "stencil2d" => kernels::stencil2d(ranks, *iters, *pkts_per_msg),
+                "stencil3d" => kernels::stencil3d(ranks, *iters, *pkts_per_msg),
+                "fft3d" => kernels::fft3d(ranks, *pkts_per_msg),
+                "allreduce" => {
+                    kernels::allreduce_rabenseifner(ranks, (*pkts_per_msg).max(1) * 8)
+                }
+                other => anyhow::bail!("unknown kernel '{other}'"),
+            };
+            Box::new(KernelWorkload::new(prog, ranks, *mapping, &mut rng))
+        }
+    })
+}
+
+/// Build the simulator network for a spec.
+pub fn build_network(spec: &ExperimentSpec) -> anyhow::Result<Network> {
+    let topo = Arc::new(topology_by_name(&spec.topology)?);
+    let router = routing_by_name(&spec.routing, topo.clone(), spec.q)?;
+    let cfg = SimConfig {
+        servers_per_switch: spec.servers_per_switch,
+        seed: spec.seed,
+        ..SimConfig::default()
+    };
+    Ok(Network::new(topo, router, cfg))
+}
+
+/// The run options a spec's traffic mode implies: Bernoulli runs are
+/// horizon-bound with a warmup window, everything else runs to drain.
+pub fn run_opts(spec: &ExperimentSpec) -> RunOpts {
+    match &spec.traffic {
+        TrafficSpec::Bernoulli { horizon, .. } => RunOpts {
+            max_cycles: *horizon,
+            warmup: spec.warmup.min(*horizon / 4),
+            window: None,
+            stop_when_drained: false,
+        },
+        _ => RunOpts {
+            max_cycles: spec.max_cycles,
+            warmup: 0,
+            window: None,
+            stop_when_drained: true,
+        },
+    }
+}
+
+/// Run a spec, surfacing the deadlock/limit outcome as a value (used by
+/// tests that *expect* deadlocks).
+pub fn run_expect(spec: &ExperimentSpec) -> anyhow::Result<Result<SimStats, SimError>> {
+    let mut net = build_network(spec)?;
+    let mut workload = build_workload(spec, &net.topo)?;
+    let opts = RunOpts {
+        max_cycles: spec.max_cycles,
+        warmup: 0,
+        window: None,
+        stop_when_drained: !matches!(spec.traffic, TrafficSpec::Bernoulli { .. }),
+    };
+    Ok(net.run(workload.as_mut(), &opts))
+}
+
+/// A fully-materialized experiment: network, workload and run options.
+pub struct Instance {
+    pub network: Network,
+    pub workload: Box<dyn Workload>,
+    pub opts: RunOpts,
+}
+
+impl Instance {
+    /// Execute to completion.
+    pub fn run(&mut self) -> Result<SimStats, SimError> {
+        self.network.run(self.workload.as_mut(), &self.opts)
+    }
+}
+
+/// Result of one batch point.
+pub struct RunResult {
+    pub spec: ExperimentSpec,
+    pub stats: anyhow::Result<SimStats>,
+    /// Wall-clock seconds the point took to simulate.
+    pub wall_secs: f64,
+}
+
+/// Aggregate over multi-seed replicas of one experiment.
+pub struct ReplicaSummary {
+    /// The seeds actually run (derived from the base spec's seed).
+    pub seeds: Vec<u64>,
+    /// Per-replica statistics, in seed order.
+    pub stats: Vec<SimStats>,
+    /// All replicas' latency samples merged into one histogram.
+    pub latency: LatencyHist,
+}
+
+impl ReplicaSummary {
+    /// Mean and sample standard deviation of a per-replica metric.
+    fn mean_std(xs: impl Iterator<Item = f64>) -> (f64, f64) {
+        let xs: Vec<f64> = xs.collect();
+        if xs.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        if xs.len() < 2 {
+            return (mean, 0.0);
+        }
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+        (mean, var.sqrt())
+    }
+
+    /// Mean ± σ accepted throughput (flits/cycle/server).
+    pub fn throughput(&self) -> (f64, f64) {
+        Self::mean_std(self.stats.iter().map(SimStats::accepted_throughput))
+    }
+
+    /// Mean ± σ completion cycle (fixed generation / kernels).
+    pub fn finish_cycle(&self) -> (f64, f64) {
+        Self::mean_std(self.stats.iter().map(|s| s.finish_cycle as f64))
+    }
+
+    /// Mean ± σ of the per-replica mean latency.
+    pub fn mean_latency(&self) -> (f64, f64) {
+        Self::mean_std(self.stats.iter().map(SimStats::mean_latency))
+    }
+}
+
+/// The unified experiment engine.
+pub struct Engine {
+    threads: usize,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine {
+    /// Engine with the default thread pool width.
+    pub fn new() -> Self {
+        Self {
+            threads: default_threads(),
+        }
+    }
+
+    /// Engine fanning batches out over exactly `threads` workers.
+    pub fn with_threads(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Engine that runs every batch point inline on the caller's thread.
+    pub fn single_threaded() -> Self {
+        Self::with_threads(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Materialize a spec into a runnable [`Instance`].
+    pub fn build(&self, spec: &ExperimentSpec) -> anyhow::Result<Instance> {
+        let network = build_network(spec)?;
+        let workload = build_workload(spec, &network.topo)?;
+        let opts = run_opts(spec);
+        Ok(Instance {
+            network,
+            workload,
+            opts,
+        })
+    }
+
+    /// Build and run a single spec end-to-end.
+    pub fn run_one(&self, spec: &ExperimentSpec) -> anyhow::Result<SimStats> {
+        let mut instance = self.build(spec)?;
+        Ok(instance.run()?)
+    }
+
+    /// Run all specs, `threads`-wide, returning results in submission order.
+    ///
+    /// Deadlocks and build errors are reported per-point (they don't abort
+    /// the batch — Fig-5-style comparisons legitimately include algorithms
+    /// that fail on some patterns). Every point derives its RNG streams from
+    /// its own spec seed, so results are identical for any thread count.
+    pub fn run_batch(&self, specs: Vec<ExperimentSpec>) -> Vec<RunResult> {
+        let n = specs.len();
+        let workers = self.threads.min(n.max(1));
+        if workers <= 1 {
+            return specs
+                .into_iter()
+                .map(|spec| {
+                    let t0 = std::time::Instant::now();
+                    let stats = self.run_one(&spec);
+                    RunResult {
+                        spec,
+                        stats,
+                        wall_secs: t0.elapsed().as_secs_f64(),
+                    }
+                })
+                .collect();
+        }
+        let work: Arc<Mutex<std::vec::IntoIter<(usize, ExperimentSpec)>>> = Arc::new(Mutex::new(
+            specs
+                .into_iter()
+                .enumerate()
+                .collect::<Vec<_>>()
+                .into_iter(),
+        ));
+        let (tx, rx) = mpsc::channel::<(usize, RunResult)>();
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            let work = Arc::clone(&work);
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let next = work.lock().unwrap().next();
+                let Some((idx, spec)) = next else { break };
+                let t0 = std::time::Instant::now();
+                let stats = Engine::single_threaded().run_one(&spec);
+                let wall_secs = t0.elapsed().as_secs_f64();
+                let _ = tx.send((
+                    idx,
+                    RunResult {
+                        spec,
+                        stats,
+                        wall_secs,
+                    },
+                ));
+            }));
+        }
+        drop(tx);
+        let mut slots: Vec<Option<RunResult>> = (0..n).map(|_| None).collect();
+        for (idx, res) in rx {
+            slots[idx] = Some(res);
+        }
+        for h in handles {
+            h.join().expect("batch worker panicked");
+        }
+        slots.into_iter().map(|s| s.expect("missing result")).collect()
+    }
+
+    /// Run `replicas` copies of a spec under derived seeds (`seed`,
+    /// `seed + 1`, …) and aggregate. Fails on the first replica error —
+    /// replicas of a correct experiment must all complete.
+    pub fn run_replicas(
+        &self,
+        spec: &ExperimentSpec,
+        replicas: usize,
+    ) -> anyhow::Result<ReplicaSummary> {
+        anyhow::ensure!(replicas >= 1, "need at least one replica");
+        let seeds: Vec<u64> = (0..replicas as u64).map(|i| spec.seed + i).collect();
+        let specs: Vec<ExperimentSpec> = seeds
+            .iter()
+            .map(|&seed| ExperimentSpec {
+                name: format!("{}#s{seed}", spec.name),
+                seed,
+                ..spec.clone()
+            })
+            .collect();
+        let mut stats = Vec::with_capacity(replicas);
+        let mut latency = LatencyHist::new();
+        for res in self.run_batch(specs) {
+            let s = res
+                .stats
+                .map_err(|e| e.context(format!("replica '{}'", res.spec.name)))?;
+            latency.merge(&s.latency);
+            stats.push(s);
+        }
+        Ok(ReplicaSummary {
+            seeds,
+            stats,
+            latency,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(routing: &str, seed: u64) -> ExperimentSpec {
+        ExperimentSpec {
+            topology: "fm8".into(),
+            servers_per_switch: 2,
+            routing: routing.into(),
+            traffic: TrafficSpec::Fixed {
+                pattern: "uniform".into(),
+                packets_per_server: 5,
+            },
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn build_produces_runnable_instance() {
+        let mut inst = Engine::new().build(&tiny_spec("tera-path", 3)).unwrap();
+        let stats = inst.run().unwrap();
+        assert_eq!(stats.delivered_packets, 8 * 2 * 5);
+    }
+
+    #[test]
+    fn run_one_equals_batched_run() {
+        let spec = tiny_spec("min", 9);
+        let direct = Engine::single_threaded().run_one(&spec).unwrap();
+        let batched = Engine::with_threads(3).run_batch(vec![spec]);
+        let b = batched[0].stats.as_ref().unwrap();
+        assert_eq!(direct.finish_cycle, b.finish_cycle);
+        assert_eq!(direct.delivered_flits, b.delivered_flits);
+    }
+
+    #[test]
+    fn replicas_vary_seed_and_merge_latency() {
+        let summary = Engine::new().run_replicas(&tiny_spec("min", 5), 3).unwrap();
+        assert_eq!(summary.seeds, vec![5, 6, 7]);
+        assert_eq!(summary.stats.len(), 3);
+        let total: u64 = summary.stats.iter().map(|s| s.latency.count()).sum();
+        assert_eq!(summary.latency.count(), total);
+        let (mean, _sd) = summary.finish_cycle();
+        assert!(mean > 0.0);
+    }
+
+    #[test]
+    fn batch_reports_bad_specs_without_aborting() {
+        let results = Engine::new().run_batch(vec![
+            tiny_spec("min", 1),
+            tiny_spec("no-such-router", 1),
+            tiny_spec("tera-path", 1),
+        ]);
+        assert!(results[0].stats.is_ok());
+        assert!(results[1].stats.is_err());
+        assert!(results[2].stats.is_ok());
+    }
+}

@@ -25,16 +25,20 @@
 //! * the Appendix-B analytic throughput model ([`analytic`]), also
 //!   available as an AOT-compiled XLA artifact executed through PJRT
 //!   ([`runtime`]);
-//! * an experiment coordinator ([`coordinator`]) that fans parameter
-//!   sweeps out over threads and renders the paper's tables and figures.
+//! * the unified experiment engine ([`engine`]): the single
+//!   spec→topology→router→workload construction path, threaded batch
+//!   execution and multi-seed replica aggregation;
+//! * an experiment coordinator ([`coordinator`]) that renders the paper's
+//!   tables and figures as a thin client of the engine.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//! See `DESIGN.md` for the substitution notes, the engine architecture and
+//! the active-set invariants.
 
 pub mod analytic;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod metrics;
 pub mod routing;
 pub mod runtime;

@@ -1,9 +1,12 @@
-//! `tera-net` — CLI front-end for the TERA reproduction.
+//! `tera-net` — CLI front-end for the TERA reproduction. A thin client of
+//! [`tera_net::engine`]: argument parsing and report printing happen here,
+//! every build/run decision happens in the engine.
 //!
 //! ```text
 //! tera-net run        --topology fm64 --routing tera-hx2 --pattern rsp
 //!                     [--mode bernoulli|fixed|kernel] [--load 0.5]
-//!                     [--spc 16] [--seed 1] [--q 54] ...
+//!                     [--spc 16] [--seed 1] [--q 54]
+//!                     [--replicas 1] [--threads N] ...
 //! tera-net table1     [--n 64]
 //! tera-net fig4       [--pjrt]
 //! tera-net fig5..fig10  [--full] [--seed 1]
@@ -15,6 +18,7 @@
 use tera_net::cli::Args;
 use tera_net::config::spec::{ExperimentSpec, TrafficSpec};
 use tera_net::coordinator::figures::{self, Scale};
+use tera_net::engine::Engine;
 use tera_net::traffic::kernels::Mapping;
 
 fn main() {
@@ -97,7 +101,21 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         warmup: args.get_u64("warmup", 2_000)?,
         max_cycles: args.get_u64("max-cycles", 10_000_000)?,
     };
-    report_one(&spec)
+    let engine = engine_from(args)?;
+    let replicas = args.get_usize("replicas", 1)?;
+    if replicas > 1 {
+        report_replicas(&engine, &spec, replicas)
+    } else {
+        report_one(&engine, &spec)
+    }
+}
+
+/// Build the engine the CLI flags ask for (`--threads N`, default: cores-1).
+fn engine_from(args: &Args) -> anyhow::Result<Engine> {
+    Ok(match args.get("threads") {
+        Some(v) => Engine::with_threads(v.parse()?),
+        None => Engine::new(),
+    })
 }
 
 fn cmd_config(args: &Args) -> anyhow::Result<()> {
@@ -108,16 +126,42 @@ fn cmd_config(args: &Args) -> anyhow::Result<()> {
     let value = tera_net::config::parse(&src)?;
     let root = value.get("experiment").unwrap_or(&value);
     let spec = ExperimentSpec::from_value(root)?;
-    report_one(&spec)
+    report_one(&engine_from(args)?, &spec)
 }
 
-fn report_one(spec: &ExperimentSpec) -> anyhow::Result<()> {
+fn report_replicas(engine: &Engine, spec: &ExperimentSpec, replicas: usize) -> anyhow::Result<()> {
+    eprintln!(
+        "running {} × {replicas} replicas on {} ({} srv/sw, routing {}, seeds {}..{})",
+        spec.name,
+        spec.topology,
+        spec.servers_per_switch,
+        spec.routing,
+        spec.seed,
+        spec.seed + replicas as u64 - 1
+    );
+    let t0 = std::time::Instant::now();
+    let summary = engine.run_replicas(spec, replicas)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let (thr, thr_sd) = summary.throughput();
+    let (fin, fin_sd) = summary.finish_cycle();
+    let (lat, lat_sd) = summary.mean_latency();
+    println!("replicas            {replicas}");
+    println!("accepted_throughput {thr:.4} ± {thr_sd:.4} flits/cycle/server");
+    println!("finish_cycle        {fin:.0} ± {fin_sd:.0}");
+    println!("mean_latency        {lat:.1} ± {lat_sd:.1} cycles");
+    println!("p99_latency(all)    {}", summary.latency.percentile(99.0));
+    println!("p99.9_latency(all)  {}", summary.latency.percentile(99.9));
+    println!("wall_time           {wall:.2}s ({} threads)", engine.threads());
+    Ok(())
+}
+
+fn report_one(engine: &Engine, spec: &ExperimentSpec) -> anyhow::Result<()> {
     eprintln!(
         "running {} on {} ({} srv/sw, routing {}, seed {})",
         spec.name, spec.topology, spec.servers_per_switch, spec.routing, spec.seed
     );
     let t0 = std::time::Instant::now();
-    let stats = spec.run()?;
+    let stats = engine.run_one(spec)?;
     let wall = t0.elapsed().as_secs_f64();
     println!("finish_cycle        {}", stats.finish_cycle);
     println!("delivered_packets   {}", stats.delivered_packets);
@@ -238,4 +282,5 @@ RUN FLAGS:
   --packets 100                    (fixed)
   --kernel all2all|stencil2d|stencil3d|fft3d|allreduce --mapping linear|random
   --spc N (servers/switch)  --q 54  --seed 1
+  --replicas N (multi-seed batch, aggregated)  --threads N (sweep width)
 ";

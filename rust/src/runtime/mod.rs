@@ -1,7 +1,7 @@
 //! PJRT runtime: loads the AOT-compiled XLA artifacts produced by
-//! `python/compile/aot.py` (HLO **text** — see DESIGN.md) and executes them
-//! from Rust. Python never runs at simulation/serving time; `make
-//! artifacts` is a build-time step.
+//! `python/compile/aot.py` (HLO **text** — see DESIGN.md, Substitution 2)
+//! and executes them from Rust. Python never runs at simulation/serving
+//! time; `make artifacts` is a build-time step.
 //!
 //! Artifacts:
 //!
@@ -10,14 +10,20 @@
 //! | `tera_score.hlo.txt` | Pallas masked-argmin port scorer | [`TeraScorer`] (batched Algorithm-1 decisions; validated against [`crate::routing::tera`]) |
 //! | `analytic.hlo.txt` | Pallas throughput-surface kernel | Fig-4 bench ([`AnalyticModel`]) |
 //! | `telemetry.hlo.txt` | jnp Jain/moment reduction | report telemetry ([`Telemetry`]) |
+//!
+//! # The `pjrt` feature
+//!
+//! The real implementation needs the `xla` crate and the PJRT CPU plugin,
+//! which are not part of the offline crate set, so it is compiled only with
+//! `--features pjrt`. Without the feature (the default) this module exposes
+//! API-compatible stubs whose constructors return a descriptive error —
+//! every caller already falls back to the pure-Rust reference path.
 
 pub mod scorer;
 
-pub use scorer::{RustScorer, ScoreBatch, TeraScorer};
+pub use scorer::{RustScorer, ScoreBatch, ScoreResult, TeraScorer};
 
-use std::path::{Path, PathBuf};
-
-use anyhow::{Context, Result};
+use std::path::PathBuf;
 
 /// Default artifact directory (`make artifacts` output).
 pub fn artifacts_dir() -> PathBuf {
@@ -26,81 +32,140 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-/// A compiled XLA computation on the PJRT CPU client.
-pub struct LoadedFn {
-    exe: xla::PjRtLoadedExecutable,
-    pub path: PathBuf,
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::path::{Path, PathBuf};
 
-/// PJRT engine: one CPU client, many loaded executables.
-pub struct Engine {
-    client: xla::PjRtClient,
-}
+    use anyhow::{Context, Result};
 
-impl Engine {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client })
+    /// A compiled XLA computation on the PJRT CPU client.
+    pub struct LoadedFn {
+        exe: xla::PjRtLoadedExecutable,
+        pub path: PathBuf,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// PJRT engine: one CPU client, many loaded executables.
+    pub struct Engine {
+        client: xla::PjRtClient,
     }
 
-    /// Load an HLO-text artifact and compile it.
-    pub fn load(&self, path: &Path) -> Result<LoadedFn> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not UTF-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(LoadedFn {
-            exe,
-            path: path.to_path_buf(),
-        })
-    }
-
-    /// Load `<artifacts>/<name>.hlo.txt`.
-    pub fn load_artifact(&self, name: &str) -> Result<LoadedFn> {
-        let path = artifacts_dir().join(format!("{name}.hlo.txt"));
-        anyhow::ensure!(
-            path.exists(),
-            "artifact {} missing — run `make artifacts` first",
-            path.display()
-        );
-        self.load(&path)
-    }
-}
-
-impl LoadedFn {
-    /// Execute with f32 inputs of the given shapes; returns the flattened
-    /// f32 contents of every tuple output (aot.py lowers with
-    /// `return_tuple=True`).
-    pub fn call_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let lit = xla::Literal::vec1(data)
-                .reshape(shape)
-                .context("reshaping input literal")?;
-            lits.push(lit);
+    impl Engine {
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { client })
         }
-        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
-            .to_literal_sync()
-            .context("fetching result")?;
-        let parts = result.to_tuple().context("decomposing result tuple")?;
-        parts
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().context("reading f32 output"))
-            .collect()
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact and compile it.
+        pub fn load(&self, path: &Path) -> Result<LoadedFn> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(LoadedFn {
+                exe,
+                path: path.to_path_buf(),
+            })
+        }
+
+        /// Load `<artifacts>/<name>.hlo.txt`.
+        pub fn load_artifact(&self, name: &str) -> Result<LoadedFn> {
+            let path = super::artifacts_dir().join(format!("{name}.hlo.txt"));
+            anyhow::ensure!(
+                path.exists(),
+                "artifact {} missing — run `make artifacts` first",
+                path.display()
+            );
+            self.load(&path)
+        }
+    }
+
+    impl LoadedFn {
+        /// Execute with f32 inputs of the given shapes; returns the
+        /// flattened f32 contents of every tuple output (aot.py lowers with
+        /// `return_tuple=True`).
+        pub fn call_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs {
+                let lit = xla::Literal::vec1(data)
+                    .reshape(shape)
+                    .context("reshaping input literal")?;
+                lits.push(lit);
+            }
+            let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+                .to_literal_sync()
+                .context("fetching result")?;
+            let parts = result.to_tuple().context("decomposing result tuple")?;
+            parts
+                .into_iter()
+                .map(|l| l.to_vec::<f32>().context("reading f32 output"))
+                .collect()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::path::{Path, PathBuf};
+
+    use anyhow::Result;
+
+    pub(super) fn unavailable<T>() -> Result<T> {
+        Err(anyhow::anyhow!(
+            "tera-net was built without the `pjrt` feature: rebuild with \
+             `--features pjrt` (plus the xla crate and PJRT CPU plugin) to \
+             load AOT artifacts; the pure-Rust reference paths remain available"
+        ))
+    }
+
+    /// Stub for the compiled-executable handle (never constructed).
+    pub struct LoadedFn {
+        pub path: PathBuf,
+    }
+
+    impl LoadedFn {
+        pub fn call_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            unavailable()
+        }
+    }
+
+    /// Stub PJRT engine: construction reports the missing feature.
+    pub struct Engine {
+        _private: (),
+    }
+
+    impl Engine {
+        pub fn cpu() -> Result<Self> {
+            unavailable()
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without the pjrt feature)".into()
+        }
+
+        pub fn load(&self, _path: &Path) -> Result<LoadedFn> {
+            unavailable()
+        }
+
+        pub fn load_artifact(&self, _name: &str) -> Result<LoadedFn> {
+            unavailable()
+        }
+    }
+}
+
+pub use backend::{Engine, LoadedFn};
 
 /// The Fig-4 analytic model served through PJRT.
 pub struct AnalyticModel {
+    #[cfg(feature = "pjrt")]
     f: LoadedFn,
     /// Grid size the artifact was lowered for.
     pub k: usize,
@@ -109,15 +174,22 @@ pub struct AnalyticModel {
 impl AnalyticModel {
     pub const K: usize = 64;
 
-    pub fn load(engine: &Engine) -> Result<Self> {
+    #[cfg(feature = "pjrt")]
+    pub fn load(engine: &Engine) -> anyhow::Result<Self> {
         Ok(Self {
             f: engine.load_artifact("analytic")?,
             k: Self::K,
         })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(_engine: &Engine) -> anyhow::Result<Self> {
+        backend::unavailable()
+    }
+
     /// Evaluate `1/(1+1/p)` for up to `K` ratios (padded internally).
-    pub fn throughput(&self, ps: &[f64]) -> Result<Vec<f64>> {
+    #[cfg(feature = "pjrt")]
+    pub fn throughput(&self, ps: &[f64]) -> anyhow::Result<Vec<f64>> {
         anyhow::ensure!(ps.len() <= self.k, "at most {} ratios per call", self.k);
         let mut buf = vec![1.0f32; self.k];
         for (i, &p) in ps.iter().enumerate() {
@@ -126,10 +198,17 @@ impl AnalyticModel {
         let out = self.f.call_f32(&[(&buf, &[self.k as i64])])?;
         Ok(out[0][..ps.len()].iter().map(|&x| x as f64).collect())
     }
+
+    /// Evaluate `1/(1+1/p)` for up to `K` ratios (padded internally).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn throughput(&self, _ps: &[f64]) -> anyhow::Result<Vec<f64>> {
+        backend::unavailable()
+    }
 }
 
 /// Telemetry reductions (Jain index + load moments) through PJRT.
 pub struct Telemetry {
+    #[cfg(feature = "pjrt")]
     f: LoadedFn,
     pub n: usize,
 }
@@ -137,17 +216,24 @@ pub struct Telemetry {
 impl Telemetry {
     pub const N: usize = 4096;
 
-    pub fn load(engine: &Engine) -> Result<Self> {
+    #[cfg(feature = "pjrt")]
+    pub fn load(engine: &Engine) -> anyhow::Result<Self> {
         Ok(Self {
             f: engine.load_artifact("telemetry")?,
             n: Self::N,
         })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(_engine: &Engine) -> anyhow::Result<Self> {
+        backend::unavailable()
+    }
+
     /// Returns `(jain, mean, max)` of a per-server load vector (zero-padded
     /// to the artifact width; the artifact computes the Jain index over the
     /// *observed* count which is passed alongside).
-    pub fn summarize(&self, loads: &[f64]) -> Result<(f64, f64, f64)> {
+    #[cfg(feature = "pjrt")]
+    pub fn summarize(&self, loads: &[f64]) -> anyhow::Result<(f64, f64, f64)> {
         anyhow::ensure!(
             loads.len() <= self.n,
             "at most {} servers per call",
@@ -165,19 +251,34 @@ impl Telemetry {
         let s = &out[0];
         Ok((s[0] as f64, s[1] as f64, s[2] as f64))
     }
+
+    /// Returns `(jain, mean, max)` of a per-server load vector.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn summarize(&self, _loads: &[f64]) -> anyhow::Result<(f64, f64, f64)> {
+        backend::unavailable()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    // Engine-level integration tests live in rust/tests/runtime.rs (they
-    // need `make artifacts` to have run). Here: path plumbing only.
+    // Engine-level integration tests live in rust/tests/runtime_pjrt.rs
+    // (they need `make artifacts` and the pjrt feature). Here: path
+    // plumbing only.
     #[test]
     fn artifacts_dir_env_override() {
         std::env::set_var("TERA_NET_ARTIFACTS", "/tmp/xyz");
         assert_eq!(artifacts_dir(), PathBuf::from("/tmp/xyz"));
         std::env::remove_var("TERA_NET_ARTIFACTS");
         assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stubs_report_missing_feature() {
+        let err = Engine::cpu().err().expect("stub engine must not construct");
+        let msg = format!("{err}");
+        assert!(msg.contains("pjrt"), "{msg}");
     }
 }

@@ -14,7 +14,9 @@
 
 use anyhow::Result;
 
-use super::{Engine, LoadedFn};
+use super::Engine;
+#[cfg(feature = "pjrt")]
+use super::LoadedFn;
 
 /// A batch of routing decisions: `batch × ports` candidate matrices.
 #[derive(Clone, Debug)]
@@ -79,8 +81,10 @@ impl RustScorer {
 }
 
 /// The PJRT-backed scorer. Shapes are fixed at AOT time:
-/// `batch = 64`, `ports = 64` (FM64's switch radix, padded).
+/// `batch = 64`, `ports = 64` (FM64's switch radix, padded). Without the
+/// `pjrt` feature this is a stub whose `load` reports the missing feature.
 pub struct TeraScorer {
+    #[cfg(feature = "pjrt")]
     f: LoadedFn,
     pub batch: usize,
     pub ports: usize,
@@ -90,6 +94,7 @@ impl TeraScorer {
     pub const BATCH: usize = 64;
     pub const PORTS: usize = 64;
 
+    #[cfg(feature = "pjrt")]
     pub fn load(engine: &Engine) -> Result<Self> {
         Ok(Self {
             f: engine.load_artifact("tera_score")?,
@@ -98,9 +103,22 @@ impl TeraScorer {
         })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(engine: &Engine) -> Result<Self> {
+        // The stub Engine cannot be constructed, so this is unreachable in
+        // practice; route through it anyway for a uniform error message.
+        let _ = engine;
+        Err(anyhow::anyhow!(
+            "tera-net was built without the `pjrt` feature: the batched \
+             TERA scorer needs the XLA artifact path (RustScorer remains \
+             available as the pure-Rust reference)"
+        ))
+    }
+
     /// Score a batch (must match the artifact shape; pad with
     /// `valid = 0` rows/cols — an all-invalid row picks port 0 at weight
     /// ~INF, same as [`RustScorer`]).
+    #[cfg(feature = "pjrt")]
     pub fn score(&self, b: &ScoreBatch) -> Result<ScoreResult> {
         anyhow::ensure!(
             b.batch == self.batch && b.ports == self.ports,
@@ -126,6 +144,14 @@ impl TeraScorer {
             choice: packed[..b.batch].iter().map(|&x| x as u32).collect(),
             weight: packed[b.batch..].to_vec(),
         })
+    }
+
+    /// Stub scorer (never constructed without the `pjrt` feature).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn score(&self, _b: &ScoreBatch) -> Result<ScoreResult> {
+        Err(anyhow::anyhow!(
+            "tera-net was built without the `pjrt` feature"
+        ))
     }
 }
 

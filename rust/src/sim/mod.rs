@@ -17,12 +17,29 @@
 //! switch as soon as its header arrives (flits stream behind it at link
 //! rate), and a buffer slot is occupied from header arrival until the
 //! crossbar grant releases it upstream via a credit.
+//!
+//! # Engine architecture (active-set, flat-buffer hot path)
+//!
+//! The per-cycle loop touches only components with work (see DESIGN.md,
+//! "Active-set invariants"):
+//!
+//! * all port FIFOs are fixed-capacity rings in one flat [`QueuePool`]
+//!   (structure-of-arrays; zero steady-state allocation);
+//! * `active_switches` / `active_servers` are dirty worklists — a switch is
+//!   listed iff it buffers at least one packet (`Switch::work > 0`), a
+//!   server iff its source queue is non-empty; idle components cost zero;
+//! * in-flight events live on an overflow-safe hierarchical
+//!   [`TimingWheel`], so arbitrary `link_latency` values are exact.
 
 pub mod packet;
+pub mod queues;
 pub mod switch;
+pub mod wheel;
 
 pub use packet::{Packet, PacketArena, PacketId, NO_SWITCH};
-pub use switch::{InputPort, OutputPort, Switch, SwitchView};
+pub use queues::QueuePool;
+pub use switch::{Switch, SwitchView};
+pub use wheel::TimingWheel;
 
 use std::sync::Arc;
 
@@ -41,7 +58,8 @@ pub struct SimConfig {
     pub output_cap_pkts: usize,
     /// Flits per packet (paper: 16).
     pub pkt_flits: u16,
-    /// Link latency in cycles (header fly time).
+    /// Link latency in cycles (header fly time). Any value ≥ 1 is exact —
+    /// the hierarchical timing wheel has no horizon limit.
     pub link_latency: u64,
     /// Crossbar speedup (paper: 2×).
     pub speedup: u64,
@@ -50,7 +68,9 @@ pub struct SimConfig {
     /// Master seed; every stochastic component derives from it.
     pub seed: u64,
     /// Cycles without any flit movement (while packets are live) after
-    /// which the run is declared deadlocked.
+    /// which the run is declared deadlocked. Internally floored to
+    /// `4 × (link_latency + pkt_flits)` so long wires (packets legitimately
+    /// in flight with nothing else moving) never trip it.
     pub watchdog_cycles: u64,
 }
 
@@ -95,13 +115,28 @@ impl Default for RunOpts {
 }
 
 /// Simulation failure modes.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SimError {
-    #[error("deadlock detected at cycle {cycle}: {live} packets stalled (no flit moved for {idle} cycles)")]
     Deadlock { cycle: u64, live: usize, idle: u64 },
-    #[error("cycle limit {0} reached before the workload drained")]
     CycleLimit(u64),
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Deadlock { cycle, live, idle } => write!(
+                f,
+                "deadlock detected at cycle {cycle}: {live} packets stalled \
+                 (no flit moved for {idle} cycles)"
+            ),
+            SimError::CycleLimit(limit) => {
+                write!(f, "cycle limit {limit} reached before the workload drained")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// Events scheduled on the timing wheel.
 enum Event {
@@ -124,8 +159,6 @@ struct ServerState {
     free_at: u64,
 }
 
-const WHEEL: usize = 64;
-
 /// The simulated network: topology + switches + servers + router.
 pub struct Network {
     pub topo: Arc<PhysTopology>,
@@ -134,8 +167,17 @@ pub struct Network {
     switches: Vec<Switch>,
     servers: Vec<ServerState>,
     arena: PacketArena,
-    wheel: Vec<Vec<Event>>,
+    queues: QueuePool,
+    wheel: TimingWheel<Event>,
+    /// Reused scratch buffer for the events popped each cycle.
+    event_buf: Vec<Event>,
     credit_returns: Vec<(u32, u32, u8)>,
+    /// Dirty worklist of switches with buffered packets (`work > 0`).
+    active_switches: Vec<u32>,
+    switch_active: Vec<bool>,
+    /// Dirty worklist of servers with queued source packets.
+    active_servers: Vec<u32>,
+    server_active: Vec<bool>,
     rng: Rng,
     now: u64,
     stats: SimStats,
@@ -144,38 +186,59 @@ pub struct Network {
     last_progress: u64,
     /// Packets sitting in server source queues (fast drain check).
     pending_sources: usize,
+    /// Effective watchdog horizon: `cfg.watchdog_cycles`, floored so that
+    /// packets legitimately in flight on a long wire (where no flit moves
+    /// anywhere for up to `link_latency + serialization` cycles) are never
+    /// declared a deadlock.
+    watchdog: u64,
     max_hops: usize,
     max_degree: usize,
 }
 
 impl Network {
     pub fn new(topo: Arc<PhysTopology>, router: Arc<dyn Router>, cfg: SimConfig) -> Self {
+        assert!(cfg.link_latency >= 1, "link_latency must be >= 1 cycle");
+        assert!(cfg.pkt_flits >= 1, "packets carry at least one flit");
         let n = topo.n;
         let vcs = router.num_vcs();
         let spc = cfg.servers_per_switch;
+        let mut queues = QueuePool::new();
         let mut switches = Vec::with_capacity(n);
         for s in 0..n {
             let deg = topo.degree(s);
-            let mut inputs = Vec::with_capacity(deg + spc);
+            let ports = deg + spc;
+            let in_q0 = queues.num_queues();
+            for _ in 0..ports * vcs {
+                queues.add_queue(cfg.input_cap_pkts);
+            }
+            let out_q0 = queues.num_queues();
+            for _ in 0..ports * vcs {
+                queues.add_queue(cfg.output_cap_pkts);
+            }
+            let mut upstream = Vec::with_capacity(ports);
             for p in 0..deg {
                 let up_sw = topo.neighbor(s, p) as u32;
                 let up_port = topo.reverse_port(s, p) as u32;
-                inputs.push(InputPort::new(vcs, Some((up_sw, up_port))));
+                upstream.push(Some((up_sw, up_port)));
             }
-            for _ in 0..spc {
-                inputs.push(InputPort::new(vcs, None));
-            }
-            let mut outputs = Vec::with_capacity(deg + spc);
-            for _ in 0..deg {
-                outputs.push(OutputPort::new(vcs, cfg.input_cap_pkts as u32, false));
-            }
-            for _ in 0..spc {
-                outputs.push(OutputPort::new(vcs, u32::MAX / 2, true));
-            }
+            upstream.resize(ports, None);
+            let mut credits = vec![cfg.input_cap_pkts as u32; deg * vcs];
+            // Ejection ports: a virtually infinite pool (never decremented).
+            credits.resize(ports * vcs, u32::MAX / 2);
             switches.push(Switch {
-                inputs,
-                outputs,
                 degree: deg,
+                ports,
+                vcs,
+                in_q0,
+                out_q0,
+                busy_until: vec![0; ports],
+                upstream,
+                link_free_at: vec![0; ports],
+                occ_flits: vec![0; ports],
+                grants_this_cycle: vec![0; ports],
+                last_grant_cycle: vec![u64::MAX; ports],
+                credits,
+                work: 0,
             });
         }
         let servers = (0..n * spc)
@@ -187,6 +250,9 @@ impl Network {
         let max_degree = topo.max_degree();
         let max_hops = router.max_hops();
         let stats = SimStats::new(n * spc, n * max_degree);
+        let watchdog = cfg
+            .watchdog_cycles
+            .max(4 * (cfg.link_latency + cfg.pkt_flits as u64));
         Self {
             topo,
             router,
@@ -195,14 +261,21 @@ impl Network {
             switches,
             servers,
             arena: PacketArena::with_capacity(4096),
-            wheel: (0..WHEEL).map(|_| Vec::new()).collect(),
+            queues,
+            wheel: TimingWheel::new(),
+            event_buf: Vec::new(),
             credit_returns: Vec::new(),
+            active_switches: Vec::with_capacity(n),
+            switch_active: vec![false; n],
+            active_servers: Vec::with_capacity(n * spc),
+            server_active: vec![false; n * spc],
             now: 0,
             stats,
             warmup: 0,
             window_end: u64::MAX,
             last_progress: 0,
             pending_sources: 0,
+            watchdog,
             max_hops,
             max_degree,
         }
@@ -218,9 +291,24 @@ impl Network {
         self.arena.live()
     }
 
+    /// Switches currently on the active worklist (those holding buffered
+    /// packets, plus any awaiting lazy removal). Diagnostic accessor;
+    /// `rust/tests/engine.rs` uses it to pin the idle-network invariant.
+    pub fn active_switches(&self) -> usize {
+        self.active_switches.len()
+    }
+
     #[inline]
     fn in_window(&self, cycle: u64) -> bool {
         cycle >= self.warmup && cycle < self.window_end
+    }
+
+    #[inline]
+    fn activate_switch(&mut self, s: usize) {
+        if !self.switch_active[s] {
+            self.switch_active[s] = true;
+            self.active_switches.push(s as u32);
+        }
     }
 
     /// Run the simulation. Returns collected statistics or a deadlock /
@@ -260,13 +348,16 @@ impl Network {
         let flits = self.cfg.pkt_flits as u64;
 
         // ---- Phase 1: timing-wheel events (arrivals, deliveries). ----
-        let slot = (now % WHEEL as u64) as usize;
-        let events = std::mem::take(&mut self.wheel[slot]);
-        for ev in events {
+        let mut events = std::mem::take(&mut self.event_buf);
+        self.wheel.pop_due(now, &mut events);
+        for ev in events.drain(..) {
             match ev {
                 Event::Arrive { sw, port, vc, pkt } => {
-                    self.switches[sw as usize].inputs[port as usize].vcs[vc as usize]
-                        .push_back(pkt);
+                    let s = sw as usize;
+                    let q = self.switches[s].in_q(port as usize, vc as usize);
+                    self.queues.push_back(q, pkt);
+                    self.switches[s].work += 1;
+                    self.activate_switch(s);
                 }
                 Event::Deliver { pkt } => {
                     let p = self.arena.get(pkt);
@@ -292,22 +383,37 @@ impl Network {
                 }
             }
         }
+        self.event_buf = events;
 
         // ---- Phase 2: workload generation into source queues. ----
         {
             let servers = &mut self.servers;
             let pending = &mut self.pending_sources;
+            let active = &mut self.active_servers;
+            let active_flag = &mut self.server_active;
             workload.poll(now, &mut |src: u32, dst: u32| {
                 servers[src as usize].queue.push_back((dst, now));
                 *pending += 1;
+                if !active_flag[src as usize] {
+                    active_flag[src as usize] = true;
+                    active.push(src);
+                }
             });
         }
 
-        // ---- Phase 3: injection (server NIC → switch input FIFO). ----
+        // ---- Phase 3: injection (server NIC → switch input FIFO), active
+        // servers only. ----
         let spc = self.cfg.servers_per_switch;
-        for srv in 0..self.servers.len() {
-            let st = &mut self.servers[srv];
-            if st.free_at > now || st.queue.is_empty() {
+        let mut idx = 0;
+        while idx < self.active_servers.len() {
+            let srv = self.active_servers[idx] as usize;
+            if self.servers[srv].queue.is_empty() {
+                self.server_active[srv] = false;
+                self.active_servers.swap_remove(idx);
+                continue;
+            }
+            if self.servers[srv].free_at > now {
+                idx += 1;
                 continue;
             }
             let sw = srv / spc;
@@ -315,11 +421,13 @@ impl Network {
             let port = self.switches[sw].degree + local;
             // Injection always lands on VC 0 (cf. §2.1.2: MIN packets must
             // enter on the lowest-ordered VC).
-            if self.switches[sw].inputs[port].vcs[0].len() >= self.cfg.input_cap_pkts {
+            let q = self.switches[sw].in_q(port, 0);
+            if self.queues.len(q) >= self.cfg.input_cap_pkts {
+                idx += 1;
                 continue; // backpressure into the source queue
             }
-            let (dst, gen_cycle) = st.queue.pop_front().unwrap();
-            st.free_at = now + flits;
+            let (dst, gen_cycle) = self.servers[srv].queue.pop_front().unwrap();
+            self.servers[srv].free_at = now + flits;
             self.pending_sources -= 1;
             let dst_sw = (dst as usize / spc) as u32;
             let pkt = self.arena.alloc(Packet {
@@ -336,32 +444,42 @@ impl Network {
                 inject_cycle: now,
                 flits: self.cfg.pkt_flits,
             });
-            self.switches[sw].inputs[port].vcs[0].push_back(pkt);
+            self.queues.push_back(q, pkt);
+            self.switches[sw].work += 1;
+            self.activate_switch(sw);
             if self.in_window(now) {
                 self.stats.injected_per_server[srv] += 1;
             }
+            idx += 1;
         }
 
-        // ---- Phase 4: switch allocation (random rotating priority). ----
-        for s in 0..self.switches.len() {
+        // ---- Phases 4+5: crossbar allocation then link transmission, per
+        // active switch (allocation and transmission of a switch only touch
+        // its own state — deferred credits keep cross-switch effects out of
+        // this loop, so fusing the phases preserves the phase semantics).
+        let mut idx = 0;
+        while idx < self.active_switches.len() {
+            let s = self.active_switches[idx] as usize;
+            if self.switches[s].work == 0 {
+                self.switch_active[s] = false;
+                self.active_switches.swap_remove(idx);
+                continue;
+            }
             self.allocate_switch(s);
-        }
-
-        // ---- Phase 5: link transmission. ----
-        for s in 0..self.switches.len() {
             self.transmit_switch(s);
+            idx += 1;
         }
 
         // ---- Phase 6: apply deferred credit returns. ----
         for i in 0..self.credit_returns.len() {
             let (sw, port, vc) = self.credit_returns[i];
-            let op = &mut self.switches[sw as usize].outputs[port as usize];
-            op.credits[vc as usize] += 1;
+            let s = &mut self.switches[sw as usize];
+            s.credits[port as usize * s.vcs + vc as usize] += 1;
         }
         self.credit_returns.clear();
 
         // ---- Watchdog. ----
-        if self.arena.live() > 0 && now - self.last_progress > self.cfg.watchdog_cycles {
+        if self.arena.live() > 0 && now - self.last_progress > self.watchdog {
             return Err(SimError::Deadlock {
                 cycle: now,
                 live: self.arena.live(),
@@ -377,8 +495,8 @@ impl Network {
     /// ports, one grant per input port, ≤ speedup grants per output port.
     fn allocate_switch(&mut self, s: usize) {
         let now = self.now;
-        let num_inputs = self.switches[s].inputs.len();
-        let vcs = self.router.num_vcs();
+        let vcs = self.switches[s].vcs;
+        let num_inputs = self.switches[s].ports;
         let degree = self.switches[s].degree;
         let spc = self.cfg.servers_per_switch;
         let offset = self.rng.gen_range(num_inputs);
@@ -387,8 +505,8 @@ impl Network {
 
         for k in 0..num_inputs {
             let i = (k + offset) % num_inputs;
-            if self.switches[s].inputs[i].busy_until > now
-                || self.switches[s].inputs[i].occupancy() == 0
+            if self.switches[s].busy_until[i] > now
+                || self.switches[s].input_occupancy(&self.queues, i) == 0
             {
                 continue;
             }
@@ -396,18 +514,25 @@ impl Network {
             let vc_off = if vcs > 1 { self.rng.gen_range(vcs) } else { 0 };
             'vc_scan: for kv in 0..vcs {
                 let vc = (kv + vc_off) % vcs;
-                let Some(&pkt_id) = self.switches[s].inputs[i].vcs[vc].front() else {
+                let q_in = self.switches[s].in_q(i, vc);
+                let Some(pkt_id) = self.queues.front(q_in) else {
                     continue;
                 };
-                // Routing decision (borrow outputs immutably, packet mutably).
+                // Routing decision (slices borrowed immutably, packet
+                // mutably — all disjoint fields of the network).
                 let decision = {
+                    let sw = &self.switches[s];
                     let view = SwitchView {
                         sw: s,
                         degree,
                         now,
                         speedup: self.cfg.speedup,
-                        outputs: &self.switches[s].outputs,
+                        vcs,
                         output_cap_pkts: self.cfg.output_cap_pkts,
+                        occ_flits: &sw.occ_flits,
+                        out_lens: self.queues.lens(sw.out_q0, sw.ports * vcs),
+                        grants_this_cycle: &sw.grants_this_cycle,
+                        last_grant_cycle: &sw.last_grant_cycle,
                     };
                     let pkt = self.arena.get_mut(pkt_id);
                     if pkt.dst_sw as usize == s {
@@ -433,24 +558,26 @@ impl Network {
                 };
                 // Commit the grant (routers only return grantable ports —
                 // SwitchView::has_space folds in the speedup limit).
+                let q_out;
                 {
-                    let op = &mut self.switches[s].outputs[out_port];
-                    if op.last_grant_cycle != now {
-                        op.last_grant_cycle = now;
-                        op.grants_this_cycle = 0;
+                    let sw = &mut self.switches[s];
+                    if sw.last_grant_cycle[out_port] != now {
+                        sw.last_grant_cycle[out_port] = now;
+                        sw.grants_this_cycle[out_port] = 0;
                     }
-                    debug_assert!(op.vcs[out_vc].len() < self.cfg.output_cap_pkts);
-                    debug_assert!((op.grants_this_cycle as u64) < self.cfg.speedup);
-                    op.grants_this_cycle += 1;
-                    op.vcs[out_vc].push_back(pkt_id);
-                    op.occ_flits += self.cfg.pkt_flits as u32;
+                    debug_assert!((sw.grants_this_cycle[out_port] as u64) < self.cfg.speedup);
+                    sw.grants_this_cycle[out_port] += 1;
+                    sw.occ_flits[out_port] += self.cfg.pkt_flits as u32;
+                    sw.busy_until[i] = now + xbar_cycles;
+                    q_out = sw.out_q(out_port, out_vc);
+                    if let Some((usw, uport)) = sw.upstream[i] {
+                        self.credit_returns.push((usw, uport, vc as u8));
+                    }
                 }
-                let inp = &mut self.switches[s].inputs[i];
-                inp.vcs[vc].pop_front();
-                inp.busy_until = now + xbar_cycles;
-                if let Some((usw, uport)) = inp.upstream {
-                    self.credit_returns.push((usw, uport, vc as u8));
-                }
+                debug_assert!(self.queues.len(q_out) < self.cfg.output_cap_pkts);
+                self.queues.push_back(q_out, pkt_id);
+                let popped = self.queues.pop_front(q_in);
+                debug_assert_eq!(popped, Some(pkt_id));
                 let pkt = self.arena.get_mut(pkt_id);
                 pkt.vc = out_vc as u8;
                 pkt.blocked = 0;
@@ -474,32 +601,43 @@ impl Network {
     fn transmit_switch(&mut self, s: usize) {
         let now = self.now;
         let flits = self.cfg.pkt_flits as u64;
-        let num_outputs = self.switches[s].outputs.len();
+        let vcs = self.switches[s].vcs;
+        let num_outputs = self.switches[s].ports;
         let degree = self.switches[s].degree;
-        let vcs = self.router.num_vcs();
         for o in 0..num_outputs {
-            let op = &mut self.switches[s].outputs[o];
-            if op.link_free_at > now || op.queued() == 0 {
+            if self.switches[s].link_free_at[o] > now
+                || self.switches[s].output_queued(&self.queues, o) == 0
+            {
                 continue;
             }
             let vc_off = if vcs > 1 { self.rng.gen_range(vcs) } else { 0 };
             let mut chosen: Option<usize> = None;
             for kv in 0..vcs {
                 let vc = (kv + vc_off) % vcs;
-                if !op.vcs[vc].is_empty() && op.credits[vc] > 0 {
+                if !self.queues.is_empty(self.switches[s].out_q(o, vc))
+                    && self.switches[s].credits[o * vcs + vc] > 0
+                {
                     chosen = Some(vc);
                     break;
                 }
             }
             let Some(vc) = chosen else { continue };
-            let pkt_id = op.vcs[vc].pop_front().unwrap();
-            op.link_free_at = now + flits;
-            // Occupancy is the *output queue* depth in flits (the paper's
-            // Algorithm-1 occupancy[p]; q = 54 is calibrated against the
-            // 5-packet output buffer): the packet leaves the queue now.
-            op.occ_flits = op.occ_flits.saturating_sub(flits as u32);
+            let pkt_id = self
+                .queues
+                .pop_front(self.switches[s].out_q(o, vc))
+                .unwrap();
+            {
+                let sw = &mut self.switches[s];
+                sw.link_free_at[o] = now + flits;
+                // Occupancy is the *output queue* depth in flits (the
+                // paper's Algorithm-1 occupancy[p]; q = 54 is calibrated
+                // against the 5-packet output buffer): the packet leaves
+                // the queue now.
+                sw.occ_flits[o] = sw.occ_flits[o].saturating_sub(flits as u32);
+                sw.work -= 1;
+            }
             if o < degree {
-                op.credits[vc] -= 1;
+                self.switches[s].credits[o * vcs + vc] -= 1;
                 if self.in_window(now) {
                     self.stats.link_flits[s * self.max_degree + o] += flits;
                 }
@@ -526,13 +664,12 @@ impl Network {
 
     #[inline]
     fn schedule(&mut self, when: u64, ev: Event) {
-        debug_assert!(when > self.now && when - self.now < WHEEL as u64);
-        self.wheel[(when % WHEEL as u64) as usize].push(ev);
+        self.wheel.schedule(self.now, when, ev);
     }
 
     /// Total occupancy snapshot (flits buffered per output port of a
     /// switch) — used by the artifact-validation harness and tests.
     pub fn occupancy_snapshot(&self, s: usize) -> Vec<u32> {
-        self.switches[s].outputs.iter().map(|o| o.occ_flits).collect()
+        self.switches[s].occ_flits.clone()
     }
 }

@@ -1,0 +1,158 @@
+//! Flat, arena-backed FIFO pool for the simulator's port buffers.
+//!
+//! The original switch model kept a `Vec<VecDeque<PacketId>>` per port —
+//! one heap allocation per (port, VC) queue, scattered across the heap, and
+//! a pointer chase per occupancy probe. Every simulator queue is bounded by
+//! construction (input FIFOs by credit flow control, output queues by the
+//! crossbar's `has_space` check, injection FIFOs by the explicit
+//! backpressure test), so all of them live here as fixed-capacity ring
+//! buffers carved out of one contiguous buffer:
+//!
+//! * structure-of-arrays layout — `len` for all queues of a switch is one
+//!   contiguous slice, which is what [`super::SwitchView`] hands to routing
+//!   algorithms as the occupancy view;
+//! * zero allocation after construction, O(1) push/pop/front;
+//! * queue ids are dense `usize`s in allocation order, so a switch's
+//!   queues form a contiguous id range.
+
+use super::packet::PacketId;
+
+/// A pool of fixed-capacity ring-buffer FIFOs over one flat backing store.
+pub struct QueuePool {
+    /// Backing storage; queue `q` owns `buf[base[q] .. base[q] + cap[q]]`.
+    buf: Vec<PacketId>,
+    base: Vec<u32>,
+    cap: Vec<u32>,
+    /// Ring head offset within the queue's region.
+    head: Vec<u32>,
+    len: Vec<u32>,
+}
+
+impl Default for QueuePool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QueuePool {
+    pub fn new() -> Self {
+        Self {
+            buf: Vec::new(),
+            base: Vec::new(),
+            cap: Vec::new(),
+            head: Vec::new(),
+            len: Vec::new(),
+        }
+    }
+
+    /// Number of queues allocated so far (the id the next `add_queue`
+    /// returns).
+    pub fn num_queues(&self) -> usize {
+        self.cap.len()
+    }
+
+    /// Allocate a queue of fixed capacity `cap`, returning its id.
+    pub fn add_queue(&mut self, cap: usize) -> usize {
+        let id = self.cap.len();
+        self.base.push(self.buf.len() as u32);
+        self.cap.push(cap as u32);
+        self.head.push(0);
+        self.len.push(0);
+        self.buf.resize(self.buf.len() + cap, 0);
+        id
+    }
+
+    #[inline]
+    pub fn len(&self, q: usize) -> usize {
+        self.len[q] as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self, q: usize) -> bool {
+        self.len[q] == 0
+    }
+
+    /// Queue lengths of the contiguous id range `[q0, q0 + n)` — the
+    /// occupancy slice handed to routing via `SwitchView`.
+    #[inline]
+    pub fn lens(&self, q0: usize, n: usize) -> &[u32] {
+        &self.len[q0..q0 + n]
+    }
+
+    #[inline]
+    pub fn front(&self, q: usize) -> Option<PacketId> {
+        if self.len[q] == 0 {
+            None
+        } else {
+            Some(self.buf[(self.base[q] + self.head[q]) as usize])
+        }
+    }
+
+    /// Append to the tail. The caller guarantees space (all simulator
+    /// queues are externally bounded); debug builds assert it.
+    #[inline]
+    pub fn push_back(&mut self, q: usize, id: PacketId) {
+        let (cap, len) = (self.cap[q], self.len[q]);
+        debug_assert!(len < cap, "queue {q} overflow (cap {cap})");
+        let slot = self.base[q] + (self.head[q] + len) % cap;
+        self.buf[slot as usize] = id;
+        self.len[q] = len + 1;
+    }
+
+    #[inline]
+    pub fn pop_front(&mut self, q: usize) -> Option<PacketId> {
+        if self.len[q] == 0 {
+            return None;
+        }
+        let id = self.buf[(self.base[q] + self.head[q]) as usize];
+        self.head[q] = (self.head[q] + 1) % self.cap[q];
+        self.len[q] -= 1;
+        Some(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_wraparound() {
+        let mut p = QueuePool::new();
+        let q = p.add_queue(3);
+        assert_eq!(p.len(q), 0);
+        assert_eq!(p.front(q), None);
+        assert_eq!(p.pop_front(q), None);
+        // Fill, drain, refill across the ring boundary repeatedly.
+        let mut next = 0u32;
+        for _ in 0..5 {
+            p.push_back(q, next);
+            p.push_back(q, next + 1);
+            p.push_back(q, next + 2);
+            assert_eq!(p.len(q), 3);
+            assert_eq!(p.front(q), Some(next));
+            assert_eq!(p.pop_front(q), Some(next));
+            assert_eq!(p.pop_front(q), Some(next + 1));
+            assert_eq!(p.pop_front(q), Some(next + 2));
+            assert!(p.is_empty(q));
+            next += 3;
+        }
+    }
+
+    #[test]
+    fn queues_are_independent_and_lens_slice_tracks() {
+        let mut p = QueuePool::new();
+        let a = p.add_queue(2);
+        let b = p.add_queue(4);
+        let c = p.add_queue(1);
+        assert_eq!((a, b, c), (0, 1, 2));
+        p.push_back(a, 10);
+        p.push_back(b, 20);
+        p.push_back(b, 21);
+        p.push_back(c, 30);
+        assert_eq!(p.lens(0, 3), &[1, 2, 1]);
+        assert_eq!(p.pop_front(a), Some(10));
+        assert_eq!(p.pop_front(b), Some(20));
+        assert_eq!(p.lens(0, 3), &[0, 1, 1]);
+        assert_eq!(p.front(c), Some(30));
+    }
+}

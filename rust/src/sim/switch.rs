@@ -1,89 +1,82 @@
 //! Switch microarchitecture (§5): per-VC input FIFOs (10 packets), per-VC
 //! output queues (5 packets), a crossbar with 2× speedup and a random
 //! allocator, credit-based flow control toward the downstream input buffers.
+//!
+//! Port state is structure-of-arrays over the flat [`super::QueuePool`]:
+//! switch `s` owns the contiguous queue id ranges
+//! `[in_q0, in_q0 + ports·vcs)` (input FIFOs) and
+//! `[out_q0, out_q0 + ports·vcs)` (output queues), laid out port-major.
+//! Ports `0..degree` are inter-switch links; ports `degree..ports` are the
+//! local servers' injection/ejection ports.
 
-use std::collections::VecDeque;
+use super::queues::QueuePool;
 
-use super::packet::PacketId;
-
-/// One input port (from an upstream switch or from a local server).
-#[derive(Debug)]
-pub struct InputPort {
-    /// Per-VC FIFO of packets whose headers have arrived.
-    pub vcs: Vec<VecDeque<PacketId>>,
-    /// Crossbar serialization: next cycle this port may start a transfer
-    /// (16 flits at 2× speedup ⇒ 8 cycles per packet).
-    pub busy_until: u64,
-    /// `(switch, output port)` feeding this input, or `None` for injection.
-    pub upstream: Option<(u32, u32)>,
-}
-
-impl InputPort {
-    pub fn new(vcs: usize, upstream: Option<(u32, u32)>) -> Self {
-        Self {
-            vcs: (0..vcs).map(|_| VecDeque::new()).collect(),
-            busy_until: 0,
-            upstream,
-        }
-    }
-
-    /// Total packets buffered across VCs.
-    pub fn occupancy(&self) -> usize {
-        self.vcs.iter().map(VecDeque::len).sum()
-    }
-}
-
-/// One output port (toward a downstream switch or a local server).
-#[derive(Debug)]
-pub struct OutputPort {
-    /// Per-VC output queue (capacity `output_cap_pkts`).
-    pub vcs: Vec<VecDeque<PacketId>>,
-    /// Next cycle the outgoing link is free (16-cycle packet serialization).
-    pub link_free_at: u64,
-    /// Credits: free packet slots in the downstream input FIFO, per VC.
-    /// Ejection ports use a virtually infinite credit pool (the server
-    /// always consumes).
-    pub credits: Vec<u32>,
-    /// Congestion signal fed to adaptive routing: flits currently queued
-    /// in this output port's buffers (Algorithm 1's `occupancy[p]`; the
-    /// §5 penalty q = 54 is calibrated against this 5-packet buffer).
-    pub occ_flits: u32,
-    /// Crossbar output speedup accounting: grants accepted this cycle.
-    pub grants_this_cycle: u8,
-    pub last_grant_cycle: u64,
-    /// True for server ejection ports.
-    pub is_ejection: bool,
-}
-
-impl OutputPort {
-    pub fn new(vcs: usize, credits_per_vc: u32, is_ejection: bool) -> Self {
-        Self {
-            vcs: (0..vcs).map(|_| VecDeque::new()).collect(),
-            link_free_at: 0,
-            credits: vec![credits_per_vc; vcs],
-            occ_flits: 0,
-            grants_this_cycle: 0,
-            last_grant_cycle: u64::MAX,
-            is_ejection: false || is_ejection,
-        }
-    }
-
-    /// Packets queued across VCs.
-    pub fn queued(&self) -> usize {
-        self.vcs.iter().map(VecDeque::len).sum()
-    }
-}
-
-/// A switch: `degree` inter-switch ports followed by `servers` local ports.
-#[derive(Debug)]
+/// Per-port, per-VC state of one switch (SoA; queues live in the pool).
 pub struct Switch {
-    pub inputs: Vec<InputPort>,
-    pub outputs: Vec<OutputPort>,
-    /// Inter-switch ports count (local ports start at this index).
+    /// Inter-switch ports (local server ports start at this index).
     pub degree: usize,
+    /// Total ports: `degree + servers_per_switch`.
+    pub ports: usize,
+    /// Virtual channels per port (router-determined).
+    pub vcs: usize,
+    /// First input-FIFO queue id in the pool (port-major, `ports × vcs`).
+    pub in_q0: usize,
+    /// First output-queue id in the pool (port-major, `ports × vcs`).
+    pub out_q0: usize,
+    /// Crossbar serialization per input port: next cycle this port may
+    /// start a transfer (16 flits at 2× speedup ⇒ 8 cycles per packet).
+    pub busy_until: Vec<u64>,
+    /// `(switch, output port)` feeding each input port; `None` = injection.
+    pub upstream: Vec<Option<(u32, u32)>>,
+    /// Next cycle each outgoing link is free (16-cycle serialization).
+    pub link_free_at: Vec<u64>,
+    /// Congestion signal per output port: flits queued in its buffers
+    /// (Algorithm 1's `occupancy[p]`; §5's q = 54 is calibrated against
+    /// this 5-packet buffer).
+    pub occ_flits: Vec<u32>,
+    /// Crossbar output-speedup accounting: grants accepted this cycle.
+    pub grants_this_cycle: Vec<u8>,
+    pub last_grant_cycle: Vec<u64>,
+    /// Credits per `(output port, vc)`, port-major: free packet slots in
+    /// the downstream input FIFO. Ejection ports hold a virtually infinite
+    /// pool (the server always consumes).
+    pub credits: Vec<u32>,
+    /// Packets currently buffered in this switch (inputs + outputs) — the
+    /// active-set membership criterion maintained by the simulator.
+    pub work: u32,
+}
+
+impl Switch {
+    /// Input-FIFO queue id for `(port, vc)`.
+    #[inline]
+    pub fn in_q(&self, port: usize, vc: usize) -> usize {
+        self.in_q0 + port * self.vcs + vc
+    }
+
+    /// Output-queue id for `(port, vc)`.
+    #[inline]
+    pub fn out_q(&self, port: usize, vc: usize) -> usize {
+        self.out_q0 + port * self.vcs + vc
+    }
+
+    /// Packets buffered across an input port's VCs.
+    #[inline]
+    pub fn input_occupancy(&self, pool: &QueuePool, port: usize) -> u32 {
+        let q0 = self.in_q(port, 0);
+        pool.lens(q0, self.vcs).iter().sum()
+    }
+
+    /// Packets queued across an output port's VCs.
+    #[inline]
+    pub fn output_queued(&self, pool: &QueuePool, port: usize) -> u32 {
+        let q0 = self.out_q(port, 0);
+        pool.lens(q0, self.vcs).iter().sum()
+    }
 }
 
 /// Read-only view of a switch's output side handed to routing algorithms.
+/// Backed by plain slices into the switch SoA and the queue pool, so
+/// constructing it is free and `Router::route` stays allocation-free.
 pub struct SwitchView<'a> {
     /// Current switch id.
     pub sw: usize,
@@ -93,8 +86,14 @@ pub struct SwitchView<'a> {
     pub now: u64,
     /// Crossbar speedup (max grants per output port per cycle).
     pub speedup: u64,
-    pub(super) outputs: &'a [OutputPort],
+    pub(super) vcs: usize,
     pub(super) output_cap_pkts: usize,
+    /// Per output port.
+    pub(super) occ_flits: &'a [u32],
+    /// Per `(output port, vc)`, port-major.
+    pub(super) out_lens: &'a [u32],
+    pub(super) grants_this_cycle: &'a [u8],
+    pub(super) last_grant_cycle: &'a [u64],
 }
 
 impl<'a> SwitchView<'a> {
@@ -102,7 +101,7 @@ impl<'a> SwitchView<'a> {
     /// held downstream). This is the `occupancy[p]` of Algorithm 1.
     #[inline]
     pub fn occ_flits(&self, port: usize) -> u32 {
-        self.outputs[port].occ_flits
+        self.occ_flits[port]
     }
 
     /// Can a packet be granted into output queue `(port, vc)` right now?
@@ -110,9 +109,9 @@ impl<'a> SwitchView<'a> {
     /// grant limit, so a `Some` decision from a router always commits.
     #[inline]
     pub fn has_space(&self, port: usize, vc: usize) -> bool {
-        let op = &self.outputs[port];
-        op.vcs[vc].len() < self.output_cap_pkts
-            && (op.last_grant_cycle != self.now || (op.grants_this_cycle as u64) < self.speedup)
+        (self.out_lens[port * self.vcs + vc] as usize) < self.output_cap_pkts
+            && (self.last_grant_cycle[port] != self.now
+                || (self.grants_this_cycle[port] as u64) < self.speedup)
     }
 }
 
@@ -120,13 +119,83 @@ impl<'a> SwitchView<'a> {
 mod tests {
     use super::*;
 
+    fn tiny_switch(pool: &mut QueuePool, degree: usize, spc: usize, vcs: usize) -> Switch {
+        let ports = degree + spc;
+        let in_q0 = pool.num_queues();
+        for _ in 0..ports * vcs {
+            pool.add_queue(10);
+        }
+        let out_q0 = pool.num_queues();
+        for _ in 0..ports * vcs {
+            pool.add_queue(5);
+        }
+        Switch {
+            degree,
+            ports,
+            vcs,
+            in_q0,
+            out_q0,
+            busy_until: vec![0; ports],
+            upstream: vec![None; ports],
+            link_free_at: vec![0; ports],
+            occ_flits: vec![0; ports],
+            grants_this_cycle: vec![0; ports],
+            last_grant_cycle: vec![u64::MAX; ports],
+            credits: vec![10; ports * vcs],
+            work: 0,
+        }
+    }
+
     #[test]
-    fn ports_initialize_empty() {
-        let ip = InputPort::new(2, None);
-        assert_eq!(ip.occupancy(), 0);
-        let op = OutputPort::new(2, 10, false);
-        assert_eq!(op.queued(), 0);
-        assert_eq!(op.credits, vec![10, 10]);
-        assert!(!op.is_ejection);
+    fn queue_ids_are_port_major_and_contiguous() {
+        let mut pool = QueuePool::new();
+        let sw = tiny_switch(&mut pool, 3, 2, 2);
+        assert_eq!(sw.ports, 5);
+        assert_eq!(sw.in_q(0, 0), sw.in_q0);
+        assert_eq!(sw.in_q(1, 0), sw.in_q0 + 2);
+        assert_eq!(sw.in_q(1, 1), sw.in_q0 + 3);
+        assert_eq!(sw.out_q0, sw.in_q0 + 10);
+        assert_eq!(sw.out_q(4, 1), sw.out_q0 + 9);
+    }
+
+    #[test]
+    fn occupancy_probes_sum_across_vcs() {
+        let mut pool = QueuePool::new();
+        let sw = tiny_switch(&mut pool, 2, 1, 2);
+        pool.push_back(sw.in_q(1, 0), 7);
+        pool.push_back(sw.in_q(1, 1), 8);
+        pool.push_back(sw.out_q(0, 1), 9);
+        assert_eq!(sw.input_occupancy(&pool, 0), 0);
+        assert_eq!(sw.input_occupancy(&pool, 1), 2);
+        assert_eq!(sw.output_queued(&pool, 0), 1);
+        assert_eq!(sw.output_queued(&pool, 2), 0);
+    }
+
+    #[test]
+    fn view_has_space_folds_in_capacity_and_speedup() {
+        let mut pool = QueuePool::new();
+        let mut sw = tiny_switch(&mut pool, 2, 1, 1);
+        // Fill output queue 0 to its 5-packet capacity.
+        for i in 0..5 {
+            pool.push_back(sw.out_q(0, 0), i);
+        }
+        // Port 1: two grants already this cycle (speedup 2).
+        sw.grants_this_cycle[1] = 2;
+        sw.last_grant_cycle[1] = 42;
+        let view = SwitchView {
+            sw: 0,
+            degree: 2,
+            now: 42,
+            speedup: 2,
+            vcs: 1,
+            output_cap_pkts: 5,
+            occ_flits: &sw.occ_flits,
+            out_lens: pool.lens(sw.out_q0, sw.ports),
+            grants_this_cycle: &sw.grants_this_cycle,
+            last_grant_cycle: &sw.last_grant_cycle,
+        };
+        assert!(!view.has_space(0, 0), "full queue");
+        assert!(!view.has_space(1, 0), "speedup exhausted this cycle");
+        assert!(view.has_space(2, 0), "ejection port open");
     }
 }

@@ -1,0 +1,203 @@
+//! Overflow-safe hierarchical timing wheel.
+//!
+//! The original simulator used a single 64-slot wheel and could only
+//! schedule events strictly less than 64 cycles ahead — guarded by a
+//! `debug_assert` alone, so a release build with `link_latency + pkt_flits
+//! >= 64` silently aliased future events onto earlier cycles. This wheel
+//! makes overflow impossible:
+//!
+//! * **near** — 64 slots at 1-cycle resolution (the common case:
+//!   `link_latency + serialization` is a handful of cycles);
+//! * **far** — 64 slots at 64-cycle resolution; cascaded into `near` at
+//!   every 64-cycle epoch boundary;
+//! * **overflow** — an unsorted spill list for events ≥ 4096 cycles ahead,
+//!   rescanned at epoch boundaries (amortized: 1/64th of a scan per cycle,
+//!   and empty unless latencies are extreme).
+//!
+//! Events due at the same cycle pop in near-slot insertion order: direct
+//! schedules (dt < 64) append as they happen; far/overflow events append
+//! when their epoch cascades. The order is fully deterministic for a
+//! deterministic schedule sequence — which is what keeps the simulator's
+//! FIFO arrival semantics reproducible — but it is not global
+//! schedule-time order across wheel levels.
+
+/// Slots per level; also the cascade epoch length in cycles.
+pub const NEAR: usize = 64;
+
+/// A two-level hierarchical timing wheel with an overflow spill list.
+pub struct TimingWheel<T> {
+    near: Vec<Vec<(u64, T)>>,
+    far: Vec<Vec<(u64, T)>>,
+    overflow: Vec<(u64, T)>,
+    len: usize,
+}
+
+impl<T> Default for TimingWheel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> TimingWheel<T> {
+    pub fn new() -> Self {
+        Self {
+            near: (0..NEAR).map(|_| Vec::new()).collect(),
+            far: (0..NEAR).map(|_| Vec::new()).collect(),
+            overflow: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Events currently scheduled.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Schedule `ev` for cycle `when` (must be in the future).
+    pub fn schedule(&mut self, now: u64, when: u64, ev: T) {
+        debug_assert!(when > now, "events must be scheduled in the future");
+        self.len += 1;
+        self.place(now, when, ev);
+    }
+
+    fn place(&mut self, now: u64, when: u64, ev: T) {
+        let dt = when - now;
+        if dt < NEAR as u64 {
+            self.near[(when % NEAR as u64) as usize].push((when, ev));
+        } else if dt < (NEAR * NEAR) as u64 {
+            self.far[((when / NEAR as u64) % NEAR as u64) as usize].push((when, ev));
+        } else {
+            self.overflow.push((when, ev));
+        }
+    }
+
+    /// Pop every event due at exactly `now` into `out`. Must be called once
+    /// per cycle with monotonically non-decreasing `now`.
+    pub fn pop_due(&mut self, now: u64, out: &mut Vec<T>) {
+        if now % NEAR as u64 == 0 {
+            self.cascade(now);
+        }
+        let slot = (now % NEAR as u64) as usize;
+        for (when, ev) in self.near[slot].drain(..) {
+            debug_assert_eq!(when, now, "near slot holds only due events");
+            self.len -= 1;
+            out.push(ev);
+        }
+    }
+
+    /// Epoch boundary: re-dispatch the current far slot (all its events fall
+    /// inside the next 64 cycles) and any overflow events that have come
+    /// within range of the two wheel levels.
+    fn cascade(&mut self, now: u64) {
+        let slot = ((now / NEAR as u64) % NEAR as u64) as usize;
+        let due = std::mem::take(&mut self.far[slot]);
+        for (when, ev) in due {
+            debug_assert!(when >= now && when - now < NEAR as u64);
+            self.place(now, when, ev);
+        }
+        if !self.overflow.is_empty() {
+            let spill = std::mem::take(&mut self.overflow);
+            for (when, ev) in spill {
+                if when - now < (NEAR * NEAR) as u64 {
+                    self.place(now, when, ev);
+                } else {
+                    self.overflow.push((when, ev));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the wheel from cycle `start`, collecting (cycle, event) pops.
+    fn drain(w: &mut TimingWheel<u32>, start: u64, cycles: u64) -> Vec<(u64, u32)> {
+        let mut got = Vec::new();
+        let mut buf = Vec::new();
+        for now in start..start + cycles {
+            buf.clear();
+            w.pop_due(now, &mut buf);
+            for &ev in &buf {
+                got.push((now, ev));
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn near_events_fire_on_time() {
+        let mut w = TimingWheel::new();
+        w.schedule(0, 1, 1u32);
+        w.schedule(0, 63, 63);
+        w.schedule(0, 5, 5);
+        assert_eq!(w.len(), 3);
+        let got = drain(&mut w, 0, 64);
+        assert_eq!(got, vec![(1, 1), (5, 5), (63, 63)]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn far_events_cascade_exactly_once() {
+        let mut w = TimingWheel::new();
+        // dt = 64 (the first value the old single-level wheel corrupted),
+        // plus assorted points across the far range.
+        for &when in &[64u64, 65, 100, 127, 128, 4095] {
+            w.schedule(0, when, when as u32);
+        }
+        let got = drain(&mut w, 0, 4096);
+        let want: Vec<(u64, u32)> = [64u64, 65, 100, 127, 128, 4095]
+            .iter()
+            .map(|&x| (x, x as u32))
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn overflow_events_survive_multiple_epochs() {
+        let mut w = TimingWheel::new();
+        w.schedule(0, 4096, 1u32); // exactly the overflow boundary
+        w.schedule(0, 10_000, 2);
+        w.schedule(0, 123_456, 3);
+        let got = drain(&mut w, 0, 130_000);
+        assert_eq!(got, vec![(4096, 1), (10_000, 2), (123_456, 3)]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn scheduling_from_nonzero_now_and_mid_epoch() {
+        let mut w = TimingWheel::new();
+        let mut got = Vec::new();
+        let mut buf = Vec::new();
+        for now in 1000..1500u64 {
+            buf.clear();
+            w.pop_due(now, &mut buf);
+            for &ev in &buf {
+                got.push((now, ev));
+            }
+            if now == 1001 {
+                // Mid-epoch schedules landing in this and later epochs.
+                w.schedule(now, 1002, 10);
+                w.schedule(now, 1064, 11);
+                w.schedule(now, 1065, 12);
+                w.schedule(now, 1201, 13);
+            }
+        }
+        assert_eq!(got, vec![(1002, 10), (1064, 11), (1065, 12), (1201, 13)]);
+    }
+
+    #[test]
+    fn same_cycle_pops_in_insertion_order() {
+        let mut w = TimingWheel::new();
+        w.schedule(0, 10, 1u32);
+        w.schedule(0, 10, 2);
+        w.schedule(3, 10, 3);
+        let got = drain(&mut w, 0, 16);
+        assert_eq!(got, vec![(10, 1), (10, 2), (10, 3)]);
+    }
+}

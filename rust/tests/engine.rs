@@ -1,0 +1,206 @@
+//! Engine-level integration tests: the hierarchical-timing-wheel regression
+//! (long link latencies used to silently corrupt release builds), full-drain
+//! properties for every Full-mesh router on adversarial traffic, and
+//! determinism of the batch engine across sweep thread counts.
+
+use std::sync::Arc;
+
+use tera_net::config::spec::{routing_by_name, ExperimentSpec, TrafficSpec};
+use tera_net::engine::Engine;
+use tera_net::metrics::SimStats;
+use tera_net::sim::{Network, RunOpts, SimConfig};
+use tera_net::topology::full_mesh;
+use tera_net::traffic::{FixedWorkload, TrafficPattern};
+use tera_net::util::Rng;
+
+/// Run a fixed uniform burst on fm8 with an arbitrary link latency.
+fn run_with_link_latency(link_latency: u64, seed: u64) -> SimStats {
+    let topo = Arc::new(full_mesh(8));
+    let spc = 2;
+    let router = routing_by_name("min", topo.clone(), 54).unwrap();
+    let cfg = SimConfig {
+        servers_per_switch: spc,
+        seed,
+        link_latency,
+        // The watchdog must out-wait the longest in-flight gap.
+        watchdog_cycles: 20 * link_latency.max(1_000),
+        ..SimConfig::default()
+    };
+    let mut rng = Rng::derive(seed, 99);
+    // Complement pairs servers across switches, so every packet crosses at
+    // least one link and the link latency is visible in every sample.
+    let pat = TrafficPattern::by_name("complement", topo.n, spc, &mut rng).unwrap();
+    let mut wl = FixedWorkload::new(&pat, topo.n, spc, 20, &mut rng);
+    let mut net = Network::new(topo, router, cfg);
+    assert_eq!(net.active_switches(), 0, "idle network must have no active switches");
+    let stats = net
+        .run(
+            &mut wl,
+            &RunOpts {
+                max_cycles: 10_000_000,
+                ..RunOpts::default()
+            },
+        )
+        .expect("burst must drain");
+    assert_eq!(net.live_packets(), 0, "drained network must hold no packets");
+    stats
+}
+
+/// Regression for the timing-wheel overflow hazard: the old 64-slot wheel
+/// could only represent events < 64 cycles ahead (`link_latency +
+/// pkt_flits >= 64` aliased events onto earlier cycles in release builds).
+/// The hierarchical wheel must deliver every packet exactly once at any
+/// latency, including the far-wheel (100) and overflow (5000) tiers.
+#[test]
+fn long_link_latencies_are_exact() {
+    let baseline = run_with_link_latency(1, 42);
+    assert_eq!(baseline.delivered_packets, 8 * 2 * 20);
+    for latency in [63u64, 64, 100, 5000] {
+        let stats = run_with_link_latency(latency, 42);
+        assert_eq!(
+            stats.delivered_packets,
+            8 * 2 * 20,
+            "link_latency={latency}: packets lost or duplicated"
+        );
+        assert_eq!(stats.latency.count(), stats.delivered_packets);
+        // Longer wires must show up in the measured latency, not vanish:
+        // every packet crosses ≥ 1 link and ends with 16 cycles of tail
+        // serialization at the ejection port.
+        assert!(
+            stats.latency.min() >= latency + 16,
+            "link_latency={latency}: min latency {} below the physical floor",
+            stats.latency.min()
+        );
+        assert!(stats.finish_cycle > baseline.finish_cycle);
+    }
+}
+
+/// Every Full-mesh router of the evaluation, on both adversarial patterns.
+fn adversarial_specs(seed: u64) -> Vec<ExperimentSpec> {
+    let routings = [
+        "min", "valiant", "ugal", "omniwar", "brinr", "srinr", "tera-hx2", "tera-path",
+        "tera-hc", "tera-tree4",
+    ];
+    let mut specs = Vec::new();
+    for pattern in ["complement", "rsp"] {
+        for r in routings {
+            specs.push(ExperimentSpec {
+                name: format!("det-{pattern}-{r}"),
+                topology: "fm16".into(),
+                servers_per_switch: 8,
+                routing: r.into(),
+                traffic: TrafficSpec::Fixed {
+                    pattern: pattern.into(),
+                    packets_per_server: 40,
+                },
+                seed,
+                max_cycles: 5_000_000,
+                ..Default::default()
+            });
+        }
+    }
+    specs
+}
+
+/// Property: every router drains the fm16 adversarial burst (deadlock
+/// freedom through the engine path) with exact packet conservation.
+#[test]
+fn every_router_drains_adversarial_fm16() {
+    let results = Engine::new().run_batch(adversarial_specs(11));
+    for res in &results {
+        let stats = res
+            .stats
+            .as_ref()
+            .unwrap_or_else(|e| panic!("{} failed: {e}", res.spec.name));
+        assert_eq!(
+            stats.delivered_packets as usize,
+            16 * 8 * 40,
+            "{} lost packets",
+            res.spec.name
+        );
+        assert_eq!(stats.latency.count(), stats.delivered_packets);
+    }
+}
+
+/// Property: `finish_cycle` and `delivered_flits` are identical whether the
+/// sweep runs on 1 thread or N — each point derives every RNG stream from
+/// its own seed, so scheduling cannot leak into results.
+#[test]
+fn batch_results_identical_across_thread_counts() {
+    let one = Engine::with_threads(1).run_batch(adversarial_specs(7));
+    let many = Engine::with_threads(4).run_batch(adversarial_specs(7));
+    assert_eq!(one.len(), many.len());
+    for (a, b) in one.iter().zip(&many) {
+        assert_eq!(a.spec.name, b.spec.name);
+        let (sa, sb) = (a.stats.as_ref().unwrap(), b.stats.as_ref().unwrap());
+        assert_eq!(sa.finish_cycle, sb.finish_cycle, "{}", a.spec.name);
+        assert_eq!(sa.delivered_flits, sb.delivered_flits, "{}", a.spec.name);
+        assert_eq!(sa.delivered_packets, sb.delivered_packets, "{}", a.spec.name);
+        assert_eq!(
+            sa.injected_per_server, sb.injected_per_server,
+            "{}",
+            a.spec.name
+        );
+        assert_eq!(
+            sa.latency.percentile(99.0),
+            sb.latency.percentile(99.0),
+            "{}",
+            a.spec.name
+        );
+    }
+}
+
+/// The engine's single-run path and the batch path agree bit-for-bit with
+/// the spec's own convenience `run()` (three entry points, one engine).
+#[test]
+fn run_entry_points_agree() {
+    let spec = ExperimentSpec {
+        topology: "fm16".into(),
+        servers_per_switch: 4,
+        routing: "tera-hx2".into(),
+        traffic: TrafficSpec::Fixed {
+            pattern: "rsp".into(),
+            packets_per_server: 30,
+        },
+        seed: 23,
+        max_cycles: 5_000_000,
+        ..Default::default()
+    };
+    let direct = spec.run().unwrap();
+    let via_engine = Engine::single_threaded().run_one(&spec).unwrap();
+    let via_batch = Engine::with_threads(2).run_batch(vec![spec.clone(), spec.clone()]);
+    for other in [&via_engine]
+        .into_iter()
+        .chain(via_batch.iter().map(|r| r.stats.as_ref().unwrap()))
+    {
+        assert_eq!(direct.finish_cycle, other.finish_cycle);
+        assert_eq!(direct.delivered_flits, other.delivered_flits);
+        assert_eq!(direct.injected_per_server, other.injected_per_server);
+    }
+}
+
+/// Bernoulli (open-loop) runs stay deterministic too: the active-set engine
+/// must not make results depend on incidental worklist ordering.
+#[test]
+fn bernoulli_runs_are_reproducible() {
+    let spec = ExperimentSpec {
+        topology: "fm16".into(),
+        servers_per_switch: 8,
+        routing: "tera-hx2".into(),
+        traffic: TrafficSpec::Bernoulli {
+            pattern: "rsp".into(),
+            load: 0.6,
+            horizon: 8_000,
+        },
+        warmup: 2_000,
+        seed: 31,
+        ..Default::default()
+    };
+    let a = Engine::single_threaded().run_one(&spec).unwrap();
+    let b = Engine::single_threaded().run_one(&spec).unwrap();
+    assert_eq!(a.finish_cycle, b.finish_cycle);
+    assert_eq!(a.delivered_flits, b.delivered_flits);
+    assert_eq!(a.injected_per_server, b.injected_per_server);
+    assert_eq!(a.latency.percentile(99.9), b.latency.percentile(99.9));
+    assert!(a.delivered_packets > 0);
+}

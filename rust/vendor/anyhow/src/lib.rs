@@ -1,0 +1,261 @@
+//! Offline-compatible subset of the `anyhow` API.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides the pieces of `anyhow` the workspace actually uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Semantics follow upstream `anyhow`:
+//!
+//! * `Error` is a dynamic error with an optional context chain;
+//! * `Error` deliberately does **not** implement `std::error::Error`, which
+//!   is what lets the blanket `From<E: std::error::Error>` conversion coexist
+//!   with the reflexive `From<Error>` (the same coherence trick upstream
+//!   uses);
+//! * `{:#}` (alternate `Display`) renders the full cause chain inline;
+//!   `Debug` renders it as a `Caused by:` list (what `fn main() ->
+//!   Result<()>` prints on error).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+enum Repr {
+    /// A free-standing message (`anyhow!`, `bail!`, `Option` context).
+    Msg(String),
+    /// A wrapped concrete error.
+    Boxed(Box<dyn StdError + Send + Sync + 'static>),
+    /// A context layer over an inner error.
+    Context { msg: String, source: Box<Error> },
+}
+
+/// A dynamic error type with a context chain.
+pub struct Error {
+    repr: Repr,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            repr: Repr::Msg(message.to_string()),
+        }
+    }
+
+    /// Wrap a concrete error.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error {
+            repr: Repr::Boxed(Box::new(error)),
+        }
+    }
+
+    /// Add a context layer (outermost message wins in `Display`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            repr: Repr::Context {
+                msg: context.to_string(),
+                source: Box::new(self),
+            },
+        }
+    }
+
+    /// The messages of every layer, outermost first.
+    fn layers(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut cur = self;
+        loop {
+            match &cur.repr {
+                Repr::Msg(m) => {
+                    out.push(m.clone());
+                    return out;
+                }
+                Repr::Boxed(e) => {
+                    out.push(e.to_string());
+                    let mut src = e.source();
+                    while let Some(s) = src {
+                        out.push(s.to_string());
+                        src = s.source();
+                    }
+                    return out;
+                }
+                Repr::Context { msg, source } => {
+                    out.push(msg.clone());
+                    cur = source;
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let layers = self.layers();
+        if f.alternate() {
+            write!(f, "{}", layers.join(": "))
+        } else {
+            write!(f, "{}", layers[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let layers = self.layers();
+        write!(f, "{}", layers[0])?;
+        if layers.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &layers[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+mod private {
+    /// Sealed conversion into [`crate::Error`]: implemented for every
+    /// `std::error::Error` *and* for `Error` itself, so `.context()` works on
+    /// both `Result<T, E>` and `anyhow::Result<T>`.
+    pub trait ToError {
+        fn to_error(self) -> crate::Error;
+    }
+}
+use private::ToError;
+
+impl<E: StdError + Send + Sync + 'static> ToError for E {
+    fn to_error(self) -> Error {
+        Error::new(self)
+    }
+}
+
+impl ToError for Error {
+    fn to_error(self) -> Error {
+        self
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: ToError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.to_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.to_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond))
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_shows_outermost_and_alternate_shows_chain() {
+        let e = Error::new(io_err()).context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: disk on fire");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("disk on fire"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_works_on_result_option_and_anyhow_result() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: disk on fire");
+
+        let o: Option<i32> = None;
+        assert_eq!(format!("{}", o.context("missing").unwrap_err()), "missing");
+
+        let a: Result<()> = Err(anyhow!("inner"));
+        let e = a.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer 1: inner");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        assert_eq!(format!("{}", f(101).unwrap_err()), "too big: 101");
+    }
+}
