@@ -6,6 +6,12 @@
 //!     and idle components must cost zero (DESIGN.md, "Active-set
 //!     invariants"). This is the number the active-set refactor is gated
 //!     on (≥ 2× over the scan-everything engine);
+//!   * **routing-table build cost** and **route throughput**: time to
+//!     compile the `RoutingTables`/`HxTables` layer, then raw
+//!     `Router::route` decisions/s driven over synthetic switch views on
+//!     FM64 and HX[8x8] — with a counting global allocator asserting
+//!     ZERO heap allocations across the measured decisions (the
+//!     table-driven-core acceptance gate);
 //!   * saturated Mcycles/s and packet throughput of `Network::step` on the
 //!     Fig-7 RSP workload (the end-to-end hot path);
 //!   * routing decisions/second per algorithm (allocation inner loop);
@@ -15,12 +21,44 @@
 //! Before/after numbers across optimization iterations are recorded in
 //! DESIGN.md §Perf.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use tera_net::config::spec::{routing_by_name, topology_by_name, ExperimentSpec, TrafficSpec};
 use tera_net::engine::Engine;
-use tera_net::sim::{Network, RunOpts, SimConfig};
-use tera_net::util::Timer;
+use tera_net::routing::{CandidateBuf, HxTables, RoutingTables};
+use tera_net::service::{HyperXService, ServiceTopology};
+use tera_net::sim::packet::{Packet, NO_SWITCH};
+use tera_net::sim::{Network, RunOpts, SimConfig, SwitchView};
+use tera_net::topology::TopoKind;
+use tera_net::util::{Rng, Timer};
+
+/// Counting allocator: wraps the system allocator and counts allocation
+/// events, so the route-throughput section can *prove* the zero-allocation
+/// claim of the table-driven routing core rather than assert it in prose.
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn bernoulli_spec(
     topo: &str,
@@ -100,7 +138,123 @@ fn decision_rate(routing: &str) -> f64 {
     hops / t.elapsed_secs()
 }
 
+/// Raw `Router::route` throughput over synthetic views: decisions/s plus
+/// the number of allocator events observed across the measured window
+/// (must be zero — candidate sets live in the reused `CandidateBuf`).
+fn route_throughput(host: &str, routing: &str, iters: usize) -> (f64, u64) {
+    let topo = Arc::new(topology_by_name(host).unwrap());
+    let router = routing_by_name(routing, topo.clone(), 54).unwrap();
+    let n = topo.n;
+    let vcs = router.num_vcs();
+    let degree = topo.max_degree(); // FM and square HyperX are regular
+    let spc = 8;
+    let ports = degree + spc;
+    let mut rng = Rng::new(0xBE7C);
+    let occ: Vec<u32> = (0..ports).map(|i| ((i * 37) % 160) as u32).collect();
+    let out_lens: Vec<u32> = (0..ports * vcs).map(|i| ((i * 13) % 5) as u32).collect();
+    let grants = vec![0u8; ports];
+    let last = vec![u64::MAX; ports];
+    let mut pkt = Packet {
+        src_server: 0,
+        dst_server: 0,
+        src_sw: 0,
+        dst_sw: 1,
+        intermediate: NO_SWITCH,
+        hops: 0,
+        vc: 0,
+        scratch: 0,
+        blocked: 0,
+        gen_cycle: 0,
+        inject_cycle: 0,
+        flits: 16,
+    };
+    let is_hx = matches!(topo.kind, TopoKind::HyperX { .. });
+    let mut buf = CandidateBuf::new();
+    let mut sink = 0usize;
+    let mut run = |iters: usize, rng: &mut Rng, sink: &mut usize| {
+        for i in 0..iters {
+            let s = i % n;
+            let mut d = (i * 7 + 1) % n;
+            if d == s {
+                d = (d + 1) % n;
+            }
+            pkt.src_sw = s as u32;
+            pkt.dst_sw = d as u32;
+            pkt.intermediate = NO_SWITCH;
+            pkt.hops = 0;
+            pkt.blocked = 0;
+            // Alternate injection/transit decisions to cover both paths.
+            // The 2D-HyperX routers track transit through scratch bits
+            // (order chosen + both dimension hops taken) rather than the
+            // `at_injection` flag.
+            let transit = i % 2 == 1;
+            let at_injection = if is_hx { true } else { !transit };
+            pkt.scratch = if is_hx && transit { 0b111 } else { 0 };
+            let view = SwitchView::from_raw(
+                s, degree, 1, 2, vcs, 5, &occ, &out_lens, &grants, &last,
+            );
+            if let Some((p, _vc)) = router.route(&view, &mut pkt, at_injection, rng, &mut buf) {
+                *sink += p;
+            }
+        }
+    };
+    // Warmup grows the candidate buffer to its steady-state capacity.
+    run(2_000, &mut rng, &mut sink);
+    let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+    let t = Timer::start();
+    run(iters, &mut rng, &mut sink);
+    let secs = t.elapsed_secs();
+    let allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+    std::hint::black_box(sink);
+    (iters as f64 / secs, allocs)
+}
+
 fn main() {
+    // ---- Routing-table build + route throughput (table-driven core). ----
+    println!("== routing tables: build cost + route throughput ==\n");
+    {
+        let t = Timer::start();
+        let fm = Arc::new(topology_by_name("fm64").unwrap());
+        let svc: Arc<dyn ServiceTopology> = Arc::new(HyperXService::square(64).unwrap());
+        let tables = RoutingTables::compile(fm, Some(svc));
+        println!(
+            "build fm64 + hx2 service   {:>8.3} ms (p = {:.3})",
+            t.elapsed_ms(),
+            tables.main_ratio()
+        );
+        let t = Timer::start();
+        let hx_host = Arc::new(topology_by_name("hx8x8").unwrap());
+        let sub: Arc<dyn ServiceTopology> = Arc::new(HyperXService::hypercube(8).unwrap());
+        let hx = HxTables::with_service(hx_host, sub);
+        println!(
+            "build hx8x8 per-dim tables {:>8.3} ms (sub-diameter {})",
+            t.elapsed_ms(),
+            hx.sub_diameter()
+        );
+        let t = Timer::start();
+        let fm300 = Arc::new(topology_by_name("fm300").unwrap());
+        let _tables300 = RoutingTables::compile(fm300, None);
+        println!("build fm300 min-port only  {:>8.3} ms", t.elapsed_ms());
+    }
+    println!();
+    println!("{:<22} {:>14} {:>12}", "router@host", "Mdecisions/s", "allocs");
+    let iters = 2_000_000;
+    for (host, routing) in [
+        ("fm64", "tera-hx2"),
+        ("fm64", "srinr"),
+        ("fm64", "min"),
+        ("hx8x8", "dor-tera"),
+        ("hx8x8", "o1turn-tera"),
+    ] {
+        let (dps, allocs) = route_throughput(host, routing, iters);
+        println!("{:<22} {:>14.2} {:>12}", format!("{routing}@{host}"), dps / 1e6, allocs);
+        assert_eq!(
+            allocs, 0,
+            "{routing}@{host}: Router::route allocated on the hot path"
+        );
+    }
+    println!("zero-allocation route path: VERIFIED (counting allocator)\n");
+
     // ---- Idle-heavy: the active-set acceptance workload. ----
     // fm32 × 8 servers at very low uniform load: a handful of packets in
     // flight, the overwhelming majority of the 32 switches idle on any

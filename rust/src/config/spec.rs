@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use super::Value;
 use crate::metrics::SimStats;
-use crate::routing::{self, Router};
+use crate::routing::{self, HxTables, Router, RoutingTables};
 use crate::sim::{Network, SimError};
 use crate::topology::{full_mesh, hyperx, PhysTopology};
 use crate::traffic::kernels::Mapping;
@@ -93,42 +93,53 @@ pub fn topology_by_name(name: &str) -> anyhow::Result<PhysTopology> {
     anyhow::bail!("unknown topology '{name}' (expected fm<N> or hx<A>x<B>)")
 }
 
-/// Build a router by figure-name.
+/// Build a router by figure-name. Every name resolves to a *table
+/// builder*: the spec layer compiles the appropriate
+/// [`RoutingTables`]/[`HxTables`] once, and the router is constructed as a
+/// thin policy over them (see `routing::tables`).
 ///
 /// Full-mesh: `min`, `valiant`, `ugal`, `omniwar`, `brinr`, `srinr`,
 /// `tera-path`, `tera-mesh2`, `tera-tree2`, `tera-tree4`, `tera-hc`,
 /// `tera-hx2`, `tera-hx3`.
-/// 2D-HyperX: `min`, `omniwar-hx`, `dimwar`, `dor-tera`, `o1turn-tera`.
+/// 2D-HyperX: `min`, `omniwar-hx`, `dimwar`, `dor-tera`, `o1turn-tera` —
+/// plus any `tera-<svc>` whose service edges the host contains (the
+/// `--host` knob; e.g. `tera-mesh2` on `hx4x4`).
 pub fn routing_by_name(
     name: &str,
     topo: Arc<PhysTopology>,
     q: u32,
 ) -> anyhow::Result<Arc<dyn Router>> {
     let lower = name.to_ascii_lowercase();
+    let plain_tables = |topo| Arc::new(RoutingTables::compile(topo, None));
     Ok(match lower.as_str() {
-        "min" => Arc::new(routing::MinRouter::new(topo)),
-        "valiant" => Arc::new(routing::ValiantRouter::new(topo)),
-        "ugal" => Arc::new(routing::UgalRouter::new(topo)),
-        "omniwar" | "omni-war" => Arc::new(routing::OmniWarRouter::new(topo)),
+        "min" => Arc::new(routing::MinRouter::new(plain_tables(topo))),
+        "valiant" => Arc::new(routing::ValiantRouter::new(plain_tables(topo))),
+        "ugal" => Arc::new(routing::UgalRouter::new(plain_tables(topo))),
+        "omniwar" | "omni-war" => Arc::new(routing::OmniWarRouter::new(plain_tables(topo))),
         "brinr" => Arc::new(routing::LinkOrderRouter::brinr(topo, q)),
         "srinr" => Arc::new(routing::LinkOrderRouter::srinr(topo, q)),
-        "omniwar-hx" => Arc::new(routing::OmniWarHxRouter::new(topo)),
-        "dimwar" | "dim-war" => Arc::new(routing::DimWarRouter::new(topo)),
+        "omniwar-hx" => Arc::new(routing::OmniWarHxRouter::new(Arc::new(
+            HxTables::geometry(topo),
+        ))),
+        "dimwar" | "dim-war" => Arc::new(routing::DimWarRouter::new(Arc::new(
+            HxTables::geometry(topo),
+        ))),
         "dor-tera" | "dor-tera-hx3" => {
-            let a = sub_fm_size(&topo)?;
-            let svc = sub_service(a)?;
-            Arc::new(routing::DorTeraRouter::new(topo, svc, q))
+            let svc = sub_service(sub_fm_size(&topo)?)?;
+            let hx = Arc::new(HxTables::with_service(topo, svc));
+            Arc::new(routing::DorTeraRouter::new(hx, q))
         }
         "o1turn-tera" | "o1turn-tera-hx3" => {
-            let a = sub_fm_size(&topo)?;
-            let svc = sub_service(a)?;
-            Arc::new(routing::O1TurnTeraRouter::new(topo, svc, q))
+            let svc = sub_service(sub_fm_size(&topo)?)?;
+            let hx = Arc::new(HxTables::with_service(topo, svc));
+            Arc::new(routing::O1TurnTeraRouter::new(hx, q))
         }
         _ => {
             if let Some(svc_name) = lower.strip_prefix("tera-") {
                 let svc: Arc<dyn crate::service::ServiceTopology> =
                     Arc::from(crate::service::by_name(svc_name, topo.n)?);
-                Arc::new(routing::TeraRouter::new(topo, svc, q))
+                let tables = Arc::new(RoutingTables::compile(topo, Some(svc)));
+                Arc::new(routing::TeraRouter::from_tables(tables, q))
             } else {
                 anyhow::bail!("unknown routing '{name}'")
             }
@@ -190,6 +201,12 @@ impl ExperimentSpec {
             spec.name = s;
         }
         if let Some(s) = get_str("topology") {
+            spec.topology = s;
+        }
+        // `host` is an alias for `topology`, named for the TERA-on-any-host
+        // scenarios (`host = "hx8x8"` with `routing = "tera-hx2"`); it wins
+        // when both are given.
+        if let Some(s) = get_str("host") {
             spec.topology = s;
         }
         if let Some(i) = get_int("servers_per_switch") {
@@ -276,6 +293,34 @@ mod tests {
             let router = routing_by_name(r, topo, 54).unwrap();
             assert!(!router.name().is_empty(), "{r}");
         }
+    }
+
+    #[test]
+    fn tera_constructs_on_hyperx_hosts() {
+        // The `--host` scenarios: any tera-<svc> whose service edges the
+        // host contains. mesh2/hx2 edges are dimension-aligned, so an
+        // hx<a>x<a> host embeds them.
+        let cases = [
+            ("hx4x4", "tera-mesh2"),
+            ("hx4x4", "tera-hx2"),
+            ("hx8x8", "tera-mesh2"),
+        ];
+        for (host, r) in cases {
+            let topo = Arc::new(topology_by_name(host).unwrap());
+            let router = routing_by_name(r, topo, 54).unwrap();
+            assert_eq!(router.num_vcs(), 1, "{host}/{r}");
+        }
+    }
+
+    #[test]
+    fn host_key_overrides_topology() {
+        let cfg = crate::config::parse(
+            "topology = \"fm16\"\nhost = \"hx4x4\"\nrouting = \"tera-mesh2\"\n",
+        )
+        .unwrap();
+        let spec = ExperimentSpec::from_value(&cfg).unwrap();
+        assert_eq!(spec.topology, "hx4x4");
+        assert_eq!(spec.routing, "tera-mesh2");
     }
 
     #[test]

@@ -7,7 +7,12 @@
 //! Now everything funnels through [`Engine`]:
 //!
 //! * [`Engine::build`] — materialize an [`Instance`] (network + workload +
-//!   run options) from an [`ExperimentSpec`];
+//!   run options) from an [`ExperimentSpec`]. Construction compiles the
+//!   routing state up front: spec names resolve to table builders
+//!   (`config::spec::routing_by_name` → `routing::tables`), so the per-
+//!   cycle route path is O(1) flat-array reads over a pre-built
+//!   `RoutingTables`/`HxTables` and a reused `CandidateBuf` — never a
+//!   trait call into the service topology;
 //! * [`Engine::run_one`] — build and run a single spec;
 //! * [`Engine::run_batch`] — fan a batch out over worker threads (tokio is
 //!   not in the offline crate set; std threads are a perfect fit for
@@ -83,7 +88,9 @@ pub fn build_workload(
     })
 }
 
-/// Build the simulator network for a spec.
+/// Build the simulator network for a spec. This is where the routing
+/// tables get compiled (inside `routing_by_name`): all per-`(switch, dst)`
+/// routing state is flattened here, once, before the first cycle runs.
 pub fn build_network(spec: &ExperimentSpec) -> anyhow::Result<Network> {
     let topo = Arc::new(topology_by_name(&spec.topology)?);
     let router = routing_by_name(&spec.routing, topo.clone(), spec.q)?;

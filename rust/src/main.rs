@@ -92,7 +92,14 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     };
     let spec = ExperimentSpec {
         name: "cli-run".into(),
-        topology: args.get_or("topology", "fm16").into(),
+        // `--host` is an alias for `--topology`, named for the TERA-on-any-
+        // host scenarios (`--routing tera-hx2 --host hx8x8`); it wins when
+        // both are given.
+        topology: args
+            .get("host")
+            .or_else(|| args.get("topology"))
+            .unwrap_or("fm16")
+            .into(),
         servers_per_switch: args.get_usize("spc", 4)?,
         routing: args.get_or("routing", "tera-hx2").into(),
         q: args.get_usize("q", 54)? as u32,
@@ -277,6 +284,9 @@ COMMANDS:
 RUN FLAGS:
   --topology fm64|hx8x8   --routing min|valiant|ugal|omniwar|brinr|srinr|
                           tera-<svc>|dor-tera|o1turn-tera|dimwar|omniwar-hx
+  --host fm64|hx8x8       alias for --topology: run a TERA variant on either
+                          host, e.g. --routing tera-mesh2 --host hx8x8
+                          (any tera-<svc> whose edges the host contains)
   --mode bernoulli|fixed|kernel    --pattern uniform|rsp|fr|shift|complement
   --load 0.5 --horizon 20000       (bernoulli)
   --packets 100                    (fixed)

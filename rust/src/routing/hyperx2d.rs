@@ -19,17 +19,25 @@
 //!   [Seo et al., O1TURN]; each order runs DOR-TERA with one VC per
 //!   dimension rank.
 //!
+//! All four are thin policies over [`HxTables`] — per-dimension port rows,
+//! service escape ports and main sets compiled at construction — and the
+//! TERA variants share the Full-mesh router's Algorithm-1 escape core
+//! ([`TeraCore`]): one implementation of the §4 weighting/candidate logic
+//! for both hosts.
+//!
 //! Scratch bit layout (`Packet::scratch`, owned by these routers):
 //! bit0/bit1 — took a hop in dim 0/1 (dim-local injection detection and
 //! deroute-once bookkeeping); bit2 — O1TURN order chosen; bit3 — order is YX.
 
 use std::sync::Arc;
 
-use super::{select_min_weight, select_weighted_or_escape, Decision, Router};
-use crate::service::{Embedding, ServiceTopology};
+use super::tera::ESCAPE_PATIENCE;
+use super::{
+    select_min_weight, select_weighted_or_escape, CandidateBuf, Decision, HxTables, Router,
+    TeraCore,
+};
 use crate::sim::packet::Packet;
 use crate::sim::SwitchView;
-use crate::topology::{full_mesh, PhysTopology, TopoKind};
 use crate::util::Rng;
 
 const HOP_D0: u32 = 1 << 0;
@@ -37,72 +45,18 @@ const HOP_D1: u32 = 1 << 1;
 const ORDER_SET: u32 = 1 << 2;
 const ORDER_YX: u32 = 1 << 3;
 
-/// Shared geometry of an `a × a` HyperX.
-struct Geom {
-    a: usize,
-}
-
-impl Geom {
-    fn of(topo: &PhysTopology) -> Self {
-        match &topo.kind {
-            TopoKind::HyperX { dims } if dims.len() == 2 && dims[0] == dims[1] => {
-                Self { a: dims[0] }
-            }
-            _ => panic!("this router requires a square 2D-HyperX"),
-        }
-    }
-
-    #[inline]
-    fn xy(&self, id: usize) -> (usize, usize) {
-        (id % self.a, id / self.a)
-    }
-
-    /// Switch id at (x, y).
-    #[inline]
-    fn id(&self, x: usize, y: usize) -> usize {
-        y * self.a + x
-    }
-
-    /// Switch reached from `cur` by moving along `dim` to coordinate `v`.
-    #[inline]
-    fn along(&self, cur: usize, dim: usize, v: usize) -> usize {
-        let (x, y) = self.xy(cur);
-        if dim == 0 {
-            self.id(v, y)
-        } else {
-            self.id(x, v)
-        }
-    }
-
-    /// Coordinate of `id` in `dim`.
-    #[inline]
-    fn coord(&self, id: usize, dim: usize) -> usize {
-        if dim == 0 {
-            id % self.a
-        } else {
-            id / self.a
-        }
-    }
-}
-
 // --------------------------------------------------------------------------
 // Omni-WAR (4 VCs)
 // --------------------------------------------------------------------------
 
 pub struct OmniWarHxRouter {
-    topo: Arc<PhysTopology>,
-    geom: Geom,
+    hx: Arc<HxTables>,
     pub bias: u32,
 }
 
 impl OmniWarHxRouter {
-    pub fn new(topo: Arc<PhysTopology>) -> Self {
-        let geom = Geom::of(&topo);
-        Self {
-            topo,
-            geom,
-            bias: 16,
-        }
+    pub fn new(hx: Arc<HxTables>) -> Self {
+        Self { hx, bias: 16 }
     }
 }
 
@@ -117,41 +71,37 @@ impl Router for OmniWarHxRouter {
         pkt: &mut Packet,
         _at_injection: bool,
         rng: &mut Rng,
+        buf: &mut CandidateBuf,
     ) -> Option<Decision> {
         let cur = view.sw;
         let dst = pkt.dst_sw as usize;
         let vc = (pkt.hops as usize).min(3);
-        let mut cands: Vec<(usize, usize, u32)> = Vec::with_capacity(2 * self.geom.a);
+        buf.clear();
         for dim in 0..2 {
-            let c = self.geom.coord(cur, dim);
-            let t = self.geom.coord(dst, dim);
+            let c = self.hx.coord(cur, dim);
+            let t = self.hx.coord(dst, dim);
             if c == t {
                 continue;
             }
+            let row = self.hx.dim_row(cur, dim);
             // Minimal hop in this dimension.
-            let min_port = self
-                .topo
-                .port_to(cur, self.geom.along(cur, dim, t))
-                .unwrap();
-            cands.push((min_port, vc, view.occ_flits(min_port)));
+            let min_port = row[t] as usize;
+            buf.push(min_port, vc, view.occ_flits(min_port));
             // Deroutes: at most one per dimension per packet.
             let hop_bit = if dim == 0 { HOP_D0 } else { HOP_D1 };
             if pkt.scratch & hop_bit == 0 {
-                for v in 0..self.geom.a {
+                for (v, &p) in row.iter().enumerate() {
                     if v != c && v != t {
-                        let p = self
-                            .topo
-                            .port_to(cur, self.geom.along(cur, dim, v))
-                            .unwrap();
-                        cands.push((p, vc, 2 * view.occ_flits(p) + self.bias));
+                        let p = p as usize;
+                        buf.push(p, vc, 2 * view.occ_flits(p) + self.bias);
                     }
                 }
             }
         }
-        let pick = select_min_weight(view, &cands, rng)?;
+        let pick = select_min_weight(view, buf.as_slice(), rng)?;
         // Record which dimension the chosen hop advances.
-        let to = self.topo.neighbor(cur, pick.0);
-        let dim = if self.geom.coord(to, 0) != self.geom.coord(cur, 0) {
+        let to = self.hx.topo().neighbor(cur, pick.0);
+        let dim = if self.hx.coord(to, 0) != self.hx.coord(cur, 0) {
             0
         } else {
             1
@@ -174,19 +124,13 @@ impl Router for OmniWarHxRouter {
 // --------------------------------------------------------------------------
 
 pub struct DimWarRouter {
-    topo: Arc<PhysTopology>,
-    geom: Geom,
+    hx: Arc<HxTables>,
     pub bias: u32,
 }
 
 impl DimWarRouter {
-    pub fn new(topo: Arc<PhysTopology>) -> Self {
-        let geom = Geom::of(&topo);
-        Self {
-            topo,
-            geom,
-            bias: 16,
-        }
+    pub fn new(hx: Arc<HxTables>) -> Self {
+        Self { hx, bias: 16 }
     }
 }
 
@@ -201,41 +145,37 @@ impl Router for DimWarRouter {
         pkt: &mut Packet,
         _at_injection: bool,
         rng: &mut Rng,
+        buf: &mut CandidateBuf,
     ) -> Option<Decision> {
         let cur = view.sw;
         let dst = pkt.dst_sw as usize;
         // Strict XY order: work on dim 0 until aligned, then dim 1.
-        let dim = if self.geom.coord(cur, 0) != self.geom.coord(dst, 0) {
+        let dim = if self.hx.coord(cur, 0) != self.hx.coord(dst, 0) {
             0
         } else {
             1
         };
-        debug_assert!(self.geom.coord(cur, dim) != self.geom.coord(dst, dim));
+        debug_assert!(self.hx.coord(cur, dim) != self.hx.coord(dst, dim));
         let hop_bit = if dim == 0 { HOP_D0 } else { HOP_D1 };
         let derouted = pkt.scratch & hop_bit != 0;
         // Hop-indexed VC inside the dimension: first hop (minimal or
         // deroute) on VC0, the post-deroute hop on VC1.
         let vc = usize::from(derouted);
-        let c = self.geom.coord(cur, dim);
-        let t = self.geom.coord(dst, dim);
-        let min_port = self
-            .topo
-            .port_to(cur, self.geom.along(cur, dim, t))
-            .unwrap();
-        let mut cands: Vec<(usize, usize, u32)> = Vec::with_capacity(self.geom.a);
-        cands.push((min_port, vc, view.occ_flits(min_port)));
+        let c = self.hx.coord(cur, dim);
+        let t = self.hx.coord(dst, dim);
+        let row = self.hx.dim_row(cur, dim);
+        let min_port = row[t] as usize;
+        buf.clear();
+        buf.push(min_port, vc, view.occ_flits(min_port));
         if !derouted {
-            for v in 0..self.geom.a {
+            for (v, &p) in row.iter().enumerate() {
                 if v != c && v != t {
-                    let p = self
-                        .topo
-                        .port_to(cur, self.geom.along(cur, dim, v))
-                        .unwrap();
-                    cands.push((p, vc, 2 * view.occ_flits(p) + self.bias));
+                    let p = p as usize;
+                    buf.push(p, vc, 2 * view.occ_flits(p) + self.bias);
                 }
             }
         }
-        let pick = select_min_weight(view, &cands, rng)?;
+        let pick = select_min_weight(view, buf.as_slice(), rng)?;
         pkt.scratch |= hop_bit;
         Some(pick)
     }
@@ -253,114 +193,60 @@ impl Router for DimWarRouter {
 // DOR-TERA and O1TURN-TERA (the §6.5 proposals)
 // --------------------------------------------------------------------------
 
-/// TERA machinery for one `FM_a` sub-network (a row or column), shared by
-/// [`DorTeraRouter`] and [`O1TurnTeraRouter`].
-struct SubTera {
-    a: usize,
-    svc: Arc<dyn ServiceTopology>,
-    /// Service next-hop node: `svc_next[cur * a + dst]`.
-    svc_next: Vec<u8>,
-    /// Main-topology peers of each node within the sub-FM.
-    main_peers: Vec<Vec<u8>>,
-    q: u32,
-}
-
-impl SubTera {
-    fn new(a: usize, svc: Arc<dyn ServiceTopology>, q: u32) -> Self {
-        assert_eq!(svc.n(), a, "sub-service must span the row/column FM");
-        // Validate the embedding against an abstract FM_a (also checks the
-        // service edges are legal).
-        let fm = full_mesh(a);
-        let emb = Embedding::new(&fm, svc.as_ref());
-        let mut svc_next = vec![0u8; a * a];
-        for cur in 0..a {
-            for dst in 0..a {
-                if cur != dst {
-                    svc_next[cur * a + dst] = svc.next_hop(cur, dst) as u8;
-                }
-            }
-        }
-        let main_peers = (0..a)
-            .map(|u| {
-                (0..a)
-                    .filter(|&v| v != u && !emb.is_service(u, v))
-                    .map(|v| v as u8)
-                    .collect()
-            })
-            .collect();
-        Self {
-            a,
-            svc,
-            svc_next,
-            main_peers,
-            q,
-        }
-    }
-
-    /// Algorithm-1 candidates inside one dimension. Returns the service
-    /// escape `(port, vc)` for [`select_weighted_or_escape`].
-    ///
-    /// `cur_node`/`dst_node` are coordinates within the sub-FM;
-    /// `port_of(node)` maps a sub-FM node to a physical output port;
-    /// `at_dim_injection` is true until the packet's first hop in this
-    /// dimension.
-    fn candidates(
-        &self,
-        view: &SwitchView,
-        cur_node: usize,
-        dst_node: usize,
-        vc: usize,
-        at_dim_injection: bool,
-        port_of: impl Fn(usize) -> usize,
-        out: &mut Vec<(usize, usize, u32)>,
-    ) -> (usize, usize) {
-        let svc_hop = self.svc_next[cur_node * self.a + dst_node] as usize;
-        let weight = |node: usize, port: usize| -> u32 {
-            if node == dst_node {
-                view.occ_flits(port)
-            } else {
-                view.occ_flits(port) + self.q
-            }
-        };
-        let sp = port_of(svc_hop);
-        out.push((sp, vc, weight(svc_hop, sp)));
-        if at_dim_injection {
-            for &v in &self.main_peers[cur_node] {
-                let v = v as usize;
-                let p = port_of(v);
-                out.push((p, vc, weight(v, p)));
-            }
-        } else if svc_hop != dst_node {
-            let dp = port_of(dst_node);
-            out.push((dp, vc, weight(dst_node, dp)));
-        }
-        (sp, vc)
-    }
-
-    fn max_hops_per_dim(&self) -> usize {
-        1 + self.svc.diameter()
-    }
+/// One per-dimension TERA decision, shared by [`DorTeraRouter`] and
+/// [`O1TurnTeraRouter`]: Algorithm 1 inside the current dimension's
+/// `FM_a`, with the sub-service escape and the patience gate — the same
+/// [`TeraCore`] the Full-mesh [`super::TeraRouter`] uses.
+#[allow(clippy::too_many_arguments)]
+fn route_in_dim(
+    core: &TeraCore,
+    hx: &HxTables,
+    view: &SwitchView,
+    pkt: &mut Packet,
+    dim: usize,
+    vc: usize,
+    rng: &mut Rng,
+    buf: &mut CandidateBuf,
+) -> Option<Decision> {
+    let cur = view.sw;
+    let dst = pkt.dst_sw as usize;
+    debug_assert!(hx.coord(cur, dim) != hx.coord(dst, dim));
+    let hop_bit = if dim == 0 { HOP_D0 } else { HOP_D1 };
+    let at_dim_injection = pkt.scratch & hop_bit == 0;
+    let t = hx.coord(dst, dim);
+    let svc_p = hx.svc_port(cur, dim, t);
+    let direct = hx.dim_port(cur, dim, t);
+    buf.clear();
+    let escape = core.push_candidates(
+        view,
+        buf,
+        vc,
+        svc_p,
+        Some(direct),
+        at_dim_injection.then(|| hx.main_ports(cur, dim)),
+    );
+    let escape = (pkt.blocked >= ESCAPE_PATIENCE).then_some(escape);
+    let pick = select_weighted_or_escape(view, buf.as_slice(), escape, rng)?;
+    pkt.scratch |= hop_bit;
+    Some(pick)
 }
 
 /// DOR-TERA: TERA inside each dimension's Full-mesh, dimensions in XY
 /// order, one VC total.
 pub struct DorTeraRouter {
-    topo: Arc<PhysTopology>,
-    geom: Geom,
-    sub: SubTera,
+    hx: Arc<HxTables>,
+    core: TeraCore,
     name: String,
 }
 
 impl DorTeraRouter {
-    /// `sub_svc` is the service topology embedded in every row/column FM_a
-    /// (paper: HX3 = 2×2×2 hypercube for a = 8).
-    pub fn new(topo: Arc<PhysTopology>, sub_svc: Arc<dyn ServiceTopology>, q: u32) -> Self {
-        let geom = Geom::of(&topo);
-        let sub = SubTera::new(geom.a, sub_svc, q);
+    /// `hx` must be compiled with the service topology embedded in every
+    /// row/column FM_a (paper: HX3 = 2×2×2 hypercube for a = 8).
+    pub fn new(hx: Arc<HxTables>, q: u32) -> Self {
+        assert!(hx.service().is_some(), "DOR-TERA needs a sub-service");
         Self {
-            topo,
-            geom,
-            sub,
+            hx,
+            core: TeraCore::new(q),
             name: "DOR-TERA-HX3".into(),
         }
     }
@@ -377,36 +263,16 @@ impl Router for DorTeraRouter {
         pkt: &mut Packet,
         _at_injection: bool,
         rng: &mut Rng,
+        buf: &mut CandidateBuf,
     ) -> Option<Decision> {
         let cur = view.sw;
         let dst = pkt.dst_sw as usize;
-        let dim = if self.geom.coord(cur, 0) != self.geom.coord(dst, 0) {
+        let dim = if self.hx.coord(cur, 0) != self.hx.coord(dst, 0) {
             0
         } else {
             1
         };
-        let hop_bit = if dim == 0 { HOP_D0 } else { HOP_D1 };
-        let at_dim_injection = pkt.scratch & hop_bit == 0;
-        let cur_node = self.geom.coord(cur, dim);
-        let dst_node = self.geom.coord(dst, dim);
-        let mut cands = Vec::with_capacity(self.geom.a);
-        let escape = self.sub.candidates(
-            view,
-            cur_node,
-            dst_node,
-            0,
-            at_dim_injection,
-            |node| {
-                self.topo
-                    .port_to(cur, self.geom.along(cur, dim, node))
-                    .unwrap()
-            },
-            &mut cands,
-        );
-        let escape = (pkt.blocked >= crate::routing::tera::ESCAPE_PATIENCE).then_some(escape);
-        let pick = select_weighted_or_escape(view, &cands, escape, rng)?;
-        pkt.scratch |= hop_bit;
-        Some(pick)
+        route_in_dim(&self.core, &self.hx, view, pkt, dim, 0, rng, buf)
     }
 
     fn name(&self) -> String {
@@ -414,27 +280,24 @@ impl Router for DorTeraRouter {
     }
 
     fn max_hops(&self) -> usize {
-        2 * self.sub.max_hops_per_dim()
+        2 * (1 + self.hx.sub_diameter())
     }
 }
 
 /// O1TURN-TERA: DOR-TERA under a per-packet random XY/YX order, one VC per
 /// dimension rank (2 total).
 pub struct O1TurnTeraRouter {
-    topo: Arc<PhysTopology>,
-    geom: Geom,
-    sub: SubTera,
+    hx: Arc<HxTables>,
+    core: TeraCore,
     name: String,
 }
 
 impl O1TurnTeraRouter {
-    pub fn new(topo: Arc<PhysTopology>, sub_svc: Arc<dyn ServiceTopology>, q: u32) -> Self {
-        let geom = Geom::of(&topo);
-        let sub = SubTera::new(geom.a, sub_svc, q);
+    pub fn new(hx: Arc<HxTables>, q: u32) -> Self {
+        assert!(hx.service().is_some(), "O1TURN-TERA needs a sub-service");
         Self {
-            topo,
-            geom,
-            sub,
+            hx,
+            core: TeraCore::new(q),
             name: "O1TURN-TERA-HX3".into(),
         }
     }
@@ -451,6 +314,7 @@ impl Router for O1TurnTeraRouter {
         pkt: &mut Packet,
         at_injection: bool,
         rng: &mut Rng,
+        buf: &mut CandidateBuf,
     ) -> Option<Decision> {
         let cur = view.sw;
         let dst = pkt.dst_sw as usize;
@@ -468,33 +332,11 @@ impl Router for O1TurnTeraRouter {
         // rank of that dimension in the order.
         let mut dim = order[1];
         let mut vc = 1;
-        if self.geom.coord(cur, order[0]) != self.geom.coord(dst, order[0]) {
+        if self.hx.coord(cur, order[0]) != self.hx.coord(dst, order[0]) {
             dim = order[0];
             vc = 0;
         }
-        debug_assert!(self.geom.coord(cur, dim) != self.geom.coord(dst, dim));
-        let hop_bit = if dim == 0 { HOP_D0 } else { HOP_D1 };
-        let at_dim_injection = pkt.scratch & hop_bit == 0;
-        let cur_node = self.geom.coord(cur, dim);
-        let dst_node = self.geom.coord(dst, dim);
-        let mut cands = Vec::with_capacity(self.geom.a);
-        let escape = self.sub.candidates(
-            view,
-            cur_node,
-            dst_node,
-            vc,
-            at_dim_injection,
-            |node| {
-                self.topo
-                    .port_to(cur, self.geom.along(cur, dim, node))
-                    .unwrap()
-            },
-            &mut cands,
-        );
-        let escape = (pkt.blocked >= crate::routing::tera::ESCAPE_PATIENCE).then_some(escape);
-        let pick = select_weighted_or_escape(view, &cands, escape, rng)?;
-        pkt.scratch |= hop_bit;
-        Some(pick)
+        route_in_dim(&self.core, &self.hx, view, pkt, dim, vc, rng, buf)
     }
 
     fn name(&self) -> String {
@@ -502,6 +344,6 @@ impl Router for O1TurnTeraRouter {
     }
 
     fn max_hops(&self) -> usize {
-        2 * self.sub.max_hops_per_dim()
+        2 * (1 + self.hx.sub_diameter())
     }
 }

@@ -19,10 +19,10 @@
 
 use std::sync::Arc;
 
-use super::{select_weighted_or_escape, Decision, Router};
+use super::{select_weighted_or_escape, CandidateBuf, Decision, Router, RoutingTables};
 use crate::sim::packet::Packet;
 use crate::sim::SwitchView;
-use crate::topology::{PhysTopology, TopoKind};
+use crate::topology::PhysTopology;
 use crate::util::Rng;
 
 /// Arc labels for an n-switch Full-mesh: `labels[i * n + j] = L(i → j)`.
@@ -134,11 +134,13 @@ pub fn arc_utilization(labels: &ArcLabels, n: usize) -> Vec<u32> {
 /// against every allowed intermediate (occupancy + `q` penalty, Algorithm-1
 /// style weighting, which the paper's simulator applies uniformly); after
 /// the first hop the packet must finish minimally.
+///
+/// A thin policy over [`RoutingTables`] compiled with
+/// [`RoutingTables::with_link_labels`]: the allowed-intermediate *ports*
+/// per `(s, d)` live in one CSR arena, so the candidate scan is a slice
+/// walk with zero per-decision lookups beyond the table reads.
 pub struct LinkOrderRouter {
-    topo: Arc<PhysTopology>,
-    labels: ArcLabels,
-    /// Allowed intermediates per (s,d), precomputed: `allowed[s*n+d]`.
-    allowed: Vec<Vec<u32>>,
+    tables: Arc<RoutingTables>,
     /// Non-minimal penalty in flits (§5: q = 54).
     pub q: u32,
     name: String,
@@ -146,26 +148,18 @@ pub struct LinkOrderRouter {
 
 impl LinkOrderRouter {
     pub fn new(topo: Arc<PhysTopology>, labels: ArcLabels, name: &str, q: u32) -> Self {
-        assert_eq!(topo.kind, TopoKind::FullMesh, "LinkOrderRouter is FM-only");
-        let n = topo.n;
-        assert_eq!(labels.len(), n * n);
-        let mut allowed = vec![Vec::new(); n * n];
-        for s in 0..n {
-            for d in 0..n {
-                if s == d {
-                    continue;
-                }
-                for m in 0..n {
-                    if m != s && m != d && labels[s * n + m] < labels[m * n + d] {
-                        allowed[s * n + d].push(m as u32);
-                    }
-                }
-            }
-        }
+        let tables = Arc::new(RoutingTables::compile(topo, None).with_link_labels(labels));
+        Self::from_tables(tables, name, q)
+    }
+
+    /// Build over pre-compiled tables (must carry link labels).
+    pub fn from_tables(tables: Arc<RoutingTables>, name: &str, q: u32) -> Self {
+        assert!(
+            tables.link_labels().is_some(),
+            "LinkOrderRouter needs tables compiled with link labels"
+        );
         Self {
-            topo,
-            labels,
-            allowed,
+            tables,
             q,
             name: name.to_string(),
         }
@@ -181,8 +175,8 @@ impl LinkOrderRouter {
         Self::new(topo, labels, "bRINR", q)
     }
 
-    pub fn labels(&self) -> &ArcLabels {
-        &self.labels
+    pub fn labels(&self) -> &[u32] {
+        self.tables.link_labels().expect("compiled with labels")
     }
 }
 
@@ -197,19 +191,21 @@ impl Router for LinkOrderRouter {
         pkt: &mut Packet,
         at_injection: bool,
         rng: &mut Rng,
+        buf: &mut CandidateBuf,
     ) -> Option<Decision> {
-        let n = self.topo.n;
+        let n = self.tables.n();
         let s = view.sw;
         let d = pkt.dst_sw as usize;
-        let direct = self.topo.port_to(s, d).expect("full mesh");
+        let labels = self.tables.link_labels().expect("compiled with labels");
+        let direct = self.tables.min_port(s, d);
         if !at_injection {
             // Monotone labels guaranteed by the injection-time choice.
             debug_assert!(
-                pkt.scratch == 0 || self.labels[s * n + d] + 1 > pkt.scratch,
+                pkt.scratch == 0 || labels[s * n + d] + 1 > pkt.scratch,
                 "label monotonicity violated"
             );
             return if view.has_space(direct, 0) {
-                pkt.scratch = self.labels[s * n + d] + 1;
+                pkt.scratch = labels[s * n + d] + 1;
                 Some((direct, 0))
             } else {
                 None
@@ -219,16 +215,15 @@ impl Router for LinkOrderRouter {
         // No escape port: label monotonicity makes waiting on the
         // min-weight port deadlock-safe (arcs drain in decreasing label
         // order).
-        let mut cands: Vec<(usize, usize, u32)> =
-            Vec::with_capacity(1 + self.allowed[s * n + d].len());
-        cands.push((direct, 0, view.occ_flits(direct)));
-        for &m in &self.allowed[s * n + d] {
-            let p = self.topo.port_to(s, m as usize).expect("full mesh");
-            cands.push((p, 0, view.occ_flits(p) + self.q));
+        buf.clear();
+        buf.push(direct, 0, view.occ_flits(direct));
+        for &p in self.tables.allowed_ports(s, d) {
+            let p = p as usize;
+            buf.push(p, 0, view.occ_flits(p) + self.q);
         }
-        let pick = select_weighted_or_escape(view, &cands, None, rng)?;
-        let to = self.topo.neighbor(s, pick.0);
-        pkt.scratch = self.labels[s * n + to] + 1;
+        let pick = select_weighted_or_escape(view, buf.as_slice(), None, rng)?;
+        let to = self.tables.topo().neighbor(s, pick.0);
+        pkt.scratch = labels[s * n + to] + 1;
         Some(pick)
     }
 

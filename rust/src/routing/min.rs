@@ -3,42 +3,25 @@
 //! In a Full-mesh this is the single direct link (§1: "inherently
 //! deadlock-free", great under uniform traffic, collapses under adversarial
 //! patterns). On a HyperX the minimal route is resolved in dimension order
-//! (DOR), which stays deadlock-free with a single buffer class.
+//! (DOR), which stays deadlock-free with a single buffer class. Either way
+//! the decision is one compiled-table read: `RoutingTables::min_port`.
 
 use std::sync::Arc;
 
-use super::{Decision, Router};
+use super::{CandidateBuf, Decision, Router, RoutingTables};
 use crate::sim::packet::Packet;
 use crate::sim::SwitchView;
-use crate::topology::{coords, coords_to_id, PhysTopology, TopoKind};
 use crate::util::Rng;
 
 pub struct MinRouter {
-    topo: Arc<PhysTopology>,
+    tables: Arc<RoutingTables>,
 }
 
 impl MinRouter {
-    pub fn new(topo: Arc<PhysTopology>) -> Self {
-        Self { topo }
-    }
-
-    /// The DOR-minimal next switch toward `dst` from `cur`.
-    pub fn next_switch(&self, cur: usize, dst: usize) -> usize {
-        match &self.topo.kind {
-            TopoKind::FullMesh => dst,
-            TopoKind::HyperX { dims } => {
-                let c = coords(cur, dims);
-                let d = coords(dst, dims);
-                for dim in 0..dims.len() {
-                    if c[dim] != d[dim] {
-                        let mut cc = c.clone();
-                        cc[dim] = d[dim];
-                        return coords_to_id(&cc, dims);
-                    }
-                }
-                unreachable!("cur == dst")
-            }
-        }
+    /// The DOR closed form itself lives in `tables.rs` (`min_port` is
+    /// compiled from it once); this router is a one-read policy over it.
+    pub fn new(tables: Arc<RoutingTables>) -> Self {
+        Self { tables }
     }
 }
 
@@ -53,12 +36,9 @@ impl Router for MinRouter {
         pkt: &mut Packet,
         _at_injection: bool,
         _rng: &mut Rng,
+        _buf: &mut CandidateBuf,
     ) -> Option<Decision> {
-        let nxt = self.next_switch(view.sw, pkt.dst_sw as usize);
-        let port = self
-            .topo
-            .port_to(view.sw, nxt)
-            .expect("DOR next hop must be adjacent");
+        let port = self.tables.min_port(view.sw, pkt.dst_sw as usize);
         if view.has_space(port, 0) {
             Some((port, 0))
         } else {
@@ -71,6 +51,6 @@ impl Router for MinRouter {
     }
 
     fn max_hops(&self) -> usize {
-        self.topo.diameter()
+        self.tables.topo().diameter()
     }
 }

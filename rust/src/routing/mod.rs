@@ -6,20 +6,25 @@
 //! returns `None` when every allowed candidate is currently full (the packet
 //! waits and the decision is re-evaluated next cycle — CAMINOS semantics).
 //!
-//! | Algorithm | VCs | Module |
-//! |---|---|---|
-//! | MIN | 1 | [`min`] |
-//! | Valiant (VLB) | 2 | [`valiant`] |
-//! | UGAL | 2 | [`ugal`] |
-//! | Omni-WAR | 2 | [`omniwar`] |
-//! | bRINR / sRINR (link ordering) | 1 | [`linkorder`] |
-//! | **TERA** (Algorithm 1) | 1 | [`tera`] |
-//! | Dim-WAR / DOR-TERA / O1TURN-TERA (2D-HyperX) | 2/1/2 | [`hyperx2d`] |
+//! Every algorithm is a thin *policy* over the compiled [`tables`] layer
+//! (flat per-`(switch, dst)` arrays — see DESIGN.md, "The table-driven
+//! routing core"):
+//!
+//! | Algorithm | VCs | Module | Table reads per decision |
+//! |---|---|---|---|
+//! | MIN | 1 | [`min`] | `min_port` |
+//! | Valiant (VLB) | 2 | [`valiant`] | `min_port` |
+//! | UGAL | 2 | [`ugal`] | `min_port` × 2 |
+//! | Omni-WAR | 2 | [`omniwar`] | `min_port` |
+//! | bRINR / sRINR (link ordering) | 1 | [`linkorder`] | `min_port`, `allowed_ports`, `labels` |
+//! | **TERA** (Algorithm 1) | 1 | [`tera`] | `svc_port`, `direct_port`, `main_ports` |
+//! | Dim-WAR / DOR-TERA / O1TURN-TERA (2D-HyperX) | 2/1/2 | [`hyperx2d`] | `HxTables` per-dimension rows |
 
 pub mod hyperx2d;
 pub mod linkorder;
 pub mod min;
 pub mod omniwar;
+pub mod tables;
 pub mod tera;
 pub mod ugal;
 pub mod valiant;
@@ -28,6 +33,7 @@ pub use hyperx2d::{DimWarRouter, DorTeraRouter, O1TurnTeraRouter, OmniWarHxRoute
 pub use linkorder::{brinr_labels, srinr_labels, LinkOrderRouter};
 pub use min::MinRouter;
 pub use omniwar::OmniWarRouter;
+pub use tables::{CandidateBuf, Csr, HxTables, RoutingTables, TeraCore, NO_PORT16};
 pub use tera::TeraRouter;
 pub use ugal::UgalRouter;
 pub use valiant::ValiantRouter;
@@ -50,16 +56,20 @@ pub trait Router: Send + Sync {
     ///
     /// * `at_injection` — the packet sits in an injection port of its source
     ///   switch (Algorithm 1 widens the candidate set exactly there).
+    /// * `buf` — reusable candidate scratch owned by the caller (the
+    ///   simulator threads one buffer through every decision); routers
+    ///   `clear()` it before use, so `route` performs no heap allocation.
     /// * Returns `None` if every allowed output is full this cycle.
     ///
     /// The router may record routing state in the packet
-    /// (e.g. `intermediate`, `last_label`).
+    /// (e.g. `intermediate`, `scratch`).
     fn route(
         &self,
         view: &SwitchView,
         pkt: &mut Packet,
         at_injection: bool,
         rng: &mut Rng,
+        buf: &mut CandidateBuf,
     ) -> Option<Decision>;
 
     /// Algorithm name as it appears in the paper's figures.
@@ -122,6 +132,25 @@ pub fn select_weighted_or_escape(
     escape: Option<(usize, usize)>,
     rng: &mut Rng,
 ) -> Option<Decision> {
+    let (bp, bvc) = best_unmasked(candidates, rng)?;
+    if view.has_space(bp, bvc) {
+        return Some((bp, bvc));
+    }
+    if let Some((ep, evc)) = escape {
+        if view.has_space(ep, evc) {
+            return Some((ep, evc));
+        }
+    }
+    None // wait: the winner (and escape, if any) are full this cycle
+}
+
+/// Minimum-weight candidate with unbiased reservoir tie-breaking and
+/// fullness NOT masked — the one copy of the Algorithm-1 selection loop,
+/// shared by [`select_weighted_or_escape`] and [`TeraCore::best`].
+pub(crate) fn best_unmasked(
+    candidates: &[(usize, usize, u32)],
+    rng: &mut Rng,
+) -> Option<Decision> {
     let mut best: Option<Decision> = None;
     let mut best_w = u32::MAX;
     let mut ties = 0u32;
@@ -137,16 +166,7 @@ pub fn select_weighted_or_escape(
             }
         }
     }
-    let (bp, bvc) = best?;
-    if view.has_space(bp, bvc) {
-        return Some((bp, bvc));
-    }
-    if let Some((ep, evc)) = escape {
-        if view.has_space(ep, evc) {
-            return Some((ep, evc));
-        }
-    }
-    None // wait: the winner (and escape, if any) are full this cycle
+    best
 }
 
 #[cfg(test)]

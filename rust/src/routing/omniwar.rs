@@ -4,26 +4,32 @@
 //! plus a bias), and takes the lightest. 2 VCs (hop-indexed) make it
 //! deadlock-free. The paper uses it as the state-of-the-art VC-based
 //! reference (§6.3: best RSP performance, at 2× TERA's buffer cost).
+//! The only per-decision lookup is the `RoutingTables::min_port` read; the
+//! candidate scan walks the port range directly.
 
 use std::sync::Arc;
 
-use super::{Decision, Router};
+use super::{CandidateBuf, Decision, Router, RoutingTables};
 use crate::sim::packet::Packet;
 use crate::sim::SwitchView;
-use crate::topology::{PhysTopology, TopoKind};
+use crate::topology::TopoKind;
 use crate::util::Rng;
 
 pub struct OmniWarRouter {
-    topo: Arc<PhysTopology>,
+    tables: Arc<RoutingTables>,
     /// Static bias (flits) added to non-minimal candidates so minimal wins
     /// at low load.
     pub bias: u32,
 }
 
 impl OmniWarRouter {
-    pub fn new(topo: Arc<PhysTopology>) -> Self {
-        assert_eq!(topo.kind, TopoKind::FullMesh, "OmniWarRouter is FM-only");
-        Self { topo, bias: 16 }
+    pub fn new(tables: Arc<RoutingTables>) -> Self {
+        assert_eq!(
+            tables.topo().kind,
+            TopoKind::FullMesh,
+            "OmniWarRouter is FM-only"
+        );
+        Self { tables, bias: 16 }
     }
 }
 
@@ -38,9 +44,10 @@ impl Router for OmniWarRouter {
         pkt: &mut Packet,
         at_injection: bool,
         rng: &mut Rng,
+        _buf: &mut CandidateBuf,
     ) -> Option<Decision> {
         let dst = pkt.dst_sw as usize;
-        let min_port = self.topo.port_to(view.sw, dst).expect("full mesh");
+        let min_port = self.tables.min_port(view.sw, dst);
         if !at_injection {
             // At the intermediate: finish minimally on VC 1.
             return if view.has_space(min_port, 1) {
@@ -55,13 +62,9 @@ impl Router for OmniWarRouter {
         let mut ties = 0usize;
         let degree = view.degree;
         for port in 0..degree {
-            let to = self.topo.neighbor(view.sw, port);
             let w = if port == min_port {
                 view.occ_flits(port)
             } else {
-                if to == dst {
-                    unreachable!("single link per pair in a full mesh");
-                }
                 2 * view.occ_flits(port) + self.bias
             };
             if w > best_w || !view.has_space(port, 0) {

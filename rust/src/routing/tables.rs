@@ -1,0 +1,736 @@
+//! The table-driven routing core: `(PhysTopology, ServiceTopology,
+//! Embedding)` compiled, at construction time, into flat per-`(switch,
+//! destination)` arrays that every routing algorithm reads in O(1).
+//!
+//! Before this layer existed each router re-derived its candidate sets per
+//! packet (trait calls into [`ServiceTopology`], `Vec`-allocating
+//! `next_hops`, per-call `port_to` chases), and the TERA escape logic was
+//! implemented twice — once for the Full-mesh host
+//! ([`super::TeraRouter`]) and once, dimension-by-dimension, for the
+//! 2D-HyperX variants ([`super::hyperx2d`]). Now:
+//!
+//! * [`RoutingTables`] holds, for any host topology, the DOR-minimal port,
+//!   the service next-hop port and the service distance of every
+//!   `(switch, dst)` pair, plus each switch's main/service port partition
+//!   as slices of one contiguous arena ([`Csr`] offsets — no
+//!   `Vec<Vec<_>>` anywhere near the hot path) and, optionally, the §3
+//!   link-order labels with their allowed-intermediate port lists;
+//! * [`HxTables`] is the same compilation specialized to a square
+//!   2D-HyperX host: per-dimension port rows, per-dimension service escape
+//!   ports, per-dimension main sets — what DOR-TERA / O1TURN-TERA /
+//!   Dim-WAR / Omni-WAR read;
+//! * [`TeraCore`] is the one Algorithm-1 escape core (weighting, candidate
+//!   assembly, min-weight reservoir selection) shared by TERA on any host
+//!   and by the per-dimension 2D-HyperX TERA variants;
+//! * [`CandidateBuf`] is the reusable candidate scratch the simulator
+//!   threads through [`super::Router::route`], so arbitrary candidate
+//!   sets are built with zero per-decision heap allocation.
+//!
+//! See DESIGN.md, "The table-driven routing core", for the arena layout,
+//! build cost and invariants.
+
+use std::sync::Arc;
+
+use crate::service::{Embedding, ServiceTopology};
+use crate::sim::SwitchView;
+use crate::topology::{coords, full_mesh, PhysTopology, TopoKind};
+use crate::util::Rng;
+
+use super::Decision;
+
+/// Sentinel for "no port" in the compiled `u16` port tables. Ports are
+/// stored as `u16` deliberately: the widened `pkt.scratch` commit tag
+/// (see [`super::tera`]) carries a 16-bit port field, so any port a table
+/// can produce survives the packet round-trip even for n > 256 switches.
+pub const NO_PORT16: u16 = u16::MAX;
+
+// --------------------------------------------------------------------------
+// CSR arena
+// --------------------------------------------------------------------------
+
+/// Compressed sparse rows of `u16` values in one contiguous arena.
+/// `row(i)` is a plain slice — the hot path never touches a `Vec<Vec<_>>`.
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    offsets: Vec<u32>,
+    data: Vec<u16>,
+}
+
+impl Csr {
+    /// Build from materialized rows (construction-time only).
+    pub fn from_rows(rows: &[Vec<u16>]) -> Self {
+        let mut offsets = Vec::with_capacity(rows.len() + 1);
+        let total: usize = rows.iter().map(Vec::len).sum();
+        let mut data = Vec::with_capacity(total);
+        offsets.push(0u32);
+        for r in rows {
+            data.extend_from_slice(r);
+            offsets.push(u32::try_from(data.len()).expect("CSR arena exceeds u32"));
+        }
+        Self { offsets, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u16] {
+        &self.data[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Total values stored across all rows.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+// --------------------------------------------------------------------------
+// Candidate scratch
+// --------------------------------------------------------------------------
+
+/// Reusable `(port, vc, weight)` candidate scratch. The simulator owns one
+/// and threads it through every [`super::Router::route`] call; routers
+/// `clear()` it and push their candidate set, so after the buffer has grown
+/// to the largest set once, route decisions perform zero heap allocation
+/// (pinned by the `perf_hotpath` route-throughput bench's counting
+/// allocator).
+#[derive(Default)]
+pub struct CandidateBuf {
+    cands: Vec<(usize, usize, u32)>,
+}
+
+impl CandidateBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn clear(&mut self) {
+        self.cands.clear();
+    }
+
+    #[inline]
+    pub fn push(&mut self, port: usize, vc: usize, weight: u32) {
+        self.cands.push((port, vc, weight));
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[(usize, usize, u32)] {
+        &self.cands
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cands.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.cands.is_empty()
+    }
+}
+
+// --------------------------------------------------------------------------
+// RoutingTables
+// --------------------------------------------------------------------------
+
+/// The compiled routing state of one `(host topology, service topology)`
+/// pair. Every accessor on the route path is an O(1) flat-array read.
+pub struct RoutingTables {
+    topo: Arc<PhysTopology>,
+    svc: Option<Arc<dyn ServiceTopology>>,
+    n: usize,
+    /// DOR-minimal next-hop port per `(s, d)`; `NO_PORT16` on the diagonal.
+    min_port: Vec<u16>,
+    /// Service next-hop port per `(s, d)` (empty without a service).
+    svc_port: Vec<u16>,
+    /// Service-path distance per `(s, d)` (empty without a service).
+    svc_dist: Vec<u16>,
+    /// Per-switch port partition in one arena: row `2s` holds the main
+    /// ports of switch `s`, row `2s + 1` its service ports. Without a
+    /// service every port is a main port.
+    ports: Csr,
+    /// §3 arc labels `L(i → j)` (`labels[i * n + j]`), when compiled with
+    /// [`RoutingTables::with_link_labels`].
+    labels: Option<Vec<u32>>,
+    /// Allowed intermediates per `(s, d)` under `labels`, stored as
+    /// physical *ports* in ascending intermediate-id order.
+    allowed: Option<Csr>,
+}
+
+/// DOR-minimal next switch from `cur` toward `dst` (the closed forms of
+/// [`super::MinRouter`]; Full-mesh: the destination itself, HyperX: fix the
+/// first unaligned dimension).
+fn dor_next(topo: &PhysTopology, cur: usize, dst: usize) -> usize {
+    debug_assert_ne!(cur, dst);
+    match &topo.kind {
+        TopoKind::FullMesh => dst,
+        TopoKind::HyperX { dims } => {
+            let c = coords(cur, dims);
+            let d = coords(dst, dims);
+            for dim in 0..dims.len() {
+                if c[dim] != d[dim] {
+                    let mut cc = c.clone();
+                    cc[dim] = d[dim];
+                    return crate::topology::coords_to_id(&cc, dims);
+                }
+            }
+            unreachable!("cur == dst")
+        }
+    }
+}
+
+impl RoutingTables {
+    /// Compile the tables for `topo`, embedding `svc` if given. Panics —
+    /// loudly, at construction time — if the service does not span the
+    /// host or uses an edge the host does not have (via
+    /// [`Embedding::new`]), or if the host is too large for the 16-bit
+    /// port encoding.
+    pub fn compile(topo: Arc<PhysTopology>, svc: Option<Arc<dyn ServiceTopology>>) -> Self {
+        let n = topo.n;
+        assert!(
+            n < NO_PORT16 as usize,
+            "RoutingTables encodes ports as u16 (n = {n} too large)"
+        );
+        let mut min_port = vec![NO_PORT16; n * n];
+        for s in 0..n {
+            for d in 0..n {
+                if s != d {
+                    let nxt = dor_next(&topo, s, d);
+                    let p = topo.port_to(s, nxt).expect("DOR next hop is adjacent");
+                    min_port[s * n + d] = p as u16;
+                }
+            }
+        }
+        let (svc_port, svc_dist, ports) = match &svc {
+            None => {
+                // Without a service every inter-switch port is "main".
+                let rows: Vec<Vec<u16>> = (0..2 * n)
+                    .map(|r| {
+                        if r % 2 == 0 {
+                            (0..topo.degree(r / 2)).map(|p| p as u16).collect()
+                        } else {
+                            Vec::new()
+                        }
+                    })
+                    .collect();
+                (Vec::new(), Vec::new(), Csr::from_rows(&rows))
+            }
+            Some(svc) => {
+                let emb = Embedding::new(&topo, svc.as_ref());
+                let mut svc_port = vec![NO_PORT16; n * n];
+                let mut svc_dist = vec![0u16; n * n];
+                for s in 0..n {
+                    for d in 0..n {
+                        if s == d {
+                            continue;
+                        }
+                        let nh = svc.next_hop(s, d);
+                        assert!(
+                            emb.is_service(s, nh),
+                            "service next hop {s}->{nh} must ride a service link"
+                        );
+                        let p = topo.port_to(s, nh).expect("service edge is host-adjacent");
+                        svc_port[s * n + d] = p as u16;
+                        svc_dist[s * n + d] =
+                            u16::try_from(svc.distance(s, d)).expect("service distance fits u16");
+                    }
+                }
+                let mut rows: Vec<Vec<u16>> = Vec::with_capacity(2 * n);
+                for s in 0..n {
+                    rows.push(emb.main_ports[s].iter().map(|&p| p as u16).collect());
+                    rows.push(emb.service_ports[s].iter().map(|&p| p as u16).collect());
+                }
+                (svc_port, svc_dist, Csr::from_rows(&rows))
+            }
+        };
+        Self {
+            topo,
+            svc,
+            n,
+            min_port,
+            svc_port,
+            svc_dist,
+            ports,
+            labels: None,
+            allowed: None,
+        }
+    }
+
+    /// Add §3 link-order labels: stores `labels` and compiles, per
+    /// `(s, d)`, the ports of every allowed intermediate `m`
+    /// (`L(s,m) < L(m,d)`), ascending in `m`. Full-mesh hosts only — the
+    /// label schemes are defined on `K_n` arcs.
+    pub fn with_link_labels(mut self, labels: Vec<u32>) -> Self {
+        assert_eq!(
+            self.topo.kind,
+            TopoKind::FullMesh,
+            "link-order labels are defined on a Full-mesh host"
+        );
+        let n = self.n;
+        assert_eq!(labels.len(), n * n, "need one label per arc");
+        let mut rows: Vec<Vec<u16>> = Vec::with_capacity(n * n);
+        for s in 0..n {
+            for d in 0..n {
+                let mut row = Vec::new();
+                if s != d {
+                    for m in 0..n {
+                        if m != s && m != d && labels[s * n + m] < labels[m * n + d] {
+                            let p = self.topo.port_to(s, m).expect("full mesh");
+                            row.push(p as u16);
+                        }
+                    }
+                }
+                rows.push(row);
+            }
+        }
+        self.allowed = Some(Csr::from_rows(&rows));
+        self.labels = Some(labels);
+        self
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn topo(&self) -> &Arc<PhysTopology> {
+        &self.topo
+    }
+
+    pub fn service(&self) -> Option<&Arc<dyn ServiceTopology>> {
+        self.svc.as_ref()
+    }
+
+    pub fn has_service(&self) -> bool {
+        self.svc.is_some()
+    }
+
+    /// DOR-minimal next-hop port from `s` toward `d` (`s != d`).
+    #[inline]
+    pub fn min_port(&self, s: usize, d: usize) -> usize {
+        debug_assert_ne!(s, d);
+        self.min_port[s * self.n + d] as usize
+    }
+
+    /// Port of the link `s → d` if the two are adjacent (the literal
+    /// direct hop — on a Full-mesh this equals [`Self::min_port`]).
+    #[inline]
+    pub fn direct_port(&self, s: usize, d: usize) -> Option<usize> {
+        self.topo.port_to(s, d)
+    }
+
+    /// Service next-hop port from `s` toward `d` (`s != d`).
+    #[inline]
+    pub fn svc_port(&self, s: usize, d: usize) -> usize {
+        debug_assert!(self.has_service());
+        debug_assert_ne!(s, d);
+        self.svc_port[s * self.n + d] as usize
+    }
+
+    /// Service-path distance between `a` and `b`.
+    #[inline]
+    pub fn svc_dist(&self, a: usize, b: usize) -> usize {
+        debug_assert!(self.has_service());
+        if a == b {
+            0
+        } else {
+            self.svc_dist[a * self.n + b] as usize
+        }
+    }
+
+    /// Main-topology ports of switch `s` (one contiguous slice).
+    #[inline]
+    pub fn main_ports(&self, s: usize) -> &[u16] {
+        self.ports.row(2 * s)
+    }
+
+    /// Service-topology ports of switch `s` (one contiguous slice).
+    #[inline]
+    pub fn service_ports(&self, s: usize) -> &[u16] {
+        self.ports.row(2 * s + 1)
+    }
+
+    /// The Appendix-B parameter `p`: average main degree / (n − 1)
+    /// (same formula as [`Embedding::main_ratio`]).
+    pub fn main_ratio(&self) -> f64 {
+        let total: usize = (0..self.n).map(|s| self.main_ports(s).len()).sum();
+        total as f64 / (self.n * (self.n - 1)) as f64
+    }
+
+    /// The compiled link-order labels, if any.
+    pub fn link_labels(&self) -> Option<&[u32]> {
+        self.labels.as_deref()
+    }
+
+    /// Ports of the allowed intermediates for `(s, d)` under the compiled
+    /// labels, ascending in intermediate id.
+    #[inline]
+    pub fn allowed_ports(&self, s: usize, d: usize) -> &[u16] {
+        self.allowed
+            .as_ref()
+            .expect("tables were compiled without link labels")
+            .row(s * self.n + d)
+    }
+}
+
+// --------------------------------------------------------------------------
+// HxTables — square 2D-HyperX per-dimension tables
+// --------------------------------------------------------------------------
+
+/// Per-dimension routing tables for a square `a × a` 2D-HyperX host: every
+/// row and column is an `FM_a`, and the §6.5 routers work inside one of
+/// those full meshes at a time. All port lookups compile to flat reads
+/// indexed by `(switch, dimension, coordinate)`.
+pub struct HxTables {
+    topo: Arc<PhysTopology>,
+    a: usize,
+    /// `dim_port[(s * 2 + dim) * a + v]` — physical port of `s` toward the
+    /// switch at coordinate `v` of `dim`; `NO_PORT16` when `v` is `s`'s
+    /// own coordinate.
+    dim_port: Vec<u16>,
+    /// `svc_port[(s * 2 + dim) * a + t]` — physical port of `s` toward the
+    /// sub-FM service next hop for destination coordinate `t` of `dim`;
+    /// `NO_PORT16` on the aligned diagonal. Empty without a sub-service.
+    svc_port: Vec<u16>,
+    /// Row `s * 2 + dim`: physical ports of `s`'s main peers inside that
+    /// dimension's sub-FM, ascending in peer coordinate. Empty rows
+    /// without a sub-service.
+    main: Csr,
+    svc: Option<Arc<dyn ServiceTopology>>,
+    /// Diameter of the sub-service (0 without one).
+    sub_diameter: usize,
+}
+
+impl HxTables {
+    /// Geometry-only tables (Dim-WAR / Omni-WAR need no service).
+    pub fn geometry(topo: Arc<PhysTopology>) -> Self {
+        let a = match &topo.kind {
+            TopoKind::HyperX { dims } if dims.len() == 2 && dims[0] == dims[1] => dims[0],
+            _ => panic!("HxTables require a square 2D-HyperX host"),
+        };
+        let n = topo.n;
+        let mut dim_port = vec![NO_PORT16; n * 2 * a];
+        for s in 0..n {
+            let (x, y) = (s % a, s / a);
+            for v in 0..a {
+                if v != x {
+                    let d = y * a + v;
+                    dim_port[(s * 2) * a + v] =
+                        topo.port_to(s, d).expect("row peers are adjacent") as u16;
+                }
+                if v != y {
+                    let d = v * a + x;
+                    dim_port[(s * 2 + 1) * a + v] =
+                        topo.port_to(s, d).expect("column peers are adjacent") as u16;
+                }
+            }
+        }
+        Self {
+            topo,
+            a,
+            dim_port,
+            svc_port: Vec::new(),
+            main: Csr::default(),
+            svc: None,
+            sub_diameter: 0,
+        }
+    }
+
+    /// Tables with the TERA sub-service embedded in every row/column
+    /// `FM_a` (paper §6.5: HX3 = the 2×2×2 hypercube for a = 8).
+    pub fn with_service(topo: Arc<PhysTopology>, sub_svc: Arc<dyn ServiceTopology>) -> Self {
+        let mut t = Self::geometry(topo);
+        let a = t.a;
+        assert_eq!(sub_svc.n(), a, "sub-service must span the row/column FM");
+        // Validate the embedding against an abstract FM_a (also checks the
+        // service edges are legal) and derive the node-level main peers.
+        let fm = full_mesh(a);
+        let emb = Embedding::new(&fm, sub_svc.as_ref());
+        let mut svc_next = vec![0u16; a * a];
+        for cur in 0..a {
+            for dst in 0..a {
+                if cur != dst {
+                    svc_next[cur * a + dst] = sub_svc.next_hop(cur, dst) as u16;
+                }
+            }
+        }
+        let n = t.topo.n;
+        let mut svc_port = vec![NO_PORT16; n * 2 * a];
+        let mut rows: Vec<Vec<u16>> = Vec::with_capacity(n * 2);
+        for s in 0..n {
+            for dim in 0..2 {
+                let c = t.coord(s, dim);
+                let row = t.dim_row_of(s, dim);
+                for v in 0..a {
+                    if v != c {
+                        let nh = svc_next[c * a + v] as usize;
+                        svc_port[(s * 2 + dim) * a + v] = row[nh];
+                    }
+                }
+                rows.push(
+                    (0..a)
+                        .filter(|&v| v != c && !emb.is_service(c, v))
+                        .map(|v| row[v])
+                        .collect(),
+                );
+            }
+        }
+        t.svc_port = svc_port;
+        t.main = Csr::from_rows(&rows);
+        t.sub_diameter = sub_svc.diameter();
+        t.svc = Some(sub_svc);
+        t
+    }
+
+    #[inline]
+    pub fn a(&self) -> usize {
+        self.a
+    }
+
+    pub fn topo(&self) -> &Arc<PhysTopology> {
+        &self.topo
+    }
+
+    /// The embedded sub-service, if any.
+    pub fn service(&self) -> Option<&Arc<dyn ServiceTopology>> {
+        self.svc.as_ref()
+    }
+
+    /// Diameter of the sub-service (per-dimension TERA hop bound is
+    /// `1 + sub_diameter`).
+    pub fn sub_diameter(&self) -> usize {
+        self.sub_diameter
+    }
+
+    /// Coordinate of switch `id` in `dim` (0 = x, 1 = y).
+    #[inline]
+    pub fn coord(&self, id: usize, dim: usize) -> usize {
+        if dim == 0 {
+            id % self.a
+        } else {
+            id / self.a
+        }
+    }
+
+    #[inline]
+    fn dim_row_of(&self, s: usize, dim: usize) -> &[u16] {
+        let base = (s * 2 + dim) * self.a;
+        &self.dim_port[base..base + self.a]
+    }
+
+    /// Ports of `s` toward every coordinate of `dim`, indexed by
+    /// coordinate (`NO_PORT16` at `s`'s own coordinate).
+    #[inline]
+    pub fn dim_row(&self, s: usize, dim: usize) -> &[u16] {
+        self.dim_row_of(s, dim)
+    }
+
+    /// Physical port of `s` toward coordinate `v` of `dim` (`v` must not
+    /// be `s`'s own coordinate).
+    #[inline]
+    pub fn dim_port(&self, s: usize, dim: usize, v: usize) -> usize {
+        debug_assert_ne!(self.coord(s, dim), v);
+        self.dim_row_of(s, dim)[v] as usize
+    }
+
+    /// Physical port of `s` toward the sub-FM service next hop for
+    /// destination coordinate `t` of `dim`.
+    #[inline]
+    pub fn svc_port(&self, s: usize, dim: usize, t: usize) -> usize {
+        debug_assert!(self.svc.is_some());
+        debug_assert_ne!(self.coord(s, dim), t);
+        self.svc_port[(s * 2 + dim) * self.a + t] as usize
+    }
+
+    /// Physical ports of `s`'s main peers inside `dim`'s sub-FM.
+    #[inline]
+    pub fn main_ports(&self, s: usize, dim: usize) -> &[u16] {
+        self.main.row(s * 2 + dim)
+    }
+}
+
+// --------------------------------------------------------------------------
+// TeraCore — the shared Algorithm-1 escape core
+// --------------------------------------------------------------------------
+
+/// The Algorithm-1 escape core shared by [`super::TeraRouter`] (any host)
+/// and the per-dimension 2D-HyperX TERA variants: the §5 weighting, the
+/// candidate-set assembly over compiled tables, and the min-weight
+/// reservoir selection. The *policies* on top differ — Full-mesh TERA
+/// commits once per switch and waits, the per-dimension variants
+/// re-evaluate every cycle — and stay with the routers.
+pub struct TeraCore {
+    /// Non-minimal penalty in flits (§5: q = 54).
+    pub q: u32,
+}
+
+impl TeraCore {
+    pub fn new(q: u32) -> Self {
+        Self { q }
+    }
+
+    /// Algorithm-1 weight of output `port`: occupancy, plus `q` unless the
+    /// hop lands on the (in-domain) destination.
+    #[inline]
+    pub fn weight(&self, view: &SwitchView, port: usize, lands_on_dst: bool) -> u32 {
+        if lands_on_dst {
+            view.occ_flits(port)
+        } else {
+            view.occ_flits(port) + self.q
+        }
+    }
+
+    /// Push Algorithm 1's candidate set for one full-mesh domain into
+    /// `buf`: the service escape first, then — at (domain) injection — the
+    /// main set, or — in transit — the direct port. `direct_port` is the
+    /// port that lands on the destination (None when the destination is
+    /// not domain-adjacent, as on a non-complete host); it is the one
+    /// candidate whose weight skips the `q` penalty. Returns the escape
+    /// `(port, vc)` for the patience-gated fallback.
+    pub fn push_candidates(
+        &self,
+        view: &SwitchView,
+        buf: &mut CandidateBuf,
+        vc: usize,
+        svc_port: usize,
+        direct_port: Option<usize>,
+        main: Option<&[u16]>,
+    ) -> (usize, usize) {
+        buf.push(
+            svc_port,
+            vc,
+            self.weight(view, svc_port, direct_port == Some(svc_port)),
+        );
+        if let Some(main) = main {
+            // ports ← R_serv ∪ R_main (the direct link, when it exists, is
+            // either a main link or the service next hop itself).
+            for &p in main {
+                let p = p as usize;
+                buf.push(p, vc, self.weight(view, p, direct_port == Some(p)));
+            }
+        } else if let Some(dp) = direct_port {
+            // ports ← R_serv ∪ R_min.
+            if dp != svc_port {
+                buf.push(dp, vc, self.weight(view, dp, true));
+            }
+        }
+        (svc_port, vc)
+    }
+
+    /// Minimum-weight candidate, ties broken by unbiased reservoir
+    /// sampling. Fullness is deliberately NOT masked — Algorithm-1 commit
+    /// semantics let a packet wait on its best port (see
+    /// [`super::select_weighted_or_escape`], which shares this exact loop
+    /// via [`super::best_unmasked`]).
+    pub fn best(&self, cands: &[(usize, usize, u32)], rng: &mut Rng) -> Option<Decision> {
+        super::best_unmasked(cands, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{HyperXService, MeshService};
+    use crate::topology::hyperx2d;
+
+    #[test]
+    fn csr_rows_are_contiguous_slices() {
+        let csr = Csr::from_rows(&[vec![1, 2, 3], vec![], vec![7]]);
+        assert_eq!(csr.num_rows(), 3);
+        assert_eq!(csr.row(0), &[1, 2, 3]);
+        assert_eq!(csr.row(1), &[] as &[u16]);
+        assert_eq!(csr.row(2), &[7]);
+        assert_eq!(csr.len(), 4);
+    }
+
+    #[test]
+    fn fm_tables_match_direct_ports_and_embedding() {
+        let topo = Arc::new(full_mesh(16));
+        let svc: Arc<dyn ServiceTopology> = Arc::new(HyperXService::square(16).unwrap());
+        let t = RoutingTables::compile(topo.clone(), Some(svc.clone()));
+        let emb = Embedding::new(&topo, svc.as_ref());
+        for s in 0..16 {
+            let main: Vec<usize> = t.main_ports(s).iter().map(|&p| p as usize).collect();
+            let serv: Vec<usize> = t.service_ports(s).iter().map(|&p| p as usize).collect();
+            assert_eq!(main, emb.main_ports[s]);
+            assert_eq!(serv, emb.service_ports[s]);
+            for d in 0..16 {
+                if s == d {
+                    continue;
+                }
+                assert_eq!(t.min_port(s, d), topo.port_to(s, d).unwrap());
+                assert_eq!(
+                    t.svc_port(s, d),
+                    topo.port_to(s, svc.next_hop(s, d)).unwrap()
+                );
+                assert_eq!(t.svc_dist(s, d), svc.distance(s, d));
+            }
+        }
+        assert!((t.main_ratio() - emb.main_ratio()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hyperx_min_port_is_dor() {
+        let topo = Arc::new(hyperx2d(4));
+        let t = RoutingTables::compile(topo.clone(), None);
+        for s in 0..16 {
+            for d in 0..16 {
+                if s == d {
+                    continue;
+                }
+                let (sx, sy) = (s % 4, s / 4);
+                let (dx, dy) = (d % 4, d / 4);
+                let nxt = if sx != dx { sy * 4 + dx } else { dx + dy * 4 };
+                assert_eq!(t.min_port(s, d), topo.port_to(s, nxt).unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn hx_tables_agree_with_geometry() {
+        let topo = Arc::new(hyperx2d(4));
+        let svc: Arc<dyn ServiceTopology> = Arc::new(MeshService::path(4));
+        let hx = HxTables::with_service(topo.clone(), svc.clone());
+        assert_eq!(hx.a(), 4);
+        for s in 0..16 {
+            let (x, y) = (s % 4, s / 4);
+            for v in 0..4 {
+                if v != x {
+                    assert_eq!(hx.dim_port(s, 0, v), topo.port_to(s, y * 4 + v).unwrap());
+                    // Service escape rides the path service inside the row.
+                    let nh = svc.next_hop(x, v);
+                    assert_eq!(hx.svc_port(s, 0, v), topo.port_to(s, y * 4 + nh).unwrap());
+                }
+                if v != y {
+                    assert_eq!(hx.dim_port(s, 1, v), topo.port_to(s, v * 4 + x).unwrap());
+                    let nh = svc.next_hop(y, v);
+                    assert_eq!(hx.svc_port(s, 1, v), topo.port_to(s, nh * 4 + x).unwrap());
+                }
+            }
+            // Path service on 4 nodes: node 0 has main peers {2, 3}, node 1
+            // has {3}, node 2 has {0}, node 3 has {0, 1}.
+            let expect: &[usize] = match x {
+                0 => &[2, 3],
+                1 => &[3],
+                2 => &[0],
+                _ => &[0, 1],
+            };
+            let got: Vec<usize> = hx
+                .main_ports(s, 0)
+                .iter()
+                .map(|&p| {
+                    let to = topo.neighbor(s, p as usize);
+                    to % 4
+                })
+                .collect();
+            assert_eq!(got, expect, "switch {s} row main peers");
+        }
+        assert_eq!(hx.sub_diameter(), 3);
+    }
+}

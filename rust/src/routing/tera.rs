@@ -1,6 +1,6 @@
 //! **TERA** — Topology-Embedded Routing Algorithm (§4, Algorithm 1).
 //!
-//! The Full-mesh is split into an embedded *service* topology (with a
+//! The host topology is split into an embedded *service* topology (with a
 //! VC-less deadlock-free minimal routing: DOR or Up*/Down*) and the *main*
 //! topology (all remaining links). Routing, verbatim from Algorithm 1:
 //!
@@ -20,14 +20,29 @@
 //! service paths keeps draining — a *physical* escape subnetwork in the
 //! sense of Duato's theory, with zero extra VCs. Livelock freedom: hops ≤
 //! 1 + diameter(service), asserted per delivery by the simulator.
+//!
+//! The router is a thin policy over [`RoutingTables`]: the service escape
+//! port, the direct port and the per-switch main set are all O(1) compiled
+//! reads, and the Algorithm-1 weighting/selection lives in the shared
+//! [`TeraCore`] (also used by the 2D-HyperX per-dimension TERA variants).
+//!
+//! **Host generality.** The paper presents TERA on a Full-mesh, where
+//! `R_min` is the direct link. On any other host with an embeddable
+//! service topology (every service edge host-adjacent), the same algorithm
+//! applies with `R_min` restricted to the *literal* direct link when one
+//! exists: after the one free main hop, every subsequent hop either rides
+//! the service path (service distance strictly decreases) or is a direct
+//! final hop, so the `1 + diameter(service)` bound — and with it the §4
+//! escape argument — carries over unchanged. This is what the `--host`
+//! spec knob exposes (e.g. `tera-mesh2` on `hx4x4`).
 
 use std::sync::Arc;
 
-use super::{Decision, Router};
-use crate::service::{Embedding, ServiceTopology};
+use super::{CandidateBuf, Decision, Router, RoutingTables, TeraCore};
+use crate::service::ServiceTopology;
 use crate::sim::packet::Packet;
 use crate::sim::SwitchView;
-use crate::topology::{PhysTopology, TopoKind};
+use crate::topology::PhysTopology;
 use crate::util::Rng;
 
 /// The §5 calibration: q = 54 flits ≈ 3.4 packets of 16 flits.
@@ -40,41 +55,13 @@ pub const DEFAULT_Q: u32 = 54;
 pub const ESCAPE_PATIENCE: u16 = 48;
 
 pub struct TeraRouter {
-    topo: Arc<PhysTopology>,
-    svc: Arc<dyn ServiceTopology>,
-    emb: Embedding,
-    /// Service next-hop port table: `svc_port[cur * n + dst]`.
-    svc_port: Vec<u32>,
-    /// Non-minimal penalty (flits).
-    pub q: u32,
+    tables: Arc<RoutingTables>,
+    core: TeraCore,
 }
 
 impl TeraRouter {
     pub fn new(topo: Arc<PhysTopology>, svc: Arc<dyn ServiceTopology>, q: u32) -> Self {
-        assert_eq!(topo.kind, TopoKind::FullMesh, "TeraRouter hosts on a FM");
-        let n = topo.n;
-        let emb = Embedding::new(&topo, svc.as_ref());
-        let mut svc_port = vec![u32::MAX; n * n];
-        for cur in 0..n {
-            for dst in 0..n {
-                if cur != dst {
-                    let nh = svc.next_hop(cur, dst);
-                    debug_assert!(
-                        emb.is_service(cur, nh),
-                        "service next hop must ride a service link"
-                    );
-                    svc_port[cur * n + dst] =
-                        topo.port_to(cur, nh).expect("full mesh") as u32;
-                }
-            }
-        }
-        Self {
-            topo,
-            svc,
-            emb,
-            svc_port,
-            q,
-        }
+        Self::from_tables(Arc::new(RoutingTables::compile(topo, Some(svc))), q)
     }
 
     /// Convenience constructor with the §5 default penalty.
@@ -82,17 +69,34 @@ impl TeraRouter {
         Self::new(topo, svc, DEFAULT_Q)
     }
 
-    pub fn service(&self) -> &dyn ServiceTopology {
-        self.svc.as_ref()
+    /// Build over pre-compiled tables (must carry a service topology).
+    pub fn from_tables(tables: Arc<RoutingTables>, q: u32) -> Self {
+        assert!(
+            tables.has_service(),
+            "TeraRouter needs tables compiled with a service topology"
+        );
+        Self {
+            tables,
+            core: TeraCore::new(q),
+        }
     }
 
-    pub fn embedding(&self) -> &Embedding {
-        &self.emb
+    pub fn service(&self) -> &dyn ServiceTopology {
+        self.tables.service().expect("compiled with service").as_ref()
+    }
+
+    pub fn tables(&self) -> &Arc<RoutingTables> {
+        &self.tables
+    }
+
+    /// Non-minimal penalty (flits).
+    pub fn q(&self) -> u32 {
+        self.core.q
     }
 
     /// The Appendix-B parameter p: main-degree / (n−1).
     pub fn main_ratio(&self) -> f64 {
-        self.emb.main_ratio()
+        self.tables.main_ratio()
     }
 }
 
@@ -107,29 +111,24 @@ impl Router for TeraRouter {
         pkt: &mut Packet,
         at_injection: bool,
         rng: &mut Rng,
+        buf: &mut CandidateBuf,
     ) -> Option<Decision> {
-        let n = self.topo.n;
         let s = view.sw;
         let d = pkt.dst_sw as usize;
-        let svc_p = self.svc_port[s * n + d] as usize;
-
-        let weight = |p: usize| -> u32 {
-            let direct = self.topo.neighbor(s, p) == d;
-            if direct {
-                view.occ_flits(p)
-            } else {
-                view.occ_flits(p) + self.q
-            }
-        };
+        let svc_p = self.tables.svc_port(s, d);
+        let direct = self.tables.direct_port(s, d);
 
         // Commit-once adaptivity: the weight comparison happens when the
         // packet reaches the head of its FIFO; afterwards it waits for the
         // committed port rather than re-rolling every cycle (re-evaluation
         // degenerates into a deroute storm at overload). The commitment is
-        // cached in `scratch` as (switch << 8) | (port + 1).
+        // cached in `scratch` as `(switch << 16) | (port + 1)` — 16 bits
+        // per field, so it survives n > 256 switches and ≥ 255-port
+        // switches (the old 8-bit port field corrupted the switch half of
+        // the tag from FM256 up; regression-tested at n = 300).
         let committed = {
             let tag = pkt.scratch;
-            (tag != 0 && (tag >> 8) as usize == s).then(|| (tag & 0xFF) as usize - 1)
+            (tag != 0 && (tag >> 16) as usize == s).then(|| (tag & 0xFFFF) as usize - 1)
         };
         if let Some(port) = committed {
             if pkt.blocked < ESCAPE_PATIENCE {
@@ -153,34 +152,35 @@ impl Router for TeraRouter {
         // (unmasked — fullness is already encoded in the occupancy),
         // committed via scratch, granted only if the port has space.
         let best = if at_injection {
-            // ports ← R_serv ∪ R_main (the direct link is always included:
-            // it is either a main link or the service next hop itself).
-            let main = &self.emb.main_ports[s];
-            let mut best = (svc_p, weight(svc_p));
-            let mut ties = 1usize;
-            for &p in main {
-                let w = weight(p);
-                if w < best.1 {
-                    best = (p, w);
-                    ties = 1;
-                } else if w == best.1 {
-                    ties += 1;
-                    if rng.gen_range(ties) == 0 {
-                        best = (p, w);
+            buf.clear();
+            self.core.push_candidates(
+                view,
+                buf,
+                0,
+                svc_p,
+                direct,
+                Some(self.tables.main_ports(s)),
+            );
+            self.core.best(buf.as_slice(), rng).expect("non-empty set").0
+        } else {
+            // ports ← R_serv ∪ R_min. On a non-complete host the direct
+            // link may not exist mid-route; the service path is then the
+            // only minimal-progress option (see module docs).
+            match direct {
+                None => svc_p,
+                Some(dp) => {
+                    if dp == svc_p
+                        || self.core.weight(view, svc_p, false)
+                            <= self.core.weight(view, dp, true)
+                    {
+                        svc_p
+                    } else {
+                        dp
                     }
                 }
             }
-            best.0
-        } else {
-            // ports ← R_serv ∪ R_min.
-            let direct = self.topo.port_to(s, d).expect("full mesh");
-            if direct == svc_p || weight(svc_p) <= weight(direct) {
-                svc_p
-            } else {
-                direct
-            }
         };
-        pkt.scratch = ((s as u32) << 8) | (best as u32 + 1);
+        pkt.scratch = ((s as u32) << 16) | (best as u32 + 1);
         if view.has_space(best, 0) {
             Some((best, 0))
         } else {
@@ -190,9 +190,8 @@ impl Router for TeraRouter {
 
     fn name(&self) -> String {
         // Figure naming: TERA-HX2, TERA-HX3, TERA-Path, …
-        let svc = self.svc.name();
-        let short = if let Some(rest) = svc.strip_prefix("HX2[") {
-            let _ = rest;
+        let svc = self.service().name();
+        let short = if svc.starts_with("HX2[") {
             "HX2".to_string()
         } else if svc.starts_with("HX3[") {
             "HX3".to_string()
@@ -207,6 +206,6 @@ impl Router for TeraRouter {
     }
 
     fn max_hops(&self) -> usize {
-        1 + self.svc.diameter()
+        1 + self.service().diameter()
     }
 }

@@ -2,31 +2,36 @@
 //! queue of the minimal port against the (distance-weighted) queue toward
 //! ONE randomly drawn Valiant intermediate, and take the cheaper. Needs
 //! 2 VCs (§2.1.2: VC0 carries minimal or first non-minimal hops, VC1 only
-//! second non-minimal hops).
+//! second non-minimal hops). Port lookups are `RoutingTables::min_port`
+//! table reads.
 //!
 //! §6.4 attributes UGAL's tail latency to exactly this single-candidate
 //! limitation — TERA and Omni-WAR adaptively consider many intermediates.
 
 use std::sync::Arc;
 
-use super::{Decision, Router};
+use super::{CandidateBuf, Decision, Router, RoutingTables};
 use crate::sim::packet::{Packet, NO_SWITCH};
 use crate::sim::SwitchView;
-use crate::topology::{PhysTopology, TopoKind};
+use crate::topology::TopoKind;
 use crate::util::Rng;
 
 pub struct UgalRouter {
-    topo: Arc<PhysTopology>,
+    tables: Arc<RoutingTables>,
     /// Decision threshold in flits (UGAL's `T`): non-minimal is taken when
     /// `2·q_nonmin + threshold < q_min`.
     pub threshold: u32,
 }
 
 impl UgalRouter {
-    pub fn new(topo: Arc<PhysTopology>) -> Self {
-        assert_eq!(topo.kind, TopoKind::FullMesh, "UgalRouter is FM-only");
+    pub fn new(tables: Arc<RoutingTables>) -> Self {
+        assert_eq!(
+            tables.topo().kind,
+            TopoKind::FullMesh,
+            "UgalRouter is FM-only"
+        );
         Self {
-            topo,
+            tables,
             threshold: 16, // one packet of hysteresis toward MIN
         }
     }
@@ -43,11 +48,12 @@ impl Router for UgalRouter {
         pkt: &mut Packet,
         at_injection: bool,
         rng: &mut Rng,
+        _buf: &mut CandidateBuf,
     ) -> Option<Decision> {
         let dst = pkt.dst_sw as usize;
         if !at_injection {
             // In transit (at the Valiant intermediate): final hop on VC 1.
-            let port = self.topo.port_to(view.sw, dst).expect("full mesh");
+            let port = self.tables.min_port(view.sw, dst);
             return if view.has_space(port, 1) {
                 Some((port, 1))
             } else {
@@ -56,15 +62,15 @@ impl Router for UgalRouter {
         }
         // Source decision, re-evaluated each stalled cycle with a fresh
         // random candidate (UGAL-L behaviour).
-        let n = self.topo.n;
-        let min_port = self.topo.port_to(view.sw, dst).expect("full mesh");
+        let n = self.tables.n();
+        let min_port = self.tables.min_port(view.sw, dst);
         let m = loop {
             let m = rng.gen_range(n);
             if m != view.sw && m != dst {
                 break m;
             }
         };
-        let nonmin_port = self.topo.port_to(view.sw, m).expect("full mesh");
+        let nonmin_port = self.tables.min_port(view.sw, m);
         let q_min = view.occ_flits(min_port);
         let q_nonmin = view.occ_flits(nonmin_port);
         // H_min·q_min ≤ H_nonmin·q_nonmin + T  →  go minimal.

@@ -1,29 +1,35 @@
 //! Valiant load balancing (VLB) [Valiant & Brebner '81] on a Full-mesh:
 //! every packet detours through a uniformly random intermediate switch.
 //! Needs 2 VCs for deadlock freedom (hop index = VC index); used by the
-//! paper as the non-adaptive non-minimal baseline.
+//! paper as the non-adaptive non-minimal baseline. Port lookups are
+//! compiled-table reads (`RoutingTables::min_port` — on a Full-mesh the
+//! minimal port *is* the direct link).
 
 use std::sync::Arc;
 
-use super::{Decision, Router};
+use super::{CandidateBuf, Decision, Router, RoutingTables};
 use crate::sim::packet::{Packet, NO_SWITCH};
 use crate::sim::SwitchView;
-use crate::topology::{PhysTopology, TopoKind};
+use crate::topology::TopoKind;
 use crate::util::Rng;
 
 pub struct ValiantRouter {
-    topo: Arc<PhysTopology>,
+    tables: Arc<RoutingTables>,
 }
 
 impl ValiantRouter {
-    pub fn new(topo: Arc<PhysTopology>) -> Self {
-        assert_eq!(topo.kind, TopoKind::FullMesh, "ValiantRouter is FM-only");
-        Self { topo }
+    pub fn new(tables: Arc<RoutingTables>) -> Self {
+        assert_eq!(
+            tables.topo().kind,
+            TopoKind::FullMesh,
+            "ValiantRouter is FM-only"
+        );
+        Self { tables }
     }
 
     /// Random intermediate, excluding source and destination.
     fn pick_intermediate(&self, s: usize, d: usize, rng: &mut Rng) -> u32 {
-        let n = self.topo.n;
+        let n = self.tables.n();
         loop {
             let m = rng.gen_range(n);
             if m != s && m != d {
@@ -44,6 +50,7 @@ impl Router for ValiantRouter {
         pkt: &mut Packet,
         at_injection: bool,
         rng: &mut Rng,
+        _buf: &mut CandidateBuf,
     ) -> Option<Decision> {
         let dst = pkt.dst_sw as usize;
         if at_injection {
@@ -53,10 +60,7 @@ impl Router for ValiantRouter {
             if pkt.intermediate == NO_SWITCH {
                 pkt.intermediate = self.pick_intermediate(view.sw, dst, rng);
             }
-            let port = self
-                .topo
-                .port_to(view.sw, pkt.intermediate as usize)
-                .expect("full mesh");
+            let port = self.tables.min_port(view.sw, pkt.intermediate as usize);
             if view.has_space(port, 0) {
                 Some((port, 0))
             } else {
@@ -64,7 +68,7 @@ impl Router for ValiantRouter {
             }
         } else {
             // Second (final) hop on VC 1.
-            let port = self.topo.port_to(view.sw, dst).expect("full mesh");
+            let port = self.tables.min_port(view.sw, dst);
             if view.has_space(port, 1) {
                 Some((port, 1))
             } else {

@@ -1,6 +1,8 @@
-//! Service topologies (Definition 4.1) and their embedding into a Full-mesh.
+//! Service topologies (Definition 4.1) and their embedding into a host
+//! topology (the paper's host is a Full-mesh; any host whose link set
+//! contains the service edges works — see `routing::tables`).
 //!
-//! A *service topology* `S` is a spanning subgraph of the Full-mesh with a
+//! A *service topology* `S` is a spanning subgraph of the host with a
 //! deadlock-free VC-less minimal routing (DOR for meshes / hypercubes /
 //! HyperX, Up*/Down* for trees). The *main topology* `M` is everything else.
 //! TERA (Algorithm 1) routes freely over `M` for at most one hop and then
@@ -32,10 +34,14 @@ pub trait ServiceTopology: Send + Sync {
     /// (`cur != dst`); must be service-adjacent to `cur`.
     fn next_hop(&self, cur: usize, dst: usize) -> usize;
 
-    /// All next hops the routing may adaptively pick from (default: the
-    /// single deterministic one — DOR and Up*/Down* are deterministic).
-    fn next_hops(&self, cur: usize, dst: usize) -> Vec<usize> {
-        vec![self.next_hop(cur, dst)]
+    /// Append every next hop the routing may adaptively pick from to `out`
+    /// (default: the single deterministic one — DOR and Up*/Down* are
+    /// deterministic). Appends into a caller-owned buffer instead of
+    /// returning a fresh `Vec`; the hot path itself never calls this —
+    /// [`crate::routing::RoutingTables`] compiles the per-`(switch, dst)`
+    /// service ports up front and routers read those flat arrays.
+    fn next_hops_into(&self, cur: usize, dst: usize, out: &mut Vec<usize>) {
+        out.push(self.next_hop(cur, dst));
     }
 
     /// Service-path length between two switches.
@@ -53,8 +59,12 @@ pub trait ServiceTopology: Send + Sync {
     }
 }
 
-/// A service topology embedded into a physical Full-mesh: pre-computed
+/// A service topology embedded into a physical host topology: pre-computed
 /// service/main split of every arc plus per-switch main-port lists.
+///
+/// This is a *construction-time* artifact: [`crate::routing::RoutingTables`]
+/// consumes it into flat per-`(switch, dst)` arrays and a CSR port arena,
+/// which is what the routers read at simulation time.
 pub struct Embedding {
     pub n: usize,
     /// `service_adj[a * n + b]` — is `{a,b}` a service link?
@@ -66,9 +76,10 @@ pub struct Embedding {
 }
 
 impl Embedding {
-    /// Embed `service` into `phys`. Panics if a service edge is missing from
-    /// the physical topology (cannot happen for a Full-mesh host, by K_n
-    /// completeness — checked anyway so custom hosts fail loudly).
+    /// Embed `service` into `phys`. Panics if a service edge is missing
+    /// from the physical topology — cannot happen for a Full-mesh host, by
+    /// K_n completeness; on other hosts (`--host hx8x8` TERA scenarios)
+    /// this is the check that rejects unembeddable services loudly.
     pub fn new(phys: &PhysTopology, service: &dyn ServiceTopology) -> Self {
         let n = phys.n;
         assert_eq!(

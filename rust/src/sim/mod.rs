@@ -44,7 +44,7 @@ pub use wheel::TimingWheel;
 use std::sync::Arc;
 
 use crate::metrics::SimStats;
-use crate::routing::Router;
+use crate::routing::{CandidateBuf, Router};
 use crate::topology::PhysTopology;
 use crate::traffic::Workload;
 use crate::util::Rng;
@@ -171,6 +171,9 @@ pub struct Network {
     wheel: TimingWheel<Event>,
     /// Reused scratch buffer for the events popped each cycle.
     event_buf: Vec<Event>,
+    /// Reused candidate scratch threaded through every `Router::route`
+    /// call — routers never heap-allocate per decision.
+    route_buf: CandidateBuf,
     credit_returns: Vec<(u32, u32, u8)>,
     /// Dirty worklist of switches with buffered packets (`work > 0`).
     active_switches: Vec<u32>,
@@ -264,6 +267,7 @@ impl Network {
             queues,
             wheel: TimingWheel::new(),
             event_buf: Vec::new(),
+            route_buf: CandidateBuf::new(),
             credit_returns: Vec::new(),
             active_switches: Vec::with_capacity(n),
             switch_active: vec![false; n],
@@ -546,7 +550,13 @@ impl Network {
                             None
                         }
                     } else {
-                        self.router.route(&view, pkt, at_injection, &mut self.rng)
+                        self.router.route(
+                            &view,
+                            pkt,
+                            at_injection,
+                            &mut self.rng,
+                            &mut self.route_buf,
+                        )
                     }
                 };
                 let Some((out_port, out_vc)) = decision else {

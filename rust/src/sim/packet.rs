@@ -20,14 +20,17 @@ pub struct Packet {
     /// Valiant-style intermediate switch chosen by the router
     /// (NO_SWITCH if none / not chosen yet).
     pub intermediate: u32,
-    /// Switch-to-switch hops taken so far.
-    pub hops: u8,
+    /// Switch-to-switch hops taken so far (`u16`: long-diameter service
+    /// topologies such as `Path` on n > 256 switches exceed a `u8` bound).
+    pub hops: u16,
     /// Virtual channel the packet currently occupies.
     pub vc: u8,
     /// Router-owned scratch state (a packet is handled by exactly one
-    /// routing algorithm): link orderings store `label + 1` of the last arc
-    /// taken (0 = none yet); the 2D-HyperX routers store per-dimension
-    /// progress bit flags.
+    /// routing algorithm): TERA caches its port commitment as
+    /// `(switch << 16) | (port + 1)` — 16-bit fields, so the tag survives
+    /// n > 256 switches and ≥ 255-port switches; link orderings store
+    /// `label + 1` of the last arc taken (0 = none yet); the 2D-HyperX
+    /// routers store per-dimension progress bit flags.
     pub scratch: u32,
     /// Consecutive allocation attempts the packet has spent blocked at the
     /// head of its FIFO (reset on every grant). Escape-based routers take

@@ -97,6 +97,45 @@ pub struct SwitchView<'a> {
 }
 
 impl<'a> SwitchView<'a> {
+    /// Assemble a view from raw parts. The simulator builds views directly
+    /// over its SoA state; this constructor exists for the `perf_hotpath`
+    /// route-throughput bench and the decision-equivalence tests, which
+    /// drive `Router::route` without a live `Network`.
+    ///
+    /// Slice lengths: `occ_flits`, `grants_this_cycle` and
+    /// `last_grant_cycle` are per port; `out_lens` is per `(port, vc)`,
+    /// port-major.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_raw(
+        sw: usize,
+        degree: usize,
+        now: u64,
+        speedup: u64,
+        vcs: usize,
+        output_cap_pkts: usize,
+        occ_flits: &'a [u32],
+        out_lens: &'a [u32],
+        grants_this_cycle: &'a [u8],
+        last_grant_cycle: &'a [u64],
+    ) -> Self {
+        debug_assert!(vcs >= 1 && degree <= occ_flits.len());
+        debug_assert_eq!(out_lens.len(), occ_flits.len() * vcs);
+        debug_assert_eq!(grants_this_cycle.len(), occ_flits.len());
+        debug_assert_eq!(last_grant_cycle.len(), occ_flits.len());
+        Self {
+            sw,
+            degree,
+            now,
+            speedup,
+            vcs,
+            output_cap_pkts,
+            occ_flits,
+            out_lens,
+            grants_this_cycle,
+            last_grant_cycle,
+        }
+    }
+
     /// Congestion estimate for an output port, in flits (queued locally +
     /// held downstream). This is the `occupancy[p]` of Algorithm 1.
     #[inline]

@@ -107,8 +107,13 @@ impl PhysTopology {
         self.neighbors.iter().map(Vec::len).sum::<usize>() / 2
     }
 
-    /// Hop distance between two switches (BFS; exact for any topology, O(1)
-    /// specializations for the kinds we know).
+    /// Hop distance between two switches — O(1) closed form per `kind`
+    /// (complete graph: 1; HyperX: count of unaligned coordinates). There
+    /// is deliberately NO generic BFS fallback: the `match` below is
+    /// exhaustive over [`TopoKind`], so adding a kind is a compile error
+    /// here (and in [`Self::diameter`]) until its closed form — or an
+    /// explicit BFS — is supplied. The closed forms are pinned against a
+    /// reference BFS by `closed_form_distance_matches_bfs`.
     pub fn distance(&self, a: usize, b: usize) -> usize {
         if a == b {
             return 0;
@@ -174,6 +179,38 @@ mod tests {
         let dims = [4usize, 3, 5];
         for id in 0..60 {
             assert_eq!(coords_to_id(&coords(id, &dims), &dims), id);
+        }
+    }
+
+    /// Reference BFS distances from `src` (what the `distance` doc used to
+    /// *claim* the method did — the closed forms must agree with it).
+    fn bfs_distances(t: &PhysTopology, src: usize) -> Vec<usize> {
+        let mut dist = vec![usize::MAX; t.n];
+        let mut queue = std::collections::VecDeque::from([src]);
+        dist[src] = 0;
+        while let Some(u) = queue.pop_front() {
+            for &v in &t.neighbors[u] {
+                if dist[v] == usize::MAX {
+                    dist[v] = dist[u] + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    #[test]
+    fn closed_form_distance_matches_bfs() {
+        for t in [full_mesh(8), hyperx(&[4, 3]), hyperx(&[2, 2, 2]), hyperx(&[4, 4])] {
+            let mut diameter = 0;
+            for a in 0..t.n {
+                let d = bfs_distances(&t, a);
+                for b in 0..t.n {
+                    assert_eq!(t.distance(a, b), d[b], "{} {a}->{b}", t.name());
+                    diameter = diameter.max(d[b]);
+                }
+            }
+            assert_eq!(t.diameter(), diameter, "{}", t.name());
         }
     }
 

@@ -11,7 +11,7 @@
 use std::sync::Arc;
 
 use tera_net::config::spec::{ExperimentSpec, TrafficSpec};
-use tera_net::routing::{Decision, Router};
+use tera_net::routing::{CandidateBuf, Decision, Router};
 use tera_net::sim::packet::Packet;
 use tera_net::sim::{Network, RunOpts, SimConfig, SimError, SwitchView};
 use tera_net::testing;
@@ -36,6 +36,7 @@ impl Router for GreedyNonMinRouter {
         pkt: &mut Packet,
         at_injection: bool,
         rng: &mut Rng,
+        buf: &mut CandidateBuf,
     ) -> Option<Decision> {
         let dst = pkt.dst_sw as usize;
         let direct = self.topo.port_to(view.sw, dst).expect("full mesh");
@@ -44,13 +45,14 @@ impl Router for GreedyNonMinRouter {
         }
         // Least-occupied of {direct} ∪ {all 2-hop deroutes}: no ordering,
         // no escape — cyclic buffer dependencies galore.
-        let mut cands = vec![(direct, 0usize, view.occ_flits(direct))];
+        buf.clear();
+        buf.push(direct, 0, view.occ_flits(direct));
         for p in 0..view.degree {
             if p != direct {
-                cands.push((p, 0, view.occ_flits(p) + 16));
+                buf.push(p, 0, view.occ_flits(p) + 16);
             }
         }
-        tera_net::routing::select_min_weight(view, &cands, rng)
+        tera_net::routing::select_min_weight(view, buf.as_slice(), rng)
     }
 
     fn name(&self) -> String {

@@ -236,7 +236,13 @@ fn router_factory_rejects_mismatched_topologies() {
     assert!(rejects("omniwar-hx", "fm16"));
     assert!(rejects("valiant", "hx4x4"));
     assert!(rejects("srinr", "hx4x4"));
-    assert!(rejects("tera-hx2", "hx4x4"));
+    // TERA is host-general now (the --host scenarios): a service whose
+    // edges the host contains constructs fine...
+    assert!(!rejects("tera-hx2", "hx4x4"));
+    assert!(!rejects("tera-mesh2", "hx4x4"));
+    // ...but one that needs a missing edge still fails loudly (the Path
+    // service wraps around the row boundary of an hx4x4).
+    assert!(rejects("tera-path", "hx4x4"));
 }
 
 #[test]

@@ -1,0 +1,957 @@
+//! Table/legacy equivalence suite for the table-driven routing core.
+//!
+//! 1. **Table fidelity**: the compiled [`RoutingTables`]/[`HxTables`]
+//!    reproduce `ServiceTopology::next_hop`/`distance` and the
+//!    [`Embedding`] port splits exactly, on FM{16,64,300} and HX[8x8].
+//! 2. **Decision equivalence**: every router of the evaluation is compared,
+//!    decision by decision with paired RNGs, against a *legacy mirror* — a
+//!    verbatim reimplementation of the pre-refactor per-call logic (trait
+//!    calls into the service topology, `port_to` chases, `Vec` candidate
+//!    sets). Byte-identical decisions on randomized adversarial views
+//!    prove the refactor changed the mechanism, not the routing.
+//! 3. **Host generality**: the same TERA core drains adversarial traffic
+//!    on a Full-mesh and on a 2D-HyperX host (`--host` smoke tests), and
+//!    the widened commit tag survives n = 300 switches.
+
+use std::sync::Arc;
+
+use tera_net::config::spec::{routing_by_name, topology_by_name, ExperimentSpec, TrafficSpec};
+use tera_net::routing::tera::ESCAPE_PATIENCE;
+use tera_net::routing::{
+    brinr_labels, select_min_weight, select_weighted_or_escape, srinr_labels, CandidateBuf,
+    HxTables, Router, RoutingTables,
+};
+use tera_net::service::{self, Embedding, HyperXService, ServiceTopology};
+use tera_net::sim::packet::{Packet, NO_SWITCH};
+use tera_net::sim::SwitchView;
+use tera_net::testing;
+use tera_net::topology::{coords, coords_to_id, full_mesh, PhysTopology, TopoKind};
+use tera_net::util::Rng;
+
+// ==========================================================================
+// 1. Table fidelity
+// ==========================================================================
+
+fn check_tables_reproduce(topo: &Arc<PhysTopology>, svc_name: &str) {
+    let n = topo.n;
+    let svc: Arc<dyn ServiceTopology> = Arc::from(service::by_name(svc_name, n).unwrap());
+    let tables = RoutingTables::compile(topo.clone(), Some(svc.clone()));
+    let emb = Embedding::new(topo, svc.as_ref());
+    for s in 0..n {
+        let main: Vec<usize> = tables.main_ports(s).iter().map(|&p| p as usize).collect();
+        let serv: Vec<usize> = tables
+            .service_ports(s)
+            .iter()
+            .map(|&p| p as usize)
+            .collect();
+        assert_eq!(main, emb.main_ports[s], "main split of switch {s}");
+        assert_eq!(serv, emb.service_ports[s], "service split of switch {s}");
+        for d in 0..n {
+            if s == d {
+                assert_eq!(tables.svc_dist(s, d), 0);
+                continue;
+            }
+            let nh = svc.next_hop(s, d);
+            assert_eq!(
+                tables.svc_port(s, d),
+                topo.port_to(s, nh).unwrap(),
+                "svc_port({s},{d})"
+            );
+            assert_eq!(tables.svc_dist(s, d), svc.distance(s, d), "svc_dist({s},{d})");
+            if topo.kind == TopoKind::FullMesh {
+                assert_eq!(tables.min_port(s, d), topo.port_to(s, d).unwrap());
+            }
+        }
+    }
+    assert!((tables.main_ratio() - emb.main_ratio()).abs() < 1e-12);
+}
+
+#[test]
+fn tables_reproduce_service_and_embedding_fm16() {
+    let topo = Arc::new(full_mesh(16));
+    for svc in ["hx2", "path", "tree4", "hypercube"] {
+        check_tables_reproduce(&topo, svc);
+    }
+}
+
+#[test]
+fn tables_reproduce_service_and_embedding_fm64() {
+    let topo = Arc::new(full_mesh(64));
+    for svc in ["hx3", "tree2", "mesh2"] {
+        check_tables_reproduce(&topo, svc);
+    }
+}
+
+#[test]
+fn tables_reproduce_service_and_embedding_fm300() {
+    // n > 256: ports and service distances must survive the u16 encoding.
+    let topo = Arc::new(full_mesh(300));
+    for svc in ["path", "tree4"] {
+        check_tables_reproduce(&topo, svc);
+    }
+}
+
+#[test]
+fn tables_reproduce_service_and_embedding_hx8x8() {
+    // A non-complete host: the mesh2 service (8×8 mesh) embeds edge-exactly
+    // into the 8×8 HyperX.
+    let topo = Arc::new(topology_by_name("hx8x8").unwrap());
+    check_tables_reproduce(&topo, "mesh2");
+    // DOR min ports on the HyperX host.
+    let tables = RoutingTables::compile(topo.clone(), None);
+    for s in 0..64 {
+        for d in 0..64 {
+            if s == d {
+                continue;
+            }
+            let (sx, sy) = (s % 8, s / 8);
+            let (dx, dy) = (d % 8, d / 8);
+            let nxt = if sx != dx { sy * 8 + dx } else { dx + dy * 8 };
+            assert_eq!(tables.min_port(s, d), topo.port_to(s, nxt).unwrap());
+        }
+    }
+}
+
+#[test]
+fn hx_tables_reproduce_sub_service() {
+    let topo = Arc::new(topology_by_name("hx8x8").unwrap());
+    let svc: Arc<dyn ServiceTopology> = Arc::new(HyperXService::hypercube(8).unwrap());
+    let hx = HxTables::with_service(topo.clone(), svc.clone());
+    let sub_emb = Embedding::new(&full_mesh(8), svc.as_ref());
+    for s in 0..64 {
+        let (x, y) = (s % 8, s / 8);
+        for dim in 0..2 {
+            let c = if dim == 0 { x } else { y };
+            let phys = |v: usize| if dim == 0 { y * 8 + v } else { v * 8 + x };
+            for t in 0..8 {
+                if t == c {
+                    continue;
+                }
+                assert_eq!(hx.dim_port(s, dim, t), topo.port_to(s, phys(t)).unwrap());
+                let nh = svc.next_hop(c, t);
+                assert_eq!(
+                    hx.svc_port(s, dim, t),
+                    topo.port_to(s, phys(nh)).unwrap(),
+                    "switch {s} dim {dim} dst-coord {t}"
+                );
+            }
+            let expect: Vec<usize> = (0..8)
+                .filter(|&v| v != c && !sub_emb.is_service(c, v))
+                .map(phys)
+                .collect();
+            let got: Vec<usize> = hx
+                .main_ports(s, dim)
+                .iter()
+                .map(|&p| topo.neighbor(s, p as usize))
+                .collect();
+            assert_eq!(got, expect, "switch {s} dim {dim} main peers");
+        }
+    }
+    assert_eq!(hx.sub_diameter(), svc.diameter());
+}
+
+// ==========================================================================
+// 2. Decision equivalence against legacy mirrors
+// ==========================================================================
+
+const NOW: u64 = 5;
+const SPEEDUP: u64 = 2;
+const OUT_CAP: usize = 5;
+
+struct ViewData {
+    occ: Vec<u32>,
+    out_lens: Vec<u32>,
+    grants: Vec<u8>,
+    last: Vec<u64>,
+}
+
+fn random_view(rng: &mut Rng, ports: usize, vcs: usize) -> ViewData {
+    ViewData {
+        occ: (0..ports).map(|_| rng.gen_range(200) as u32).collect(),
+        // 0..=5 with cap 5: a healthy share of full output queues.
+        out_lens: (0..ports * vcs)
+            .map(|_| rng.gen_range(OUT_CAP + 1) as u32)
+            .collect(),
+        grants: (0..ports).map(|_| rng.gen_range(3) as u8).collect(),
+        last: (0..ports)
+            .map(|_| if rng.gen_bool(0.3) { NOW } else { 0 })
+            .collect(),
+    }
+}
+
+impl ViewData {
+    fn view(&self, sw: usize, degree: usize, vcs: usize) -> SwitchView<'_> {
+        SwitchView::from_raw(
+            sw,
+            degree,
+            NOW,
+            SPEEDUP,
+            vcs,
+            OUT_CAP,
+            &self.occ,
+            &self.out_lens,
+            &self.grants,
+            &self.last,
+        )
+    }
+}
+
+fn mk_pkt(src_sw: usize, dst_sw: usize) -> Packet {
+    Packet {
+        src_server: src_sw as u32,
+        dst_server: dst_sw as u32,
+        src_sw: src_sw as u32,
+        dst_sw: dst_sw as u32,
+        intermediate: NO_SWITCH,
+        hops: 0,
+        vc: 0,
+        scratch: 0,
+        blocked: 0,
+        gen_cycle: 0,
+        inject_cycle: 0,
+        flits: 16,
+    }
+}
+
+/// Drive the refactored router and its legacy mirror through randomized
+/// multi-hop episodes with paired RNG streams; every decision (including
+/// waits) must agree exactly.
+fn assert_decisions_match<L>(
+    name: &str,
+    topo: &Arc<PhysTopology>,
+    router: &dyn Router,
+    mut legacy: L,
+    cases: u64,
+) where
+    L: FnMut(&SwitchView, &mut Packet, bool, &mut Rng) -> Option<(usize, usize)>,
+{
+    let vcs = router.num_vcs();
+    let n = topo.n;
+    let spc = 4;
+    testing::check(name, cases, |mrng| {
+        let src = mrng.gen_range(n);
+        let dst = loop {
+            let d = mrng.gen_range(n);
+            if d != src {
+                break d;
+            }
+        };
+        let seed = mrng.next_u64();
+        let mut rng_new = Rng::new(seed);
+        let mut rng_old = Rng::new(seed);
+        let mut pkt_new = mk_pkt(src, dst);
+        let mut pkt_old = mk_pkt(src, dst);
+        let mut buf = CandidateBuf::new();
+        let mut cur = src;
+        let mut at_injection = true;
+        for step in 0..12 {
+            if cur == dst {
+                break;
+            }
+            // Occasionally push the packet past the escape-patience gate so
+            // the escape branches are compared too.
+            if mrng.gen_bool(0.25) {
+                let b = ESCAPE_PATIENCE + mrng.gen_range(4) as u16;
+                pkt_new.blocked = b;
+                pkt_old.blocked = b;
+            }
+            let degree = topo.degree(cur);
+            let vd = random_view(mrng, degree + spc, vcs);
+            let view = vd.view(cur, degree, vcs);
+            let d_new = router.route(&view, &mut pkt_new, at_injection, &mut rng_new, &mut buf);
+            let d_old = legacy(&view, &mut pkt_old, at_injection, &mut rng_old);
+            assert_eq!(
+                d_new, d_old,
+                "{name}: step {step} cur={cur} dst={dst} at_injection={at_injection}"
+            );
+            match d_new {
+                None => {
+                    pkt_new.blocked = pkt_new.blocked.saturating_add(1);
+                    pkt_old.blocked = pkt_old.blocked.saturating_add(1);
+                }
+                Some((port, vc)) => {
+                    assert!(port < degree, "{name}: routed to a non-switch port");
+                    cur = topo.neighbor(cur, port);
+                    pkt_new.hops += 1;
+                    pkt_old.hops += 1;
+                    pkt_new.vc = vc as u8;
+                    pkt_old.vc = vc as u8;
+                    pkt_new.blocked = 0;
+                    pkt_old.blocked = 0;
+                    at_injection = false;
+                }
+            }
+        }
+    });
+}
+
+type LegacyDecision = Option<(usize, usize)>;
+
+/// Legacy MIN: DOR closed form + `port_to` per decision.
+fn legacy_min(
+    topo: &Arc<PhysTopology>,
+) -> impl FnMut(&SwitchView, &mut Packet, bool, &mut Rng) -> LegacyDecision + '_ {
+    move |view, pkt, _inj, _rng| {
+        let dst = pkt.dst_sw as usize;
+        let nxt = match &topo.kind {
+            TopoKind::FullMesh => dst,
+            TopoKind::HyperX { dims } => {
+                let c = coords(view.sw, dims);
+                let d = coords(dst, dims);
+                let mut nxt = dst;
+                for dim in 0..dims.len() {
+                    if c[dim] != d[dim] {
+                        let mut cc = c.clone();
+                        cc[dim] = d[dim];
+                        nxt = coords_to_id(&cc, dims);
+                        break;
+                    }
+                }
+                nxt
+            }
+        };
+        let port = topo.port_to(view.sw, nxt).unwrap();
+        view.has_space(port, 0).then_some((port, 0))
+    }
+}
+
+/// Legacy Valiant (pre-refactor body, verbatim).
+fn legacy_valiant(
+    topo: &Arc<PhysTopology>,
+) -> impl FnMut(&SwitchView, &mut Packet, bool, &mut Rng) -> LegacyDecision + '_ {
+    move |view, pkt, at_injection, rng| {
+        let dst = pkt.dst_sw as usize;
+        if at_injection {
+            if pkt.intermediate == NO_SWITCH {
+                pkt.intermediate = loop {
+                    let m = rng.gen_range(topo.n);
+                    if m != view.sw && m != dst {
+                        break m as u32;
+                    }
+                };
+            }
+            let port = topo.port_to(view.sw, pkt.intermediate as usize).unwrap();
+            view.has_space(port, 0).then_some((port, 0))
+        } else {
+            let port = topo.port_to(view.sw, dst).unwrap();
+            view.has_space(port, 1).then_some((port, 1))
+        }
+    }
+}
+
+/// Legacy UGAL (pre-refactor body, verbatim; threshold 16).
+fn legacy_ugal(
+    topo: &Arc<PhysTopology>,
+) -> impl FnMut(&SwitchView, &mut Packet, bool, &mut Rng) -> LegacyDecision + '_ {
+    move |view, pkt, at_injection, rng| {
+        let dst = pkt.dst_sw as usize;
+        if !at_injection {
+            let port = topo.port_to(view.sw, dst).unwrap();
+            return view.has_space(port, 1).then_some((port, 1));
+        }
+        let min_port = topo.port_to(view.sw, dst).unwrap();
+        let m = loop {
+            let m = rng.gen_range(topo.n);
+            if m != view.sw && m != dst {
+                break m;
+            }
+        };
+        let nonmin_port = topo.port_to(view.sw, m).unwrap();
+        if view.occ_flits(min_port) <= 2 * view.occ_flits(nonmin_port) + 16 {
+            if view.has_space(min_port, 0) {
+                pkt.intermediate = NO_SWITCH;
+                return Some((min_port, 0));
+            }
+        }
+        if view.has_space(nonmin_port, 0) {
+            pkt.intermediate = m as u32;
+            return Some((nonmin_port, 0));
+        }
+        None
+    }
+}
+
+/// Legacy Full-mesh Omni-WAR (pre-refactor body, verbatim; bias 16).
+fn legacy_omniwar(
+    topo: &Arc<PhysTopology>,
+) -> impl FnMut(&SwitchView, &mut Packet, bool, &mut Rng) -> LegacyDecision + '_ {
+    move |view, pkt, at_injection, rng| {
+        let dst = pkt.dst_sw as usize;
+        let min_port = topo.port_to(view.sw, dst).unwrap();
+        if !at_injection {
+            return view.has_space(min_port, 1).then_some((min_port, 1));
+        }
+        let mut best: Option<(usize, usize)> = None;
+        let mut best_w = u32::MAX;
+        let mut ties = 0usize;
+        for port in 0..view.degree {
+            let w = if port == min_port {
+                view.occ_flits(port)
+            } else {
+                2 * view.occ_flits(port) + 16
+            };
+            if w > best_w || !view.has_space(port, 0) {
+                continue;
+            }
+            if w < best_w {
+                best_w = w;
+                best = Some((port, 0));
+                ties = 1;
+            } else {
+                ties += 1;
+                if rng.gen_range(ties) == 0 {
+                    best = Some((port, 0));
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Legacy link-order router (pre-refactor body: `Vec<Vec>` allowed sets).
+fn legacy_linkorder(
+    topo: &Arc<PhysTopology>,
+    labels: Vec<u32>,
+    q: u32,
+) -> impl FnMut(&SwitchView, &mut Packet, bool, &mut Rng) -> Option<(usize, usize)> + '_ {
+    let n = topo.n;
+    let mut allowed = vec![Vec::new(); n * n];
+    for s in 0..n {
+        for d in 0..n {
+            if s == d {
+                continue;
+            }
+            for m in 0..n {
+                if m != s && m != d && labels[s * n + m] < labels[m * n + d] {
+                    allowed[s * n + d].push(m as u32);
+                }
+            }
+        }
+    }
+    move |view, pkt, at_injection, rng| {
+        let s = view.sw;
+        let d = pkt.dst_sw as usize;
+        let direct = topo.port_to(s, d).unwrap();
+        if !at_injection {
+            return if view.has_space(direct, 0) {
+                pkt.scratch = labels[s * n + d] + 1;
+                Some((direct, 0))
+            } else {
+                None
+            };
+        }
+        let mut cands: Vec<(usize, usize, u32)> = vec![(direct, 0, view.occ_flits(direct))];
+        for &m in &allowed[s * n + d] {
+            let p = topo.port_to(s, m as usize).unwrap();
+            cands.push((p, 0, view.occ_flits(p) + q));
+        }
+        let pick = select_weighted_or_escape(view, &cands, None, rng)?;
+        let to = topo.neighbor(s, pick.0);
+        pkt.scratch = labels[s * n + to] + 1;
+        Some(pick)
+    }
+}
+
+/// Legacy Full-mesh TERA (pre-refactor body, verbatim — including the old
+/// 8-bit `(switch << 8) | (port + 1)` commit tag, valid for n < 256).
+fn legacy_tera(
+    topo: &Arc<PhysTopology>,
+    svc: Arc<dyn ServiceTopology>,
+    q: u32,
+) -> impl FnMut(&SwitchView, &mut Packet, bool, &mut Rng) -> Option<(usize, usize)> + '_ {
+    let n = topo.n;
+    let emb = Embedding::new(topo, svc.as_ref());
+    let mut svc_port = vec![u32::MAX; n * n];
+    for cur in 0..n {
+        for dst in 0..n {
+            if cur != dst {
+                let nh = svc.next_hop(cur, dst);
+                svc_port[cur * n + dst] = topo.port_to(cur, nh).unwrap() as u32;
+            }
+        }
+    }
+    let main_ports = emb.main_ports.clone();
+    move |view, pkt, at_injection, rng| {
+        let s = view.sw;
+        let d = pkt.dst_sw as usize;
+        let svc_p = svc_port[s * n + d] as usize;
+        let weight = |p: usize| -> u32 {
+            if topo.neighbor(s, p) == d {
+                view.occ_flits(p)
+            } else {
+                view.occ_flits(p) + q
+            }
+        };
+        let committed = {
+            let tag = pkt.scratch;
+            (tag != 0 && (tag >> 8) as usize == s).then(|| (tag & 0xFF) as usize - 1)
+        };
+        if let Some(port) = committed {
+            if pkt.blocked < ESCAPE_PATIENCE {
+                return view.has_space(port, 0).then_some((port, 0));
+            }
+            if view.has_space(svc_p, 0) {
+                return Some((svc_p, 0));
+            }
+            return view.has_space(port, 0).then_some((port, 0));
+        }
+        let best = if at_injection {
+            let mut best = (svc_p, weight(svc_p));
+            let mut ties = 1usize;
+            for &p in &main_ports[s] {
+                let w = weight(p);
+                if w < best.1 {
+                    best = (p, w);
+                    ties = 1;
+                } else if w == best.1 {
+                    ties += 1;
+                    if rng.gen_range(ties) == 0 {
+                        best = (p, w);
+                    }
+                }
+            }
+            best.0
+        } else {
+            let direct = topo.port_to(s, d).unwrap();
+            if direct == svc_p || weight(svc_p) <= weight(direct) {
+                svc_p
+            } else {
+                direct
+            }
+        };
+        pkt.scratch = ((s as u32) << 8) | (best as u32 + 1);
+        view.has_space(best, 0).then_some((best, 0))
+    }
+}
+
+// --- legacy 2D-HyperX machinery (pre-refactor Geom + SubTera, verbatim) ---
+
+const HOP_D0: u32 = 1 << 0;
+const HOP_D1: u32 = 1 << 1;
+const ORDER_SET: u32 = 1 << 2;
+const ORDER_YX: u32 = 1 << 3;
+
+#[derive(Clone, Copy)]
+struct LegacyGeom {
+    a: usize,
+}
+
+impl LegacyGeom {
+    fn of(topo: &PhysTopology) -> Self {
+        match &topo.kind {
+            TopoKind::HyperX { dims } if dims.len() == 2 && dims[0] == dims[1] => {
+                Self { a: dims[0] }
+            }
+            _ => panic!("square 2D-HyperX required"),
+        }
+    }
+
+    fn xy(&self, id: usize) -> (usize, usize) {
+        (id % self.a, id / self.a)
+    }
+
+    fn id(&self, x: usize, y: usize) -> usize {
+        y * self.a + x
+    }
+
+    fn along(&self, cur: usize, dim: usize, v: usize) -> usize {
+        let (x, y) = self.xy(cur);
+        if dim == 0 {
+            self.id(v, y)
+        } else {
+            self.id(x, v)
+        }
+    }
+
+    fn coord(&self, id: usize, dim: usize) -> usize {
+        if dim == 0 {
+            id % self.a
+        } else {
+            id / self.a
+        }
+    }
+}
+
+struct LegacySub {
+    a: usize,
+    svc_next: Vec<u8>,
+    main_peers: Vec<Vec<u8>>,
+    q: u32,
+}
+
+impl LegacySub {
+    fn new(a: usize, svc: &dyn ServiceTopology, q: u32) -> Self {
+        let fm = full_mesh(a);
+        let emb = Embedding::new(&fm, svc);
+        let mut svc_next = vec![0u8; a * a];
+        for cur in 0..a {
+            for dst in 0..a {
+                if cur != dst {
+                    svc_next[cur * a + dst] = svc.next_hop(cur, dst) as u8;
+                }
+            }
+        }
+        let main_peers = (0..a)
+            .map(|u| {
+                (0..a)
+                    .filter(|&v| v != u && !emb.is_service(u, v))
+                    .map(|v| v as u8)
+                    .collect()
+            })
+            .collect();
+        Self {
+            a,
+            svc_next,
+            main_peers,
+            q,
+        }
+    }
+
+    fn candidates(
+        &self,
+        view: &SwitchView,
+        cur_node: usize,
+        dst_node: usize,
+        vc: usize,
+        at_dim_injection: bool,
+        port_of: impl Fn(usize) -> usize,
+        out: &mut Vec<(usize, usize, u32)>,
+    ) -> (usize, usize) {
+        let svc_hop = self.svc_next[cur_node * self.a + dst_node] as usize;
+        let weight = |node: usize, port: usize| -> u32 {
+            if node == dst_node {
+                view.occ_flits(port)
+            } else {
+                view.occ_flits(port) + self.q
+            }
+        };
+        let sp = port_of(svc_hop);
+        out.push((sp, vc, weight(svc_hop, sp)));
+        if at_dim_injection {
+            for &v in &self.main_peers[cur_node] {
+                let v = v as usize;
+                let p = port_of(v);
+                out.push((p, vc, weight(v, p)));
+            }
+        } else if svc_hop != dst_node {
+            let dp = port_of(dst_node);
+            out.push((dp, vc, weight(dst_node, dp)));
+        }
+        (sp, vc)
+    }
+}
+
+fn legacy_dor_tera(
+    topo: &Arc<PhysTopology>,
+    q: u32,
+) -> impl FnMut(&SwitchView, &mut Packet, bool, &mut Rng) -> Option<(usize, usize)> + '_ {
+    let geom = LegacyGeom::of(topo);
+    let svc = HyperXService::hypercube(geom.a).unwrap();
+    let sub = LegacySub::new(geom.a, &svc, q);
+    move |view, pkt, _inj, rng| {
+        let cur = view.sw;
+        let dst = pkt.dst_sw as usize;
+        let dim = if geom.coord(cur, 0) != geom.coord(dst, 0) {
+            0
+        } else {
+            1
+        };
+        let hop_bit = if dim == 0 { HOP_D0 } else { HOP_D1 };
+        let at_dim_injection = pkt.scratch & hop_bit == 0;
+        let mut cands = Vec::with_capacity(geom.a);
+        let escape = sub.candidates(
+            view,
+            geom.coord(cur, dim),
+            geom.coord(dst, dim),
+            0,
+            at_dim_injection,
+            |node| topo.port_to(cur, geom.along(cur, dim, node)).unwrap(),
+            &mut cands,
+        );
+        let escape = (pkt.blocked >= ESCAPE_PATIENCE).then_some(escape);
+        let pick = select_weighted_or_escape(view, &cands, escape, rng)?;
+        pkt.scratch |= hop_bit;
+        Some(pick)
+    }
+}
+
+fn legacy_o1turn_tera(
+    topo: &Arc<PhysTopology>,
+    q: u32,
+) -> impl FnMut(&SwitchView, &mut Packet, bool, &mut Rng) -> Option<(usize, usize)> + '_ {
+    let geom = LegacyGeom::of(topo);
+    let svc = HyperXService::hypercube(geom.a).unwrap();
+    let sub = LegacySub::new(geom.a, &svc, q);
+    move |view, pkt, _inj, rng| {
+        let cur = view.sw;
+        let dst = pkt.dst_sw as usize;
+        if pkt.scratch & ORDER_SET == 0 {
+            pkt.scratch |= ORDER_SET;
+            if rng.gen_range(2) == 1 {
+                pkt.scratch |= ORDER_YX;
+            }
+        }
+        let yx = pkt.scratch & ORDER_YX != 0;
+        let order: [usize; 2] = if yx { [1, 0] } else { [0, 1] };
+        let mut dim = order[1];
+        let mut vc = 1;
+        if geom.coord(cur, order[0]) != geom.coord(dst, order[0]) {
+            dim = order[0];
+            vc = 0;
+        }
+        let hop_bit = if dim == 0 { HOP_D0 } else { HOP_D1 };
+        let at_dim_injection = pkt.scratch & hop_bit == 0;
+        let mut cands = Vec::with_capacity(geom.a);
+        let escape = sub.candidates(
+            view,
+            geom.coord(cur, dim),
+            geom.coord(dst, dim),
+            vc,
+            at_dim_injection,
+            |node| topo.port_to(cur, geom.along(cur, dim, node)).unwrap(),
+            &mut cands,
+        );
+        let escape = (pkt.blocked >= ESCAPE_PATIENCE).then_some(escape);
+        let pick = select_weighted_or_escape(view, &cands, escape, rng)?;
+        pkt.scratch |= hop_bit;
+        Some(pick)
+    }
+}
+
+fn legacy_dimwar(
+    topo: &Arc<PhysTopology>,
+) -> impl FnMut(&SwitchView, &mut Packet, bool, &mut Rng) -> Option<(usize, usize)> + '_ {
+    let geom = LegacyGeom::of(topo);
+    move |view, pkt, _inj, rng| {
+        let cur = view.sw;
+        let dst = pkt.dst_sw as usize;
+        let dim = if geom.coord(cur, 0) != geom.coord(dst, 0) {
+            0
+        } else {
+            1
+        };
+        let hop_bit = if dim == 0 { HOP_D0 } else { HOP_D1 };
+        let derouted = pkt.scratch & hop_bit != 0;
+        let vc = usize::from(derouted);
+        let c = geom.coord(cur, dim);
+        let t = geom.coord(dst, dim);
+        let min_port = topo.port_to(cur, geom.along(cur, dim, t)).unwrap();
+        let mut cands: Vec<(usize, usize, u32)> = vec![(min_port, vc, view.occ_flits(min_port))];
+        if !derouted {
+            for v in 0..geom.a {
+                if v != c && v != t {
+                    let p = topo.port_to(cur, geom.along(cur, dim, v)).unwrap();
+                    cands.push((p, vc, 2 * view.occ_flits(p) + 16));
+                }
+            }
+        }
+        let pick = select_min_weight(view, &cands, rng)?;
+        pkt.scratch |= hop_bit;
+        Some(pick)
+    }
+}
+
+fn legacy_omniwar_hx(
+    topo: &Arc<PhysTopology>,
+) -> impl FnMut(&SwitchView, &mut Packet, bool, &mut Rng) -> Option<(usize, usize)> + '_ {
+    let geom = LegacyGeom::of(topo);
+    move |view, pkt, _inj, rng| {
+        let cur = view.sw;
+        let dst = pkt.dst_sw as usize;
+        let vc = (pkt.hops as usize).min(3);
+        let mut cands: Vec<(usize, usize, u32)> = Vec::with_capacity(2 * geom.a);
+        for dim in 0..2 {
+            let c = geom.coord(cur, dim);
+            let t = geom.coord(dst, dim);
+            if c == t {
+                continue;
+            }
+            let min_port = topo.port_to(cur, geom.along(cur, dim, t)).unwrap();
+            cands.push((min_port, vc, view.occ_flits(min_port)));
+            let hop_bit = if dim == 0 { HOP_D0 } else { HOP_D1 };
+            if pkt.scratch & hop_bit == 0 {
+                for v in 0..geom.a {
+                    if v != c && v != t {
+                        let p = topo.port_to(cur, geom.along(cur, dim, v)).unwrap();
+                        cands.push((p, vc, 2 * view.occ_flits(p) + 16));
+                    }
+                }
+            }
+        }
+        let pick = select_min_weight(view, &cands, rng)?;
+        let to = topo.neighbor(cur, pick.0);
+        let dim = if geom.coord(to, 0) != geom.coord(cur, 0) {
+            0
+        } else {
+            1
+        };
+        pkt.scratch |= if dim == 0 { HOP_D0 } else { HOP_D1 };
+        Some(pick)
+    }
+}
+
+#[test]
+fn fm_routers_decide_identically_to_legacy() {
+    let topo = Arc::new(full_mesh(16));
+    let q = 54;
+    let router = |name: &str| routing_by_name(name, topo.clone(), q).unwrap();
+    assert_decisions_match("min/fm", &topo, router("min").as_ref(), legacy_min(&topo), 24);
+    assert_decisions_match(
+        "valiant/fm",
+        &topo,
+        router("valiant").as_ref(),
+        legacy_valiant(&topo),
+        24,
+    );
+    assert_decisions_match(
+        "ugal/fm",
+        &topo,
+        router("ugal").as_ref(),
+        legacy_ugal(&topo),
+        24,
+    );
+    assert_decisions_match(
+        "omniwar/fm",
+        &topo,
+        router("omniwar").as_ref(),
+        legacy_omniwar(&topo),
+        24,
+    );
+    assert_decisions_match(
+        "srinr/fm",
+        &topo,
+        router("srinr").as_ref(),
+        legacy_linkorder(&topo, srinr_labels(16), q),
+        24,
+    );
+    assert_decisions_match(
+        "brinr/fm",
+        &topo,
+        router("brinr").as_ref(),
+        legacy_linkorder(&topo, brinr_labels(16), q),
+        24,
+    );
+    for svc in ["hx2", "path", "tree4"] {
+        let s: Arc<dyn ServiceTopology> = Arc::from(service::by_name(svc, 16).unwrap());
+        assert_decisions_match(
+            &format!("tera-{svc}/fm"),
+            &topo,
+            router(&format!("tera-{svc}")).as_ref(),
+            legacy_tera(&topo, s, q),
+            24,
+        );
+    }
+}
+
+#[test]
+fn hx_routers_decide_identically_to_legacy() {
+    let topo = Arc::new(topology_by_name("hx8x8").unwrap());
+    let q = 54;
+    let router = |name: &str| routing_by_name(name, topo.clone(), q).unwrap();
+    assert_decisions_match("min/hx", &topo, router("min").as_ref(), legacy_min(&topo), 24);
+    assert_decisions_match(
+        "dor-tera/hx",
+        &topo,
+        router("dor-tera").as_ref(),
+        legacy_dor_tera(&topo, q),
+        24,
+    );
+    assert_decisions_match(
+        "o1turn-tera/hx",
+        &topo,
+        router("o1turn-tera").as_ref(),
+        legacy_o1turn_tera(&topo, q),
+        24,
+    );
+    assert_decisions_match(
+        "dimwar/hx",
+        &topo,
+        router("dimwar").as_ref(),
+        legacy_dimwar(&topo),
+        24,
+    );
+    assert_decisions_match(
+        "omniwar-hx/hx",
+        &topo,
+        router("omniwar-hx").as_ref(),
+        legacy_omniwar_hx(&topo),
+        24,
+    );
+}
+
+// ==========================================================================
+// 3. Host generality and the widened commit tag
+// ==========================================================================
+
+/// The same TERA core drains a fixed adversarial burst on both hosts the
+/// `--host` knob exposes, deterministically.
+#[test]
+fn tera_runs_on_both_hosts() {
+    for host in ["fm16", "hx4x4"] {
+        let spec = ExperimentSpec {
+            name: format!("host-smoke-{host}"),
+            topology: host.into(),
+            servers_per_switch: 4,
+            routing: "tera-mesh2".into(),
+            traffic: TrafficSpec::Fixed {
+                pattern: "rsp".into(),
+                packets_per_server: 30,
+            },
+            seed: 5,
+            max_cycles: 5_000_000,
+            ..Default::default()
+        };
+        let a = spec.run().unwrap_or_else(|e| panic!("{host}: {e}"));
+        assert_eq!(a.delivered_packets as usize, 16 * 4 * 30, "{host}");
+        let b = spec.run().unwrap();
+        assert_eq!(a.finish_cycle, b.finish_cycle, "{host}");
+        assert_eq!(a.delivered_flits, b.delivered_flits, "{host}");
+    }
+}
+
+/// Regression for the commit-tag overflow: with the old
+/// `(switch << 8) | (port + 1)` encoding, a commitment to port ≥ 255
+/// corrupted the switch half of the tag (FM256+ switches have ≥ 255
+/// ports). The widened 16-bit fields must round-trip at n = 300.
+#[test]
+fn commit_tag_survives_fm300() {
+    let n = 300;
+    let topo = Arc::new(full_mesh(n));
+    let router = routing_by_name("tera-tree4", topo.clone(), 54).unwrap();
+    let s = 299; // switch id above the old 8-bit range
+    let dst = 298; // direct port 298 — above the old port-field range
+    let degree = topo.degree(s);
+    let ports = degree + 1;
+    // Port 298 wins the injection decision: everything else is congested.
+    let mut occ = vec![1000u32; ports];
+    occ[298] = 0;
+    let out_lens = vec![0u32; ports];
+    let grants = vec![0u8; ports];
+    let last = vec![0u64; ports];
+    let view =
+        SwitchView::from_raw(s, degree, NOW, SPEEDUP, 1, OUT_CAP, &occ, &out_lens, &grants, &last);
+    let mut pkt = mk_pkt(s, dst);
+    let mut rng = Rng::new(7);
+    let mut buf = CandidateBuf::new();
+    let first = router.route(&view, &mut pkt, true, &mut rng, &mut buf);
+    assert_eq!(first, Some((298, 0)), "min-weight direct port wins");
+    assert_eq!(pkt.scratch >> 16, 299, "switch half of the tag");
+    assert_eq!(pkt.scratch & 0xFFFF, 299, "port half of the tag (port + 1)");
+    // Same view again: the committed port is re-granted, not re-rolled.
+    let second = router.route(&view, &mut pkt, false, &mut rng, &mut buf);
+    assert_eq!(second, Some((298, 0)), "commitment round-trips through scratch");
+    // Committed port full → the packet waits...
+    let mut full = out_lens.clone();
+    full[298] = OUT_CAP as u32;
+    let view_full =
+        SwitchView::from_raw(s, degree, NOW, SPEEDUP, 1, OUT_CAP, &occ, &full, &grants, &last);
+    assert_eq!(router.route(&view_full, &mut pkt, false, &mut rng, &mut buf), None);
+    // ...until patience runs out, then the service escape takes over.
+    pkt.blocked = ESCAPE_PATIENCE;
+    let tables = RoutingTables::compile(
+        topo.clone(),
+        Some(Arc::from(service::by_name("tree4", n).unwrap())),
+    );
+    let escape = router.route(&view_full, &mut pkt, false, &mut rng, &mut buf);
+    assert_eq!(escape, Some((tables.svc_port(s, dst), 0)));
+}
