@@ -84,6 +84,22 @@ fn bernoulli_spec(
     }
 }
 
+/// Simulated Mcycles/s and delivered flits of one spec through the free
+/// build path, which honors `spec.shards` exactly (the engine would clamp
+/// it to a thread budget). Used by the sharded-cycle-execution section.
+fn sharded_throughput(spec: &ExperimentSpec) -> (f64, u64) {
+    let TrafficSpec::Bernoulli { horizon, .. } = &spec.traffic else {
+        panic!("perf specs are Bernoulli");
+    };
+    let mut net = tera_net::engine::build_network(spec).expect("build");
+    let mut wl = spec.build_workload(&net.topo).expect("workload");
+    let opts = tera_net::engine::run_opts(spec);
+    let t = Timer::start();
+    let stats = net.run(wl.as_mut(), &opts).expect("run");
+    let wall = t.elapsed_secs();
+    (*horizon as f64 / wall / 1e6, stats.delivered_flits)
+}
+
 /// Simulated Mcycles/s and delivered packets/s of one spec, single thread.
 fn sim_throughput(spec: &ExperimentSpec) -> (f64, f64) {
     let TrafficSpec::Bernoulli { horizon, .. } = &spec.traffic else {
@@ -285,6 +301,57 @@ fn main() {
     for r in ["min", "srinr", "tera-hx2", "omniwar"] {
         let d = decision_rate(r);
         println!("  {r:<12} {:>12.2} M grants/s", d / 1e6);
+    }
+
+    // ---- Sharded cycle execution: one replica across cores (FM300). ----
+    // The phase-parallel core partitions the switches into `--shards`
+    // blocks simulated concurrently within each cycle; results are
+    // bit-identical at any shard count (asserted below against the serial
+    // run), so this section measures the pure wall-clock win on the
+    // paper's FM300-class instance. Emits BENCH_shards.json as the
+    // perf-trajectory artifact.
+    println!("\n== sharded cycle execution (fm300 × 8 srv/sw, Bernoulli 0.35) ==\n");
+    println!(
+        "{:<12} {:>7} {:>12} {:>10}",
+        "pattern", "shards", "Mcycles/s", "speedup"
+    );
+    let mut artifact = String::from(
+        "{\n  \"bench\": \"sharded-cycle-execution\",\n  \"topology\": \"fm300\",\n  \
+         \"routing\": \"tera-path\",\n  \"load\": 0.35,\n  \"results\": [\n",
+    );
+    let mut first = true;
+    for pattern in ["uniform", "rsp"] {
+        let mut base_mcps = 0.0f64;
+        let mut base_flits = 0u64;
+        for shards in [1usize, 2, 4, 8] {
+            let mut spec = bernoulli_spec("fm300", 8, "tera-path", pattern, 0.35, 1_200);
+            spec.shards = shards;
+            let (mcps, flits) = sharded_throughput(&spec);
+            if shards == 1 {
+                base_mcps = mcps;
+                base_flits = flits;
+            } else {
+                assert_eq!(
+                    flits, base_flits,
+                    "{pattern}@{shards} shards: determinism violated vs serial run"
+                );
+            }
+            let speedup = mcps / base_mcps;
+            println!("{pattern:<12} {shards:>7} {mcps:>12.3} {speedup:>9.2}x");
+            if !first {
+                artifact.push_str(",\n");
+            }
+            first = false;
+            artifact.push_str(&format!(
+                "    {{\"pattern\": \"{pattern}\", \"shards\": {shards}, \
+                 \"mcycles_per_sec\": {mcps:.4}, \"speedup_vs_serial\": {speedup:.3}}}"
+            ));
+        }
+    }
+    artifact.push_str("\n  ]\n}\n");
+    match std::fs::write("BENCH_shards.json", &artifact) {
+        Ok(()) => println!("\nwrote BENCH_shards.json (sharded determinism: VERIFIED)"),
+        Err(e) => println!("\ncould not write BENCH_shards.json: {e}"),
     }
 
     // PJRT batched scorer (decision path through the artifact).

@@ -52,6 +52,12 @@ pub struct ExperimentSpec {
     pub seed: u64,
     pub warmup: u64,
     pub max_cycles: u64,
+    /// Phase-parallel compute shards for the simulator core (1 = fully
+    /// serial). Any value yields bit-identical `SimStats` — this only
+    /// trades wall-clock time; the engine additionally clamps it to its
+    /// thread budget so batch workers and shard workers never
+    /// oversubscribe (`--shards` on the CLI).
+    pub shards: usize,
 }
 
 impl Default for ExperimentSpec {
@@ -70,6 +76,7 @@ impl Default for ExperimentSpec {
             seed: 1,
             warmup: 1_000,
             max_cycles: 2_000_000,
+            shards: 1,
         }
     }
 }
@@ -227,6 +234,9 @@ impl ExperimentSpec {
         if let Some(i) = get_int("max_cycles") {
             spec.max_cycles = i as u64;
         }
+        if let Some(i) = get_int("shards") {
+            spec.shards = (i as usize).max(1);
+        }
         let mode = get_str("mode").unwrap_or_else(|| "bernoulli".into());
         spec.traffic = match mode.as_str() {
             "fixed" => TrafficSpec::Fixed {
@@ -348,6 +358,16 @@ mod tests {
         ] {
             assert_eq!(routing_by_name(r, hx(), 54).unwrap().num_vcs(), vcs, "{r}");
         }
+    }
+
+    #[test]
+    fn shards_key_parses_and_defaults_to_serial() {
+        assert_eq!(ExperimentSpec::default().shards, 1);
+        let cfg = crate::config::parse("topology = \"fm16\"\nshards = 4\n").unwrap();
+        assert_eq!(ExperimentSpec::from_value(&cfg).unwrap().shards, 4);
+        // 0 is nonsensical; it normalizes to the serial core.
+        let cfg = crate::config::parse("shards = 0\n").unwrap();
+        assert_eq!(ExperimentSpec::from_value(&cfg).unwrap().shards, 1);
     }
 
     #[test]

@@ -12,7 +12,11 @@
 //!   (`config::spec::routing_by_name` → `routing::tables`), so the per-
 //!   cycle route path is O(1) flat-array reads over a pre-built
 //!   `RoutingTables`/`HxTables` and a reused `CandidateBuf` — never a
-//!   trait call into the service topology;
+//!   trait call into the service topology. Compiled `(topology, router)`
+//!   pairs are **cached** inside the engine behind `Arc`s, keyed by
+//!   `(topology, routing, q)`: a 20-point load sweep on FM300 builds its
+//!   tables once, not per point (routers are stateless policies, so
+//!   sharing them across concurrent runs is sound by construction);
 //! * [`Engine::run_one`] — build and run a single spec;
 //! * [`Engine::run_batch`] — fan a batch out over worker threads (tokio is
 //!   not in the offline crate set; std threads are a perfect fit for
@@ -21,11 +25,24 @@
 //! * [`Engine::run_replicas`] — multi-seed replica batching: the same
 //!   experiment across derived seeds, aggregated into a
 //!   [`ReplicaSummary`] (mean/σ throughput, merged latency histogram).
+//!
+//! # One thread budget
+//!
+//! The engine owns a single `threads` budget shared by **both** levels of
+//! parallelism: batch/replica workers *and* the per-replica shard workers
+//! of the phase-parallel simulator core (`SimConfig::shards`). A batch of
+//! W concurrent points caps each point's shards at `threads / W`, so
+//! replica parallelism × shard parallelism never oversubscribes the
+//! budget. Because sharded execution is bit-identical at any shard count
+//! (DESIGN.md, "Phase-parallel invariants"), this clamp is a pure
+//! wall-clock policy — results never depend on it.
 
+use std::collections::HashMap;
 use std::sync::{mpsc, Arc, Mutex};
 
 use crate::config::spec::{routing_by_name, topology_by_name, ExperimentSpec, TrafficSpec};
 use crate::metrics::{LatencyHist, SimStats};
+use crate::routing::Router;
 use crate::sim::{Network, RunOpts, SimConfig, SimError};
 use crate::topology::PhysTopology;
 use crate::traffic::kernels::{self, KernelWorkload};
@@ -91,12 +108,18 @@ pub fn build_workload(
 /// Build the simulator network for a spec. This is where the routing
 /// tables get compiled (inside `routing_by_name`): all per-`(switch, dst)`
 /// routing state is flattened here, once, before the first cycle runs.
+///
+/// The spec's `shards` knob is honored verbatim (clamped only to the
+/// switch count, inside `Network::new`) — the engine methods apply the
+/// thread-budget clamp instead; use this free function when you want exact
+/// control, e.g. the sharding benches and determinism tests.
 pub fn build_network(spec: &ExperimentSpec) -> anyhow::Result<Network> {
     let topo = Arc::new(topology_by_name(&spec.topology)?);
     let router = routing_by_name(&spec.routing, topo.clone(), spec.q)?;
     let cfg = SimConfig {
         servers_per_switch: spec.servers_per_switch,
         seed: spec.seed,
+        shards: spec.shards,
         ..SimConfig::default()
     };
     Ok(Network::new(topo, router, cfg))
@@ -199,9 +222,22 @@ impl ReplicaSummary {
     }
 }
 
+/// Cache key for compiled routing state: `(topology, routing, q)`,
+/// case-normalized. Everything else a spec can vary (seed, traffic, spc,
+/// shards) does not enter table compilation.
+type RouterKey = (String, String, u32);
+
+/// A compiled routing artifact: the topology and the table-backed router
+/// built over it (both immutable, shared via `Arc`).
+type CompiledRouting = (Arc<PhysTopology>, Arc<dyn Router>);
+
 /// The unified experiment engine.
 pub struct Engine {
     threads: usize,
+    /// Compiled `(topology, router)` pairs shared across points and batch
+    /// workers. Routers are immutable table policies (`Router: Send +
+    /// Sync`), so one compilation serves any number of concurrent runs.
+    compiled: Mutex<HashMap<RouterKey, CompiledRouting>>,
 }
 
 impl Default for Engine {
@@ -213,15 +249,14 @@ impl Default for Engine {
 impl Engine {
     /// Engine with the default thread pool width.
     pub fn new() -> Self {
-        Self {
-            threads: default_threads(),
-        }
+        Self::with_threads(default_threads())
     }
 
     /// Engine fanning batches out over exactly `threads` workers.
     pub fn with_threads(threads: usize) -> Self {
         Self {
             threads: threads.max(1),
+            compiled: Mutex::new(HashMap::new()),
         }
     }
 
@@ -234,9 +269,71 @@ impl Engine {
         self.threads
     }
 
-    /// Materialize a spec into a runnable [`Instance`].
+    /// Distinct `(topology, routing, q)` combinations compiled so far —
+    /// observability hook for the table-cache tests.
+    pub fn compiled_routers(&self) -> usize {
+        self.compiled.lock().unwrap().len()
+    }
+
+    /// The compiled `(topology, router)` pair for a spec, built on first
+    /// use and shared afterwards. Misses build under the lock: table
+    /// compilation is milliseconds even at FM300, and serializing it
+    /// guarantees each key is built exactly once per engine.
+    fn compiled_for(&self, spec: &ExperimentSpec) -> anyhow::Result<CompiledRouting> {
+        let key = (
+            spec.topology.to_ascii_lowercase(),
+            spec.routing.to_ascii_lowercase(),
+            spec.q,
+        );
+        let mut cache = self.compiled.lock().unwrap();
+        if let Some((topo, router)) = cache.get(&key) {
+            return Ok((topo.clone(), router.clone()));
+        }
+        let topo = Arc::new(topology_by_name(&spec.topology)?);
+        let router = routing_by_name(&spec.routing, topo.clone(), spec.q)?;
+        cache.insert(key, (topo.clone(), router.clone()));
+        Ok((topo, router))
+    }
+
+    /// Build a network for a spec with its shard count capped at
+    /// `shard_budget` (the caller's slice of the engine's thread budget).
+    fn network_for(
+        &self,
+        spec: &ExperimentSpec,
+        shard_budget: usize,
+    ) -> anyhow::Result<Network> {
+        let (topo, router) = self.compiled_for(spec)?;
+        let cfg = SimConfig {
+            servers_per_switch: spec.servers_per_switch,
+            seed: spec.seed,
+            shards: spec.shards.clamp(1, shard_budget.max(1)),
+            ..SimConfig::default()
+        };
+        Ok(Network::new(topo, router, cfg))
+    }
+
+    /// Build and run one point under a shard budget.
+    fn run_point(&self, spec: &ExperimentSpec, shard_budget: usize) -> anyhow::Result<SimStats> {
+        let mut net = self.network_for(spec, shard_budget)?;
+        let mut workload = build_workload(spec, &net.topo)?;
+        let opts = run_opts(spec);
+        Ok(net.run(workload.as_mut(), &opts)?)
+    }
+
+    fn timed_point(&self, spec: ExperimentSpec, shard_budget: usize) -> RunResult {
+        let t0 = std::time::Instant::now();
+        let stats = self.run_point(&spec, shard_budget);
+        RunResult {
+            spec,
+            stats,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Materialize a spec into a runnable [`Instance`]. A single point may
+    /// use the engine's whole thread budget for its shards.
     pub fn build(&self, spec: &ExperimentSpec) -> anyhow::Result<Instance> {
-        let network = build_network(spec)?;
+        let network = self.network_for(spec, self.threads)?;
         let workload = build_workload(spec, &network.topo)?;
         let opts = run_opts(spec);
         Ok(Instance {
@@ -248,8 +345,7 @@ impl Engine {
 
     /// Build and run a single spec end-to-end.
     pub fn run_one(&self, spec: &ExperimentSpec) -> anyhow::Result<SimStats> {
-        let mut instance = self.build(spec)?;
-        Ok(instance.run()?)
+        self.run_point(spec, self.threads)
     }
 
     /// Run all specs, `threads`-wide, returning results in submission order.
@@ -257,60 +353,39 @@ impl Engine {
     /// Deadlocks and build errors are reported per-point (they don't abort
     /// the batch — Fig-5-style comparisons legitimately include algorithms
     /// that fail on some patterns). Every point derives its RNG streams from
-    /// its own spec seed, so results are identical for any thread count.
+    /// its own spec seed, so results are identical for any thread count —
+    /// and, per the phase-parallel determinism contract, for any shard
+    /// budget the batch width leaves each point.
     pub fn run_batch(&self, specs: Vec<ExperimentSpec>) -> Vec<RunResult> {
         let n = specs.len();
         let workers = self.threads.min(n.max(1));
         if workers <= 1 {
             return specs
                 .into_iter()
-                .map(|spec| {
-                    let t0 = std::time::Instant::now();
-                    let stats = self.run_one(&spec);
-                    RunResult {
-                        spec,
-                        stats,
-                        wall_secs: t0.elapsed().as_secs_f64(),
-                    }
-                })
+                .map(|spec| self.timed_point(spec, self.threads))
                 .collect();
         }
-        let work: Arc<Mutex<std::vec::IntoIter<(usize, ExperimentSpec)>>> = Arc::new(Mutex::new(
-            specs
-                .into_iter()
-                .enumerate()
-                .collect::<Vec<_>>()
-                .into_iter(),
-        ));
-        let (tx, rx) = mpsc::channel::<(usize, RunResult)>();
-        let mut handles = Vec::new();
-        for _ in 0..workers {
-            let work = Arc::clone(&work);
-            let tx = tx.clone();
-            handles.push(std::thread::spawn(move || loop {
-                let next = work.lock().unwrap().next();
-                let Some((idx, spec)) = next else { break };
-                let t0 = std::time::Instant::now();
-                let stats = Engine::single_threaded().run_one(&spec);
-                let wall_secs = t0.elapsed().as_secs_f64();
-                let _ = tx.send((
-                    idx,
-                    RunResult {
-                        spec,
-                        stats,
-                        wall_secs,
-                    },
-                ));
-            }));
-        }
-        drop(tx);
+        // W concurrent points each get threads/W of the budget for their
+        // shard workers, so total parallelism stays within `threads`.
+        let shard_budget = (self.threads / workers).max(1);
+        let work = Mutex::new(specs.into_iter().enumerate().collect::<Vec<_>>().into_iter());
         let mut slots: Vec<Option<RunResult>> = (0..n).map(|_| None).collect();
-        for (idx, res) in rx {
-            slots[idx] = Some(res);
-        }
-        for h in handles {
-            h.join().expect("batch worker panicked");
-        }
+        std::thread::scope(|scope| {
+            let (tx, rx) = mpsc::channel::<(usize, RunResult)>();
+            for _ in 0..workers {
+                let work = &work;
+                let tx = tx.clone();
+                scope.spawn(move || loop {
+                    let next = work.lock().unwrap().next();
+                    let Some((idx, spec)) = next else { break };
+                    let _ = tx.send((idx, self.timed_point(spec, shard_budget)));
+                });
+            }
+            drop(tx);
+            for (idx, res) in rx {
+                slots[idx] = Some(res);
+            }
+        });
         slots.into_iter().map(|s| s.expect("missing result")).collect()
     }
 
@@ -405,5 +480,32 @@ mod tests {
         assert!(results[0].stats.is_ok());
         assert!(results[1].stats.is_err());
         assert!(results[2].stats.is_ok());
+    }
+
+    #[test]
+    fn compiled_routing_is_cached_across_points_and_seeds() {
+        let engine = Engine::with_threads(3);
+        // Same (topology, routing, q) across seeds → one compilation;
+        // a different routing adds exactly one more.
+        let mut specs: Vec<_> = (0..6).map(|s| tiny_spec("tera-path", s)).collect();
+        specs.push(tiny_spec("min", 1));
+        let results = engine.run_batch(specs);
+        assert!(results.iter().all(|r| r.stats.is_ok()));
+        assert_eq!(engine.compiled_routers(), 2);
+        // Cache hits must not perturb results: a fresh engine agrees.
+        let cold = Engine::single_threaded().run_one(&tiny_spec("tera-path", 2)).unwrap();
+        let warm = engine.run_one(&tiny_spec("tera-path", 2)).unwrap();
+        assert_eq!(cold, warm);
+    }
+
+    #[test]
+    fn shard_budget_never_changes_results() {
+        // spec.shards asks for 4; budgets of 1 and 4 clamp differently but
+        // the phase-parallel core is bit-identical at any shard count.
+        let mut spec = tiny_spec("tera-path", 13);
+        spec.shards = 4;
+        let narrow = Engine::with_threads(1).run_one(&spec).unwrap();
+        let wide = Engine::with_threads(4).run_one(&spec).unwrap();
+        assert_eq!(narrow, wide);
     }
 }

@@ -107,8 +107,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         seed: args.get_u64("seed", 1)?,
         warmup: args.get_u64("warmup", 2_000)?,
         max_cycles: args.get_u64("max-cycles", 10_000_000)?,
+        shards: args.get_usize("shards", 1)?,
     };
-    let engine = engine_from(args)?;
+    // An explicit --shards request widens the default thread budget so the
+    // sharded core actually runs that wide (results are bit-identical
+    // either way; see DESIGN.md, "Phase-parallel invariants").
+    let engine = engine_from(args, spec.shards)?;
     let replicas = args.get_usize("replicas", 1)?;
     if replicas > 1 {
         report_replicas(&engine, &spec, replicas)
@@ -117,11 +121,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     }
 }
 
-/// Build the engine the CLI flags ask for (`--threads N`, default: cores-1).
-fn engine_from(args: &Args) -> anyhow::Result<Engine> {
+/// Build the engine the CLI flags ask for (`--threads N`, default: cores-1,
+/// raised to `min_threads` when a wider `--shards` request needs it).
+fn engine_from(args: &Args, min_threads: usize) -> anyhow::Result<Engine> {
     Ok(match args.get("threads") {
         Some(v) => Engine::with_threads(v.parse()?),
-        None => Engine::new(),
+        None => Engine::with_threads(tera_net::engine::default_threads().max(min_threads)),
     })
 }
 
@@ -133,7 +138,8 @@ fn cmd_config(args: &Args) -> anyhow::Result<()> {
     let value = tera_net::config::parse(&src)?;
     let root = value.get("experiment").unwrap_or(&value);
     let spec = ExperimentSpec::from_value(root)?;
-    report_one(&engine_from(args)?, &spec)
+    let shards = spec.shards;
+    report_one(&engine_from(args, shards)?, &spec)
 }
 
 fn report_replicas(engine: &Engine, spec: &ExperimentSpec, replicas: usize) -> anyhow::Result<()> {
@@ -293,4 +299,8 @@ RUN FLAGS:
   --kernel all2all|stencil2d|stencil3d|fft3d|allreduce --mapping linear|random
   --spc N (servers/switch)  --q 54  --seed 1
   --replicas N (multi-seed batch, aggregated)  --threads N (sweep width)
+  --shards N              phase-parallel simulator shards per replica
+                          (bit-identical results at any N; wall-clock knob.
+                          The engine caps replica-workers × shards at the
+                          --threads budget)
 ";

@@ -6,7 +6,12 @@
 //! per-run, plus exact min/max/mean.
 
 /// Log-bucketed latency histogram.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` compares the full bucket vector plus the exact moments
+/// (`sum` is a deterministic fold over the record order), so equality is
+/// the strong "bit-identical sample stream" check the sharded-execution
+/// determinism tests rely on.
+#[derive(Clone, Debug, PartialEq)]
 pub struct LatencyHist {
     /// Buckets: index i covers [floor(GROWTH^i), floor(GROWTH^{i+1})).
     counts: Vec<u64>,

@@ -9,7 +9,12 @@ pub use hist::LatencyHist;
 pub use jain::jain_index;
 
 /// Aggregate statistics for one simulation run.
-#[derive(Clone, Debug, Default)]
+///
+/// `PartialEq` is field-exact (including the latency histogram and per-arc
+/// link counters) — it is the equality the phase-parallel determinism
+/// contract is stated in: an N-shard run must produce a `SimStats` equal
+/// to the 1-shard run's (`rust/tests/engine.rs`, sharding section).
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct SimStats {
     /// Flits delivered to servers within the measurement window.
     pub delivered_flits: u64,

@@ -18,21 +18,29 @@
 //! rate), and a buffer slot is occupied from header arrival until the
 //! crossbar grant releases it upstream via a credit.
 //!
-//! # Engine architecture (active-set, flat-buffer hot path)
+//! # Engine architecture (active-set, flat-buffer, phase-parallel)
 //!
 //! The per-cycle loop touches only components with work (see DESIGN.md,
 //! "Active-set invariants"):
 //!
-//! * all port FIFOs are fixed-capacity rings in one flat [`QueuePool`]
+//! * all port FIFOs are fixed-capacity rings in flat [`QueuePool`]s
 //!   (structure-of-arrays; zero steady-state allocation);
-//! * `active_switches` / `active_servers` are dirty worklists — a switch is
-//!   listed iff it buffers at least one packet (`Switch::work > 0`), a
-//!   server iff its source queue is non-empty; idle components cost zero;
+//! * per-shard `active` / global `active_servers` are dirty worklists — a
+//!   switch is listed iff it buffers at least one packet
+//!   (`Switch::work > 0`), a server iff its source queue is non-empty;
+//!   idle components cost zero;
 //! * in-flight events live on an overflow-safe hierarchical
-//!   [`TimingWheel`], so arbitrary `link_latency` values are exact.
+//!   [`TimingWheel`], so arbitrary `link_latency` values are exact;
+//! * switches are partitioned into `cfg.shards` contiguous blocks, each
+//!   owned by a [`shard::ShardState`]. Every cycle runs a **compute**
+//!   phase (allocation + transmission, per shard, concurrently on worker
+//!   threads) and a serial **commit** phase that drains shard outboxes in
+//!   canonical order onto the wheel — N-shard runs are bit-identical to
+//!   1-shard runs (DESIGN.md, "Phase-parallel invariants").
 
 pub mod packet;
 pub mod queues;
+mod shard;
 pub mod switch;
 pub mod wheel;
 
@@ -44,10 +52,12 @@ pub use wheel::TimingWheel;
 use std::sync::Arc;
 
 use crate::metrics::SimStats;
-use crate::routing::{CandidateBuf, Router};
+use crate::routing::Router;
 use crate::topology::PhysTopology;
 use crate::traffic::Workload;
 use crate::util::Rng;
+
+use shard::{ComputeCtx, ShardState, WorkerPool, SWITCH_RNG_STREAM};
 
 /// Simulator parameters (§5 defaults).
 #[derive(Clone, Debug)]
@@ -72,6 +82,13 @@ pub struct SimConfig {
     /// `4 × (link_latency + pkt_flits)` so long wires (packets legitimately
     /// in flight with nothing else moving) never trip it.
     pub watchdog_cycles: u64,
+    /// Compute-phase shards: the switches are split into this many
+    /// contiguous blocks, simulated concurrently within each cycle
+    /// (clamped to the switch count). Results are **bit-identical for any
+    /// value** — see DESIGN.md, "Phase-parallel invariants" — so this is a
+    /// pure wall-clock knob. 1 (the default) runs fully inline with no
+    /// worker threads.
+    pub shards: usize,
 }
 
 impl Default for SimConfig {
@@ -85,6 +102,7 @@ impl Default for SimConfig {
             servers_per_switch: 4,
             seed: 1,
             watchdog_cycles: 20_000,
+            shards: 1,
         }
     }
 }
@@ -138,17 +156,21 @@ impl std::fmt::Display for SimError {
 
 impl std::error::Error for SimError {}
 
-/// Events scheduled on the timing wheel.
+/// Events scheduled on the timing wheel. Packets travel **by value**: a
+/// transmitting shard frees its arena slot and the receiving shard
+/// allocates a fresh one, which keeps every arena shard-private (ids are
+/// never observable across shards, so arena layout cannot leak into
+/// routing decisions).
 enum Event {
     /// Packet header reaches input `(sw, port)` on `vc`.
     Arrive {
         sw: u32,
         port: u32,
         vc: u8,
-        pkt: PacketId,
+        pkt: Packet,
     },
     /// Packet tail reaches its destination server.
-    Deliver { pkt: PacketId },
+    Deliver { pkt: Packet },
 }
 
 /// Per-server injection state.
@@ -159,30 +181,27 @@ struct ServerState {
     free_at: u64,
 }
 
-/// The simulated network: topology + switches + servers + router.
+/// The simulated network: topology + sharded switches + servers + router.
 pub struct Network {
     pub topo: Arc<PhysTopology>,
     pub router: Arc<dyn Router>,
     pub cfg: SimConfig,
-    switches: Vec<Switch>,
+    /// Contiguous switch blocks, each owning its queues/arena/RNGs.
+    shards: Vec<ShardState>,
+    /// Shard index of every switch (blocks are near-equal, not exact
+    /// divisions, so this lookup is the source of truth).
+    switch_shard: Vec<u32>,
     servers: Vec<ServerState>,
-    arena: PacketArena,
-    queues: QueuePool,
     wheel: TimingWheel<Event>,
     /// Reused scratch buffer for the events popped each cycle.
     event_buf: Vec<Event>,
-    /// Reused candidate scratch threaded through every `Router::route`
-    /// call — routers never heap-allocate per decision.
-    route_buf: CandidateBuf,
-    credit_returns: Vec<(u32, u32, u8)>,
-    /// Dirty worklist of switches with buffered packets (`work > 0`).
-    active_switches: Vec<u32>,
-    switch_active: Vec<bool>,
     /// Dirty worklist of servers with queued source packets.
     active_servers: Vec<u32>,
     server_active: Vec<bool>,
-    rng: Rng,
     now: u64,
+    /// Packets injected and not yet delivered (buffered in any shard or in
+    /// flight on the wheel).
+    live: usize,
     stats: SimStats,
     warmup: u64,
     window_end: u64,
@@ -205,43 +224,77 @@ impl Network {
         let n = topo.n;
         let vcs = router.num_vcs();
         let spc = cfg.servers_per_switch;
-        let mut queues = QueuePool::new();
-        let mut switches = Vec::with_capacity(n);
-        for s in 0..n {
-            let deg = topo.degree(s);
-            let ports = deg + spc;
-            let in_q0 = queues.num_queues();
-            for _ in 0..ports * vcs {
-                queues.add_queue(cfg.input_cap_pkts);
+        let max_degree = topo.max_degree();
+        let max_hops = router.max_hops();
+
+        // Partition the switches into near-equal contiguous blocks. Every
+        // block is non-empty because the shard count is clamped to n.
+        let nshards = cfg.shards.clamp(1, n.max(1));
+        let bounds: Vec<usize> = (0..=nshards).map(|k| k * n / nshards).collect();
+        let mut switch_shard = vec![0u32; n];
+        let mut shards = Vec::with_capacity(nshards);
+        for k in 0..nshards {
+            let (lo, hi) = (bounds[k], bounds[k + 1]);
+            let mut queues = QueuePool::new();
+            let mut switches = Vec::with_capacity(hi - lo);
+            for s in lo..hi {
+                switch_shard[s] = k as u32;
+                let deg = topo.degree(s);
+                let ports = deg + spc;
+                let in_q0 = queues.num_queues();
+                for _ in 0..ports * vcs {
+                    queues.add_queue(cfg.input_cap_pkts);
+                }
+                let out_q0 = queues.num_queues();
+                for _ in 0..ports * vcs {
+                    queues.add_queue(cfg.output_cap_pkts);
+                }
+                let mut upstream = Vec::with_capacity(ports);
+                for p in 0..deg {
+                    let up_sw = topo.neighbor(s, p) as u32;
+                    let up_port = topo.reverse_port(s, p) as u32;
+                    upstream.push(Some((up_sw, up_port)));
+                }
+                upstream.resize(ports, None);
+                let mut credits = vec![cfg.input_cap_pkts as u32; deg * vcs];
+                // Ejection ports: a virtually infinite pool (never
+                // decremented).
+                credits.resize(ports * vcs, u32::MAX / 2);
+                switches.push(Switch {
+                    degree: deg,
+                    ports,
+                    vcs,
+                    in_q0,
+                    out_q0,
+                    busy_until: vec![0; ports],
+                    upstream,
+                    link_free_at: vec![0; ports],
+                    occ_flits: vec![0; ports],
+                    grants_this_cycle: vec![0; ports],
+                    last_grant_cycle: vec![u64::MAX; ports],
+                    credits,
+                    work: 0,
+                });
             }
-            let out_q0 = queues.num_queues();
-            for _ in 0..ports * vcs {
-                queues.add_queue(cfg.output_cap_pkts);
-            }
-            let mut upstream = Vec::with_capacity(ports);
-            for p in 0..deg {
-                let up_sw = topo.neighbor(s, p) as u32;
-                let up_port = topo.reverse_port(s, p) as u32;
-                upstream.push(Some((up_sw, up_port)));
-            }
-            upstream.resize(ports, None);
-            let mut credits = vec![cfg.input_cap_pkts as u32; deg * vcs];
-            // Ejection ports: a virtually infinite pool (never decremented).
-            credits.resize(ports * vcs, u32::MAX / 2);
-            switches.push(Switch {
-                degree: deg,
-                ports,
-                vcs,
-                in_q0,
-                out_q0,
-                busy_until: vec![0; ports],
-                upstream,
-                link_free_at: vec![0; ports],
-                occ_flits: vec![0; ports],
-                grants_this_cycle: vec![0; ports],
-                last_grant_cycle: vec![u64::MAX; ports],
-                credits,
-                work: 0,
+            // One RNG stream per switch, derived from (seed, switch id):
+            // allocator/VC randomness is independent of visit order and of
+            // the shard count (the determinism invariant).
+            let rngs = (lo..hi)
+                .map(|s| Rng::derive(cfg.seed, SWITCH_RNG_STREAM + s as u64))
+                .collect();
+            shards.push(ShardState {
+                lo,
+                switches,
+                queues,
+                arena: PacketArena::with_capacity(1024),
+                rngs,
+                active: Vec::with_capacity(hi - lo),
+                active_flag: vec![false; hi - lo],
+                outbox: Vec::new(),
+                credit_out: Vec::new(),
+                link_flits: vec![0; (hi - lo) * max_degree],
+                route_buf: crate::routing::CandidateBuf::new(),
+                progress: false,
             });
         }
         let servers = (0..n * spc)
@@ -250,8 +303,6 @@ impl Network {
                 free_at: 0,
             })
             .collect();
-        let max_degree = topo.max_degree();
-        let max_hops = router.max_hops();
         let stats = SimStats::new(n * spc, n * max_degree);
         let watchdog = cfg
             .watchdog_cycles
@@ -259,21 +310,16 @@ impl Network {
         Self {
             topo,
             router,
-            rng: Rng::derive(cfg.seed, 0xC0FFEE),
             cfg,
-            switches,
+            shards,
+            switch_shard,
             servers,
-            arena: PacketArena::with_capacity(4096),
-            queues,
             wheel: TimingWheel::new(),
             event_buf: Vec::new(),
-            route_buf: CandidateBuf::new(),
-            credit_returns: Vec::new(),
-            active_switches: Vec::with_capacity(n),
-            switch_active: vec![false; n],
             active_servers: Vec::with_capacity(n * spc),
             server_active: vec![false; n * spc],
             now: 0,
+            live: 0,
             stats,
             warmup: 0,
             window_end: u64::MAX,
@@ -292,14 +338,20 @@ impl Network {
 
     /// Packets currently inside the network (injected, not delivered).
     pub fn live_packets(&self) -> usize {
-        self.arena.live()
+        self.live
     }
 
-    /// Switches currently on the active worklist (those holding buffered
+    /// Number of compute shards this network was partitioned into
+    /// (`cfg.shards` clamped to the switch count).
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Switches currently on the active worklists (those holding buffered
     /// packets, plus any awaiting lazy removal). Diagnostic accessor;
     /// `rust/tests/engine.rs` uses it to pin the idle-network invariant.
     pub fn active_switches(&self) -> usize {
-        self.active_switches.len()
+        self.shards.iter().map(|sh| sh.active.len()).sum()
     }
 
     #[inline]
@@ -307,11 +359,17 @@ impl Network {
         cycle >= self.warmup && cycle < self.window_end
     }
 
-    #[inline]
-    fn activate_switch(&mut self, s: usize) {
-        if !self.switch_active[s] {
-            self.switch_active[s] = true;
-            self.active_switches.push(s as u32);
+    /// Build the read-only context the compute phase needs (cloned into
+    /// worker threads for multi-shard runs).
+    fn compute_ctx(&self) -> ComputeCtx {
+        ComputeCtx {
+            topo: self.topo.clone(),
+            router: self.router.clone(),
+            cfg: self.cfg.clone(),
+            warmup: self.warmup,
+            window_end: self.window_end,
+            max_degree: self.max_degree,
+            max_hops: self.max_hops,
         }
     }
 
@@ -321,22 +379,51 @@ impl Network {
         self.warmup = opts.warmup;
         self.window_end = opts.warmup.saturating_add(opts.window.unwrap_or(u64::MAX / 2));
         self.last_progress = self.now;
+        let ctx = self.compute_ctx();
+        // Worker threads exist only for multi-shard runs, live for exactly
+        // this run, and are joined on every exit path (WorkerPool::drop).
+        let pool = if self.shards.len() > 1 {
+            Some(WorkerPool::spawn(self.shards.len(), &ctx))
+        } else {
+            None
+        };
+        let mut result: Result<(), SimError> = Ok(());
         loop {
             if opts.stop_when_drained
                 && workload.exhausted()
-                && self.arena.live() == 0
+                && self.live == 0
                 && self.pending_sources == 0
             {
                 break;
             }
             if self.now >= opts.max_cycles {
                 if opts.stop_when_drained {
-                    return Err(SimError::CycleLimit(opts.max_cycles));
+                    result = Err(SimError::CycleLimit(opts.max_cycles));
                 }
                 break;
             }
-            self.step(workload)?;
+            if let Err(e) = self.step(workload, &ctx, pool.as_ref()) {
+                result = Err(e);
+                break;
+            }
         }
+        drop(pool);
+        // Fold the shard-local, window-gated link counters into the global
+        // per-arc stats and reset them — on error paths too, so a failed
+        // run's counters land in `self.stats` exactly as the pre-shard
+        // engine's did (it recorded them there directly) instead of
+        // leaking into a later run.
+        for sh in &mut self.shards {
+            for (i, v) in sh.link_flits.iter_mut().enumerate() {
+                if *v != 0 {
+                    let ls = i / self.max_degree;
+                    let o = i % self.max_degree;
+                    self.stats.link_flits[(sh.lo + ls) * self.max_degree + o] += *v;
+                    *v = 0;
+                }
+            }
+        }
+        result?;
         let mut stats = std::mem::replace(
             &mut self.stats,
             SimStats::new(self.servers.len(), self.topo.n * self.max_degree),
@@ -346,8 +433,14 @@ impl Network {
         Ok(stats)
     }
 
-    /// One simulated cycle.
-    fn step(&mut self, workload: &mut dyn Workload) -> Result<(), SimError> {
+    /// One simulated cycle: serial event/injection phases, the (possibly
+    /// parallel) per-shard compute phase, then the serial commit phase.
+    fn step(
+        &mut self,
+        workload: &mut dyn Workload,
+        ctx: &ComputeCtx,
+        pool: Option<&WorkerPool>,
+    ) -> Result<(), SimError> {
         let now = self.now;
         let flits = self.cfg.pkt_flits as u64;
 
@@ -357,33 +450,34 @@ impl Network {
         for ev in events.drain(..) {
             match ev {
                 Event::Arrive { sw, port, vc, pkt } => {
-                    let s = sw as usize;
-                    let q = self.switches[s].in_q(port as usize, vc as usize);
-                    self.queues.push_back(q, pkt);
-                    self.switches[s].work += 1;
-                    self.activate_switch(s);
+                    let k = self.switch_shard[sw as usize] as usize;
+                    let sh = &mut self.shards[k];
+                    let ls = sw as usize - sh.lo;
+                    let id = sh.arena.alloc(pkt);
+                    let q = sh.switches[ls].in_q(port as usize, vc as usize);
+                    sh.queues.push_back(q, id);
+                    sh.switches[ls].work += 1;
+                    sh.activate(sw);
                 }
                 Event::Deliver { pkt } => {
-                    let p = self.arena.get(pkt);
                     debug_assert!(
-                        (p.hops as usize) <= self.max_hops,
+                        (pkt.hops as usize) <= self.max_hops,
                         "livelock bound violated: {} hops > {} ({})",
-                        p.hops,
+                        pkt.hops,
                         self.max_hops,
                         self.router.name()
                     );
                     if self.in_window(now) {
-                        self.stats.delivered_flits += p.flits as u64;
+                        self.stats.delivered_flits += pkt.flits as u64;
                         self.stats.delivered_packets += 1;
                     }
-                    if self.in_window(p.gen_cycle) {
-                        self.stats.latency.record(now - p.gen_cycle);
-                        let h = (p.hops as usize).min(self.stats.hops.len() - 1);
+                    if self.in_window(pkt.gen_cycle) {
+                        self.stats.latency.record(now - pkt.gen_cycle);
+                        let h = (pkt.hops as usize).min(self.stats.hops.len() - 1);
                         self.stats.hops[h] += 1;
                     }
-                    let (src, dst) = (p.src_server, p.dst_server);
-                    self.arena.free(pkt);
-                    workload.on_delivered(src, dst, now);
+                    self.live -= 1;
+                    workload.on_delivered(pkt.src_server, pkt.dst_server, now);
                 }
             }
         }
@@ -421,12 +515,15 @@ impl Network {
                 continue;
             }
             let sw = srv / spc;
+            let k = self.switch_shard[sw] as usize;
+            let sh = &mut self.shards[k];
+            let ls = sw - sh.lo;
             let local = srv % spc;
-            let port = self.switches[sw].degree + local;
+            let port = sh.switches[ls].degree + local;
             // Injection always lands on VC 0 (cf. §2.1.2: MIN packets must
             // enter on the lowest-ordered VC).
-            let q = self.switches[sw].in_q(port, 0);
-            if self.queues.len(q) >= self.cfg.input_cap_pkts {
+            let q = sh.switches[ls].in_q(port, 0);
+            if sh.queues.len(q) >= self.cfg.input_cap_pkts {
                 idx += 1;
                 continue; // backpressure into the source queue
             }
@@ -434,7 +531,7 @@ impl Network {
             self.servers[srv].free_at = now + flits;
             self.pending_sources -= 1;
             let dst_sw = (dst as usize / spc) as u32;
-            let pkt = self.arena.alloc(Packet {
+            let id = sh.arena.alloc(Packet {
                 src_server: srv as u32,
                 dst_server: dst,
                 src_sw: sw as u32,
@@ -448,45 +545,60 @@ impl Network {
                 inject_cycle: now,
                 flits: self.cfg.pkt_flits,
             });
-            self.queues.push_back(q, pkt);
-            self.switches[sw].work += 1;
-            self.activate_switch(sw);
+            sh.queues.push_back(q, id);
+            sh.switches[ls].work += 1;
+            sh.activate(sw as u32);
+            self.live += 1;
             if self.in_window(now) {
                 self.stats.injected_per_server[srv] += 1;
             }
             idx += 1;
         }
 
-        // ---- Phases 4+5: crossbar allocation then link transmission, per
-        // active switch (allocation and transmission of a switch only touch
-        // its own state — deferred credits keep cross-switch effects out of
-        // this loop, so fusing the phases preserves the phase semantics).
-        let mut idx = 0;
-        while idx < self.active_switches.len() {
-            let s = self.active_switches[idx] as usize;
-            if self.switches[s].work == 0 {
-                self.switch_active[s] = false;
-                self.active_switches.swap_remove(idx);
-                continue;
+        // ---- Phases 4+5 (compute): crossbar allocation then link
+        // transmission, per active switch of each shard. Shards touch only
+        // their own state; cross-switch effects land in outboxes. ----
+        match pool {
+            Some(p) => p.run_cycle(&mut self.shards, now),
+            None => {
+                for sh in &mut self.shards {
+                    sh.compute(now, ctx);
+                }
             }
-            self.allocate_switch(s);
-            self.transmit_switch(s);
-            idx += 1;
         }
 
-        // ---- Phase 6: apply deferred credit returns. ----
-        for i in 0..self.credit_returns.len() {
-            let (sw, port, vc) = self.credit_returns[i];
-            let s = &mut self.switches[sw as usize];
-            s.credits[port as usize * s.vcs + vc as usize] += 1;
+        // ---- Phase 6 (commit): drain shard outboxes in canonical order
+        // (shards hold ascending switch ranges and emit in ascending
+        // (switch, port) order, so this sequence is independent of the
+        // shard count), then apply the commutative credit returns. ----
+        let mut k = 0;
+        while k < self.shards.len() {
+            let mut outbox = std::mem::take(&mut self.shards[k].outbox);
+            for (when, ev) in outbox.drain(..) {
+                self.wheel.schedule(now, when, ev);
+            }
+            self.shards[k].outbox = outbox;
+            let mut credits = std::mem::take(&mut self.shards[k].credit_out);
+            for &(sw, port, vc) in credits.iter() {
+                let k2 = self.switch_shard[sw as usize] as usize;
+                let sh = &mut self.shards[k2];
+                let ls = sw as usize - sh.lo;
+                let s = &mut sh.switches[ls];
+                s.credits[port as usize * s.vcs + vc as usize] += 1;
+            }
+            credits.clear();
+            self.shards[k].credit_out = credits;
+            if self.shards[k].progress {
+                self.last_progress = now;
+            }
+            k += 1;
         }
-        self.credit_returns.clear();
 
         // ---- Watchdog. ----
-        if self.arena.live() > 0 && now - self.last_progress > self.watchdog {
+        if self.live > 0 && now - self.last_progress > self.watchdog {
             return Err(SimError::Deadlock {
                 cycle: now,
-                live: self.arena.live(),
+                live: self.live,
                 idle: now - self.last_progress,
             });
         }
@@ -495,191 +607,59 @@ impl Network {
         Ok(())
     }
 
-    /// Crossbar allocation for one switch: rotating-priority scan of input
-    /// ports, one grant per input port, ≤ speedup grants per output port.
-    fn allocate_switch(&mut self, s: usize) {
-        let now = self.now;
-        let vcs = self.switches[s].vcs;
-        let num_inputs = self.switches[s].ports;
-        let degree = self.switches[s].degree;
-        let spc = self.cfg.servers_per_switch;
-        let offset = self.rng.gen_range(num_inputs);
-        let xbar_cycles =
-            (self.cfg.pkt_flits as u64 + self.cfg.speedup - 1) / self.cfg.speedup;
-
-        for k in 0..num_inputs {
-            let i = (k + offset) % num_inputs;
-            if self.switches[s].busy_until[i] > now
-                || self.switches[s].input_occupancy(&self.queues, i) == 0
-            {
-                continue;
-            }
-            let at_injection = i >= degree;
-            let vc_off = if vcs > 1 { self.rng.gen_range(vcs) } else { 0 };
-            'vc_scan: for kv in 0..vcs {
-                let vc = (kv + vc_off) % vcs;
-                let q_in = self.switches[s].in_q(i, vc);
-                let Some(pkt_id) = self.queues.front(q_in) else {
-                    continue;
-                };
-                // Routing decision (slices borrowed immutably, packet
-                // mutably — all disjoint fields of the network).
-                let decision = {
-                    let sw = &self.switches[s];
-                    let view = SwitchView {
-                        sw: s,
-                        degree,
-                        now,
-                        speedup: self.cfg.speedup,
-                        vcs,
-                        output_cap_pkts: self.cfg.output_cap_pkts,
-                        occ_flits: &sw.occ_flits,
-                        out_lens: self.queues.lens(sw.out_q0, sw.ports * vcs),
-                        grants_this_cycle: &sw.grants_this_cycle,
-                        last_grant_cycle: &sw.last_grant_cycle,
-                    };
-                    let pkt = self.arena.get_mut(pkt_id);
-                    if pkt.dst_sw as usize == s {
-                        // Eject toward the destination server, keeping the
-                        // packet's current VC.
-                        let local = pkt.dst_server as usize % spc;
-                        let port = degree + local;
-                        if view.has_space(port, pkt.vc as usize) {
-                            Some((port, pkt.vc as usize))
-                        } else {
-                            None
-                        }
-                    } else {
-                        self.router.route(
-                            &view,
-                            pkt,
-                            at_injection,
-                            &mut self.rng,
-                            &mut self.route_buf,
-                        )
-                    }
-                };
-                let Some((out_port, out_vc)) = decision else {
-                    // Head packet stays blocked: bump its patience counter
-                    // (escape-based routers consult it).
-                    let pkt = self.arena.get_mut(pkt_id);
-                    pkt.blocked = pkt.blocked.saturating_add(1);
-                    continue 'vc_scan;
-                };
-                // Commit the grant (routers only return grantable ports —
-                // SwitchView::has_space folds in the speedup limit).
-                let q_out;
-                {
-                    let sw = &mut self.switches[s];
-                    if sw.last_grant_cycle[out_port] != now {
-                        sw.last_grant_cycle[out_port] = now;
-                        sw.grants_this_cycle[out_port] = 0;
-                    }
-                    debug_assert!((sw.grants_this_cycle[out_port] as u64) < self.cfg.speedup);
-                    sw.grants_this_cycle[out_port] += 1;
-                    sw.occ_flits[out_port] += self.cfg.pkt_flits as u32;
-                    sw.busy_until[i] = now + xbar_cycles;
-                    q_out = sw.out_q(out_port, out_vc);
-                    if let Some((usw, uport)) = sw.upstream[i] {
-                        self.credit_returns.push((usw, uport, vc as u8));
-                    }
-                }
-                debug_assert!(self.queues.len(q_out) < self.cfg.output_cap_pkts);
-                self.queues.push_back(q_out, pkt_id);
-                let popped = self.queues.pop_front(q_in);
-                debug_assert_eq!(popped, Some(pkt_id));
-                let pkt = self.arena.get_mut(pkt_id);
-                pkt.vc = out_vc as u8;
-                pkt.blocked = 0;
-                if out_port < degree {
-                    pkt.hops += 1;
-                    debug_assert!(
-                        (pkt.hops as usize) <= self.max_hops,
-                        "hop bound exceeded at switch {s}: {} hops (router {})",
-                        pkt.hops,
-                        self.router.name()
-                    );
-                }
-                self.last_progress = now;
-                break 'vc_scan; // one grant per input port per cycle
-            }
-        }
-    }
-
-    /// Outgoing-link scheduling for one switch: per free link, pick a ready
-    /// VC (non-empty queue + downstream credit) at random rotation.
-    fn transmit_switch(&mut self, s: usize) {
-        let now = self.now;
-        let flits = self.cfg.pkt_flits as u64;
-        let vcs = self.switches[s].vcs;
-        let num_outputs = self.switches[s].ports;
-        let degree = self.switches[s].degree;
-        for o in 0..num_outputs {
-            if self.switches[s].link_free_at[o] > now
-                || self.switches[s].output_queued(&self.queues, o) == 0
-            {
-                continue;
-            }
-            let vc_off = if vcs > 1 { self.rng.gen_range(vcs) } else { 0 };
-            let mut chosen: Option<usize> = None;
-            for kv in 0..vcs {
-                let vc = (kv + vc_off) % vcs;
-                if !self.queues.is_empty(self.switches[s].out_q(o, vc))
-                    && self.switches[s].credits[o * vcs + vc] > 0
-                {
-                    chosen = Some(vc);
-                    break;
-                }
-            }
-            let Some(vc) = chosen else { continue };
-            let pkt_id = self
-                .queues
-                .pop_front(self.switches[s].out_q(o, vc))
-                .unwrap();
-            {
-                let sw = &mut self.switches[s];
-                sw.link_free_at[o] = now + flits;
-                // Occupancy is the *output queue* depth in flits (the
-                // paper's Algorithm-1 occupancy[p]; q = 54 is calibrated
-                // against the 5-packet output buffer): the packet leaves
-                // the queue now.
-                sw.occ_flits[o] = sw.occ_flits[o].saturating_sub(flits as u32);
-                sw.work -= 1;
-            }
-            if o < degree {
-                self.switches[s].credits[o * vcs + vc] -= 1;
-                if self.in_window(now) {
-                    self.stats.link_flits[s * self.max_degree + o] += flits;
-                }
-                let dst_sw = self.topo.neighbor(s, o) as u32;
-                let dst_port = self.topo.reverse_port(s, o) as u32;
-                let when = now + self.cfg.link_latency;
-                self.schedule(
-                    when,
-                    Event::Arrive {
-                        sw: dst_sw,
-                        port: dst_port,
-                        vc: vc as u8,
-                        pkt: pkt_id,
-                    },
-                );
-            } else {
-                // Ejection: the server consumes at line rate; the tail is
-                // received `flits` cycles from now.
-                self.schedule(now + flits, Event::Deliver { pkt: pkt_id });
-            }
-            self.last_progress = now;
-        }
-    }
-
-    #[inline]
-    fn schedule(&mut self, when: u64, ev: Event) {
-        self.wheel.schedule(self.now, when, ev);
-    }
-
     /// Total occupancy snapshot (flits buffered per output port of a
     /// switch) — used by the artifact-validation harness and tests.
     pub fn occupancy_snapshot(&self, s: usize) -> Vec<u32> {
-        self.switches[s].occ_flits.clone()
+        let sh = &self.shards[self.switch_shard[s] as usize];
+        sh.switches[s - sh.lo].occ_flits.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::{routing_by_name, topology_by_name};
+
+    fn tiny_net(n: usize, shards: usize) -> Network {
+        let topo = Arc::new(topology_by_name(&format!("fm{n}")).unwrap());
+        let router = routing_by_name("min", topo.clone(), 54).unwrap();
+        let cfg = SimConfig {
+            servers_per_switch: 2,
+            shards,
+            ..SimConfig::default()
+        };
+        Network::new(topo, router, cfg)
+    }
+
+    #[test]
+    fn partition_covers_every_switch_exactly_once() {
+        for shards in [1usize, 2, 3, 7, 10] {
+            let net = tiny_net(10, shards);
+            assert_eq!(net.num_shards(), shards.min(10));
+            // Every switch resolves to a shard that actually owns it.
+            for s in 0..10 {
+                let k = net.switch_shard[s] as usize;
+                let sh = &net.shards[k];
+                assert!(s >= sh.lo && s < sh.lo + sh.switches.len(), "switch {s}");
+            }
+            // Blocks are contiguous and ascending.
+            let mut total = 0;
+            let mut next_lo = 0;
+            for sh in &net.shards {
+                assert_eq!(sh.lo, next_lo);
+                assert!(!sh.switches.is_empty());
+                next_lo += sh.switches.len();
+                total += sh.switches.len();
+            }
+            assert_eq!(total, 10);
+        }
+    }
+
+    #[test]
+    fn shard_count_clamps_to_switch_count() {
+        let net = tiny_net(4, 64);
+        assert_eq!(net.num_shards(), 4);
+        assert_eq!(net.active_switches(), 0);
+        assert_eq!(net.live_packets(), 0);
     }
 }

@@ -14,6 +14,12 @@
 //! * zero allocation after construction, O(1) push/pop/front;
 //! * queue ids are dense `usize`s in allocation order, so a switch's
 //!   queues form a contiguous id range.
+//!
+//! Under phase-parallel execution each compute shard owns one `QueuePool`
+//! covering exactly its block of switches (ids are shard-local): the pool
+//! is the shard's mutable view of the flat SoA buffer state, so shards
+//! mutate their queues concurrently with no sharing and no locks (see
+//! `sim::shard`).
 
 use super::packet::PacketId;
 

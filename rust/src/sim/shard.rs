@@ -1,0 +1,426 @@
+//! Deterministic phase-parallel execution: per-shard switch state and the
+//! compute half of the cycle loop.
+//!
+//! The simulator partitions switches into `cfg.shards` contiguous blocks.
+//! Each cycle splits into two phases (see DESIGN.md, "Phase-parallel
+//! invariants"):
+//!
+//! * **compute** — route + arbitrate + crossbar + link scheduling for every
+//!   active switch of a shard, touching *only* that shard's state. Effects
+//!   that cross a switch boundary are not applied; they are recorded in the
+//!   shard's outboxes (`outbox` for timing-wheel transfers, `credit_out`
+//!   for credit returns). Shards therefore run concurrently with no shared
+//!   mutable state at all — each [`ShardState`] *owns* its switches, queue
+//!   pool, packet arena and RNG streams, and is moved wholesale to a worker
+//!   thread and back each cycle (no `unsafe`, no locks on the hot path).
+//! * **commit** — the serial phase (in `sim::Network`) drains the outboxes
+//!   in canonical shard-ascending order onto the global timing wheel and
+//!   credit state.
+//!
+//! Determinism is the load-bearing invariant: an N-shard run is
+//! bit-identical to the 1-shard run for every router and seed, because
+//!
+//! 1. every switch owns a private RNG stream derived from `(seed, switch)`,
+//!    so allocator/VC randomness never depends on visit order;
+//! 2. each shard processes its active switches in ascending switch id, and
+//!    shards hold ascending switch ranges, so the concatenated outboxes are
+//!    in global `(switch, port)` order regardless of the shard count;
+//! 3. credit returns are commutative increments, applied wholesale between
+//!    cycles;
+//! 4. packets cross shard boundaries *by value* through wheel events, so
+//!    arena ids are shard-local and never observable in routing decisions.
+
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use super::{Event, PacketArena, QueuePool, SimConfig, Switch, SwitchView};
+use crate::routing::{CandidateBuf, Router};
+use crate::topology::PhysTopology;
+use crate::util::Rng;
+
+/// RNG stream namespace for per-switch simulator randomness (allocator
+/// rotation, VC rotation, router tie-breaking). Offset clear of the
+/// workload/pattern streams (`0x7AFF_1C`, small test streams).
+pub(super) const SWITCH_RNG_STREAM: u64 = 0x51_AC7E_0000;
+
+/// Everything the compute phase reads but never writes — cloned into each
+/// worker thread (`Arc` handles + plain config), so workers are `'static`
+/// and never borrow the `Network`.
+#[derive(Clone)]
+pub(super) struct ComputeCtx {
+    pub topo: Arc<PhysTopology>,
+    pub router: Arc<dyn Router>,
+    pub cfg: SimConfig,
+    /// Measurement window (per run): link utilization is only recorded for
+    /// cycles in `[warmup, window_end)`.
+    pub warmup: u64,
+    pub window_end: u64,
+    pub max_degree: usize,
+    pub max_hops: usize,
+}
+
+/// One shard: exclusive owner of the switches in `[lo, lo + switches.len())`
+/// and of every packet currently buffered in them.
+pub(super) struct ShardState {
+    /// Global id of the first switch in this shard.
+    pub lo: usize,
+    /// Switch SoA state, indexed by `global_id - lo`.
+    pub switches: Vec<Switch>,
+    /// Port FIFOs of this shard's switches (queue ids are shard-local).
+    pub queues: QueuePool,
+    /// Packets buffered in this shard (ids are shard-local; packets move
+    /// between shards by value through wheel events).
+    pub arena: PacketArena,
+    /// Per-switch RNG streams (indexed by `global_id - lo`).
+    pub rngs: Vec<Rng>,
+    /// Dirty worklist of this shard's switches with `work > 0` (global ids).
+    pub active: Vec<u32>,
+    pub active_flag: Vec<bool>,
+    /// Timing-wheel transfers produced by compute, drained by commit:
+    /// `(due_cycle, event)` in ascending `(switch, port)` generation order.
+    pub outbox: Vec<(u64, Event)>,
+    /// Credit returns produced by compute: `(switch, port, vc)`, possibly
+    /// targeting other shards; applied wholesale at commit (commutative).
+    pub credit_out: Vec<(u32, u32, u8)>,
+    /// Window-gated link utilization, `(local_switch · max_degree + port)`;
+    /// merged into `SimStats::link_flits` when the run finishes.
+    pub link_flits: Vec<u64>,
+    /// Reused candidate scratch for `Router::route`.
+    pub route_buf: CandidateBuf,
+    /// Did any flit move in this shard this cycle? (watchdog input)
+    pub progress: bool,
+}
+
+impl ShardState {
+    /// Inert stand-in left in the `Network` while the real shard is out on
+    /// a worker thread (moving a shard is a handful of `Vec` headers).
+    pub fn placeholder() -> Self {
+        Self {
+            lo: 0,
+            switches: Vec::new(),
+            queues: QueuePool::new(),
+            arena: PacketArena::with_capacity(0),
+            rngs: Vec::new(),
+            active: Vec::new(),
+            active_flag: Vec::new(),
+            outbox: Vec::new(),
+            credit_out: Vec::new(),
+            link_flits: Vec::new(),
+            route_buf: CandidateBuf::new(),
+            progress: false,
+        }
+    }
+
+    /// Put a switch (global id; must belong to this shard) on the active
+    /// worklist. Idempotent — the single point of truth for the
+    /// worklist/flag invariant, shared by the arrival and injection paths.
+    #[inline]
+    pub fn activate(&mut self, sw: u32) {
+        let ls = sw as usize - self.lo;
+        if !self.active_flag[ls] {
+            self.active_flag[ls] = true;
+            self.active.push(sw);
+        }
+    }
+
+    /// The compute phase for this shard at cycle `now`: compact the active
+    /// worklist, order it canonically, then run crossbar allocation and
+    /// link transmission for every active switch.
+    ///
+    /// Canonical ascending order is what makes the outbox concatenation
+    /// across shards independent of the shard count; it is *not* needed for
+    /// the switch state itself (per-switch RNGs make switch updates
+    /// order-free).
+    pub fn compute(&mut self, now: u64, ctx: &ComputeCtx) {
+        self.progress = false;
+        let lo = self.lo;
+        let switches = &self.switches;
+        let flags = &mut self.active_flag;
+        self.active.retain(|&s| {
+            let ls = s as usize - lo;
+            if switches[ls].work > 0 {
+                true
+            } else {
+                flags[ls] = false;
+                false
+            }
+        });
+        self.active.sort_unstable();
+        let mut i = 0;
+        while i < self.active.len() {
+            let s = self.active[i] as usize;
+            self.allocate_switch(s, now, ctx);
+            self.transmit_switch(s, now, ctx);
+            i += 1;
+        }
+    }
+
+    /// Crossbar allocation for one switch: rotating-priority scan of input
+    /// ports, one grant per input port, ≤ speedup grants per output port.
+    /// Identical to the pre-shard logic except that randomness comes from
+    /// the switch's private stream and credits go to `credit_out`.
+    fn allocate_switch(&mut self, s: usize, now: u64, ctx: &ComputeCtx) {
+        let ls = s - self.lo;
+        let vcs = self.switches[ls].vcs;
+        let num_inputs = self.switches[ls].ports;
+        let degree = self.switches[ls].degree;
+        let spc = ctx.cfg.servers_per_switch;
+        let offset = self.rngs[ls].gen_range(num_inputs);
+        let xbar_cycles =
+            (ctx.cfg.pkt_flits as u64 + ctx.cfg.speedup - 1) / ctx.cfg.speedup;
+
+        for k in 0..num_inputs {
+            let i = (k + offset) % num_inputs;
+            if self.switches[ls].busy_until[i] > now
+                || self.switches[ls].input_occupancy(&self.queues, i) == 0
+            {
+                continue;
+            }
+            let at_injection = i >= degree;
+            let vc_off = if vcs > 1 {
+                self.rngs[ls].gen_range(vcs)
+            } else {
+                0
+            };
+            'vc_scan: for kv in 0..vcs {
+                let vc = (kv + vc_off) % vcs;
+                let q_in = self.switches[ls].in_q(i, vc);
+                let Some(pkt_id) = self.queues.front(q_in) else {
+                    continue;
+                };
+                // Routing decision (slices borrowed immutably, packet
+                // mutably — all disjoint fields of the shard).
+                let decision = {
+                    let sw = &self.switches[ls];
+                    let view = SwitchView {
+                        sw: s,
+                        degree,
+                        now,
+                        speedup: ctx.cfg.speedup,
+                        vcs,
+                        output_cap_pkts: ctx.cfg.output_cap_pkts,
+                        occ_flits: &sw.occ_flits,
+                        out_lens: self.queues.lens(sw.out_q0, sw.ports * vcs),
+                        grants_this_cycle: &sw.grants_this_cycle,
+                        last_grant_cycle: &sw.last_grant_cycle,
+                    };
+                    let pkt = self.arena.get_mut(pkt_id);
+                    if pkt.dst_sw as usize == s {
+                        // Eject toward the destination server, keeping the
+                        // packet's current VC.
+                        let local = pkt.dst_server as usize % spc;
+                        let port = degree + local;
+                        if view.has_space(port, pkt.vc as usize) {
+                            Some((port, pkt.vc as usize))
+                        } else {
+                            None
+                        }
+                    } else {
+                        ctx.router.route(
+                            &view,
+                            pkt,
+                            at_injection,
+                            &mut self.rngs[ls],
+                            &mut self.route_buf,
+                        )
+                    }
+                };
+                let Some((out_port, out_vc)) = decision else {
+                    // Head packet stays blocked: bump its patience counter
+                    // (escape-based routers consult it).
+                    let pkt = self.arena.get_mut(pkt_id);
+                    pkt.blocked = pkt.blocked.saturating_add(1);
+                    continue 'vc_scan;
+                };
+                // Commit the grant (routers only return grantable ports —
+                // SwitchView::has_space folds in the speedup limit).
+                let q_out;
+                {
+                    let sw = &mut self.switches[ls];
+                    if sw.last_grant_cycle[out_port] != now {
+                        sw.last_grant_cycle[out_port] = now;
+                        sw.grants_this_cycle[out_port] = 0;
+                    }
+                    debug_assert!((sw.grants_this_cycle[out_port] as u64) < ctx.cfg.speedup);
+                    sw.grants_this_cycle[out_port] += 1;
+                    sw.occ_flits[out_port] += ctx.cfg.pkt_flits as u32;
+                    sw.busy_until[i] = now + xbar_cycles;
+                    q_out = sw.out_q(out_port, out_vc);
+                    if let Some((usw, uport)) = sw.upstream[i] {
+                        self.credit_out.push((usw, uport, vc as u8));
+                    }
+                }
+                debug_assert!(self.queues.len(q_out) < ctx.cfg.output_cap_pkts);
+                self.queues.push_back(q_out, pkt_id);
+                let popped = self.queues.pop_front(q_in);
+                debug_assert_eq!(popped, Some(pkt_id));
+                let pkt = self.arena.get_mut(pkt_id);
+                pkt.vc = out_vc as u8;
+                pkt.blocked = 0;
+                if out_port < degree {
+                    pkt.hops += 1;
+                    debug_assert!(
+                        (pkt.hops as usize) <= ctx.max_hops,
+                        "hop bound exceeded at switch {s}: {} hops (router {})",
+                        pkt.hops,
+                        ctx.router.name()
+                    );
+                }
+                self.progress = true;
+                break 'vc_scan; // one grant per input port per cycle
+            }
+        }
+    }
+
+    /// Outgoing-link scheduling for one switch: per free link, pick a ready
+    /// VC (non-empty queue + downstream credit) at random rotation. Cross-
+    /// switch deliveries leave through the outbox *by value* — the packet's
+    /// arena slot is freed here and a fresh slot is allocated at the
+    /// destination shard when the Arrive event fires.
+    fn transmit_switch(&mut self, s: usize, now: u64, ctx: &ComputeCtx) {
+        let ls = s - self.lo;
+        let flits = ctx.cfg.pkt_flits as u64;
+        let vcs = self.switches[ls].vcs;
+        let num_outputs = self.switches[ls].ports;
+        let degree = self.switches[ls].degree;
+        let in_window = now >= ctx.warmup && now < ctx.window_end;
+        for o in 0..num_outputs {
+            if self.switches[ls].link_free_at[o] > now
+                || self.switches[ls].output_queued(&self.queues, o) == 0
+            {
+                continue;
+            }
+            let vc_off = if vcs > 1 {
+                self.rngs[ls].gen_range(vcs)
+            } else {
+                0
+            };
+            let mut chosen: Option<usize> = None;
+            for kv in 0..vcs {
+                let vc = (kv + vc_off) % vcs;
+                if !self.queues.is_empty(self.switches[ls].out_q(o, vc))
+                    && self.switches[ls].credits[o * vcs + vc] > 0
+                {
+                    chosen = Some(vc);
+                    break;
+                }
+            }
+            let Some(vc) = chosen else { continue };
+            let pkt_id = self
+                .queues
+                .pop_front(self.switches[ls].out_q(o, vc))
+                .unwrap();
+            {
+                let sw = &mut self.switches[ls];
+                sw.link_free_at[o] = now + flits;
+                // Occupancy is the *output queue* depth in flits (the
+                // paper's Algorithm-1 occupancy[p]; q = 54 is calibrated
+                // against the 5-packet output buffer): the packet leaves
+                // the queue now.
+                sw.occ_flits[o] = sw.occ_flits[o].saturating_sub(flits as u32);
+                sw.work -= 1;
+            }
+            let pkt = self.arena.get(pkt_id).clone();
+            self.arena.free(pkt_id);
+            if o < degree {
+                self.switches[ls].credits[o * vcs + vc] -= 1;
+                if in_window {
+                    self.link_flits[ls * ctx.max_degree + o] += flits;
+                }
+                let dst_sw = ctx.topo.neighbor(s, o) as u32;
+                let dst_port = ctx.topo.reverse_port(s, o) as u32;
+                self.outbox.push((
+                    now + ctx.cfg.link_latency,
+                    Event::Arrive {
+                        sw: dst_sw,
+                        port: dst_port,
+                        vc: vc as u8,
+                        pkt,
+                    },
+                ));
+            } else {
+                // Ejection: the server consumes at line rate; the tail is
+                // received `flits` cycles from now.
+                self.outbox.push((now + flits, Event::Deliver { pkt }));
+            }
+            self.progress = true;
+        }
+    }
+}
+
+/// Persistent worker threads for multi-shard runs, one per shard. Shards
+/// are *moved* through channels each cycle (a few `Vec` headers) and moved
+/// back when their compute phase ends — no shared mutable state, no
+/// `unsafe`. Thread-budget policy lives a level up: the engine clamps
+/// `SimConfig::shards` to its budget (bit-identical at any value), so by
+/// the time a pool exists, one thread per shard *is* the budget.
+///
+/// The pool is spawned once per `Network::run` and joined when the run
+/// ends (including error paths, via `Drop`).
+pub(super) struct WorkerPool {
+    job_txs: Vec<mpsc::Sender<(u64, usize, ShardState)>>,
+    done_rx: mpsc::Receiver<(usize, ShardState)>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn spawn(nshards: usize, ctx: &ComputeCtx) -> Self {
+        let (done_tx, done_rx) = mpsc::channel();
+        let mut job_txs = Vec::with_capacity(nshards);
+        let mut handles = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            let (tx, rx) = mpsc::channel::<(u64, usize, ShardState)>();
+            let done = done_tx.clone();
+            let ctx = ctx.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Ok((now, idx, mut shard)) = rx.recv() {
+                    shard.compute(now, &ctx);
+                    if done.send((idx, shard)).is_err() {
+                        break;
+                    }
+                }
+            }));
+            job_txs.push(tx);
+        }
+        Self {
+            job_txs,
+            done_rx,
+            handles,
+        }
+    }
+
+    /// Run one compute phase: fan the shards with work out, wait for all
+    /// of them. Shards with an empty active worklist are skipped — their
+    /// compute phase is a no-op, and shipping them through the channels
+    /// would charge idle components a per-cycle cost the active-set
+    /// invariant promises not to (drain tails leave most shards idle).
+    pub fn run_cycle(&self, shards: &mut [ShardState], now: u64) {
+        let mut outstanding = 0;
+        for (i, slot) in shards.iter_mut().enumerate() {
+            if slot.active.is_empty() {
+                // What compute() would have left behind for an idle shard.
+                slot.progress = false;
+                continue;
+            }
+            let shard = std::mem::replace(slot, ShardState::placeholder());
+            self.job_txs[i]
+                .send((now, i, shard))
+                .expect("shard worker died");
+            outstanding += 1;
+        }
+        for _ in 0..outstanding {
+            let (i, shard) = self.done_rx.recv().expect("shard worker died");
+            shards[i] = shard;
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the job channels ends the worker loops.
+        self.job_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

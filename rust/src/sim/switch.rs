@@ -8,6 +8,13 @@
 //! `[out_q0, out_q0 + ports·vcs)` (output queues), laid out port-major.
 //! Ports `0..degree` are inter-switch links; ports `degree..ports` are the
 //! local servers' injection/ejection ports.
+//!
+//! Queue ids are relative to the *owning shard's* pool (`sim::shard`): a
+//! `Switch` plus its shard's `QueuePool` form a self-contained mutable
+//! view, which is what lets the compute phase run shards concurrently.
+//! `upstream` keeps **global** switch ids — credits crossing a shard
+//! boundary travel through the shard's `credit_out` outbox and are applied
+//! in the serial commit phase.
 
 use super::queues::QueuePool;
 

@@ -20,6 +20,13 @@
 //! deterministic schedule sequence — which is what keeps the simulator's
 //! FIFO arrival semantics reproducible — but it is not global
 //! schedule-time order across wheel levels.
+//!
+//! The phase-parallel simulator leans on exactly this property: shard
+//! compute phases never touch the wheel. They stage transfers in per-shard
+//! outboxes, and the serial commit phase schedules them in canonical
+//! `(switch, port)` order — so the wheel sees one deterministic schedule
+//! sequence regardless of the shard count, and same-cycle pops (hence FIFO
+//! arrival order downstream) are bit-identical to the serial engine's.
 
 /// Slots per level; also the cascade epoch length in cycles.
 pub const NEAR: usize = 64;

@@ -1,12 +1,13 @@
 //! Engine-level integration tests: the hierarchical-timing-wheel regression
 //! (long link latencies used to silently corrupt release builds), full-drain
-//! properties for every Full-mesh router on adversarial traffic, and
-//! determinism of the batch engine across sweep thread counts.
+//! properties for every Full-mesh router on adversarial traffic, determinism
+//! of the batch engine across sweep thread counts, and the phase-parallel
+//! sharding contract (N-shard runs bit-identical to 1-shard runs).
 
 use std::sync::Arc;
 
 use tera_net::config::spec::{routing_by_name, ExperimentSpec, TrafficSpec};
-use tera_net::engine::Engine;
+use tera_net::engine::{self, Engine};
 use tera_net::metrics::SimStats;
 use tera_net::sim::{Network, RunOpts, SimConfig};
 use tera_net::topology::full_mesh;
@@ -203,4 +204,155 @@ fn bernoulli_runs_are_reproducible() {
     assert_eq!(a.injected_per_server, b.injected_per_server);
     assert_eq!(a.latency.percentile(99.9), b.latency.percentile(99.9));
     assert!(a.delivered_packets > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Phase-parallel sharding: the determinism contract.
+//
+// `SimConfig::shards` partitions the switches into concurrent compute
+// shards. The contract (DESIGN.md, "Phase-parallel invariants") is that the
+// partition is *unobservable*: every shard count produces a bit-identical
+// `SimStats` — throughput, full latency histogram, hop distribution,
+// per-server injections and per-arc link counters. These tests pin it for
+// every router of the evaluation on FM64 and HX[8x8], adversarial and
+// uniform traffic, multiple seeds.
+// ---------------------------------------------------------------------------
+
+/// Run a spec honoring `spec.shards` exactly (the free-function build path
+/// applies no thread-budget clamp).
+fn run_sharded(spec: &ExperimentSpec) -> SimStats {
+    let mut net = engine::build_network(spec).expect("build");
+    assert_eq!(net.num_shards(), spec.shards.min(net.topo.n));
+    let mut wl = engine::build_workload(spec, &net.topo).expect("workload");
+    net.run(wl.as_mut(), &engine::run_opts(spec))
+        .unwrap_or_else(|e| panic!("{} (shards={}) failed: {e}", spec.name, spec.shards))
+}
+
+/// Assert that shard counts 2/4/7 reproduce the 1-shard run bit-for-bit.
+fn assert_shard_invariant(mut spec: ExperimentSpec) {
+    spec.shards = 1;
+    let base = run_sharded(&spec);
+    assert!(base.delivered_packets > 0, "{}: nothing delivered", spec.name);
+    for shards in [2usize, 4, 7] {
+        spec.shards = shards;
+        let got = run_sharded(&spec);
+        assert_eq!(
+            base, got,
+            "{}: {shards}-shard run diverged from the serial run",
+            spec.name
+        );
+    }
+}
+
+fn shard_spec(
+    topology: &str,
+    routing: &str,
+    pattern: &str,
+    seed: u64,
+) -> ExperimentSpec {
+    ExperimentSpec {
+        name: format!("shard-{topology}-{routing}-{pattern}-s{seed}"),
+        topology: topology.into(),
+        servers_per_switch: 2,
+        routing: routing.into(),
+        traffic: TrafficSpec::Fixed {
+            pattern: pattern.into(),
+            packets_per_server: 6,
+        },
+        seed,
+        max_cycles: 5_000_000,
+        ..Default::default()
+    }
+}
+
+/// All seven Full-mesh routers of the evaluation on FM64, adversarial
+/// (complement) and uniform traffic, two seeds each.
+#[test]
+fn sharded_fm64_bit_identical_for_every_router() {
+    let routers = [
+        "min", "valiant", "ugal", "omniwar", "brinr", "srinr", "tera-hx2",
+    ];
+    for routing in routers {
+        for pattern in ["complement", "uniform"] {
+            for seed in [3u64, 11] {
+                assert_shard_invariant(shard_spec("fm64", routing, pattern, seed));
+            }
+        }
+    }
+}
+
+/// The 2D-HyperX routers on HX[8x8], adversarial (shift) and uniform.
+#[test]
+fn sharded_hx8x8_bit_identical_for_every_router() {
+    let routers = ["min", "omniwar-hx", "dimwar", "dor-tera", "o1turn-tera"];
+    for routing in routers {
+        for pattern in ["shift", "uniform"] {
+            assert_shard_invariant(shard_spec("hx8x8", routing, pattern, 5));
+        }
+    }
+}
+
+/// Open-loop (Bernoulli) runs shard identically too: the windowed stats
+/// path (warmup gating of injections, latency and link counters) must not
+/// depend on the partition.
+#[test]
+fn sharded_bernoulli_bit_identical() {
+    let mut spec = ExperimentSpec {
+        name: "shard-bernoulli".into(),
+        topology: "fm16".into(),
+        servers_per_switch: 8,
+        routing: "tera-hx2".into(),
+        traffic: TrafficSpec::Bernoulli {
+            pattern: "rsp".into(),
+            load: 0.6,
+            horizon: 6_000,
+        },
+        warmup: 1_500,
+        seed: 31,
+        ..Default::default()
+    };
+    spec.shards = 1;
+    let base = run_sharded(&spec);
+    assert!(base.delivered_packets > 0);
+    for shards in [2usize, 4, 7] {
+        spec.shards = shards;
+        assert_eq!(base, run_sharded(&spec), "shards={shards}");
+    }
+}
+
+/// Shard counts beyond the switch count clamp to one shard per switch and
+/// still agree with the serial run.
+#[test]
+fn shards_clamp_to_switch_count() {
+    let mut spec = shard_spec("fm8", "tera-path", "uniform", 9);
+    spec.shards = 1;
+    let base = run_sharded(&spec);
+    // 64 shards on an 8-switch mesh clamp to one switch per shard
+    // (run_sharded asserts the clamped count) and still agree.
+    spec.shards = 64;
+    assert_eq!(base, run_sharded(&spec));
+}
+
+/// The engine's thread budget caps shard workers without changing results:
+/// a narrow engine (1 thread → serial core) and a wide one (shards
+/// granted) agree bit-for-bit on a whole batch.
+#[test]
+fn engine_budget_shards_are_unobservable() {
+    let mut specs = Vec::new();
+    for (routing, seed) in [("tera-hx2", 7u64), ("srinr", 8), ("ugal", 9)] {
+        let mut s = shard_spec("fm64", routing, "complement", seed);
+        s.shards = 8;
+        specs.push(s);
+    }
+    let narrow = Engine::with_threads(1).run_batch(specs.clone());
+    let wide = Engine::with_threads(8).run_batch(specs);
+    for (a, b) in narrow.iter().zip(&wide) {
+        assert_eq!(a.spec.name, b.spec.name);
+        assert_eq!(
+            a.stats.as_ref().unwrap(),
+            b.stats.as_ref().unwrap(),
+            "{}",
+            a.spec.name
+        );
+    }
 }
