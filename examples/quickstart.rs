@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
             warmup: 5_000,
             window: None,
             stop_when_drained: false,
+            ..RunOpts::default()
         },
     )?;
 

@@ -15,8 +15,21 @@
 //!   * saturated Mcycles/s and packet throughput of `Network::step` on the
 //!     Fig-7 RSP workload (the end-to-end hot path);
 //!   * routing decisions/second per algorithm (allocation inner loop);
+//!   * **adaptive time advance** on a lull-heavy fm64 kernel (long-wire
+//!     allreduce, most cycles dead) — wall-clock speedup and the
+//!     cycles-ticked/cycles-covered ratio, with delivered-flit equality
+//!     asserted against the fixed-tick run (`BENCH_adaptive.json`);
+//!   * **statistical early termination** on an FM300 Bernoulli point —
+//!     cycles and wall-clock saved at `stop_rel_ci = 0.05` vs the fixed
+//!     horizon, with the achieved CI half-width (`BENCH_adaptive.json`);
 //!   * PJRT batched-scorer latency (the artifact decision path, `pjrt`
 //!     builds only).
+//!
+//! Every section also lands one row per measurement in
+//! **`BENCH_cycles.json`** (section, label, wall seconds, cycles,
+//! cycles/s) — the consolidated perf-trajectory baseline future PRs diff
+//! against; CI uploads all `BENCH_*.json` as workflow artifacts.
+//! `PERF_QUICK=1` shrinks horizons so CI finishes in seconds.
 //!
 //! Before/after numbers across optimization iterations are recorded in
 //! DESIGN.md §Perf.
@@ -27,12 +40,55 @@ use std::sync::Arc;
 
 use tera_net::config::spec::{routing_by_name, topology_by_name, ExperimentSpec, TrafficSpec};
 use tera_net::engine::Engine;
+use tera_net::metrics::SimStats;
 use tera_net::routing::{CandidateBuf, HxTables, RoutingTables};
 use tera_net::service::{HyperXService, ServiceTopology};
 use tera_net::sim::packet::{Packet, NO_SWITCH};
 use tera_net::sim::{Network, RunOpts, SimConfig, SwitchView};
 use tera_net::topology::TopoKind;
+use tera_net::traffic::kernels::{allreduce_rabenseifner, KernelWorkload, Mapping};
 use tera_net::util::{Rng, Timer};
+
+/// `PERF_QUICK=1` (the CI artifact run) shrinks horizons and repetition
+/// counts so the whole harness finishes in seconds; the JSON schema is
+/// identical either way.
+fn quick() -> bool {
+    std::env::var("PERF_QUICK").map_or(false, |v| v == "1")
+}
+
+/// Consolidated per-section perf rows, flushed to `BENCH_cycles.json`:
+/// the perf-trajectory baseline future PRs compare against.
+struct CycleBench {
+    rows: Vec<String>,
+}
+
+impl CycleBench {
+    fn new() -> Self {
+        Self { rows: Vec::new() }
+    }
+
+    fn add(&mut self, section: &str, label: &str, wall_secs: f64, cycles: f64) {
+        let cps = if wall_secs > 0.0 { cycles / wall_secs } else { 0.0 };
+        self.rows.push(format!(
+            "    {{\"section\": \"{section}\", \"label\": \"{label}\", \
+             \"wall_secs\": {wall_secs:.6}, \"cycles\": {cycles:.0}, \
+             \"cycles_per_sec\": {cps:.0}}}"
+        ));
+    }
+
+    fn write(&self) {
+        let body = format!(
+            "{{\n  \"bench\": \"perf-hotpath-cycles\",\n  \"quick\": {},\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
+            quick(),
+            self.rows.join(",\n")
+        );
+        match std::fs::write("BENCH_cycles.json", body) {
+            Ok(()) => println!("wrote BENCH_cycles.json ({} rows)", self.rows.len()),
+            Err(e) => println!("could not write BENCH_cycles.json: {e}"),
+        }
+    }
+}
 
 /// Counting allocator: wraps the system allocator and counts allocation
 /// events, so the route-throughput section can *prove* the zero-allocation
@@ -146,6 +202,7 @@ fn decision_rate(routing: &str) -> f64 {
                 warmup: 0,
                 window: None,
                 stop_when_drained: false,
+                ..RunOpts::default()
             },
         )
         .expect("run");
@@ -225,6 +282,66 @@ fn route_throughput(host: &str, routing: &str, iters: usize) -> (f64, u64) {
     (iters as f64 / secs, allocs)
 }
 
+/// One lull-heavy kernel run: a sparse 8-rank Rabenseifner allreduce on
+/// fm64 with a long wire (`link_latency` cycles), so almost every covered
+/// cycle is a dead synchronization stall. Returns accumulated
+/// `(wall_secs, cycles_ticked, cycles_covered, delivered_flits)` over
+/// `reps` repetitions (distinct seeds).
+fn lull_kernel_run(
+    time_skip: bool,
+    link_latency: u64,
+    reps: usize,
+) -> (f64, u64, u64, u64) {
+    let topo = Arc::new(topology_by_name("fm64").unwrap());
+    let router = routing_by_name("tera-hx2", topo.clone(), 54).unwrap();
+    let mut wall = 0.0;
+    let (mut ticked, mut covered, mut delivered) = (0u64, 0u64, 0u64);
+    for rep in 0..reps {
+        let seed = 9 + rep as u64;
+        let cfg = SimConfig {
+            servers_per_switch: 1,
+            seed,
+            link_latency,
+            watchdog_cycles: 40 * link_latency,
+            ..SimConfig::default()
+        };
+        let mut net = Network::new(topo.clone(), router.clone(), cfg);
+        let mut rng = Rng::derive(seed, 0x7AFF_1C);
+        let mut wl = KernelWorkload::new(
+            allreduce_rabenseifner(8, 2),
+            64,
+            Mapping::Linear,
+            &mut rng,
+        );
+        let opts = RunOpts {
+            max_cycles: 100_000_000,
+            time_skip,
+            ..RunOpts::default()
+        };
+        let t = Timer::start();
+        let stats = net.run(&mut wl, &opts).expect("lull kernel run");
+        wall += t.elapsed_secs();
+        ticked += net.cycles_ticked();
+        covered += stats.finish_cycle;
+        delivered += stats.delivered_flits;
+    }
+    (wall, ticked, covered, delivered)
+}
+
+/// One FM300 Bernoulli sweep point, fixed budget (`stop_rel_ci = None`)
+/// or statistically early-terminated. Returns `(wall_secs, stats)`.
+fn fm300_point(stop_rel_ci: Option<f64>, horizon: u64) -> (f64, SimStats) {
+    let mut spec = bernoulli_spec("fm300", 8, "tera-path", "uniform", 0.30, horizon);
+    spec.warmup = 2_000;
+    spec.stop_rel_ci = stop_rel_ci;
+    let mut net = tera_net::engine::build_network(&spec).expect("build");
+    let mut wl = spec.build_workload(&net.topo).expect("workload");
+    let opts = tera_net::engine::run_opts(&spec);
+    let t = Timer::start();
+    let stats = net.run(wl.as_mut(), &opts).expect("run");
+    (t.elapsed_secs(), stats)
+}
+
 fn main() {
     // ---- Routing-table build + route throughput (table-driven core). ----
     println!("== routing tables: build cost + route throughput ==\n");
@@ -252,9 +369,10 @@ fn main() {
         let _tables300 = RoutingTables::compile(fm300, None);
         println!("build fm300 min-port only  {:>8.3} ms", t.elapsed_ms());
     }
+    let mut bench = CycleBench::new();
     println!();
     println!("{:<22} {:>14} {:>12}", "router@host", "Mdecisions/s", "allocs");
-    let iters = 2_000_000;
+    let iters = if quick() { 400_000 } else { 2_000_000 };
     for (host, routing) in [
         ("fm64", "tera-hx2"),
         ("fm64", "srinr"),
@@ -277,11 +395,17 @@ fn main() {
     // given cycle. Wall time here is dominated by per-cycle fixed costs.
     println!("== idle-heavy low-load sweep (fm32 × 8 srv/sw, uniform) ==\n");
     println!("{:<8} {:>12} {:>14}", "load", "Mcycles/s", "delivered pkt/s");
-    let horizon = 300_000u64;
+    let horizon = if quick() { 60_000u64 } else { 300_000 };
     for load in [0.01, 0.02, 0.05, 0.10] {
         let spec = bernoulli_spec("fm32", 8, "tera-hx2", "uniform", load, horizon);
         let (mcps, pps) = sim_throughput(&spec);
         println!("{load:<8} {mcps:>12.3} {pps:>14.0}");
+        bench.add(
+            "idle-heavy",
+            &format!("load-{load}"),
+            horizon as f64 / (mcps * 1e6),
+            horizon as f64,
+        );
     }
 
     // ---- Saturated end-to-end hot path (Fig-7 shape). ----
@@ -290,11 +414,12 @@ fn main() {
         "{:<12} {:>12} {:>16}",
         "routing", "Mcycles/s", "delivered pkt/s"
     );
-    let hz = 12_000u64;
+    let hz = if quick() { 4_000u64 } else { 12_000 };
     for r in ["min", "srinr", "tera-hx2", "ugal", "omniwar", "valiant"] {
         let spec = bernoulli_spec("fm64", 16, r, "rsp", 0.7, hz);
         let (mcps, pps) = sim_throughput(&spec);
         println!("{r:<12} {mcps:>12.3} {pps:>16.0}");
+        bench.add("saturated", r, hz as f64 / (mcps * 1e6), hz as f64);
     }
 
     println!("\nrouting decision throughput (saturated RSP):");
@@ -320,11 +445,12 @@ fn main() {
          \"routing\": \"tera-path\",\n  \"load\": 0.35,\n  \"results\": [\n",
     );
     let mut first = true;
+    let shard_hz = 1_200u64;
     for pattern in ["uniform", "rsp"] {
         let mut base_mcps = 0.0f64;
         let mut base_flits = 0u64;
         for shards in [1usize, 2, 4, 8] {
-            let mut spec = bernoulli_spec("fm300", 8, "tera-path", pattern, 0.35, 1_200);
+            let mut spec = bernoulli_spec("fm300", 8, "tera-path", pattern, 0.35, shard_hz);
             spec.shards = shards;
             let (mcps, flits) = sharded_throughput(&spec);
             if shards == 1 {
@@ -338,6 +464,12 @@ fn main() {
             }
             let speedup = mcps / base_mcps;
             println!("{pattern:<12} {shards:>7} {mcps:>12.3} {speedup:>9.2}x");
+            bench.add(
+                "sharded",
+                &format!("{pattern}-s{shards}"),
+                shard_hz as f64 / (mcps * 1e6),
+                shard_hz as f64,
+            );
             if !first {
                 artifact.push_str(",\n");
             }
@@ -353,6 +485,115 @@ fn main() {
         Ok(()) => println!("\nwrote BENCH_shards.json (sharded determinism: VERIFIED)"),
         Err(e) => println!("\ncould not write BENCH_shards.json: {e}"),
     }
+
+    // ---- Adaptive time advance: lull-heavy fm64 kernel. ----
+    // A sparse 8-rank allreduce across a 16384-cycle wire: between bursts
+    // of serialization the whole network is dead — exactly the regime the
+    // next-event fast path targets. Bit-identity vs fixed-tick is asserted
+    // (delivered flits and covered cycles), the deterministic
+    // ticked/covered ratio is gated at < 0.5, and the wall-clock speedup
+    // is reported in BENCH_adaptive.json.
+    println!("\n== adaptive time advance (fm64 allreduce, link_latency 16384) ==\n");
+    let link_latency = 16_384u64;
+    let reps = if quick() { 2 } else { 8 };
+    let (fixed_wall, fixed_ticked, fixed_covered, fixed_flits) =
+        lull_kernel_run(false, link_latency, reps);
+    let (skip_wall, skip_ticked, skip_covered, skip_flits) =
+        lull_kernel_run(true, link_latency, reps);
+    assert_eq!(
+        fixed_flits, skip_flits,
+        "adaptive time advance changed delivered flits"
+    );
+    assert_eq!(
+        fixed_covered, skip_covered,
+        "adaptive time advance changed the completion cycle"
+    );
+    assert_eq!(
+        fixed_ticked, fixed_covered,
+        "fixed-tick run must simulate every covered cycle"
+    );
+    let tick_ratio = skip_ticked as f64 / skip_covered as f64;
+    assert!(
+        tick_ratio < 0.5,
+        "lull-heavy kernel must skip most cycles (ticked/covered = {tick_ratio:.3})"
+    );
+    let kernel_speedup = fixed_wall / skip_wall;
+    println!("{:<22} {:>14} {:>14}", "", "fixed-tick", "adaptive");
+    println!(
+        "{:<22} {:>14.4} {:>14.4}",
+        "wall secs", fixed_wall, skip_wall
+    );
+    println!(
+        "{:<22} {:>14} {:>14}",
+        "cycles ticked", fixed_ticked, skip_ticked
+    );
+    println!(
+        "{:<22} {:>14} {:>14}",
+        "cycles covered", fixed_covered, skip_covered
+    );
+    println!(
+        "speedup {kernel_speedup:.2}x, ticked/covered {tick_ratio:.4} \
+         (delivered-flit equality: VERIFIED)"
+    );
+    bench.add("lull-kernel", "fixed-tick", fixed_wall, fixed_covered as f64);
+    bench.add("lull-kernel", "adaptive", skip_wall, skip_covered as f64);
+
+    // ---- Statistical early termination: FM300 sweep point. ----
+    println!("\n== statistical early termination (fm300 × 8 srv/sw, uniform 0.30) ==\n");
+    let ci_horizon = if quick() { 10_000u64 } else { 40_000 };
+    let ci_target = 0.05f64;
+    let (fx_wall, fx_stats) = fm300_point(None, ci_horizon);
+    let (ci_wall, ci_stats) = fm300_point(Some(ci_target), ci_horizon);
+    let achieved = ci_stats.achieved_rel_ci.unwrap_or(f64::NAN);
+    let thr_fixed = fx_stats.accepted_throughput();
+    let thr_ci = ci_stats.accepted_throughput();
+    println!(
+        "fixed budget : {} cycles, {fx_wall:.3}s, throughput {thr_fixed:.4}",
+        fx_stats.finish_cycle
+    );
+    println!(
+        "early stop   : {} cycles, {ci_wall:.3}s, throughput {thr_ci:.4}, \
+         achieved rel CI {achieved:.4} (target {ci_target})",
+        ci_stats.finish_cycle
+    );
+    bench.add(
+        "early-termination",
+        "fixed",
+        fx_wall,
+        fx_stats.finish_cycle as f64,
+    );
+    bench.add(
+        "early-termination",
+        "adaptive",
+        ci_wall,
+        ci_stats.finish_cycle as f64,
+    );
+
+    let adaptive_json = format!(
+        "{{\n  \"bench\": \"adaptive-simulation-length\",\n  \
+         \"kernel_section\": {{\n    \"topology\": \"fm64\", \"kernel\": \"allreduce-8rank\", \
+         \"link_latency\": {link_latency}, \"reps\": {reps},\n    \
+         \"fixed_wall_secs\": {fixed_wall:.6}, \"adaptive_wall_secs\": {skip_wall:.6}, \
+         \"wall_speedup\": {kernel_speedup:.3},\n    \
+         \"cycles_ticked\": {skip_ticked}, \"cycles_covered\": {skip_covered}, \
+         \"ticked_over_covered\": {tick_ratio:.5},\n    \
+         \"delivered_flits_equal\": {}\n  }},\n  \
+         \"early_termination\": {{\n    \"topology\": \"fm300\", \"load\": 0.30, \
+         \"horizon\": {ci_horizon}, \"rel_ci_target\": {ci_target},\n    \
+         \"fixed_cycles\": {}, \"adaptive_cycles\": {}, \
+         \"fixed_wall_secs\": {fx_wall:.6}, \"adaptive_wall_secs\": {ci_wall:.6},\n    \
+         \"achieved_rel_ci\": {achieved:.5}, \
+         \"throughput_fixed\": {thr_fixed:.5}, \"throughput_adaptive\": {thr_ci:.5}\n  }}\n}}\n",
+        fixed_flits == skip_flits,
+        fx_stats.finish_cycle,
+        ci_stats.finish_cycle,
+    );
+    match std::fs::write("BENCH_adaptive.json", &adaptive_json) {
+        Ok(()) => println!("\nwrote BENCH_adaptive.json (adaptive determinism: VERIFIED)"),
+        Err(e) => println!("\ncould not write BENCH_adaptive.json: {e}"),
+    }
+
+    bench.write();
 
     // PJRT batched scorer (decision path through the artifact).
     if cfg!(feature = "pjrt") && std::path::Path::new("artifacts/tera_score.hlo.txt").exists() {

@@ -58,6 +58,15 @@ pub struct ExperimentSpec {
     /// thread budget so batch workers and shard workers never
     /// oversubscribe (`--shards` on the CLI).
     pub shards: usize,
+    /// Exact next-event time advance (default on; `--fixed-tick` /
+    /// `time_skip = false` disables it). Bit-identical either way — a pure
+    /// wall-clock knob, like `shards`.
+    pub time_skip: bool,
+    /// Statistical early termination for open-loop (Bernoulli) runs: stop
+    /// a point once the steady-state estimator's relative CI half-width
+    /// reaches this target (`--stop-rel-ci 0.05`). `None` (default) keeps
+    /// the fixed horizon budget, so existing results are unchanged.
+    pub stop_rel_ci: Option<f64>,
 }
 
 impl Default for ExperimentSpec {
@@ -77,6 +86,8 @@ impl Default for ExperimentSpec {
             warmup: 1_000,
             max_cycles: 2_000_000,
             shards: 1,
+            time_skip: true,
+            stop_rel_ci: None,
         }
     }
 }
@@ -237,6 +248,13 @@ impl ExperimentSpec {
         if let Some(i) = get_int("shards") {
             spec.shards = (i as usize).max(1);
         }
+        if let Some(b) = v.get("time_skip").and_then(Value::as_bool) {
+            spec.time_skip = b;
+        }
+        if let Some(f) = v.get("stop_rel_ci").and_then(Value::as_float) {
+            anyhow::ensure!(f > 0.0, "stop_rel_ci must be positive");
+            spec.stop_rel_ci = Some(f);
+        }
         let mode = get_str("mode").unwrap_or_else(|| "bernoulli".into());
         spec.traffic = match mode.as_str() {
             "fixed" => TrafficSpec::Fixed {
@@ -368,6 +386,23 @@ mod tests {
         // 0 is nonsensical; it normalizes to the serial core.
         let cfg = crate::config::parse("shards = 0\n").unwrap();
         assert_eq!(ExperimentSpec::from_value(&cfg).unwrap().shards, 1);
+    }
+
+    #[test]
+    fn adaptive_length_knobs_parse_and_default_safe() {
+        // Defaults: exact time advance on (bit-identical, pure wall-clock),
+        // statistical stopping off (fixed budget — tier-1 unchanged).
+        let d = ExperimentSpec::default();
+        assert!(d.time_skip);
+        assert_eq!(d.stop_rel_ci, None);
+        let cfg =
+            crate::config::parse("time_skip = false\nstop_rel_ci = 0.05\n").unwrap();
+        let spec = ExperimentSpec::from_value(&cfg).unwrap();
+        assert!(!spec.time_skip);
+        assert_eq!(spec.stop_rel_ci, Some(0.05));
+        // A zero/negative CI target is meaningless and must fail loudly.
+        let bad = crate::config::parse("stop_rel_ci = 0.0\n").unwrap();
+        assert!(ExperimentSpec::from_value(&bad).is_err());
     }
 
     #[test]

@@ -607,6 +607,86 @@ pub fn ablation_q(scale: Scale, seed: u64) -> anyhow::Result<String> {
 }
 
 // ---------------------------------------------------------------------
+// Adaptive simulation length — fixed budget vs statistical early stop
+// ---------------------------------------------------------------------
+
+/// Run the same Bernoulli sweep twice — full fixed horizon vs
+/// `--stop-rel-ci` early termination — and report the cycle budget saved
+/// alongside the throughput agreement and the achieved CI half-width per
+/// point. This is the sweep-pipeline view of `metrics::steady`: the
+/// estimator's value is measured in simulated cycles avoided, with the
+/// metric drift it costs printed next to it.
+pub fn early_stop(scale: Scale, seed: u64) -> anyhow::Result<String> {
+    let (topo, spc) = fm(scale);
+    let hz = horizon(scale);
+    let target = 0.05;
+    let loads: &[f64] = match scale {
+        Scale::Quick => &[0.3, 0.5, 0.7],
+        Scale::Paper => &[0.1, 0.3, 0.5, 0.7, 0.9],
+    };
+    let mut specs = Vec::new();
+    for &adaptive in &[false, true] {
+        for &load in loads {
+            specs.push(ExperimentSpec {
+                name: format!("earlystop-{load}-{adaptive}"),
+                topology: topo.clone(),
+                servers_per_switch: spc,
+                routing: "tera-hx2".into(),
+                traffic: TrafficSpec::Bernoulli {
+                    pattern: "uniform".into(),
+                    load,
+                    horizon: hz,
+                },
+                warmup: hz / 4,
+                seed,
+                stop_rel_ci: adaptive.then_some(target),
+                ..Default::default()
+            });
+        }
+    }
+    let results = Engine::new().run_batch(specs);
+    let mut t = Table::new(
+        &format!(
+            "Adaptive length — fixed {hz}-cycle budget vs stop-rel-ci {target} \
+             (tera-hx2 on {topo}, uniform)"
+        ),
+        &[
+            "load", "fixed cyc", "adaptive cyc", "saved", "achieved CI", "thr fixed",
+            "thr adaptive", "drift",
+        ],
+    );
+    for (i, &load) in loads.iter().enumerate() {
+        let fixed = results[i]
+            .stats
+            .as_ref()
+            .map_err(|e| anyhow::anyhow!("fixed point {load}: {e}"))?;
+        let early = results[loads.len() + i]
+            .stats
+            .as_ref()
+            .map_err(|e| anyhow::anyhow!("adaptive point {load}: {e}"))?;
+        let (tf, te) = (fixed.accepted_throughput(), early.accepted_throughput());
+        let drift = if tf > 0.0 { (te - tf).abs() / tf } else { 0.0 };
+        t.row(vec![
+            format!("{load:.2}"),
+            fixed.finish_cycle.to_string(),
+            early.finish_cycle.to_string(),
+            format!(
+                "{:.0}%",
+                100.0 * (1.0 - early.finish_cycle as f64 / fixed.finish_cycle.max(1) as f64)
+            ),
+            early
+                .achieved_rel_ci
+                .map_or("-".into(), |r| format!("{r:.4}")),
+            format!("{tf:.4}"),
+            format!("{te:.4}"),
+            format!("{:.2}%", 100.0 * drift),
+        ]);
+    }
+    write_csv("early_stop.csv", &t.to_csv())?;
+    Ok(t.render())
+}
+
+// ---------------------------------------------------------------------
 // Service/main link utilization (§6.3, last paragraph)
 // ---------------------------------------------------------------------
 

@@ -127,6 +127,9 @@ pub fn build_network(spec: &ExperimentSpec) -> anyhow::Result<Network> {
 
 /// The run options a spec's traffic mode implies: Bernoulli runs are
 /// horizon-bound with a warmup window, everything else runs to drain.
+/// Statistical early termination (`stop_rel_ci`) only applies to the
+/// open-loop (Bernoulli) mode — drain-bound runs measure completion time,
+/// which has no steady state to estimate.
 pub fn run_opts(spec: &ExperimentSpec) -> RunOpts {
     match &spec.traffic {
         TrafficSpec::Bernoulli { horizon, .. } => RunOpts {
@@ -134,12 +137,16 @@ pub fn run_opts(spec: &ExperimentSpec) -> RunOpts {
             warmup: spec.warmup.min(*horizon / 4),
             window: None,
             stop_when_drained: false,
+            time_skip: spec.time_skip,
+            stop_rel_ci: spec.stop_rel_ci,
         },
         _ => RunOpts {
             max_cycles: spec.max_cycles,
             warmup: 0,
             window: None,
             stop_when_drained: true,
+            time_skip: spec.time_skip,
+            stop_rel_ci: None,
         },
     }
 }
@@ -154,6 +161,8 @@ pub fn run_expect(spec: &ExperimentSpec) -> anyhow::Result<Result<SimStats, SimE
         warmup: 0,
         window: None,
         stop_when_drained: !matches!(spec.traffic, TrafficSpec::Bernoulli { .. }),
+        time_skip: spec.time_skip,
+        stop_rel_ci: None,
     };
     Ok(net.run(workload.as_mut(), &opts))
 }
@@ -220,6 +229,44 @@ impl ReplicaSummary {
     pub fn mean_latency(&self) -> (f64, f64) {
         Self::mean_std(self.stats.iter().map(SimStats::mean_latency))
     }
+
+    /// Relative 95% CI half-width of the mean accepted throughput across
+    /// replicas (Student-t over per-replica values) — the criterion
+    /// [`Engine::run_replicas_ci`] prunes on. `None` below two replicas or
+    /// at zero mean.
+    pub fn throughput_rel_ci(&self) -> Option<f64> {
+        throughput_rel_ci_of(&self.stats)
+    }
+}
+
+/// Replicas required before the adaptive replica budget may stop.
+const MIN_CI_REPLICAS: usize = 3;
+
+/// Assemble a [`ReplicaSummary`] from per-replica stats in seed order,
+/// merging the kept replicas' latency histograms.
+fn summarize_replicas(seeds: Vec<u64>, stats: Vec<SimStats>) -> ReplicaSummary {
+    let mut latency = LatencyHist::new();
+    for s in &stats {
+        latency.merge(&s.latency);
+    }
+    ReplicaSummary {
+        seeds,
+        stats,
+        latency,
+    }
+}
+
+fn throughput_rel_ci_of(stats: &[SimStats]) -> Option<f64> {
+    let k = stats.len();
+    if k < 2 {
+        return None;
+    }
+    let (mean, sd) =
+        ReplicaSummary::mean_std(stats.iter().map(SimStats::accepted_throughput));
+    if mean <= 0.0 {
+        return None;
+    }
+    Some(crate::metrics::steady::t_975(k - 1) * sd / (k as f64).sqrt() / mean)
 }
 
 /// Cache key for compiled routing state: `(topology, routing, q)`,
@@ -399,6 +446,22 @@ impl Engine {
     ) -> anyhow::Result<ReplicaSummary> {
         anyhow::ensure!(replicas >= 1, "need at least one replica");
         let seeds: Vec<u64> = (0..replicas as u64).map(|i| spec.seed + i).collect();
+        let mut stats = Vec::with_capacity(replicas);
+        self.run_replica_wave(spec, &seeds, &mut stats)?;
+        Ok(summarize_replicas(seeds, stats))
+    }
+
+    /// Run one wave of replicas of `spec` at the given derived seeds,
+    /// appending per-replica stats in seed order. The single
+    /// replica-derivation path shared by the fixed-budget and CI-pruned
+    /// replica modes (same `name#s<seed>` scheme, same
+    /// first-error-aborts contract).
+    fn run_replica_wave(
+        &self,
+        spec: &ExperimentSpec,
+        seeds: &[u64],
+        stats: &mut Vec<SimStats>,
+    ) -> anyhow::Result<()> {
         let specs: Vec<ExperimentSpec> = seeds
             .iter()
             .map(|&seed| ExperimentSpec {
@@ -407,20 +470,55 @@ impl Engine {
                 ..spec.clone()
             })
             .collect();
-        let mut stats = Vec::with_capacity(replicas);
-        let mut latency = LatencyHist::new();
         for res in self.run_batch(specs) {
             let s = res
                 .stats
                 .map_err(|e| e.context(format!("replica '{}'", res.spec.name)))?;
-            latency.merge(&s.latency);
             stats.push(s);
         }
-        Ok(ReplicaSummary {
-            seeds,
-            stats,
-            latency,
-        })
+        Ok(())
+    }
+
+    /// Adaptive replica budget: run replicas in engine-width waves and
+    /// **prune the remainder** once the relative CI half-width of the mean
+    /// throughput across replicas meets `rel_ci` (never before
+    /// `MIN_CI_REPLICAS` replicas, never beyond `max_replicas`).
+    ///
+    /// The pruning point is **thread-independent**: convergence is decided
+    /// on seed-order prefixes (the earliest prefix `>= MIN_CI_REPLICAS`
+    /// meeting the target wins, and the summary is truncated to it), so
+    /// the wave width — an engine wall-clock knob — can only waste
+    /// replicas, never change the reported result. With a fixed seed the
+    /// outcome is fully deterministic; the summary's `seeds` records what
+    /// was kept. Each replica may *also* terminate early internally via
+    /// the spec's own `stop_rel_ci` — the two levels compose (DESIGN.md,
+    /// "Time-advance and stopping invariants").
+    pub fn run_replicas_ci(
+        &self,
+        spec: &ExperimentSpec,
+        max_replicas: usize,
+        rel_ci: f64,
+    ) -> anyhow::Result<ReplicaSummary> {
+        anyhow::ensure!(max_replicas >= 1, "need at least one replica");
+        anyhow::ensure!(rel_ci > 0.0, "CI target must be positive");
+        let mut stats: Vec<SimStats> = Vec::new();
+        let mut seeds: Vec<u64> = Vec::new();
+        while stats.len() < max_replicas {
+            let wave = self.threads.clamp(1, max_replicas - stats.len());
+            let wave_seeds: Vec<u64> = (0..wave as u64)
+                .map(|i| spec.seed + seeds.len() as u64 + i)
+                .collect();
+            self.run_replica_wave(spec, &wave_seeds, &mut stats)?;
+            seeds.extend(wave_seeds);
+            for k in MIN_CI_REPLICAS..=stats.len() {
+                if throughput_rel_ci_of(&stats[..k]).map_or(false, |r| r <= rel_ci) {
+                    stats.truncate(k);
+                    seeds.truncate(k);
+                    return Ok(summarize_replicas(seeds, stats));
+                }
+            }
+        }
+        Ok(summarize_replicas(seeds, stats))
     }
 }
 

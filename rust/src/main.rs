@@ -48,6 +48,7 @@ fn real_main() -> anyhow::Result<()> {
         "fig10" => print!("{}", figures::fig10(scale, seed)?),
         "linkutil" => print!("{}", figures::link_utilization(scale, seed)?),
         "ablation-q" => print!("{}", figures::ablation_q(scale, seed)?),
+        "early-stop" => print!("{}", figures::early_stop(scale, seed)?),
         "figs" => {
             // Everything, in paper order.
             print!("{}", figures::table1(64)?);
@@ -108,6 +109,19 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         warmup: args.get_u64("warmup", 2_000)?,
         max_cycles: args.get_u64("max-cycles", 10_000_000)?,
         shards: args.get_usize("shards", 1)?,
+        // Both adaptive-length knobs are safe by construction: time skip is
+        // bit-identical, and CI stopping defaults to off (fixed budget).
+        time_skip: !args.has("fixed-tick"),
+        stop_rel_ci: match args.get("stop-rel-ci") {
+            Some(v) => {
+                let target: f64 = v.parse()?;
+                // Same validation as the spec-file path (`from_value`):
+                // NaN/zero/negative targets can never converge.
+                anyhow::ensure!(target > 0.0, "--stop-rel-ci must be positive");
+                Some(target)
+            }
+            None => None,
+        },
     };
     // An explicit --shards request widens the default thread budget so the
     // sharded core actually runs that wide (results are bit-identical
@@ -115,7 +129,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let engine = engine_from(args, spec.shards)?;
     let replicas = args.get_usize("replicas", 1)?;
     if replicas > 1 {
-        report_replicas(&engine, &spec, replicas)
+        // With a CI target, the replica budget is adaptive too: replicas
+        // beyond convergence are pruned (`Engine::run_replicas_ci`).
+        match spec.stop_rel_ci {
+            Some(target) => report_replicas_ci(&engine, &spec, replicas, target),
+            None => report_replicas(&engine, &spec, replicas),
+        }
     } else {
         report_one(&engine, &spec)
     }
@@ -168,6 +187,37 @@ fn report_replicas(engine: &Engine, spec: &ExperimentSpec, replicas: usize) -> a
     Ok(())
 }
 
+fn report_replicas_ci(
+    engine: &Engine,
+    spec: &ExperimentSpec,
+    max_replicas: usize,
+    target: f64,
+) -> anyhow::Result<()> {
+    eprintln!(
+        "running {} on {} ({} srv/sw, routing {}): up to {max_replicas} replicas, \
+         stopping at rel CI <= {target}",
+        spec.name, spec.topology, spec.servers_per_switch, spec.routing,
+    );
+    let t0 = std::time::Instant::now();
+    let summary = engine.run_replicas_ci(spec, max_replicas, target)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let (thr, thr_sd) = summary.throughput();
+    let (lat, lat_sd) = summary.mean_latency();
+    println!(
+        "replicas            {} of {max_replicas} budgeted",
+        summary.seeds.len()
+    );
+    match summary.throughput_rel_ci() {
+        Some(rel) => println!("throughput_rel_ci   {rel:.4} (target {target})"),
+        None => println!("throughput_rel_ci   n/a (target {target})"),
+    }
+    println!("accepted_throughput {thr:.4} ± {thr_sd:.4} flits/cycle/server");
+    println!("mean_latency        {lat:.1} ± {lat_sd:.1} cycles");
+    println!("p99_latency(all)    {}", summary.latency.percentile(99.0));
+    println!("wall_time           {wall:.2}s ({} threads)", engine.threads());
+    Ok(())
+}
+
 fn report_one(engine: &Engine, spec: &ExperimentSpec) -> anyhow::Result<()> {
     eprintln!(
         "running {} on {} ({} srv/sw, routing {}, seed {})",
@@ -177,6 +227,9 @@ fn report_one(engine: &Engine, spec: &ExperimentSpec) -> anyhow::Result<()> {
     let stats = engine.run_one(spec)?;
     let wall = t0.elapsed().as_secs_f64();
     println!("finish_cycle        {}", stats.finish_cycle);
+    if let Some(rel) = stats.achieved_rel_ci {
+        println!("achieved_rel_ci     {rel:.4}");
+    }
     println!("delivered_packets   {}", stats.delivered_packets);
     println!(
         "accepted_throughput {:.4} flits/cycle/server",
@@ -284,6 +337,7 @@ COMMANDS:
   fig5 .. fig10       reproduce each evaluation figure   [--full] [--seed N]
   figs                all tables + figures in paper order
   linkutil            §6.3 service/main link utilization
+  early-stop          fixed-budget vs --stop-rel-ci sweep comparison
   validate-artifacts  cross-check AOT artifacts against pure-Rust references
   help                this text
 
@@ -303,4 +357,12 @@ RUN FLAGS:
                           (bit-identical results at any N; wall-clock knob.
                           The engine caps replica-workers × shards at the
                           --threads budget)
+  --fixed-tick            disable the exact next-event time advance (the
+                          adaptive clock is bit-identical; this is a
+                          debugging/benchmark knob)
+  --stop-rel-ci X         stop a bernoulli point once the steady-state
+                          estimator's relative CI half-width <= X (e.g.
+                          0.05); with --replicas N, also prunes replicas
+                          beyond convergence. Default: fixed budget.
+  --max-cycles N          hard cycle budget for drain-bound runs
 ";

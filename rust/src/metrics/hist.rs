@@ -79,6 +79,15 @@ impl LatencyHist {
         }
     }
 
+    /// Exact sum of all recorded samples (the numerator of [`mean`];
+    /// the steady-state stop monitor differences it across batch
+    /// boundaries to get per-interval latency means).
+    ///
+    /// [`mean`]: LatencyHist::mean
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
     pub fn min(&self) -> u64 {
         if self.total == 0 {
             0

@@ -4,9 +4,11 @@
 
 pub mod hist;
 pub mod jain;
+pub mod steady;
 
 pub use hist::LatencyHist;
 pub use jain::jain_index;
+pub use steady::{CiEstimate, SteadyEstimator, StopMonitor};
 
 /// Aggregate statistics for one simulation run.
 ///
@@ -32,6 +34,11 @@ pub struct SimStats {
     pub window_cycles: u64,
     /// Cycle at which the run finished (fixed generation: completion time).
     pub finish_cycle: u64,
+    /// Relative CI half-width the steady-state estimator reached, recorded
+    /// only when the run was given a `--stop-rel-ci` target (`None` for
+    /// fixed-budget runs, so the bit-identity contract between adaptive
+    /// and fixed-tick time advance is untouched).
+    pub achieved_rel_ci: Option<f64>,
 }
 
 impl SimStats {

@@ -1,0 +1,331 @@
+//! Streaming steady-state estimation: MSER-style warmup truncation plus
+//! batch-means confidence intervals — the statistical half of adaptive
+//! simulation length (DESIGN.md, "Time-advance and stopping invariants").
+//!
+//! An open-loop (Bernoulli) sweep point today runs a fixed worst-case
+//! horizon even when its estimator converged long ago. [`SteadyEstimator`]
+//! consumes per-interval batch observations (delivered flits/cycle, mean
+//! latency), truncates the initialization transient with the MSER rule
+//! (drop the prefix that minimizes the standard error of the remaining
+//! mean), and reports a Student-t confidence interval over the surviving
+//! batch means. [`StopMonitor`] wraps two estimators (throughput +
+//! latency) behind the single `--stop-rel-ci` knob the simulator polls.
+//!
+//! Assumptions (stated, not hidden): batch means over a few hundred cycles
+//! are approximately independent and identically distributed once the
+//! MSER truncation removes the warmup transient — the classical
+//! batch-means premise. The CI is an estimate, not a guarantee; the
+//! fixed-budget run remains the default and tier-1 results never depend
+//! on this module.
+
+use crate::metrics::SimStats;
+
+/// Two-sided 97.5% Student-t quantiles (95% confidence interval) by
+/// degrees of freedom; asymptotic beyond the table.
+pub fn t_975(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    match df {
+        0 => f64::INFINITY,
+        1..=30 => TABLE[df - 1],
+        31..=60 => 2.000,
+        61..=120 => 1.980,
+        _ => 1.960,
+    }
+}
+
+/// A truncated batch-means confidence interval.
+#[derive(Clone, Copy, Debug)]
+pub struct CiEstimate {
+    /// Mean over the surviving (post-truncation) batches.
+    pub mean: f64,
+    /// 95% CI half-width over the surviving batches.
+    pub half_width: f64,
+    /// Batches dropped by the MSER truncation rule.
+    pub truncated: usize,
+    /// Batches the interval is computed over.
+    pub used: usize,
+}
+
+impl CiEstimate {
+    /// `half_width / |mean|` — the quantity `--stop-rel-ci` targets.
+    /// Infinite for a zero mean (a dead point never "converges").
+    pub fn rel_half_width(&self) -> f64 {
+        if self.mean.abs() <= f64::EPSILON {
+            f64::INFINITY
+        } else {
+            self.half_width / self.mean.abs()
+        }
+    }
+}
+
+/// Minimum surviving batches before an estimate is considered meaningful.
+const MIN_KEPT: usize = 10;
+
+/// Streaming MSER + batch-means estimator over one scalar metric.
+#[derive(Clone, Debug, Default)]
+pub struct SteadyEstimator {
+    obs: Vec<f64>,
+}
+
+impl SteadyEstimator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one batch observation (e.g. mean throughput over the last
+    /// batch interval).
+    pub fn push(&mut self, x: f64) {
+        self.obs.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.obs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.obs.is_empty()
+    }
+
+    /// MSER truncation + Student-t batch-means CI.
+    ///
+    /// The MSER rule picks the truncation point `d` (capped at half the
+    /// observations, the standard guard against truncating into noise)
+    /// minimizing `sqrt(var(obs[d..]) / (m - d))` — the standard error of
+    /// the remaining mean — then the CI is computed over `obs[d..]`.
+    /// `None` until at least [`MIN_KEPT`] batches survive. O(m) per call
+    /// via suffix sums.
+    pub fn estimate(&self) -> Option<CiEstimate> {
+        let m = self.obs.len();
+        if m < MIN_KEPT {
+            return None;
+        }
+        // Suffix sums: s1[d] = Σ obs[d..], s2[d] = Σ obs[d..]².
+        let mut s1 = 0.0f64;
+        let mut s2 = 0.0f64;
+        let mut suffix: Vec<(f64, f64)> = vec![(0.0, 0.0); m + 1];
+        for d in (0..m).rev() {
+            s1 += self.obs[d];
+            s2 += self.obs[d] * self.obs[d];
+            suffix[d] = (s1, s2);
+        }
+        let max_d = (m / 2).min(m - MIN_KEPT);
+        let mut best_d = 0usize;
+        let mut best_se = f64::INFINITY;
+        for d in 0..=max_d {
+            let k = (m - d) as f64;
+            let (s1, s2) = suffix[d];
+            let var = (s2 - s1 * s1 / k) / k; // population variance
+            let se = (var.max(0.0) / k).sqrt();
+            if se < best_se {
+                best_se = se;
+                best_d = d;
+            }
+        }
+        let k = m - best_d;
+        let (s1, s2) = suffix[best_d];
+        let mean = s1 / k as f64;
+        // Sample variance over the surviving batches for the t interval.
+        let var = ((s2 - s1 * s1 / k as f64) / (k as f64 - 1.0)).max(0.0);
+        let half_width = t_975(k - 1) * (var / k as f64).sqrt();
+        Some(CiEstimate {
+            mean,
+            half_width,
+            truncated: best_d,
+            used: k,
+        })
+    }
+}
+
+/// Cycles per batch observation the simulator's stop monitor uses.
+pub const STOP_BATCH_CYCLES: u64 = 256;
+
+/// Surviving batches required (per metric) before a run may stop early.
+const MIN_BATCHES_TO_STOP: usize = 16;
+
+/// Run-level early-termination monitor: batches the window-gated delivery
+/// stream every [`STOP_BATCH_CYCLES`] cycles into throughput and latency
+/// observations, and reports convergence once **both** relative CI
+/// half-widths are at or below the target.
+#[derive(Clone, Debug)]
+pub struct StopMonitor {
+    target: f64,
+    next_check: u64,
+    last_check: u64,
+    throughput: SteadyEstimator,
+    latency: SteadyEstimator,
+    prev_flits: u64,
+    prev_lat_sum: f64,
+    prev_lat_count: u64,
+}
+
+impl StopMonitor {
+    /// `target` is the relative CI half-width to stop at; observation
+    /// batching starts when the measurement window opens at `warmup`.
+    pub fn new(target: f64, warmup: u64) -> Self {
+        Self {
+            target,
+            next_check: warmup + STOP_BATCH_CYCLES,
+            last_check: warmup,
+            throughput: SteadyEstimator::new(),
+            latency: SteadyEstimator::new(),
+            prev_flits: 0,
+            prev_lat_sum: 0.0,
+            prev_lat_count: 0,
+        }
+    }
+
+    /// Poll once per simulated cycle (cheap: one compare off the batch
+    /// boundary). Returns `true` when the run may stop.
+    pub fn poll(&mut self, now: u64, stats: &SimStats) -> bool {
+        if now < self.next_check {
+            return false;
+        }
+        // Interval length is measured, not assumed, so a time-advance jump
+        // landing past the boundary still yields an exact rate.
+        let cycles = (now - self.last_check) as f64;
+        self.last_check = now;
+        self.next_check = now + STOP_BATCH_CYCLES;
+        let flits = stats.delivered_flits;
+        self.throughput.push((flits - self.prev_flits) as f64 / cycles);
+        self.prev_flits = flits;
+        let lat_count = stats.latency.count();
+        let lat_sum = stats.latency.sum();
+        if lat_count > self.prev_lat_count {
+            self.latency
+                .push((lat_sum - self.prev_lat_sum) / (lat_count - self.prev_lat_count) as f64);
+        }
+        self.prev_lat_sum = lat_sum;
+        self.prev_lat_count = lat_count;
+        self.converged()
+    }
+
+    fn converged(&self) -> bool {
+        let ok = |e: &SteadyEstimator| match e.estimate() {
+            Some(c) => c.used >= MIN_BATCHES_TO_STOP && c.rel_half_width() <= self.target,
+            None => false,
+        };
+        ok(&self.throughput) && ok(&self.latency)
+    }
+
+    /// The worse (larger) of the two achieved relative half-widths, for
+    /// reporting — `None` until both metrics have estimates.
+    pub fn achieved_rel_ci(&self) -> Option<f64> {
+        let t = self.throughput.estimate()?;
+        let l = self.latency.estimate()?;
+        Some(t.rel_half_width().max(l.rel_half_width()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn noisy(rng: &mut Rng, mean: f64, spread: f64) -> f64 {
+        mean + spread * (rng.gen_range(2_001) as f64 / 1_000.0 - 1.0)
+    }
+
+    #[test]
+    fn constant_stream_has_zero_half_width() {
+        let mut e = SteadyEstimator::new();
+        for _ in 0..32 {
+            e.push(2.5);
+        }
+        let c = e.estimate().unwrap();
+        assert!((c.mean - 2.5).abs() < 1e-12);
+        assert!(c.half_width < 1e-12);
+        assert_eq!(c.truncated, 0);
+        assert!(c.rel_half_width() < 1e-9);
+    }
+
+    #[test]
+    fn needs_minimum_batches() {
+        let mut e = SteadyEstimator::new();
+        for i in 0..(MIN_KEPT - 1) {
+            e.push(i as f64);
+        }
+        assert!(e.estimate().is_none());
+        e.push(1.0);
+        assert!(e.estimate().is_some());
+    }
+
+    #[test]
+    fn mser_truncates_the_transient() {
+        let mut rng = Rng::new(7);
+        let mut e = SteadyEstimator::new();
+        // A hot transient far from steady state, then stationary noise.
+        for _ in 0..20 {
+            e.push(50.0);
+        }
+        for _ in 0..180 {
+            e.push(noisy(&mut rng, 1.0, 0.05));
+        }
+        let c = e.estimate().unwrap();
+        assert!(
+            (18..=25).contains(&c.truncated),
+            "MSER should cut ≈ the 20-batch transient, got {}",
+            c.truncated
+        );
+        assert!((c.mean - 1.0).abs() < 0.05, "mean {}", c.mean);
+        assert!(c.rel_half_width() < 0.02, "rel {}", c.rel_half_width());
+    }
+
+    #[test]
+    fn half_width_shrinks_with_more_batches() {
+        let mut rng = Rng::new(3);
+        let mut e = SteadyEstimator::new();
+        for _ in 0..20 {
+            e.push(noisy(&mut rng, 4.0, 1.0));
+        }
+        let wide = e.estimate().unwrap().half_width;
+        for _ in 0..300 {
+            e.push(noisy(&mut rng, 4.0, 1.0));
+        }
+        let narrow = e.estimate().unwrap().half_width;
+        assert!(narrow < wide, "{narrow} !< {wide}");
+    }
+
+    #[test]
+    fn zero_mean_never_converges() {
+        let mut e = SteadyEstimator::new();
+        for _ in 0..64 {
+            e.push(0.0);
+        }
+        assert!(e.estimate().unwrap().rel_half_width().is_infinite());
+    }
+
+    #[test]
+    fn t_quantile_is_monotone_toward_normal() {
+        assert!(t_975(1) > t_975(5));
+        assert!(t_975(5) > t_975(30));
+        assert!(t_975(30) > t_975(200));
+        assert!((t_975(200) - 1.96).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stop_monitor_converges_on_a_steady_stream() {
+        let mut stats = SimStats::new(4, 0);
+        let mut mon = StopMonitor::new(0.05, 1_000);
+        let mut stopped_at = None;
+        let mut rng = Rng::new(11);
+        for now in 1_000..200_000u64 {
+            // ~0.5 flits/cycle with mild noise; latencies near 120 cycles.
+            if rng.gen_bool(0.03) {
+                stats.delivered_flits += 16;
+                stats.latency.record(100 + rng.gen_range(40) as u64);
+            }
+            if mon.poll(now, &stats) {
+                stopped_at = Some(now);
+                break;
+            }
+        }
+        let at = stopped_at.expect("steady stream must converge");
+        assert!(at > 1_000 + MIN_BATCHES_TO_STOP as u64 * STOP_BATCH_CYCLES);
+        let achieved = mon.achieved_rel_ci().unwrap();
+        assert!(achieved <= 0.05, "achieved {achieved}");
+    }
+}

@@ -6,8 +6,13 @@
 //! Substitution 1). The microarchitecture follows §5 exactly:
 //!
 //! * 16-flit packets;
-//! * input ports with per-VC FIFOs of 10 packets, output queues of
-//!   5 packets per VC;
+//! * input ports with 10-packet FIFOs and 5-packet output queues **per
+//!   virtual channel, where the VC count is router-determined**
+//!   (`Router::num_vcs`): TERA, MIN and the RINR link-ordering schemes run
+//!   VC-less (one VC, the paper's headline claim), UGAL/Valiant/Omni-WAR
+//!   use 2, and the §6.5 2D-HyperX routers up to 4 — see the
+//!   algorithm→policy table in DESIGN.md and `routing/tables.rs` for where
+//!   each policy's VC discipline is compiled;
 //! * crossbar with 2× speedup and a random (rotating-priority) allocator;
 //! * credit-based flow control;
 //! * servers attached through injection/ejection ports serialized at one
@@ -36,7 +41,13 @@
 //!   phase (allocation + transmission, per shard, concurrently on worker
 //!   threads) and a serial **commit** phase that drains shard outboxes in
 //!   canonical order onto the wheel — N-shard runs are bit-identical to
-//!   1-shard runs (DESIGN.md, "Phase-parallel invariants").
+//!   1-shard runs (DESIGN.md, "Phase-parallel invariants");
+//! * when a cycle ends with every shard idle, no server eligible to
+//!   inject, and nothing due on the wheel until `t'`, the clock jumps
+//!   straight to `t'` (**exact next-event time advance**, `RunOpts::
+//!   time_skip`): skipped cycles move nothing and draw no randomness, so
+//!   results stay bit-identical to fixed-tick for every router, seed and
+//!   shard count (DESIGN.md, "Time-advance and stopping invariants").
 
 pub mod packet;
 pub mod queues;
@@ -119,6 +130,23 @@ pub struct RunOpts {
     /// Stop as soon as the workload is exhausted and the network drained
     /// (fixed generation / application kernels).
     pub stop_when_drained: bool,
+    /// Exact next-event time advance (default on): when a cycle ends with
+    /// no switch buffering a packet, no server eligible to inject, and the
+    /// workload quiescent, jump the clock to the earliest cycle at which
+    /// anything can happen instead of ticking empty cycles. Skipped cycles
+    /// move nothing and draw no randomness, so `SimStats` are
+    /// **bit-identical** with this on or off — it is a pure wall-clock
+    /// knob (`--fixed-tick` on the CLI disables it; DESIGN.md,
+    /// "Time-advance and stopping invariants").
+    pub time_skip: bool,
+    /// Statistical early termination: `Some(target)` stops an open-loop
+    /// run once the steady-state estimator's relative CI half-width over
+    /// delivered-flit throughput *and* latency is at or below `target`
+    /// (MSER warmup truncation + batch means, `metrics::steady`). `None`
+    /// (the default) keeps the fixed budget, so tier-1 results are
+    /// unchanged. The achieved half-width is reported in
+    /// `SimStats::achieved_rel_ci`.
+    pub stop_rel_ci: Option<f64>,
 }
 
 impl Default for RunOpts {
@@ -128,6 +156,8 @@ impl Default for RunOpts {
             warmup: 0,
             window: None,
             stop_when_drained: true,
+            time_skip: true,
+            stop_rel_ci: None,
         }
     }
 }
@@ -208,6 +238,9 @@ pub struct Network {
     last_progress: u64,
     /// Packets sitting in server source queues (fast drain check).
     pending_sources: usize,
+    /// Cycles actually simulated by `step` (the adaptive time advance
+    /// jumps `now` without ticking, so `now - ticked` cycles were skipped).
+    ticked: u64,
     /// Effective watchdog horizon: `cfg.watchdog_cycles`, floored so that
     /// packets legitimately in flight on a long wire (where no flit moves
     /// anywhere for up to `link_latency + serialization` cycles) are never
@@ -325,6 +358,7 @@ impl Network {
             window_end: u64::MAX,
             last_progress: 0,
             pending_sources: 0,
+            ticked: 0,
             watchdog,
             max_hops,
             max_degree,
@@ -345,6 +379,19 @@ impl Network {
     /// (`cfg.shards` clamped to the switch count).
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Cycles actually simulated (stepped) so far. With the adaptive time
+    /// advance on, `cycles_ticked() <= now()`: the difference is the dead
+    /// cycles the fast path jumped over. The benches report
+    /// `ticked / covered` as the skip effectiveness ratio.
+    pub fn cycles_ticked(&self) -> u64 {
+        self.ticked
+    }
+
+    /// Cycles the clock jumped over without simulating.
+    pub fn cycles_skipped(&self) -> u64 {
+        self.now - self.ticked
     }
 
     /// Switches currently on the active worklists (those holding buffered
@@ -387,6 +434,9 @@ impl Network {
         } else {
             None
         };
+        let mut monitor = opts
+            .stop_rel_ci
+            .map(|target| crate::metrics::StopMonitor::new(target, opts.warmup));
         let mut result: Result<(), SimError> = Ok(());
         loop {
             if opts.stop_when_drained
@@ -405,6 +455,14 @@ impl Network {
             if let Err(e) = self.step(workload, &ctx, pool.as_ref()) {
                 result = Err(e);
                 break;
+            }
+            if let Some(mon) = monitor.as_mut() {
+                if mon.poll(self.now, &self.stats) {
+                    break; // estimator converged: stop this point early
+                }
+            }
+            if opts.time_skip {
+                self.advance_to_next_event(&*workload, opts);
             }
         }
         drop(pool);
@@ -430,7 +488,62 @@ impl Network {
         );
         stats.finish_cycle = self.now;
         stats.window_cycles = self.now.min(self.window_end).saturating_sub(self.warmup);
+        if let Some(mon) = &monitor {
+            stats.achieved_rel_ci = mon.achieved_rel_ci();
+        }
         Ok(stats)
+    }
+
+    /// The adaptive time-advance fast path: called between cycles, jumps
+    /// the clock to the earliest cycle at which anything can happen.
+    ///
+    /// The jump is **exact**, not approximate (DESIGN.md, "Time-advance
+    /// and stopping invariants"): it only engages when every shard's
+    /// active worklist is empty — a switch buffering even one packet draws
+    /// allocator randomness each cycle, so such cycles must tick — and the
+    /// target is the minimum of the three remaining event sources:
+    ///
+    /// * the timing wheel ([`TimingWheel::next_event_at`]);
+    /// * the workload ([`Workload::next_injection_at`] — conservative by
+    ///   default, e.g. Bernoulli pins it to `now` inside its horizon
+    ///   because it consumes RNG every polled cycle);
+    /// * server NICs mid-serialization (`free_at` of servers with queued
+    ///   packets; an eligible server with a free NIC implies its switch
+    ///   FIFO was full, i.e. an active switch, so it never slips through).
+    ///
+    /// Skipped cycles therefore move no flit, deliver no packet and draw
+    /// no randomness in the fixed-tick engine either — `SimStats` are
+    /// bit-identical with the fast path on or off, for every shard count.
+    fn advance_to_next_event(&mut self, workload: &dyn Workload, opts: &RunOpts) {
+        if self.shards.iter().any(|sh| !sh.is_idle()) {
+            return;
+        }
+        // The run loop is about to break anyway; jumping to `max_cycles`
+        // here would misreport `finish_cycle`.
+        if opts.stop_when_drained
+            && workload.exhausted()
+            && self.live == 0
+            && self.pending_sources == 0
+        {
+            return;
+        }
+        let mut next = self.wheel.next_event_at();
+        if let Some(t) = workload.next_injection_at(self.now) {
+            next = Some(next.map_or(t, |n| n.min(t)));
+        }
+        for &srv in &self.active_servers {
+            let s = &self.servers[srv as usize];
+            if !s.queue.is_empty() {
+                let t = s.free_at.max(self.now);
+                next = Some(next.map_or(t, |n| n.min(t)));
+            }
+        }
+        // Nothing will ever happen again: fast-forward to the cycle limit
+        // (exactly where the fixed-tick loop would grind to).
+        let target = next.unwrap_or(opts.max_cycles).min(opts.max_cycles);
+        if target > self.now {
+            self.now = target;
+        }
     }
 
     /// One simulated cycle: serial event/injection phases, the (possibly
@@ -603,6 +716,7 @@ impl Network {
             });
         }
 
+        self.ticked += 1;
         self.now += 1;
         Ok(())
     }

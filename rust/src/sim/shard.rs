@@ -111,6 +111,17 @@ impl ShardState {
         }
     }
 
+    /// True when this shard's active worklist is empty — no switch it owns
+    /// buffers a packet (modulo lazily-removed stale entries, which make
+    /// this check conservative, never optimistic). The single gate shared
+    /// by the worker pool's per-cycle shard skip and the adaptive
+    /// time-advance fast path in `sim::Network`: a non-idle shard draws
+    /// per-switch randomness every cycle, so its cycles must tick.
+    #[inline]
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty()
+    }
+
     /// Put a switch (global id; must belong to this shard) on the active
     /// worklist. Idempotent — the single point of truth for the
     /// worklist/flag invariant, shared by the arrival and injection paths.
@@ -397,7 +408,7 @@ impl WorkerPool {
     pub fn run_cycle(&self, shards: &mut [ShardState], now: u64) {
         let mut outstanding = 0;
         for (i, slot) in shards.iter_mut().enumerate() {
-            if slot.active.is_empty() {
+            if slot.is_idle() {
                 // What compute() would have left behind for an idle shard.
                 slot.progress = false;
                 continue;

@@ -37,6 +37,13 @@ pub struct TimingWheel<T> {
     far: Vec<Vec<(u64, T)>>,
     overflow: Vec<(u64, T)>,
     len: usize,
+    /// Highest epoch whose far slot has been cascaded into the near wheel.
+    /// Tracked explicitly (rather than inferred from `now % NEAR == 0`) so
+    /// `pop_due` may be driven with forward *jumps*: the adaptive
+    /// time-advance fast path skips straight to the next event cycle, and
+    /// every epoch boundary crossed by the jump is cascaded on arrival in
+    /// the exact order cycle-by-cycle driving would have.
+    epoch: u64,
 }
 
 impl<T> Default for TimingWheel<T> {
@@ -52,6 +59,7 @@ impl<T> TimingWheel<T> {
             far: (0..NEAR).map(|_| Vec::new()).collect(),
             overflow: Vec::new(),
             len: 0,
+            epoch: 0,
         }
     }
 
@@ -82,11 +90,53 @@ impl<T> TimingWheel<T> {
         }
     }
 
-    /// Pop every event due at exactly `now` into `out`. Must be called once
-    /// per cycle with monotonically non-decreasing `now`.
+    /// Earliest cycle with a scheduled event, or `None` when empty.
+    ///
+    /// A linear scan over every stored event. This is deliberately simple:
+    /// the adaptive time-advance fast path only queries it when the whole
+    /// network is quiescent, i.e. when few events are pending — and its
+    /// cost is paid *instead of* ticking every skipped cycle, not on top.
+    /// `rust/src/sim/wheel.rs` tests pin agreement with a naive shadow
+    /// scheduler across random schedules spanning all three wheel levels.
+    pub fn next_event_at(&self) -> Option<u64> {
+        if self.len == 0 {
+            return None;
+        }
+        let mut best: Option<u64> = None;
+        let mut fold = |when: u64| {
+            best = Some(match best {
+                Some(b) => b.min(when),
+                None => when,
+            });
+        };
+        for slot in &self.near {
+            for (when, _) in slot.iter() {
+                fold(*when);
+            }
+        }
+        for slot in &self.far {
+            for (when, _) in slot.iter() {
+                fold(*when);
+            }
+        }
+        for (when, _) in self.overflow.iter() {
+            fold(*when);
+        }
+        best
+    }
+
+    /// Pop every event due at exactly `now` into `out`. Must be called with
+    /// monotonically non-decreasing `now`. `now` may jump forward by more
+    /// than one cycle **provided no event is scheduled strictly inside the
+    /// skipped interval** (jump to at most [`TimingWheel::next_event_at`]):
+    /// every epoch boundary the jump crosses is cascaded on arrival, in
+    /// order, so slot contents — and therefore same-cycle pop order — are
+    /// bit-identical to cycle-by-cycle driving.
     pub fn pop_due(&mut self, now: u64, out: &mut Vec<T>) {
-        if now % NEAR as u64 == 0 {
-            self.cascade(now);
+        let e = now / NEAR as u64;
+        while self.epoch < e {
+            self.epoch += 1;
+            self.cascade(self.epoch * NEAR as u64);
         }
         let slot = (now % NEAR as u64) as usize;
         for (when, ev) in self.near[slot].drain(..) {
@@ -206,5 +256,101 @@ mod tests {
         w.schedule(3, 10, 3);
         let got = drain(&mut w, 0, 16);
         assert_eq!(got, vec![(10, 1), (10, 2), (10, 3)]);
+    }
+
+    #[test]
+    fn next_event_at_sees_all_three_levels() {
+        let mut w: TimingWheel<u32> = TimingWheel::new();
+        assert_eq!(w.next_event_at(), None);
+        w.schedule(0, 10_000, 3); // overflow
+        assert_eq!(w.next_event_at(), Some(10_000));
+        w.schedule(0, 200, 2); // far
+        assert_eq!(w.next_event_at(), Some(200));
+        w.schedule(0, 5, 1); // near
+        assert_eq!(w.next_event_at(), Some(5));
+        let mut out = Vec::new();
+        w.pop_due(5, &mut out); // jump straight to the nearest event
+        assert_eq!(out, vec![1]);
+        assert_eq!(w.next_event_at(), Some(200));
+    }
+
+    #[test]
+    fn jumping_to_next_event_fires_every_level_exactly_once() {
+        // Jumps land mid-epoch and cross many epoch boundaries at once —
+        // including the far tier (100) and overflow tier (5000) that the
+        // latency-5000 regression exercises cycle-by-cycle.
+        let mut w = TimingWheel::new();
+        for &when in &[3u64, 100, 4095, 5000, 123_456] {
+            w.schedule(0, when, when as u32);
+        }
+        let mut got = Vec::new();
+        let mut now = 0;
+        let mut out = Vec::new();
+        while let Some(t) = w.next_event_at() {
+            assert!(t > now);
+            now = t;
+            out.clear();
+            w.pop_due(now, &mut out);
+            for &ev in &out {
+                got.push((now, ev));
+            }
+            assert!(!got.is_empty(), "jump target must hold a due event");
+        }
+        let want: Vec<(u64, u32)> = [3u64, 100, 4095, 5000, 123_456]
+            .iter()
+            .map(|&x| (x, x as u32))
+            .collect();
+        assert_eq!(got, want);
+        assert!(w.is_empty());
+    }
+
+    /// Property (satellite of the adaptive time-advance PR): against a
+    /// naive shadow scheduler (a flat `Vec` scanned linearly),
+    /// `next_event_at` agrees at every step and pops deliver exactly the
+    /// shadow's due set, across random schedules spanning all wheel levels
+    /// (horizons up to ~6000 cycles cover near, far, and overflow — the
+    /// latency-5000 regression territory) and a random mix of single-cycle
+    /// ticks and exact next-event jumps.
+    #[test]
+    fn next_event_at_matches_naive_scan() {
+        crate::testing::check("wheel vs naive scheduler", 48, |rng| {
+            let mut w: TimingWheel<u32> = TimingWheel::new();
+            let mut shadow: Vec<(u64, u32)> = Vec::new();
+            let mut now = 0u64;
+            let mut id = 0u32;
+            let mut out = Vec::new();
+            for _ in 0..300 {
+                for _ in 0..rng.gen_range(4) {
+                    let dt = 1 + rng.gen_range(6_000) as u64;
+                    w.schedule(now, now + dt, id);
+                    shadow.push((now + dt, id));
+                    id += 1;
+                }
+                // The naive linear scan the wheel must agree with.
+                let naive = shadow.iter().map(|&(t, _)| t).min();
+                assert_eq!(w.next_event_at(), naive, "at cycle {now}");
+                assert_eq!(w.len(), shadow.len());
+                // Advance: a plain tick, or an exact jump to the next event
+                // (the adaptive fast-path contract: never skip *past* one).
+                now = if rng.gen_bool(0.5) {
+                    naive.map_or(now + 1, |t| t.max(now + 1))
+                } else {
+                    now + 1
+                };
+                out.clear();
+                w.pop_due(now, &mut out);
+                let mut want: Vec<u32> = shadow
+                    .iter()
+                    .filter(|&&(t, _)| t == now)
+                    .map(|&(_, i)| i)
+                    .collect();
+                shadow.retain(|&(t, _)| t != now);
+                debug_assert!(shadow.iter().all(|&(t, _)| t > now));
+                let mut got = out.clone();
+                got.sort_unstable();
+                want.sort_unstable();
+                assert_eq!(got, want, "due set mismatch at cycle {now}");
+            }
+        });
     }
 }

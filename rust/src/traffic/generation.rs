@@ -68,6 +68,16 @@ impl Workload for FixedWorkload {
     fn exhausted(&self) -> bool {
         self.offered
     }
+
+    /// The whole burst is offered at the first poll; afterwards polling is
+    /// a pure no-op, so the drain tail may be skipped exactly.
+    fn next_injection_at(&self, now: u64) -> Option<u64> {
+        if self.offered {
+            None
+        } else {
+            Some(now)
+        }
+    }
 }
 
 /// Bernoulli generation: each server offers a packet with probability
@@ -121,6 +131,17 @@ impl Workload for BernoulliWorkload {
 
     fn exhausted(&self) -> bool {
         false // run is horizon-bound, not drain-bound
+    }
+
+    /// Bernoulli draws per-server RNG **every** cycle inside the horizon —
+    /// skipping one would shift the stream and change results — so the
+    /// fast path is only offered the post-horizon drain.
+    fn next_injection_at(&self, now: u64) -> Option<u64> {
+        if now < self.horizon {
+            Some(now)
+        } else {
+            None
+        }
     }
 }
 

@@ -198,6 +198,17 @@ impl Workload for KernelWorkload {
     fn exhausted(&self) -> bool {
         self.started && self.all_ranks_done() && self.pending.is_empty()
     }
+
+    /// Kernel polls only drain `pending` (no RNG): with nothing pending the
+    /// workload is quiescent until a delivery re-arms it — which is exactly
+    /// the synchronization-stall lull the adaptive time advance jumps over.
+    fn next_injection_at(&self, now: u64) -> Option<u64> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(now)
+        }
+    }
 }
 
 #[cfg(test)]

@@ -23,4 +23,18 @@ pub trait Workload: Send {
 
     /// True when no more packets will ever be offered.
     fn exhausted(&self) -> bool;
+
+    /// Earliest cycle `>= now` at which [`Workload::poll`] might offer a
+    /// packet *or consume RNG state* — the contract the adaptive
+    /// time-advance fast path relies on to jump over dead cycles exactly
+    /// (see DESIGN.md, "Time-advance and stopping invariants"). `None`
+    /// means polling is a no-op forever after (barring new deliveries,
+    /// which arrive through timing-wheel events and re-gate the skip).
+    ///
+    /// The default is maximally conservative — `Some(now)`, i.e. "poll me
+    /// every cycle" — so custom workloads are never skipped incorrectly;
+    /// they merely forgo the fast path until they implement this.
+    fn next_injection_at(&self, now: u64) -> Option<u64> {
+        Some(now)
+    }
 }

@@ -333,6 +333,247 @@ fn shards_clamp_to_switch_count() {
     assert_eq!(base, run_sharded(&spec));
 }
 
+// ---------------------------------------------------------------------------
+// Adaptive time advance: the exactness contract.
+//
+// `RunOpts::time_skip` jumps the clock over cycles in which no switch
+// buffers a packet, no server can inject, and the workload is quiescent.
+// The contract (DESIGN.md, "Time-advance and stopping invariants") is that
+// the jump is *unobservable*: skipping on or off, at any shard count,
+// produces a bit-identical `SimStats` — pinned here for all twelve routers
+// of the evaluation (7 Full-mesh + 5 2D-HyperX) on adversarial, uniform
+// and application-kernel traffic, two seeds each, shards ∈ {1, 4}.
+// ---------------------------------------------------------------------------
+
+/// Run a spec honoring `spec.shards` exactly, with an explicit time-skip
+/// mode (the free-function build path applies no thread-budget clamp).
+fn run_adaptive(spec: &ExperimentSpec, time_skip: bool) -> SimStats {
+    let mut net = engine::build_network(spec).expect("build");
+    let mut wl = engine::build_workload(spec, &net.topo).expect("workload");
+    let mut opts = engine::run_opts(spec);
+    opts.time_skip = time_skip;
+    net.run(wl.as_mut(), &opts).unwrap_or_else(|e| {
+        panic!(
+            "{} (skip={time_skip}, shards={}) failed: {e}",
+            spec.name, spec.shards
+        )
+    })
+}
+
+/// Fixed-tick serial run vs {skip on, off} × {1, 4} shards: all equal.
+fn assert_time_advance_invariant(mut spec: ExperimentSpec) {
+    spec.shards = 1;
+    let base = run_adaptive(&spec, false);
+    assert!(base.delivered_packets > 0, "{}: nothing delivered", spec.name);
+    for (time_skip, shards) in [(true, 1usize), (false, 4), (true, 4)] {
+        spec.shards = shards;
+        let got = run_adaptive(&spec, time_skip);
+        assert_eq!(
+            base, got,
+            "{}: skip={time_skip}/shards={shards} diverged from fixed-tick serial",
+            spec.name
+        );
+    }
+}
+
+/// Adversarial + uniform fixed bursts and an allreduce kernel for one
+/// (topology, routing, seed) triple.
+fn time_advance_specs(
+    topology: &str,
+    routing: &str,
+    adversarial: &str,
+    seed: u64,
+) -> Vec<ExperimentSpec> {
+    let base = ExperimentSpec {
+        topology: topology.into(),
+        servers_per_switch: 2,
+        routing: routing.into(),
+        seed,
+        max_cycles: 5_000_000,
+        ..Default::default()
+    };
+    let mut specs = Vec::new();
+    for pattern in [adversarial, "uniform"] {
+        specs.push(ExperimentSpec {
+            name: format!("tadv-{topology}-{routing}-{pattern}-s{seed}"),
+            traffic: TrafficSpec::Fixed {
+                pattern: pattern.into(),
+                packets_per_server: 4,
+            },
+            ..base.clone()
+        });
+    }
+    specs.push(ExperimentSpec {
+        name: format!("tadv-{topology}-{routing}-allreduce-s{seed}"),
+        traffic: TrafficSpec::Kernel {
+            kernel: "allreduce".into(),
+            iters: 1,
+            pkts_per_msg: 1,
+            mapping: tera_net::traffic::kernels::Mapping::Linear,
+        },
+        ..base
+    });
+    specs
+}
+
+/// All seven Full-mesh routers on FM64.
+#[test]
+fn time_advance_bit_identical_fm64_every_router() {
+    let routers = [
+        "min", "valiant", "ugal", "omniwar", "brinr", "srinr", "tera-hx2",
+    ];
+    for routing in routers {
+        for seed in [3u64, 11] {
+            for spec in time_advance_specs("fm64", routing, "complement", seed) {
+                assert_time_advance_invariant(spec);
+            }
+        }
+    }
+}
+
+/// All five 2D-HyperX routers on HX[8x8].
+#[test]
+fn time_advance_bit_identical_hx8x8_every_router() {
+    let routers = ["min", "omniwar-hx", "dimwar", "dor-tera", "o1turn-tera"];
+    for routing in routers {
+        for seed in [5u64, 9] {
+            for spec in time_advance_specs("hx8x8", routing, "shift", seed) {
+                assert_time_advance_invariant(spec);
+            }
+        }
+    }
+}
+
+/// Long-wire drain run returning `(stats, cycles_ticked)` — proves the
+/// fast path actually engages (a never-skipping implementation would pass
+/// the equality tests vacuously).
+fn latency_run(link_latency: u64, time_skip: bool) -> (SimStats, u64) {
+    let topo = Arc::new(full_mesh(8));
+    let spc = 2;
+    let router = routing_by_name("min", topo.clone(), 54).unwrap();
+    let cfg = SimConfig {
+        servers_per_switch: spc,
+        seed: 42,
+        link_latency,
+        watchdog_cycles: 20 * link_latency.max(1_000),
+        ..SimConfig::default()
+    };
+    let mut rng = Rng::derive(42, 99);
+    let pat = TrafficPattern::by_name("complement", topo.n, spc, &mut rng).unwrap();
+    let mut wl = FixedWorkload::new(&pat, topo.n, spc, 20, &mut rng);
+    let mut net = Network::new(topo, router, cfg);
+    let stats = net
+        .run(
+            &mut wl,
+            &RunOpts {
+                max_cycles: 10_000_000,
+                time_skip,
+                ..RunOpts::default()
+            },
+        )
+        .expect("burst must drain");
+    (stats, net.cycles_ticked())
+}
+
+#[test]
+fn time_advance_skips_dead_cycles_and_stays_exact() {
+    for latency in [100u64, 5_000] {
+        let (fixed, fixed_ticked) = latency_run(latency, false);
+        let (skip, skip_ticked) = latency_run(latency, true);
+        assert_eq!(fixed, skip, "link_latency={latency}: skip changed results");
+        assert_eq!(
+            fixed_ticked, fixed.finish_cycle,
+            "fixed-tick must simulate every cycle"
+        );
+        assert!(
+            skip_ticked < fixed_ticked,
+            "link_latency={latency}: the fast path never engaged"
+        );
+        if latency >= 5_000 {
+            // In-flight lulls dominate: most covered cycles must be skipped.
+            assert!(
+                (skip_ticked as f64) < 0.5 * skip.finish_cycle as f64,
+                "link_latency={latency}: ticked {skip_ticked} of {} covered",
+                skip.finish_cycle
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Statistical early termination (`--stop-rel-ci`).
+// ---------------------------------------------------------------------------
+
+fn bernoulli_ci_spec(horizon: u64, seed: u64) -> ExperimentSpec {
+    ExperimentSpec {
+        name: "ci-stop".into(),
+        topology: "fm16".into(),
+        servers_per_switch: 8,
+        routing: "tera-hx2".into(),
+        traffic: TrafficSpec::Bernoulli {
+            pattern: "uniform".into(),
+            load: 0.5,
+            horizon,
+        },
+        warmup: 2_000,
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn stop_rel_ci_terminates_open_loop_runs_early() {
+    let spec = bernoulli_ci_spec(40_000, 3);
+    let fixed = Engine::single_threaded().run_one(&spec).unwrap();
+    assert_eq!(fixed.finish_cycle, 40_000);
+    assert!(fixed.achieved_rel_ci.is_none(), "fixed budget reports no CI");
+    let mut early_spec = spec.clone();
+    early_spec.stop_rel_ci = Some(0.10);
+    let early = Engine::single_threaded().run_one(&early_spec).unwrap();
+    assert!(
+        early.finish_cycle < fixed.finish_cycle,
+        "estimator never converged ({} cycles)",
+        early.finish_cycle
+    );
+    let achieved = early
+        .achieved_rel_ci
+        .expect("early-stopped run must report its CI");
+    assert!(achieved <= 0.10, "achieved {achieved} > target");
+    // The truncated estimate must agree with the full-budget measurement.
+    let (full, est) = (fixed.accepted_throughput(), early.accepted_throughput());
+    assert!(
+        (full - est).abs() / full < 0.10,
+        "early estimate {est} drifted from {full}"
+    );
+    // Determinism: the stopping point is a pure function of the spec.
+    let again = Engine::single_threaded().run_one(&early_spec).unwrap();
+    assert_eq!(early, again);
+}
+
+#[test]
+fn run_replicas_ci_prunes_the_replica_budget() {
+    let spec = bernoulli_ci_spec(8_000, 7);
+    let engine = Engine::with_threads(2);
+    let summary = engine
+        .run_replicas_ci(&spec, 12, 0.05)
+        .expect("replicas must run");
+    assert!(summary.seeds.len() >= 3, "needs MIN_CI_REPLICAS before stopping");
+    assert!(
+        summary.seeds.len() < 12,
+        "uniform Bernoulli replicas vary little; the budget should prune"
+    );
+    let rel = summary.throughput_rel_ci().expect("CI defined");
+    assert!(rel <= 0.05, "stopped at rel CI {rel}");
+    // Pruning point is deterministic *and* thread-independent: convergence
+    // is decided on seed-order prefixes, so wave width (an engine
+    // wall-clock knob) cannot change the reported replica set.
+    let again = engine.run_replicas_ci(&spec, 12, 0.05).unwrap();
+    assert_eq!(summary.seeds, again.seeds);
+    let wide = Engine::with_threads(5).run_replicas_ci(&spec, 12, 0.05).unwrap();
+    assert_eq!(summary.seeds, wide.seeds);
+    assert_eq!(summary.stats, wide.stats);
+}
+
 /// The engine's thread budget caps shard workers without changing results:
 /// a narrow engine (1 thread → serial core) and a wide one (shards
 /// granted) agree bit-for-bit on a whole batch.

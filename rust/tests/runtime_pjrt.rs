@@ -99,6 +99,7 @@ fn scorer_artifact_replays_live_simulator_occupancies() {
             warmup: 0,
             window: None,
             stop_when_drained: false,
+            ..Default::default()
         },
     )
     .unwrap();
