@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: diff fresh BENCH_*.json against a committed baseline.
+
+Usage:
+    python3 ci/check_bench_regression.py --baseline ci/bench_baseline.json \
+        rust/BENCH_cycles.json rust/BENCH_flows.json [--update]
+
+Aggregates the fresh files into per-section wall-time totals
+(BENCH_cycles.json rows carry `section`/`wall_secs`; BENCH_flows.json rows
+are folded into a `flows-json` section), renders a delta table — appended
+to $GITHUB_STEP_SUMMARY when set, always printed to stdout — and exits
+nonzero if any section's wall time regressed more than THRESHOLD (25%)
+over its baseline value.
+
+Baseline sections with value `null` are *uncalibrated*: they are reported
+but never gate. This is how a new section (or a baseline authored on a
+machine that cannot run the benches) enters the file without blocking CI;
+refresh real numbers with `--update` from a representative runner (e.g.
+download the `bench-json` artifact of a green main build, run this script
+on it with --update, and commit the result).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+THRESHOLD = 0.25  # fail on >25% wall-time regression in any section
+
+
+def load_sections(paths):
+    """Fold fresh bench JSONs into {section: total_wall_secs}."""
+    sections = {}
+    for path in paths:
+        if not os.path.exists(path):
+            # Bench binaries run with the package root as cwd; tolerate the
+            # workspace-root spelling of the same artifact.
+            alt = os.path.basename(path)
+            if os.path.exists(alt):
+                path = alt
+            else:
+                print(f"warning: {path} not found, skipping", file=sys.stderr)
+                continue
+        with open(path) as f:
+            data = json.load(f)
+        for row in data.get("results", []):
+            # BENCH_flows.json rows carry scenario/routing but no section;
+            # fold them into one "flows" section. (perf_hotpath deliberately
+            # does NOT also record flow walls into BENCH_cycles.json, so the
+            # number is gated exactly once.)
+            section = row.get("section", "flows")
+            wall = float(row.get("wall_secs", 0.0))
+            sections[section] = sections.get(section, 0.0) + wall
+    return sections
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="ci/bench_baseline.json")
+    ap.add_argument("fresh", nargs="+", help="BENCH_*.json files to check")
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="write the fresh totals into the baseline file and exit",
+    )
+    args = ap.parse_args()
+
+    fresh = load_sections(args.fresh)
+    if not fresh:
+        print("error: no fresh bench sections found", file=sys.stderr)
+        return 1
+
+    if args.update:
+        # Merge into the existing baseline rather than replacing it: a
+        # partial refresh (one BENCH file) must not drop the other file's
+        # sections from gating coverage.
+        merged = {}
+        if os.path.exists(args.baseline):
+            with open(args.baseline) as f:
+                merged = json.load(f).get("sections", {})
+        merged.update({k: round(v, 6) for k, v in fresh.items()})
+        body = {
+            "comment": "per-section wall-time baseline for ci/check_bench_regression.py; "
+            "refresh with --update on a representative runner",
+            "threshold": THRESHOLD,
+            "sections": {k: merged[k] for k in sorted(merged)},
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(body, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.baseline} ({len(merged)} sections, {len(fresh)} refreshed)")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f).get("sections", {})
+
+    lines = [
+        "### Perf-regression gate (threshold: "
+        f"{THRESHOLD:.0%} wall-time per section)",
+        "",
+        "| section | baseline (s) | fresh (s) | delta | status |",
+        "|---|---|---|---|---|",
+    ]
+    failures = []
+    for section in sorted(set(baseline) | set(fresh)):
+        base = baseline.get(section)
+        cur = fresh.get(section)
+        if cur is None:
+            if base is None:
+                lines.append(f"| {section} | — | — | — | uncalibrated, missing from fresh run |")
+            else:
+                # A calibrated section that vanished from the fresh run is a
+                # coverage hole, not a pass: a renamed/broken bench section
+                # must not let unbounded regressions merge green.
+                lines.append(f"| {section} | {base:.3f} | — | — | **MISSING** |")
+                failures.append((section, base, float("nan"), float("nan")))
+            continue
+        if base is None:
+            status = "uncalibrated (recorded only)" if section in baseline else "new section"
+            lines.append(f"| {section} | — | {cur:.3f} | — | {status} |")
+            continue
+        delta = (cur - base) / base if base > 0 else 0.0
+        if delta > THRESHOLD:
+            status = "**REGRESSED**"
+            failures.append((section, base, cur, delta))
+        else:
+            status = "ok"
+        lines.append(
+            f"| {section} | {base:.3f} | {cur:.3f} | {delta:+.1%} | {status} |"
+        )
+    table = "\n".join(lines) + "\n"
+
+    print(table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(table + "\n")
+
+    if failures:
+        for section, base, cur, delta in failures:
+            if cur != cur:  # NaN: calibrated section absent from fresh run
+                print(
+                    f"error: calibrated section '{section}' (baseline {base:.3f}s) "
+                    "is missing from the fresh bench output",
+                    file=sys.stderr,
+                )
+            else:
+                print(
+                    f"error: section '{section}' regressed {delta:.1%} "
+                    f"({base:.3f}s -> {cur:.3f}s)",
+                    file=sys.stderr,
+                )
+        return 1
+    print("perf gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,10 @@
 //!   * **statistical early termination** on an FM300 Bernoulli point —
 //!     cycles and wall-clock saved at `stop_rel_ci = 0.05` vs the fixed
 //!     horizon, with the achieved CI half-width (`BENCH_adaptive.json`);
+//!   * **message/flow workloads** (incast, hotspot, closed-loop,
+//!     multi-tenant on fm64) — end-to-end FCT-pipeline wall time and
+//!     messages/s per scenario × routing, with the completion invariant
+//!     asserted (`BENCH_flows.json`);
 //!   * PJRT batched-scorer latency (the artifact decision path, `pjrt`
 //!     builds only).
 //!
@@ -47,6 +51,7 @@ use tera_net::sim::packet::{Packet, NO_SWITCH};
 use tera_net::sim::{Network, RunOpts, SimConfig, SwitchView};
 use tera_net::topology::TopoKind;
 use tera_net::traffic::kernels::{allreduce_rabenseifner, KernelWorkload, Mapping};
+use tera_net::traffic::FlowSpec;
 use tera_net::util::{Rng, Timer};
 
 /// `PERF_QUICK=1` (the CI artifact run) shrinks horizons and repetition
@@ -240,6 +245,7 @@ fn route_throughput(host: &str, routing: &str, iters: usize) -> (f64, u64) {
         gen_cycle: 0,
         inject_cycle: 0,
         flits: 16,
+        msg: tera_net::sim::NO_MESSAGE,
     };
     let is_hx = matches!(topo.kind, TopoKind::HyperX { .. });
     let mut buf = CandidateBuf::new();
@@ -326,6 +332,54 @@ fn lull_kernel_run(
         delivered += stats.delivered_flits;
     }
     (wall, ticked, covered, delivered)
+}
+
+/// One message/flow scenario point on fm64 through the engine's free build
+/// path (drain-bound; FCT recorded). Returns `(wall_secs, stats)`.
+fn flow_point(scenario: &str, routing: &str) -> (f64, SimStats) {
+    let d = FlowSpec::default();
+    let fs = match scenario {
+        "incast" => FlowSpec {
+            scenario: "incast".into(),
+            fan_in: 32,
+            msg_pkts: if quick() { 4 } else { 16 },
+            ..d
+        },
+        "hotspot" => FlowSpec {
+            scenario: "hotspot".into(),
+            flows: if quick() { 128 } else { 1024 },
+            msg_pkts: 4,
+            ..d
+        },
+        "closedloop" => FlowSpec {
+            scenario: "closedloop".into(),
+            pairs: 16,
+            rounds: if quick() { 4 } else { 16 },
+            ..d
+        },
+        "multitenant" => FlowSpec {
+            scenario: "multitenant".into(),
+            horizon: if quick() { 2_000 } else { 8_000 },
+            ..d
+        },
+        other => panic!("unknown flow bench scenario {other}"),
+    };
+    let spec = ExperimentSpec {
+        name: format!("perf-flow-{scenario}-{routing}"),
+        topology: "fm64".into(),
+        servers_per_switch: 8,
+        routing: routing.into(),
+        traffic: TrafficSpec::Flows(fs),
+        seed: 7,
+        max_cycles: 80_000_000,
+        ..Default::default()
+    };
+    let mut net = tera_net::engine::build_network(&spec).expect("build");
+    let mut wl = spec.build_workload(&net.topo).expect("workload");
+    let opts = tera_net::engine::run_opts(&spec);
+    let t = Timer::start();
+    let stats = net.run(wl.as_mut(), &opts).expect("flow run");
+    (t.elapsed_secs(), stats)
 }
 
 /// One FM300 Bernoulli sweep point, fixed budget (`stop_rel_ci = None`)
@@ -591,6 +645,64 @@ fn main() {
     match std::fs::write("BENCH_adaptive.json", &adaptive_json) {
         Ok(()) => println!("\nwrote BENCH_adaptive.json (adaptive determinism: VERIFIED)"),
         Err(e) => println!("\ncould not write BENCH_adaptive.json: {e}"),
+    }
+
+    // ---- Message/flow workloads: the FCT pipeline end-to-end. ----
+    // Every scenario of the flow layer (incast fan-in, hotspot skew,
+    // closed-loop request/response, multi-tenant mix) under the paper's
+    // VC-less escape router and a link-ordering baseline. Asserts the
+    // completion invariant (a drained run completes every offered message)
+    // and emits BENCH_flows.json as the flow-path perf-trajectory artifact
+    // the CI regression gate diffs.
+    println!("\n== message/flow workloads (fm64 × 8 srv/sw) ==\n");
+    println!(
+        "{:<14} {:<10} {:>7} {:>9} {:>9} {:>9} {:>12}",
+        "scenario", "routing", "msgs", "fct p50", "fct p99", "slow p99", "msgs/s"
+    );
+    let mut fjson = String::from(
+        "{\n  \"bench\": \"flow-workloads\",\n  \"topology\": \"fm64\",\n  \"results\": [\n",
+    );
+    let mut ffirst = true;
+    for scenario in ["incast", "hotspot", "closedloop", "multitenant"] {
+        for routing in ["tera-hx2", "srinr"] {
+            let (wall, stats) = flow_point(scenario, routing);
+            let f = stats.fct.as_ref().expect("flow run reports FCT");
+            assert!(f.completed > 0, "{scenario}/{routing}: no messages completed");
+            assert_eq!(
+                f.completed, f.offered,
+                "{scenario}/{routing}: drained run must complete every message"
+            );
+            let mps = f.completed as f64 / wall.max(1e-9);
+            println!(
+                "{scenario:<14} {routing:<10} {:>7} {:>9} {:>9} {:>9.2} {mps:>12.0}",
+                f.completed,
+                f.fct_percentile(50.0),
+                f.fct_percentile(99.0),
+                f.slowdown_percentile(99.0),
+            );
+            // Flow walls land ONLY in BENCH_flows.json (folded into the
+            // "flows" section by the CI gate) — recording them into
+            // BENCH_cycles.json too would gate the same number twice.
+            if !ffirst {
+                fjson.push_str(",\n");
+            }
+            ffirst = false;
+            fjson.push_str(&format!(
+                "    {{\"scenario\": \"{scenario}\", \"routing\": \"{routing}\", \
+                 \"wall_secs\": {wall:.6}, \"messages\": {}, \"fct_p50\": {}, \
+                 \"fct_p99\": {}, \"slowdown_p99\": {:.3}, \
+                 \"messages_per_sec\": {mps:.0}}}",
+                f.completed,
+                f.fct_percentile(50.0),
+                f.fct_percentile(99.0),
+                f.slowdown_percentile(99.0),
+            ));
+        }
+    }
+    fjson.push_str("\n  ]\n}\n");
+    match std::fs::write("BENCH_flows.json", &fjson) {
+        Ok(()) => println!("\nwrote BENCH_flows.json (message completion: VERIFIED)"),
+        Err(e) => println!("\ncould not write BENCH_flows.json: {e}"),
     }
 
     bench.write();

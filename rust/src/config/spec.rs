@@ -11,7 +11,7 @@ use crate::routing::{self, HxTables, Router, RoutingTables};
 use crate::sim::{Network, SimError};
 use crate::topology::{full_mesh, hyperx, PhysTopology};
 use crate::traffic::kernels::Mapping;
-use crate::traffic::Workload;
+use crate::traffic::{FlowSpec, Workload};
 
 /// How traffic is generated (§5).
 #[derive(Clone, Debug)]
@@ -35,6 +35,9 @@ pub enum TrafficSpec {
         pkts_per_msg: u16,
         mapping: Mapping,
     },
+    /// Message/flow scenario (incast, hotspot, closed-loop, multi-tenant),
+    /// run to drain with FCT metrics (`traffic::flows`, `metrics::fct`).
+    Flows(FlowSpec),
 }
 
 /// A full experiment description.
@@ -275,6 +278,69 @@ impl ExperimentSpec {
                     _ => Mapping::Linear,
                 },
             },
+            "flows" => {
+                let mut fs = FlowSpec::default();
+                // `workload` names the scenario (matching the CLI's
+                // `--workload incast`); `scenario` is accepted as an alias.
+                if let Some(s) = get_str("workload").or_else(|| get_str("scenario")) {
+                    fs.scenario = s;
+                }
+                let get_f64 = |k: &str| v.get(k).and_then(Value::as_float);
+                if let Some(i) = get_int("fan_in") {
+                    fs.fan_in = i as usize;
+                }
+                if let Some(i) = get_int("msg_pkts") {
+                    fs.msg_pkts = i as u32;
+                }
+                if let Some(i) = get_int("waves") {
+                    fs.waves = i as usize;
+                }
+                if let Some(i) = get_int("spacing") {
+                    fs.spacing = i as u64;
+                }
+                if let Some(i) = get_int("flows") {
+                    fs.flows = i as usize;
+                }
+                if let Some(f) = get_f64("hot_frac") {
+                    anyhow::ensure!((0.0..=1.0).contains(&f), "hot_frac must be in [0, 1]");
+                    fs.hot_frac = f;
+                }
+                if let Some(f) = get_f64("rate") {
+                    anyhow::ensure!(f > 0.0, "flow arrival rate must be positive");
+                    fs.rate = f;
+                }
+                if let Some(i) = get_int("pairs") {
+                    fs.pairs = i as usize;
+                }
+                if let Some(i) = get_int("req_pkts") {
+                    fs.req_pkts = i as u32;
+                }
+                if let Some(i) = get_int("resp_pkts") {
+                    fs.resp_pkts = i as u32;
+                }
+                if let Some(i) = get_int("think") {
+                    fs.think = i as u64;
+                }
+                if let Some(i) = get_int("rounds") {
+                    fs.rounds = i as usize;
+                }
+                if let Some(s) = get_str("bg_pattern") {
+                    fs.bg_pattern = s;
+                }
+                if let Some(f) = get_f64("bg_load") {
+                    fs.bg_load = f;
+                }
+                if let Some(i) = get_int("flow_horizon") {
+                    fs.horizon = i as u64;
+                }
+                if let Some(i) = get_int("burst_flows") {
+                    fs.burst_flows = i as usize;
+                }
+                if let Some(i) = get_int("burst_pkts") {
+                    fs.burst_pkts = i as u32;
+                }
+                TrafficSpec::Flows(fs)
+            }
             other => anyhow::bail!("unknown traffic mode '{other}'"),
         };
         Ok(spec)
@@ -402,6 +468,29 @@ mod tests {
         assert_eq!(spec.stop_rel_ci, Some(0.05));
         // A zero/negative CI target is meaningless and must fail loudly.
         let bad = crate::config::parse("stop_rel_ci = 0.0\n").unwrap();
+        assert!(ExperimentSpec::from_value(&bad).is_err());
+    }
+
+    #[test]
+    fn flow_spec_from_config_value() {
+        let cfg = crate::config::parse(
+            "topology = \"fm64\"\nmode = \"flows\"\nworkload = \"hotspot\"\nflows = 99\nhot_frac = 0.8\nmsg_pkts = 4\n",
+        )
+        .unwrap();
+        let spec = ExperimentSpec::from_value(&cfg).unwrap();
+        match &spec.traffic {
+            TrafficSpec::Flows(fs) => {
+                assert_eq!(fs.scenario, "hotspot");
+                assert_eq!(fs.flows, 99);
+                assert!((fs.hot_frac - 0.8).abs() < 1e-12);
+                assert_eq!(fs.msg_pkts, 4);
+                // Untouched knobs keep their defaults.
+                assert_eq!(fs.fan_in, FlowSpec::default().fan_in);
+            }
+            _ => panic!("wrong mode"),
+        }
+        // A skew fraction outside [0, 1] can never be sampled: fail loudly.
+        let bad = crate::config::parse("mode = \"flows\"\nhot_frac = 1.5\n").unwrap();
         assert!(ExperimentSpec::from_value(&bad).is_err());
     }
 

@@ -16,6 +16,7 @@ use crate::engine::Engine;
 use crate::metrics::jain_index;
 use crate::service;
 use crate::traffic::kernels::Mapping;
+use crate::traffic::FlowSpec;
 
 /// Experiment scale.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -683,6 +684,109 @@ pub fn early_stop(scale: Scale, seed: u64) -> anyhow::Result<String> {
         ]);
     }
     write_csv("early_stop.csv", &t.to_csv())?;
+    Ok(t.render())
+}
+
+// ---------------------------------------------------------------------
+// Flow completion time — message workloads across the FM routers
+// ---------------------------------------------------------------------
+
+/// Compare every Full-mesh router of the evaluation under the two
+/// adversarial endpoint-congestion scenarios of the flow layer — incast
+/// (N→1 fan-in) and hotspot (skewed server popularity) — reporting
+/// messages completed, FCT p50/p99 and slowdown-vs-ideal p50/p99
+/// (`traffic::flows`, `metrics::fct`). This is the figure the ROADMAP's
+/// "heavy traffic" north star asks for: completion time of *messages*,
+/// not per-packet latency, is what a serving workload observes.
+pub fn fct(scale: Scale, seed: u64) -> anyhow::Result<String> {
+    let (topo, spc) = fm(scale);
+    let routings = [
+        "min", "valiant", "ugal", "omniwar", "brinr", "srinr", "tera-hx2", "tera-hx3",
+    ];
+    let (fan_in, msg_pkts, flows) = match scale {
+        Scale::Quick => (32usize, 4u32, 128usize),
+        Scale::Paper => (32, 16, 1024),
+    };
+    let scenarios = [
+        (
+            "incast",
+            FlowSpec {
+                scenario: "incast".into(),
+                fan_in,
+                msg_pkts,
+                ..FlowSpec::default()
+            },
+        ),
+        (
+            "hotspot",
+            FlowSpec {
+                scenario: "hotspot".into(),
+                flows,
+                msg_pkts,
+                hot_frac: 0.5,
+                ..FlowSpec::default()
+            },
+        ),
+    ];
+    let mut specs = Vec::new();
+    let mut labels = Vec::new();
+    for (name, fs) in &scenarios {
+        for r in routings {
+            labels.push((*name, r));
+            specs.push(ExperimentSpec {
+                name: format!("fct-{name}-{r}"),
+                topology: topo.clone(),
+                servers_per_switch: spc,
+                routing: r.into(),
+                traffic: TrafficSpec::Flows(fs.clone()),
+                seed,
+                max_cycles: 80_000_000,
+                ..Default::default()
+            });
+        }
+    }
+    let results = Engine::new().run_batch(specs);
+    let mut t = Table::new(
+        &format!(
+            "Flow completion time — incast {fan_in}→1 and hotspot ({topo}, \
+             {spc} srv/sw, {msg_pkts}-pkt messages)"
+        ),
+        &[
+            "scenario", "routing", "msgs", "fct p50", "fct p99", "slow p50", "slow p99",
+            "cycles",
+        ],
+    );
+    for ((scen, r), res) in labels.iter().zip(&results) {
+        match &res.stats {
+            Ok(s) => {
+                let f = s
+                    .fct
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("flow run without FCT stats"))?;
+                t.row(vec![
+                    scen.to_string(),
+                    r.to_string(),
+                    f.completed.to_string(),
+                    f.fct_percentile(50.0).to_string(),
+                    f.fct_percentile(99.0).to_string(),
+                    format!("{:.2}", f.slowdown_percentile(50.0)),
+                    format!("{:.2}", f.slowdown_percentile(99.0)),
+                    s.finish_cycle.to_string(),
+                ]);
+            }
+            Err(_) => t.row(vec![
+                scen.to_string(),
+                r.to_string(),
+                fmt_err(res),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    write_csv("fct.csv", &t.to_csv())?;
     Ok(t.render())
 }
 

@@ -41,12 +41,12 @@ use std::collections::HashMap;
 use std::sync::{mpsc, Arc, Mutex};
 
 use crate::config::spec::{routing_by_name, topology_by_name, ExperimentSpec, TrafficSpec};
-use crate::metrics::{LatencyHist, SimStats};
+use crate::metrics::{FctStats, LatencyHist, SimStats};
 use crate::routing::Router;
 use crate::sim::{Network, RunOpts, SimConfig, SimError};
 use crate::topology::PhysTopology;
 use crate::traffic::kernels::{self, KernelWorkload};
-use crate::traffic::{BernoulliWorkload, FixedWorkload, TrafficPattern, Workload};
+use crate::traffic::{BernoulliWorkload, FixedWorkload, FlowWorkload, TrafficPattern, Workload};
 use crate::util::Rng;
 
 /// Default parallelism: physical cores minus one (leave a core for the OS),
@@ -55,6 +55,21 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get().saturating_sub(1).max(1))
         .unwrap_or(1)
+}
+
+/// The simulator configuration a spec implies (before any engine-level
+/// shard clamp): the single source of truth for microarchitecture
+/// parameters, shared by the network builders and the flow-workload
+/// builder's ideal-FCT model — so `pkt_flits`/`link_latency` can never
+/// drift between the network a run uses and the ideal its slowdowns are
+/// measured against.
+pub fn sim_config(spec: &ExperimentSpec) -> SimConfig {
+    SimConfig {
+        servers_per_switch: spec.servers_per_switch,
+        seed: spec.seed,
+        shards: spec.shards,
+        ..SimConfig::default()
+    }
 }
 
 /// Build the workload for a spec on a given physical topology.
@@ -102,6 +117,20 @@ pub fn build_workload(
             };
             Box::new(KernelWorkload::new(prog, ranks, *mapping, &mut rng))
         }
+        TrafficSpec::Flows(fs) => {
+            // The ideal-FCT model must match the microarchitecture the run
+            // uses: take it from the same `sim_config` the network
+            // builders consume.
+            let cfg = sim_config(spec);
+            Box::new(FlowWorkload::new(
+                fs,
+                topo,
+                spc,
+                cfg.pkt_flits,
+                cfg.link_latency,
+                &mut rng,
+            )?)
+        }
     })
 }
 
@@ -116,13 +145,7 @@ pub fn build_workload(
 pub fn build_network(spec: &ExperimentSpec) -> anyhow::Result<Network> {
     let topo = Arc::new(topology_by_name(&spec.topology)?);
     let router = routing_by_name(&spec.routing, topo.clone(), spec.q)?;
-    let cfg = SimConfig {
-        servers_per_switch: spec.servers_per_switch,
-        seed: spec.seed,
-        shards: spec.shards,
-        ..SimConfig::default()
-    };
-    Ok(Network::new(topo, router, cfg))
+    Ok(Network::new(topo, router, sim_config(spec)))
 }
 
 /// The run options a spec's traffic mode implies: Bernoulli runs are
@@ -197,6 +220,9 @@ pub struct ReplicaSummary {
     pub stats: Vec<SimStats>,
     /// All replicas' latency samples merged into one histogram.
     pub latency: LatencyHist,
+    /// All replicas' flow-completion stats merged (`None` when the
+    /// workload is per-packet and no replica reported any).
+    pub fct: Option<FctStats>,
 }
 
 impl ReplicaSummary {
@@ -246,13 +272,18 @@ const MIN_CI_REPLICAS: usize = 3;
 /// merging the kept replicas' latency histograms.
 fn summarize_replicas(seeds: Vec<u64>, stats: Vec<SimStats>) -> ReplicaSummary {
     let mut latency = LatencyHist::new();
+    let mut fct: Option<FctStats> = None;
     for s in &stats {
         latency.merge(&s.latency);
+        if let Some(f) = &s.fct {
+            fct.get_or_insert_with(FctStats::new).merge(f);
+        }
     }
     ReplicaSummary {
         seeds,
         stats,
         latency,
+        fct,
     }
 }
 
@@ -351,10 +382,8 @@ impl Engine {
     ) -> anyhow::Result<Network> {
         let (topo, router) = self.compiled_for(spec)?;
         let cfg = SimConfig {
-            servers_per_switch: spec.servers_per_switch,
-            seed: spec.seed,
             shards: spec.shards.clamp(1, shard_budget.max(1)),
-            ..SimConfig::default()
+            ..sim_config(spec)
         };
         Ok(Network::new(topo, router, cfg))
     }
@@ -538,6 +567,42 @@ mod tests {
             seed,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn flow_specs_run_and_report_fct() {
+        let spec = ExperimentSpec {
+            topology: "fm8".into(),
+            servers_per_switch: 2,
+            routing: "tera-path".into(),
+            traffic: TrafficSpec::Flows(crate::traffic::FlowSpec {
+                fan_in: 8,
+                msg_pkts: 2,
+                ..Default::default()
+            }),
+            seed: 4,
+            ..Default::default()
+        };
+        let stats = Engine::single_threaded().run_one(&spec).unwrap();
+        let fct = stats.fct.as_ref().expect("flow runs report FCT");
+        assert_eq!(fct.completed, 8, "one message per incast source");
+        assert_eq!(fct.offered, 8);
+        assert_eq!(stats.delivered_packets, 16);
+        assert!(fct.fct_percentile(50.0) > 0);
+        // Replica aggregation merges the flow stats across seeds.
+        let summary = Engine::single_threaded().run_replicas(&spec, 2).unwrap();
+        let merged = summary.fct.as_ref().expect("flow replicas merge FCT");
+        assert_eq!(merged.completed, 16, "8 messages × 2 replicas");
+        assert_eq!(merged.fct.count(), 16);
+        // Per-packet workloads must keep SimStats byte-identical (no FCT).
+        let packet_stats = Engine::single_threaded()
+            .run_one(&tiny_spec("tera-path", 4))
+            .unwrap();
+        assert!(packet_stats.fct.is_none());
+        let packet_summary = Engine::single_threaded()
+            .run_replicas(&tiny_spec("tera-path", 4), 2)
+            .unwrap();
+        assert!(packet_summary.fct.is_none());
     }
 
     #[test]

@@ -19,9 +19,11 @@
 //!   contribution, Algorithm 1) and the 2D-HyperX variants
 //!   (Dim-WAR, DOR-TERA, O1TURN-TERA);
 //! * the traffic patterns, generation modes, and application kernels of
-//!   §5 ([`traffic`]);
+//!   §5, plus the message/flow workload layer (incast, hotspot,
+//!   closed-loop, multi-tenant scenarios) ([`traffic`]);
 //! * metrics ([`metrics`]): throughput, latency percentiles, hop
-//!   distribution, Jain fairness index;
+//!   distribution, Jain fairness index, and flow-completion-time /
+//!   slowdown distributions ([`metrics::fct`]);
 //! * the Appendix-B analytic throughput model ([`analytic`]), also
 //!   available as an AOT-compiled XLA artifact executed through PJRT
 //!   ([`runtime`]);

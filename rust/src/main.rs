@@ -11,6 +11,7 @@
 //! tera-net fig4       [--pjrt]
 //! tera-net fig5..fig10  [--full] [--seed 1]
 //! tera-net linkutil   [--full]           # §6.3 service/main utilization
+//! tera-net fct        [--full]           # incast/hotspot FCT per FM router
 //! tera-net validate-artifacts            # PJRT vs pure-Rust cross-check
 //! tera-net config     --file exp.toml    # run an experiment from a file
 //! ```
@@ -20,6 +21,7 @@ use tera_net::config::spec::{ExperimentSpec, TrafficSpec};
 use tera_net::coordinator::figures::{self, Scale};
 use tera_net::engine::Engine;
 use tera_net::traffic::kernels::Mapping;
+use tera_net::traffic::FlowSpec;
 
 fn main() {
     if let Err(e) = real_main() {
@@ -49,6 +51,7 @@ fn real_main() -> anyhow::Result<()> {
         "linkutil" => print!("{}", figures::link_utilization(scale, seed)?),
         "ablation-q" => print!("{}", figures::ablation_q(scale, seed)?),
         "early-stop" => print!("{}", figures::early_stop(scale, seed)?),
+        "fct" => print!("{}", figures::fct(scale, seed)?),
         "figs" => {
             // Everything, in paper order.
             print!("{}", figures::table1(64)?);
@@ -68,7 +71,17 @@ fn real_main() -> anyhow::Result<()> {
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
-    let mode = args.get_or("mode", "bernoulli");
+    // `--workload incast` implies the flows mode, so the common case needs
+    // one flag instead of two — but a conflicting explicit --mode is a
+    // user mix-up, not something to silently override.
+    let mode = match (args.get("mode"), args.get("workload").is_some()) {
+        (None, true) => "flows",
+        (Some(m), true) if m != "flows" => {
+            anyhow::bail!("--workload implies --mode flows, but --mode {m} was given")
+        }
+        (Some(m), _) => m,
+        (None, false) => "bernoulli",
+    };
     let traffic = match mode {
         "bernoulli" => TrafficSpec::Bernoulli {
             pattern: args.get_or("pattern", "uniform").into(),
@@ -89,6 +102,29 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
                 Mapping::Linear
             },
         },
+        "flows" => {
+            let d = FlowSpec::default();
+            TrafficSpec::Flows(FlowSpec {
+                scenario: args.get_or("workload", "incast").into(),
+                fan_in: args.get_usize("fan-in", d.fan_in)?,
+                msg_pkts: args.get_usize("msg-pkts", d.msg_pkts as usize)? as u32,
+                waves: args.get_usize("waves", d.waves)?,
+                spacing: args.get_u64("spacing", d.spacing)?,
+                flows: args.get_usize("flows", d.flows)?,
+                hot_frac: args.get_f64("hot-frac", d.hot_frac)?,
+                rate: args.get_f64("rate", d.rate)?,
+                pairs: args.get_usize("pairs", d.pairs)?,
+                req_pkts: args.get_usize("req-pkts", d.req_pkts as usize)? as u32,
+                resp_pkts: args.get_usize("resp-pkts", d.resp_pkts as usize)? as u32,
+                think: args.get_u64("think", d.think)?,
+                rounds: args.get_usize("rounds", d.rounds)?,
+                bg_pattern: args.get_or("bg-pattern", &d.bg_pattern).into(),
+                bg_load: args.get_f64("bg-load", d.bg_load)?,
+                horizon: args.get_u64("flow-horizon", d.horizon)?,
+                burst_flows: args.get_usize("burst-flows", d.burst_flows)?,
+                burst_pkts: args.get_usize("burst-pkts", d.burst_pkts as usize)? as u32,
+            })
+        }
         other => anyhow::bail!("unknown mode '{other}'"),
     };
     let spec = ExperimentSpec {
@@ -183,8 +219,19 @@ fn report_replicas(engine: &Engine, spec: &ExperimentSpec, replicas: usize) -> a
     println!("mean_latency        {lat:.1} ± {lat_sd:.1} cycles");
     println!("p99_latency(all)    {}", summary.latency.percentile(99.0));
     println!("p99.9_latency(all)  {}", summary.latency.percentile(99.9));
+    report_replica_fct(&summary);
     println!("wall_time           {wall:.2}s ({} threads)", engine.threads());
     Ok(())
+}
+
+/// Merged flow-completion lines of a replica summary (flow workloads only).
+fn report_replica_fct(summary: &tera_net::engine::ReplicaSummary) {
+    if let Some(f) = &summary.fct {
+        println!("messages_completed  {} (all replicas)", f.completed);
+        println!("fct_p50(all)        {} cycles", f.fct_percentile(50.0));
+        println!("fct_p99(all)        {} cycles", f.fct_percentile(99.0));
+        println!("slowdown_p99(all)   {:.2}x", f.slowdown_percentile(99.0));
+    }
 }
 
 fn report_replicas_ci(
@@ -214,6 +261,7 @@ fn report_replicas_ci(
     println!("accepted_throughput {thr:.4} ± {thr_sd:.4} flits/cycle/server");
     println!("mean_latency        {lat:.1} ± {lat_sd:.1} cycles");
     println!("p99_latency(all)    {}", summary.latency.percentile(99.0));
+    report_replica_fct(&summary);
     println!("wall_time           {wall:.2}s ({} threads)", engine.threads());
     Ok(())
 }
@@ -239,6 +287,14 @@ fn report_one(engine: &Engine, spec: &ExperimentSpec) -> anyhow::Result<()> {
     println!("p99_latency         {}", stats.latency.percentile(99.0));
     println!("p99.9_latency       {}", stats.latency.percentile(99.9));
     println!("mean_hops           {:.3}", stats.mean_hops());
+    if let Some(f) = &stats.fct {
+        println!("messages_offered    {}", f.offered);
+        println!("messages_completed  {}", f.completed);
+        println!("fct_p50             {} cycles", f.fct_percentile(50.0));
+        println!("fct_p99             {} cycles", f.fct_percentile(99.0));
+        println!("slowdown_p50        {:.2}x", f.slowdown_percentile(50.0));
+        println!("slowdown_p99        {:.2}x", f.slowdown_percentile(99.0));
+    }
     for h in 1..6 {
         let f = stats.hop_fraction(h);
         if f > 0.0 {
@@ -338,6 +394,8 @@ COMMANDS:
   figs                all tables + figures in paper order
   linkutil            §6.3 service/main link utilization
   early-stop          fixed-budget vs --stop-rel-ci sweep comparison
+  fct                 flow-completion-time comparison of all FM routers
+                      under incast + hotspot message workloads
   validate-artifacts  cross-check AOT artifacts against pure-Rust references
   help                this text
 
@@ -347,10 +405,19 @@ RUN FLAGS:
   --host fm64|hx8x8       alias for --topology: run a TERA variant on either
                           host, e.g. --routing tera-mesh2 --host hx8x8
                           (any tera-<svc> whose edges the host contains)
-  --mode bernoulli|fixed|kernel    --pattern uniform|rsp|fr|shift|complement
+  --mode bernoulli|fixed|kernel|flows  --pattern uniform|rsp|fr|shift|complement
   --load 0.5 --horizon 20000       (bernoulli)
   --packets 100                    (fixed)
   --kernel all2all|stencil2d|stencil3d|fft3d|allreduce --mapping linear|random
+  --workload incast|hotspot|closedloop|multitenant   message/flow scenario
+                          (implies --mode flows; reports FCT percentiles and
+                          slowdown-vs-ideal). Scenario knobs:
+                          incast:     --fan-in 32 --msg-pkts 8 --waves 1 --spacing 1000
+                          hotspot:    --flows 256 --hot-frac 0.5 --rate 0.05 --msg-pkts 8
+                          closedloop: --pairs 16 --req-pkts 1 --resp-pkts 8
+                                      --think 200 --rounds 4
+                          multitenant: --bg-pattern uniform --bg-load 0.1
+                                      --flow-horizon 4000 --burst-flows 32 --burst-pkts 16
   --spc N (servers/switch)  --q 54  --seed 1
   --replicas N (multi-seed batch, aggregated)  --threads N (sweep width)
   --shards N              phase-parallel simulator shards per replica

@@ -1,0 +1,150 @@
+//! Flow-completion-time metrics for message/flow workloads.
+//!
+//! A *message* is an application-level unit of `size` packets from one
+//! server to another, released at a known cycle (`traffic::flows`). Its
+//! **FCT** is `completion_cycle - release_cycle` — release to the delivery
+//! of the last packet, so source-queue backpressure counts (that is the
+//! number incast victims feel). The **slowdown** divides the FCT by the
+//! message's *ideal* FCT on an empty network (see
+//! [`ideal_fct`]), so a slowdown of 1.0 means "as fast as the hardware
+//! allows" and tails expose endpoint congestion independent of message
+//! size.
+//!
+//! Everything here is integer/deterministic and `PartialEq`-exact: the
+//! histograms land inside [`SimStats`](crate::metrics::SimStats), which is
+//! the equality the phase-parallel and time-advance determinism contracts
+//! are stated in, so FCT recording must be bit-identical across shard
+//! counts and skip modes (`rust/tests/flows.rs` pins it).
+
+use super::LatencyHist;
+
+/// Fixed-point scale for slowdown samples: slowdown `s` is recorded as
+/// `round-down(s * 100)` in a [`LatencyHist`], keeping the stats integral
+/// (and therefore trivially bit-identical) while preserving 1% resolution
+/// on top of the histogram's own 2% buckets.
+pub const SLOWDOWN_SCALE: u64 = 100;
+
+/// Ideal (empty-network) FCT of a `size`-packet message crossing `hops`
+/// switch-to-switch links: NIC serialization of the whole message
+/// (`size × pkt_flits` cycles at one flit/cycle), the last header's flight
+/// time (`hops × link_latency`), and the last packet's ejection
+/// serialization (`pkt_flits`). This is a lower bound that ignores only
+/// per-switch crossbar latency, which the §5 microarchitecture hides
+/// behind serialization for every message size ≥ 1 packet.
+pub fn ideal_fct(size_pkts: u32, hops: usize, pkt_flits: u16, link_latency: u64) -> u64 {
+    size_pkts as u64 * pkt_flits as u64
+        + hops as u64 * link_latency
+        + pkt_flits as u64
+}
+
+/// Per-run message/flow statistics: completion counts, the FCT
+/// distribution, and the slowdown-vs-ideal distribution.
+///
+/// `PartialEq` is field-exact (both histograms compare their full bucket
+/// vectors and moment folds), matching the `SimStats` determinism
+/// contract.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FctStats {
+    /// Messages the workload scheduled (released or queued for release).
+    pub offered: u64,
+    /// Messages whose last packet was delivered.
+    pub completed: u64,
+    /// Flow completion time in cycles (release → last delivery).
+    pub fct: LatencyHist,
+    /// Slowdown vs the empty-network ideal, fixed-point ×[`SLOWDOWN_SCALE`].
+    pub slowdown_x100: LatencyHist,
+}
+
+impl FctStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed message. `ideal` must be ≥ 1 (the ideal model
+    /// always serializes at least one packet); a zero is clamped rather
+    /// than dividing by it.
+    pub fn record(&mut self, fct_cycles: u64, ideal_cycles: u64) {
+        self.completed += 1;
+        self.fct.record(fct_cycles);
+        let sd = fct_cycles
+            .saturating_mul(SLOWDOWN_SCALE)
+            .checked_div(ideal_cycles.max(1))
+            .unwrap_or(0);
+        self.slowdown_x100.record(sd.max(1));
+    }
+
+    /// FCT percentile in cycles (`p` in [0, 100]).
+    pub fn fct_percentile(&self, p: f64) -> u64 {
+        self.fct.percentile(p)
+    }
+
+    /// Slowdown percentile as a plain ratio (1.0 = ideal).
+    pub fn slowdown_percentile(&self, p: f64) -> f64 {
+        self.slowdown_x100.percentile(p) as f64 / SLOWDOWN_SCALE as f64
+    }
+
+    /// Mean slowdown as a plain ratio.
+    pub fn mean_slowdown(&self) -> f64 {
+        self.slowdown_x100.mean() / SLOWDOWN_SCALE as f64
+    }
+
+    /// Merge another run's flow stats into this one (replica aggregation).
+    pub fn merge(&mut self, other: &FctStats) {
+        self.offered += other.offered;
+        self.completed += other.completed;
+        self.fct.merge(&other.fct);
+        self.slowdown_x100.merge(&other.slowdown_x100);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_model_components() {
+        // 4 packets × 16 flits + 1 hop × 1 cycle + 16-flit ejection.
+        assert_eq!(ideal_fct(4, 1, 16, 1), 64 + 1 + 16);
+        // Same-switch message: no link term.
+        assert_eq!(ideal_fct(2, 0, 16, 1), 32 + 16);
+        // Long wire shows up per hop.
+        assert_eq!(ideal_fct(1, 2, 16, 5000), 16 + 10_000 + 16);
+    }
+
+    #[test]
+    fn record_tracks_counts_and_slowdown() {
+        let mut f = FctStats::new();
+        f.offered = 2;
+        f.record(100, 100); // slowdown 1.00
+        f.record(250, 100); // slowdown 2.50
+        assert_eq!(f.completed, 2);
+        assert_eq!(f.fct.count(), 2);
+        assert_eq!(f.fct.max(), 250);
+        let p99 = f.slowdown_percentile(99.0);
+        assert!((2.3..=2.7).contains(&p99), "p99 slowdown {p99}");
+        let mean = f.mean_slowdown();
+        assert!((1.6..=1.9).contains(&mean), "mean slowdown {mean}");
+    }
+
+    #[test]
+    fn zero_ideal_is_clamped_not_divided() {
+        let mut f = FctStats::new();
+        f.record(50, 0);
+        assert_eq!(f.completed, 1);
+        assert!(f.slowdown_percentile(50.0) > 0.0);
+    }
+
+    #[test]
+    fn merge_combines_runs() {
+        let (mut a, mut b) = (FctStats::new(), FctStats::new());
+        a.offered = 1;
+        a.record(10, 10);
+        b.offered = 1;
+        b.record(1000, 10);
+        a.merge(&b);
+        assert_eq!(a.offered, 2);
+        assert_eq!(a.completed, 2);
+        assert_eq!(a.fct.count(), 2);
+        assert_eq!(a.slowdown_x100.count(), 2);
+    }
+}

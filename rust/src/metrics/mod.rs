@@ -1,11 +1,15 @@
 //! Performance metrics of §5: accepted throughput, packet latency
 //! (mean + tail percentiles for the Fig-9 violins), hop distribution, and
-//! the Jain fairness index over per-server generated load.
+//! the Jain fairness index over per-server generated load — plus the
+//! message/flow layer's flow-completion-time and slowdown distributions
+//! ([`fct`]).
 
+pub mod fct;
 pub mod hist;
 pub mod jain;
 pub mod steady;
 
+pub use fct::FctStats;
 pub use hist::LatencyHist;
 pub use jain::jain_index;
 pub use steady::{CiEstimate, SteadyEstimator, StopMonitor};
@@ -39,6 +43,12 @@ pub struct SimStats {
     /// fixed-budget runs, so the bit-identity contract between adaptive
     /// and fixed-tick time advance is untouched).
     pub achieved_rel_ci: Option<f64>,
+    /// Message/flow completion statistics, present only when the workload
+    /// is message-granular (`traffic::flows`): FCT percentiles and
+    /// slowdown-vs-ideal histograms. `None` for per-packet workloads, so
+    /// existing results are byte-identical. Included in `PartialEq`: the
+    /// shard/skip determinism contract covers FCT recording too.
+    pub fct: Option<FctStats>,
 }
 
 impl SimStats {

@@ -55,7 +55,7 @@ mod shard;
 pub mod switch;
 pub mod wheel;
 
-pub use packet::{Packet, PacketArena, PacketId, NO_SWITCH};
+pub use packet::{Packet, PacketArena, PacketId, NO_MESSAGE, NO_SWITCH};
 pub use queues::QueuePool;
 pub use switch::{Switch, SwitchView};
 pub use wheel::TimingWheel;
@@ -205,8 +205,8 @@ enum Event {
 
 /// Per-server injection state.
 struct ServerState {
-    /// Generated-but-not-injected packets: `(dst_server, gen_cycle)`.
-    queue: std::collections::VecDeque<(u32, u64)>,
+    /// Generated-but-not-injected packets: `(dst_server, gen_cycle, msg)`.
+    queue: std::collections::VecDeque<(u32, u64, u32)>,
     /// NIC serialization: next cycle this server may inject a packet.
     free_at: u64,
 }
@@ -486,6 +486,10 @@ impl Network {
             &mut self.stats,
             SimStats::new(self.servers.len(), self.topo.n * self.max_degree),
         );
+        // Lift the workload's flow-completion stats (if it keeps any) into
+        // the run's SimStats: deliveries happen in canonical commit order,
+        // so these are covered by the shard/skip determinism contract.
+        stats.fct = workload.take_fct();
         stats.finish_cycle = self.now;
         stats.window_cycles = self.now.min(self.window_end).saturating_sub(self.warmup);
         if let Some(mon) = &monitor {
@@ -527,8 +531,16 @@ impl Network {
         {
             return;
         }
+        // Cheap O(1) workload check before the O(slots) wheel scan: an
+        // open-loop workload inside its horizon pins the next injection to
+        // `now` (it draws RNG every polled cycle), making any jump
+        // impossible — bail before paying for the wheel traversal.
+        let injection = workload.next_injection_at(self.now);
+        if injection == Some(self.now) {
+            return;
+        }
         let mut next = self.wheel.next_event_at();
-        if let Some(t) = workload.next_injection_at(self.now) {
+        if let Some(t) = injection {
             next = Some(next.map_or(t, |n| n.min(t)));
         }
         for &srv in &self.active_servers {
@@ -590,7 +602,7 @@ impl Network {
                         self.stats.hops[h] += 1;
                     }
                     self.live -= 1;
-                    workload.on_delivered(pkt.src_server, pkt.dst_server, now);
+                    workload.on_delivered(pkt.src_server, pkt.dst_server, pkt.msg, now);
                 }
             }
         }
@@ -602,8 +614,8 @@ impl Network {
             let pending = &mut self.pending_sources;
             let active = &mut self.active_servers;
             let active_flag = &mut self.server_active;
-            workload.poll(now, &mut |src: u32, dst: u32| {
-                servers[src as usize].queue.push_back((dst, now));
+            workload.poll(now, &mut |src: u32, dst: u32, msg: u32| {
+                servers[src as usize].queue.push_back((dst, now, msg));
                 *pending += 1;
                 if !active_flag[src as usize] {
                     active_flag[src as usize] = true;
@@ -640,7 +652,7 @@ impl Network {
                 idx += 1;
                 continue; // backpressure into the source queue
             }
-            let (dst, gen_cycle) = self.servers[srv].queue.pop_front().unwrap();
+            let (dst, gen_cycle, msg) = self.servers[srv].queue.pop_front().unwrap();
             self.servers[srv].free_at = now + flits;
             self.pending_sources -= 1;
             let dst_sw = (dst as usize / spc) as u32;
@@ -657,6 +669,7 @@ impl Network {
                 gen_cycle,
                 inject_cycle: now,
                 flits: self.cfg.pkt_flits,
+                msg,
             });
             sh.queues.push_back(q, id);
             sh.switches[ls].work += 1;

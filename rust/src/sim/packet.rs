@@ -8,6 +8,11 @@ pub type PacketId = u32;
 
 pub const NO_SWITCH: u32 = u32::MAX;
 
+/// Sentinel for packets that belong to no application message (per-packet
+/// workloads: fixed bursts, Bernoulli, kernels). Message-granular
+/// workloads (`traffic::flows`) assign dense ids starting at 0.
+pub const NO_MESSAGE: u32 = u32::MAX;
+
 /// One in-flight packet.
 #[derive(Clone, Debug)]
 pub struct Packet {
@@ -43,6 +48,11 @@ pub struct Packet {
     pub inject_cycle: u64,
     /// Flits in the packet (16 throughout the paper).
     pub flits: u16,
+    /// Application message this packet belongs to ([`NO_MESSAGE`] for
+    /// per-packet workloads). Carried end-to-end and handed back to the
+    /// workload on delivery, so the flow layer can detect message
+    /// completion and record FCT (`metrics::fct`).
+    pub msg: u32,
 }
 
 /// Slab allocator for packets — no per-packet heap allocation in the
@@ -113,6 +123,7 @@ mod tests {
             gen_cycle: 0,
             inject_cycle: 0,
             flits: 16,
+            msg: NO_MESSAGE,
         }
     }
 

@@ -5,6 +5,7 @@
 
 use super::patterns::TrafficPattern;
 use super::Workload;
+use crate::sim::NO_MESSAGE;
 use crate::util::Rng;
 
 /// Fixed generation: every server starts with `packets_per_server` packets
@@ -49,19 +50,19 @@ impl FixedWorkload {
 }
 
 impl Workload for FixedWorkload {
-    fn poll(&mut self, _cycle: u64, offer: &mut dyn FnMut(u32, u32)) {
+    fn poll(&mut self, _cycle: u64, offer: &mut dyn FnMut(u32, u32, u32)) {
         if self.offered {
             return;
         }
         self.offered = true;
         for (src, dsts) in self.batches.iter().enumerate() {
             for &d in dsts {
-                offer(src as u32, d);
+                offer(src as u32, d, NO_MESSAGE);
             }
         }
     }
 
-    fn on_delivered(&mut self, _src: u32, _dst: u32, _cycle: u64) {
+    fn on_delivered(&mut self, _src: u32, _dst: u32, _msg: u32, _cycle: u64) {
         self.outstanding -= 1;
     }
 
@@ -116,7 +117,7 @@ impl BernoulliWorkload {
 }
 
 impl Workload for BernoulliWorkload {
-    fn poll(&mut self, cycle: u64, offer: &mut dyn FnMut(u32, u32)) {
+    fn poll(&mut self, cycle: u64, offer: &mut dyn FnMut(u32, u32, u32)) {
         if cycle >= self.horizon {
             return;
         }
@@ -124,7 +125,7 @@ impl Workload for BernoulliWorkload {
         for src in 0..n_servers {
             if self.rng.gen_bool(self.p) {
                 let d = self.pattern.dest(src, self.n_switches, self.spc, &mut self.rng);
-                offer(src as u32, d);
+                offer(src as u32, d, NO_MESSAGE);
             }
         }
     }
@@ -155,14 +156,17 @@ mod tests {
         let pat = TrafficPattern::Shift;
         let mut w = FixedWorkload::new(&pat, 4, 2, 10, &mut rng);
         let mut count = 0;
-        w.poll(0, &mut |_, _| count += 1);
+        w.poll(0, &mut |_, _, m| {
+            assert_eq!(m, NO_MESSAGE);
+            count += 1;
+        });
         assert_eq!(count, 4 * 2 * 10);
         assert!(w.exhausted());
         let mut count2 = 0;
-        w.poll(1, &mut |_, _| count2 += 1);
+        w.poll(1, &mut |_, _, _| count2 += 1);
         assert_eq!(count2, 0);
         assert_eq!(w.outstanding(), 80);
-        w.on_delivered(0, 2, 5);
+        w.on_delivered(0, 2, NO_MESSAGE, 5);
         assert_eq!(w.outstanding(), 79);
     }
 
@@ -172,7 +176,7 @@ mod tests {
         let mut w = BernoulliWorkload::new(pat, 4, 4, 0.8, 16, 10_000, 7);
         let mut count = 0u64;
         for c in 0..10_000 {
-            w.poll(c, &mut |_, _| count += 1);
+            w.poll(c, &mut |_, _, _| count += 1);
         }
         // Expected: 16 servers * 10_000 cycles * 0.05 = 8000 packets.
         let expect = 16.0 * 10_000.0 * 0.8 / 16.0;
@@ -185,8 +189,8 @@ mod tests {
         let pat = TrafficPattern::Uniform;
         let mut w = BernoulliWorkload::new(pat, 4, 4, 1.0, 16, 100, 7);
         let mut count = 0u64;
-        w.poll(100, &mut |_, _| count += 1);
-        w.poll(5000, &mut |_, _| count += 1);
+        w.poll(100, &mut |_, _, _| count += 1);
+        w.poll(5000, &mut |_, _, _| count += 1);
         assert_eq!(count, 0);
     }
 }

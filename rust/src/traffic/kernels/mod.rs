@@ -15,6 +15,7 @@ pub mod programs;
 pub use programs::{all2all, allreduce_rabenseifner, fft3d, stencil2d, stencil3d};
 
 use super::Workload;
+use crate::sim::NO_MESSAGE;
 use crate::util::Rng;
 
 /// One communication phase of a rank's program.
@@ -174,14 +175,14 @@ impl KernelWorkload {
 }
 
 impl Workload for KernelWorkload {
-    fn poll(&mut self, _cycle: u64, offer: &mut dyn FnMut(u32, u32)) {
+    fn poll(&mut self, _cycle: u64, offer: &mut dyn FnMut(u32, u32, u32)) {
         self.started = true;
         for (s, d) in self.pending.drain(..) {
-            offer(s, d);
+            offer(s, d, NO_MESSAGE);
         }
     }
 
-    fn on_delivered(&mut self, _src: u32, dst: u32, _cycle: u64) {
+    fn on_delivered(&mut self, _src: u32, dst: u32, _msg: u32, _cycle: u64) {
         let r = self.rank_of[dst as usize];
         if r == u32::MAX {
             return; // server not participating
@@ -224,7 +225,7 @@ mod tests {
         let mut cycle = 0u64;
         loop {
             let mut batch = Vec::new();
-            w.poll(cycle, &mut |s, d| batch.push((s, d)));
+            w.poll(cycle, &mut |s, d, _| batch.push((s, d)));
             if batch.is_empty() && w.all_ranks_done() {
                 break;
             }
@@ -234,7 +235,7 @@ mod tests {
             );
             for (s, d) in batch {
                 carried += 1;
-                w.on_delivered(s, d, cycle);
+                w.on_delivered(s, d, NO_MESSAGE, cycle);
             }
             cycle += 1;
             assert!(cycle < 1_000_000, "ideal-network run did not converge");

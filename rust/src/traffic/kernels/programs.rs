@@ -265,12 +265,12 @@ mod tests {
         let mut cycle = 0;
         loop {
             let mut batch = Vec::new();
-            w.poll(cycle, &mut |s, d| batch.push((s, d)));
+            w.poll(cycle, &mut |s, d, _| batch.push((s, d)));
             if batch.is_empty() && w.all_ranks_done() {
                 break;
             }
             for (s, d) in batch {
-                w.on_delivered(s, d, cycle);
+                w.on_delivered(s, d, crate::sim::NO_MESSAGE, cycle);
             }
             cycle += 1;
             assert!(cycle < 10_000);

@@ -1,25 +1,36 @@
-//! Traffic: synthetic patterns, generation modes, and application kernels
-//! (§5 Methodology).
+//! Traffic: synthetic patterns, generation modes, application kernels
+//! (§5 Methodology), and the message/flow workload layer
+//! ([`flows`] — incast, hotspot, closed-loop, multi-tenant scenarios with
+//! flow-completion-time metrics).
 
+pub mod flows;
 pub mod generation;
 pub mod kernels;
 pub mod patterns;
 
+pub use flows::{FlowSpec, FlowWorkload};
 pub use generation::{BernoulliWorkload, FixedWorkload};
 pub use patterns::TrafficPattern;
+
+use crate::metrics::FctStats;
 
 /// A workload drives packet generation and observes deliveries.
 ///
 /// The simulator calls [`Workload::poll`] once per cycle before injection;
-/// the workload offers `(src_server, dst_server)` packets which enter the
-/// source queue of `src_server`. Delivery notifications let application
-/// kernels (task graphs) release dependent sends.
+/// the workload offers `(src_server, dst_server, msg)` packets which enter
+/// the source queue of `src_server`. `msg` is the id of the application
+/// message the packet belongs to ([`crate::sim::NO_MESSAGE`] for plain
+/// per-packet workloads); the simulator carries it through the `Packet`
+/// and hands it back in [`Workload::on_delivered`], which is how the flow
+/// layer detects message completion (and how application kernels release
+/// dependent sends).
 pub trait Workload: Send {
-    /// Offer packets for this cycle via `offer(src_server, dst_server)`.
-    fn poll(&mut self, cycle: u64, offer: &mut dyn FnMut(u32, u32));
+    /// Offer packets for this cycle via `offer(src_server, dst_server, msg)`.
+    fn poll(&mut self, cycle: u64, offer: &mut dyn FnMut(u32, u32, u32));
 
-    /// A packet from `src` to `dst` was fully delivered at `cycle`.
-    fn on_delivered(&mut self, _src: u32, _dst: u32, _cycle: u64) {}
+    /// A packet from `src` to `dst` (part of message `msg`, or
+    /// [`crate::sim::NO_MESSAGE`]) was fully delivered at `cycle`.
+    fn on_delivered(&mut self, _src: u32, _dst: u32, _msg: u32, _cycle: u64) {}
 
     /// True when no more packets will ever be offered.
     fn exhausted(&self) -> bool;
@@ -36,5 +47,13 @@ pub trait Workload: Send {
     /// they merely forgo the fast path until they implement this.
     fn next_injection_at(&self, now: u64) -> Option<u64> {
         Some(now)
+    }
+
+    /// Hand the run's flow-completion statistics to the simulator, which
+    /// stores them in `SimStats::fct` when the run finishes. `None` (the
+    /// default) for per-packet workloads; the flow layer moves its
+    /// accumulated [`FctStats`] out here.
+    fn take_fct(&mut self) -> Option<FctStats> {
+        None
     }
 }

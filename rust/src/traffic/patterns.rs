@@ -13,8 +13,12 @@ use crate::util::Rng;
 pub enum TrafficPattern {
     /// Uniform (UN): every packet picks a fresh random destination server.
     Uniform,
-    /// Random switch permutation (RSP): a random permutation `π` of
-    /// switches, fixed for the run; server `(x, k) → (π(x), k)`.
+    /// Random switch permutation (RSP): a random fixed-point-free
+    /// permutation `π` of switches, fixed for the run; server
+    /// `(x, k) → (π(x), k)`. A fixed point would keep a switch's traffic
+    /// local (absorbed at the ejection ports without crossing a link), so
+    /// the permutation is sampled as a derangement — every switch's load
+    /// actually exercises the network.
     RandomSwitchPerm { perm: Vec<u32> },
     /// Fixed random (FR): each server picked one random destination server
     /// at time zero and always sends there (endpoint bottlenecks).
@@ -44,14 +48,21 @@ impl TrafficPattern {
         })
     }
 
-    /// Fresh RSP: a uniformly random permutation of switches.
+    /// Fresh RSP: a uniformly random **derangement** of switches
+    /// (rejection sampling — the derangement fraction approaches 1/e, so
+    /// this terminates after ~3 draws in expectation). With a single
+    /// switch no derangement exists; the identity is returned and the
+    /// pattern degenerates to local traffic.
     pub fn random_switch_perm(n_switches: usize, rng: &mut Rng) -> Self {
-        let perm = rng
-            .permutation(n_switches)
-            .into_iter()
-            .map(|x| x as u32)
-            .collect();
-        Self::RandomSwitchPerm { perm }
+        loop {
+            let perm = rng.permutation(n_switches);
+            if n_switches > 1 && perm.iter().enumerate().any(|(i, &p)| p == i) {
+                continue;
+            }
+            return Self::RandomSwitchPerm {
+                perm: perm.into_iter().map(|x| x as u32).collect(),
+            };
+        }
     }
 
     /// Fresh FR assignment: every server draws one random destination
@@ -167,6 +178,72 @@ mod tests {
         for src in 0..32usize {
             for _ in 0..50 {
                 assert_ne!(p.dest(src, 8, 4, &mut rng) as usize, src);
+            }
+        }
+    }
+
+    /// Property: `dest` never returns its own source, for every pattern of
+    /// the evaluation, across sizes and concentrations. (Complement fixes
+    /// the middle switch when `n` is odd — 2x = n−1 — but the evaluation
+    /// only uses even switch counts, which is what this pins.)
+    #[test]
+    fn dest_never_returns_src() {
+        for n in [16usize, 64] {
+            for spc in [1usize, 4] {
+                let mut rng = Rng::new(17);
+                for name in ["uniform", "rsp", "fr", "shift", "complement"] {
+                    let p = TrafficPattern::by_name(name, n, spc, &mut rng).unwrap();
+                    for src in 0..n * spc {
+                        for _ in 0..4 {
+                            assert_ne!(
+                                p.dest(src, n, spc, &mut rng) as usize,
+                                src,
+                                "{name} n={n} spc={spc} src={src}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Property: the switch-level patterns (RSP, shift, complement) are
+    /// permutations of the switch set that preserve the local server
+    /// index — the structure FM routing arguments rely on (§5).
+    #[test]
+    fn switch_patterns_preserve_local_index_and_permute_switches() {
+        let (n, spc) = (16usize, 4usize);
+        for name in ["rsp", "shift", "complement"] {
+            let mut rng = Rng::new(23);
+            let p = TrafficPattern::by_name(name, n, spc, &mut rng).unwrap();
+            let mut seen = vec![false; n];
+            for sw in 0..n {
+                let dsw = p.dest(sw * spc, n, spc, &mut rng) as usize / spc;
+                assert!(!seen[dsw], "{name}: switch {dsw} hit twice");
+                seen[dsw] = true;
+                for k in 0..spc {
+                    assert_eq!(
+                        p.dest(sw * spc + k, n, spc, &mut rng) as usize,
+                        dsw * spc + k,
+                        "{name}: local index not preserved at ({sw}, {k})"
+                    );
+                }
+            }
+            assert!(seen.iter().all(|&x| x), "{name}: not onto");
+        }
+    }
+
+    #[test]
+    fn rsp_is_a_derangement() {
+        for seed in [1u64, 7, 42] {
+            let mut rng = Rng::new(seed);
+            let TrafficPattern::RandomSwitchPerm { perm } =
+                TrafficPattern::random_switch_perm(32, &mut rng)
+            else {
+                unreachable!()
+            };
+            for (i, &p) in perm.iter().enumerate() {
+                assert_ne!(p as usize, i, "seed {seed}: fixed point at {i}");
             }
         }
     }

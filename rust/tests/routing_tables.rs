@@ -210,6 +210,7 @@ fn mk_pkt(src_sw: usize, dst_sw: usize) -> Packet {
         gen_cycle: 0,
         inject_cycle: 0,
         flits: 16,
+        msg: tera_net::sim::NO_MESSAGE,
     }
 }
 
