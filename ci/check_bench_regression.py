@@ -13,11 +13,18 @@ nonzero if any section's wall time regressed more than THRESHOLD (25%)
 over its baseline value.
 
 Baseline sections with value `null` are *uncalibrated*: they are reported
-but never gate. This is how a new section (or a baseline authored on a
-machine that cannot run the benches) enters the file without blocking CI;
-refresh real numbers with `--update` from a representative runner (e.g.
-download the `bench-json` artifact of a green main build, run this script
-on it with --update, and commit the result).
+but never gate. This is how a baseline authored on a machine that cannot
+run the benches enters the file without blocking CI; refresh real numbers
+with `--update` from a representative runner (e.g. download the
+`bench-json` artifact of a green main build, run this script on it with
+--update, and commit the result).
+
+A fresh section with NO baseline entry at all is an error: new bench
+sections must land together with a baseline row (calibrated, or `null`
+until a representative runner refreshes it), otherwise a renamed section
+silently escapes gating forever. Pass `--allow-new` to waive this for a
+one-off run (e.g. when diffing a feature branch that adds a section
+against an older baseline artifact).
 """
 
 import argparse
@@ -62,6 +69,11 @@ def main():
         "--update",
         action="store_true",
         help="write the fresh totals into the baseline file and exit",
+    )
+    ap.add_argument(
+        "--allow-new",
+        action="store_true",
+        help="report fresh sections absent from the baseline instead of failing",
     )
     args = ap.parse_args()
 
@@ -116,7 +128,17 @@ def main():
                 failures.append((section, base, float("nan"), float("nan")))
             continue
         if base is None:
-            status = "uncalibrated (recorded only)" if section in baseline else "new section"
+            if section in baseline:
+                # Explicit `null` entry: deliberately uncalibrated, report only.
+                status = "uncalibrated (recorded only)"
+            elif args.allow_new:
+                status = "new section (allowed)"
+            else:
+                # No baseline row at all: the section can't be gated, and
+                # letting that pass means a renamed bench section dodges the
+                # gate forever. Fail unless --allow-new waives it.
+                status = "**NEW (unbaselined)**"
+                failures.append((section, float("nan"), cur, float("nan")))
             lines.append(f"| {section} | — | {cur:.3f} | — | {status} |")
             continue
         delta = (cur - base) / base if base > 0 else 0.0
@@ -142,6 +164,13 @@ def main():
                 print(
                     f"error: calibrated section '{section}' (baseline {base:.3f}s) "
                     "is missing from the fresh bench output",
+                    file=sys.stderr,
+                )
+            elif base != base:  # NaN: fresh section with no baseline entry
+                print(
+                    f"error: section '{section}' ({cur:.3f}s) is not in the "
+                    "baseline; add it with --update (or a null entry) or pass "
+                    "--allow-new",
                     file=sys.stderr,
                 )
             else:

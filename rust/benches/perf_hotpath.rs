@@ -8,10 +8,16 @@
 //!     on (≥ 2× over the scan-everything engine);
 //!   * **routing-table build cost** and **route throughput**: time to
 //!     compile the `RoutingTables`/`HxTables` layer, then raw
-//!     `Router::route` decisions/s driven over synthetic switch views on
-//!     FM64 and HX[8x8] — with a counting global allocator asserting
-//!     ZERO heap allocations across the measured decisions (the
-//!     table-driven-core acceptance gate);
+//!     `Router::route` vs `Router::route_batched` decisions/s per router,
+//!     driven over synthetic switch views on FM64 and HX[8x8] — with a
+//!     counting global allocator asserting ZERO heap allocations across
+//!     the measured decisions in both modes (the table-driven-core
+//!     acceptance gate). Per-router scalar/batched rows also land in
+//!     **`BENCH_route.json`** (section `route`) for the perf gate;
+//!   * **batched hot path**: scalar vs batched compute-phase A/B on the
+//!     saturated FM300 RSP point (`SimConfig::batched`), with delivered
+//!     flits asserted equal — the gather/score/commit restructure's
+//!     acceptance number (section `batched-fm300`);
 //!   * saturated Mcycles/s and packet throughput of `Network::step` on the
 //!     Fig-7 RSP workload (the end-to-end hot path);
 //!   * routing decisions/second per algorithm (allocation inner loop);
@@ -216,10 +222,11 @@ fn decision_rate(routing: &str) -> f64 {
     hops / t.elapsed_secs()
 }
 
-/// Raw `Router::route` throughput over synthetic views: decisions/s plus
-/// the number of allocator events observed across the measured window
-/// (must be zero — candidate sets live in the reused `CandidateBuf`).
-fn route_throughput(host: &str, routing: &str, iters: usize) -> (f64, u64) {
+/// Raw `Router::route` / `Router::route_batched` throughput over synthetic
+/// views: decisions/s plus the number of allocator events observed across
+/// the measured window (must be zero in either mode — candidate sets live
+/// in the reused `CandidateBuf`).
+fn route_throughput(host: &str, routing: &str, iters: usize, batched: bool) -> (f64, u64) {
     let topo = Arc::new(topology_by_name(host).unwrap());
     let router = routing_by_name(routing, topo.clone(), 54).unwrap();
     let n = topo.n;
@@ -272,7 +279,12 @@ fn route_throughput(host: &str, routing: &str, iters: usize) -> (f64, u64) {
             let view = SwitchView::from_raw(
                 s, degree, 1, 2, vcs, 5, &occ, &out_lens, &grants, &last,
             );
-            if let Some((p, _vc)) = router.route(&view, &mut pkt, at_injection, rng, &mut buf) {
+            let decision = if batched {
+                router.route_batched(&view, &mut pkt, at_injection, rng, &mut buf)
+            } else {
+                router.route(&view, &mut pkt, at_injection, rng, &mut buf)
+            };
+            if let Some((p, _vc)) = decision {
                 *sink += p;
             }
         }
@@ -425,23 +437,63 @@ fn main() {
     }
     let mut bench = CycleBench::new();
     println!();
-    println!("{:<22} {:>14} {:>12}", "router@host", "Mdecisions/s", "allocs");
+    println!(
+        "{:<22} {:>16} {:>16} {:>8} {:>8}",
+        "router@host", "scalar Mdec/s", "batched Mdec/s", "ratio", "allocs"
+    );
     let iters = if quick() { 400_000 } else { 2_000_000 };
+    let mut rjson = String::from("{\n  \"bench\": \"route-microbench\",\n  \"results\": [\n");
+    let mut rfirst = true;
     for (host, routing) in [
-        ("fm64", "tera-hx2"),
-        ("fm64", "srinr"),
         ("fm64", "min"),
+        ("fm64", "valiant"),
+        ("fm64", "ugal"),
+        ("fm64", "omniwar"),
+        ("fm64", "brinr"),
+        ("fm64", "srinr"),
+        ("fm64", "tera-hx2"),
+        ("hx8x8", "omniwar-hx"),
+        ("hx8x8", "dimwar"),
         ("hx8x8", "dor-tera"),
         ("hx8x8", "o1turn-tera"),
     ] {
-        let (dps, allocs) = route_throughput(host, routing, iters);
-        println!("{:<22} {:>14.2} {:>12}", format!("{routing}@{host}"), dps / 1e6, allocs);
-        assert_eq!(
-            allocs, 0,
-            "{routing}@{host}: Router::route allocated on the hot path"
+        let mut dps = [0.0f64; 2];
+        let mut total_allocs = 0u64;
+        for (i, batched) in [false, true].into_iter().enumerate() {
+            let (d, allocs) = route_throughput(host, routing, iters, batched);
+            dps[i] = d;
+            total_allocs += allocs;
+            assert_eq!(
+                allocs, 0,
+                "{routing}@{host} ({}): routing allocated on the hot path",
+                if batched { "batched" } else { "scalar" }
+            );
+            if !rfirst {
+                rjson.push_str(",\n");
+            }
+            rfirst = false;
+            rjson.push_str(&format!(
+                "    {{\"section\": \"route\", \"label\": \"{routing}@{host}/{}\", \
+                 \"wall_secs\": {:.6}, \"decisions\": {iters}, \
+                 \"decisions_per_sec\": {d:.0}}}",
+                if batched { "batched" } else { "scalar" },
+                iters as f64 / d,
+            ));
+        }
+        println!(
+            "{:<22} {:>16.2} {:>16.2} {:>7.2}x {:>8}",
+            format!("{routing}@{host}"),
+            dps[0] / 1e6,
+            dps[1] / 1e6,
+            dps[1] / dps[0],
+            total_allocs
         );
     }
-    println!("zero-allocation route path: VERIFIED (counting allocator)\n");
+    rjson.push_str("\n  ]\n}\n");
+    match std::fs::write("BENCH_route.json", &rjson) {
+        Ok(()) => println!("\nwrote BENCH_route.json (zero-allocation route path: VERIFIED)\n"),
+        Err(e) => println!("\ncould not write BENCH_route.json: {e}\n"),
+    }
 
     // ---- Idle-heavy: the active-set acceptance workload. ----
     // fm32 × 8 servers at very low uniform load: a handful of packets in
@@ -539,6 +591,36 @@ fn main() {
         Ok(()) => println!("\nwrote BENCH_shards.json (sharded determinism: VERIFIED)"),
         Err(e) => println!("\ncould not write BENCH_shards.json: {e}"),
     }
+
+    // ---- Batched hot path: scalar vs batched compute, saturated FM300. ----
+    // The gather/score/commit restructure of the compute phase
+    // (`SimConfig::batched`, DESIGN.md "Batched hot path") is a pure
+    // wall-clock knob: delivered flits are asserted equal, and the
+    // measured A/B is the optimization's acceptance number on the paper's
+    // FM300-class instance at saturating load.
+    println!("\n== batched hot path (fm300 × 8 srv/sw, RSP 0.7, serial) ==\n");
+    println!("{:<10} {:>12}", "mode", "Mcycles/s");
+    let bhz = if quick() { 600u64 } else { 1_800 };
+    let mut ab_mcps = [0.0f64; 2];
+    let mut ab_flits = [0u64; 2];
+    for (i, batched) in [false, true].into_iter().enumerate() {
+        let mut spec = bernoulli_spec("fm300", 8, "tera-path", "rsp", 0.7, bhz);
+        spec.batched_compute = batched;
+        let (mcps, flits) = sharded_throughput(&spec);
+        ab_mcps[i] = mcps;
+        ab_flits[i] = flits;
+        let mode = if batched { "batched" } else { "scalar" };
+        println!("{mode:<10} {mcps:>12.3}");
+        bench.add("batched-fm300", mode, bhz as f64 / (mcps * 1e6), bhz as f64);
+    }
+    assert_eq!(
+        ab_flits[0], ab_flits[1],
+        "batched compute diverged from the scalar reference on fm300"
+    );
+    println!(
+        "batched speedup {:.2}x (scalar bit-identity: VERIFIED)",
+        ab_mcps[1] / ab_mcps[0]
+    );
 
     // ---- Adaptive time advance: lull-heavy fm64 kernel. ----
     // A sparse 8-rank allreduce across a 16384-cycle wire: between bursts

@@ -70,6 +70,11 @@ pub struct ExperimentSpec {
     /// reaches this target (`--stop-rel-ci 0.05`). `None` (default) keeps
     /// the fixed horizon budget, so existing results are unchanged.
     pub stop_rel_ci: Option<f64>,
+    /// Batched compute-phase hot path (default on; `batched_compute =
+    /// false` in a config selects the scalar reference loops).
+    /// Bit-identical either way — a pure wall-clock knob, like `shards`
+    /// and `time_skip`; the A/B is what `perf_hotpath` measures.
+    pub batched_compute: bool,
 }
 
 impl Default for ExperimentSpec {
@@ -91,6 +96,7 @@ impl Default for ExperimentSpec {
             shards: 1,
             time_skip: true,
             stop_rel_ci: None,
+            batched_compute: true,
         }
     }
 }
@@ -253,6 +259,9 @@ impl ExperimentSpec {
         }
         if let Some(b) = v.get("time_skip").and_then(Value::as_bool) {
             spec.time_skip = b;
+        }
+        if let Some(b) = v.get("batched_compute").and_then(Value::as_bool) {
+            spec.batched_compute = b;
         }
         if let Some(f) = v.get("stop_rel_ci").and_then(Value::as_float) {
             anyhow::ensure!(f > 0.0, "stop_rel_ci must be positive");

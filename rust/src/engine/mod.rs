@@ -68,6 +68,7 @@ pub fn sim_config(spec: &ExperimentSpec) -> SimConfig {
         servers_per_switch: spec.servers_per_switch,
         seed: spec.seed,
         shards: spec.shards,
+        batched: spec.batched_compute,
         ..SimConfig::default()
     }
 }

@@ -148,6 +148,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         // Both adaptive-length knobs are safe by construction: time skip is
         // bit-identical, and CI stopping defaults to off (fixed budget).
         time_skip: !args.has("fixed-tick"),
+        // Scalar reference loops for the compute phase (bit-identical to
+        // the default batched path; a pure wall-clock knob).
+        batched_compute: !args.has("scalar-compute"),
         stop_rel_ci: match args.get("stop-rel-ci") {
             Some(v) => {
                 let target: f64 = v.parse()?;
@@ -427,6 +430,9 @@ RUN FLAGS:
   --fixed-tick            disable the exact next-event time advance (the
                           adaptive clock is bit-identical; this is a
                           debugging/benchmark knob)
+  --scalar-compute        use the scalar reference compute loops instead
+                          of the batched gather/score/commit path (also
+                          bit-identical; the A/B perf_hotpath measures)
   --stop-rel-ci X         stop a bernoulli point once the steady-state
                           estimator's relative CI half-width <= X (e.g.
                           0.05); with --replicas N, also prunes replicas

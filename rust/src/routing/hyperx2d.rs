@@ -58,6 +58,62 @@ impl OmniWarHxRouter {
     pub fn new(hx: Arc<HxTables>) -> Self {
         Self { hx, bias: 16 }
     }
+
+    /// Shared policy body; `batched` swaps per-port `occ_flits` probes for
+    /// streamed reads off the flat occupancy slice — the decision and every
+    /// RNG draw are bit-identical either way.
+    fn route_impl(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+        batched: bool,
+    ) -> Option<Decision> {
+        let cur = view.sw;
+        let dst = pkt.dst_sw as usize;
+        let vc = (pkt.hops as usize).min(3);
+        buf.clear();
+        for dim in 0..2 {
+            let c = self.hx.coord(cur, dim);
+            let t = self.hx.coord(dst, dim);
+            if c == t {
+                continue;
+            }
+            let row = self.hx.dim_row(cur, dim);
+            // Minimal hop, then deroutes: at most one per dimension per
+            // packet.
+            let min_port = row[t] as usize;
+            let hop_bit = if dim == 0 { HOP_D0 } else { HOP_D1 };
+            if batched {
+                let occ = view.occ_slice();
+                buf.push(min_port, vc, occ[min_port]);
+                if pkt.scratch & hop_bit == 0 {
+                    buf.extend_deroutes(row, c, t, occ, vc, self.bias);
+                }
+            } else {
+                buf.push(min_port, vc, view.occ_flits(min_port));
+                if pkt.scratch & hop_bit == 0 {
+                    for (v, &p) in row.iter().enumerate() {
+                        if v != c && v != t {
+                            let p = p as usize;
+                            buf.push(p, vc, 2 * view.occ_flits(p) + self.bias);
+                        }
+                    }
+                }
+            }
+        }
+        let pick = select_min_weight(view, buf, rng)?;
+        // Record which dimension the chosen hop advances.
+        let to = self.hx.topo().neighbor(cur, pick.0);
+        let dim = if self.hx.coord(to, 0) != self.hx.coord(cur, 0) {
+            0
+        } else {
+            1
+        };
+        pkt.scratch |= if dim == 0 { HOP_D0 } else { HOP_D1 };
+        Some(pick)
+    }
 }
 
 impl Router for OmniWarHxRouter {
@@ -73,41 +129,18 @@ impl Router for OmniWarHxRouter {
         rng: &mut Rng,
         buf: &mut CandidateBuf,
     ) -> Option<Decision> {
-        let cur = view.sw;
-        let dst = pkt.dst_sw as usize;
-        let vc = (pkt.hops as usize).min(3);
-        buf.clear();
-        for dim in 0..2 {
-            let c = self.hx.coord(cur, dim);
-            let t = self.hx.coord(dst, dim);
-            if c == t {
-                continue;
-            }
-            let row = self.hx.dim_row(cur, dim);
-            // Minimal hop in this dimension.
-            let min_port = row[t] as usize;
-            buf.push(min_port, vc, view.occ_flits(min_port));
-            // Deroutes: at most one per dimension per packet.
-            let hop_bit = if dim == 0 { HOP_D0 } else { HOP_D1 };
-            if pkt.scratch & hop_bit == 0 {
-                for (v, &p) in row.iter().enumerate() {
-                    if v != c && v != t {
-                        let p = p as usize;
-                        buf.push(p, vc, 2 * view.occ_flits(p) + self.bias);
-                    }
-                }
-            }
-        }
-        let pick = select_min_weight(view, buf.as_slice(), rng)?;
-        // Record which dimension the chosen hop advances.
-        let to = self.hx.topo().neighbor(cur, pick.0);
-        let dim = if self.hx.coord(to, 0) != self.hx.coord(cur, 0) {
-            0
-        } else {
-            1
-        };
-        pkt.scratch |= if dim == 0 { HOP_D0 } else { HOP_D1 };
-        Some(pick)
+        self.route_impl(view, pkt, rng, buf, false)
+    }
+
+    fn route_batched(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        _at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+    ) -> Option<Decision> {
+        self.route_impl(view, pkt, rng, buf, true)
     }
 
     fn name(&self) -> String {
@@ -132,20 +165,16 @@ impl DimWarRouter {
     pub fn new(hx: Arc<HxTables>) -> Self {
         Self { hx, bias: 16 }
     }
-}
 
-impl Router for DimWarRouter {
-    fn num_vcs(&self) -> usize {
-        2
-    }
-
-    fn route(
+    /// Shared policy body; see [`OmniWarHxRouter::route_impl`] for the
+    /// `batched` contract (streamed occupancy reads, bit-identical).
+    fn route_impl(
         &self,
         view: &SwitchView,
         pkt: &mut Packet,
-        _at_injection: bool,
         rng: &mut Rng,
         buf: &mut CandidateBuf,
+        batched: bool,
     ) -> Option<Decision> {
         let cur = view.sw;
         let dst = pkt.dst_sw as usize;
@@ -166,18 +195,54 @@ impl Router for DimWarRouter {
         let row = self.hx.dim_row(cur, dim);
         let min_port = row[t] as usize;
         buf.clear();
-        buf.push(min_port, vc, view.occ_flits(min_port));
-        if !derouted {
-            for (v, &p) in row.iter().enumerate() {
-                if v != c && v != t {
-                    let p = p as usize;
-                    buf.push(p, vc, 2 * view.occ_flits(p) + self.bias);
+        if batched {
+            let occ = view.occ_slice();
+            buf.push(min_port, vc, occ[min_port]);
+            if !derouted {
+                buf.extend_deroutes(row, c, t, occ, vc, self.bias);
+            }
+        } else {
+            buf.push(min_port, vc, view.occ_flits(min_port));
+            if !derouted {
+                for (v, &p) in row.iter().enumerate() {
+                    if v != c && v != t {
+                        let p = p as usize;
+                        buf.push(p, vc, 2 * view.occ_flits(p) + self.bias);
+                    }
                 }
             }
         }
-        let pick = select_min_weight(view, buf.as_slice(), rng)?;
+        let pick = select_min_weight(view, buf, rng)?;
         pkt.scratch |= hop_bit;
         Some(pick)
+    }
+}
+
+impl Router for DimWarRouter {
+    fn num_vcs(&self) -> usize {
+        2
+    }
+
+    fn route(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        _at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+    ) -> Option<Decision> {
+        self.route_impl(view, pkt, rng, buf, false)
+    }
+
+    fn route_batched(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        _at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+    ) -> Option<Decision> {
+        self.route_impl(view, pkt, rng, buf, true)
     }
 
     fn name(&self) -> String {
@@ -207,6 +272,7 @@ fn route_in_dim(
     vc: usize,
     rng: &mut Rng,
     buf: &mut CandidateBuf,
+    batched: bool,
 ) -> Option<Decision> {
     let cur = view.sw;
     let dst = pkt.dst_sw as usize;
@@ -217,16 +283,14 @@ fn route_in_dim(
     let svc_p = hx.svc_port(cur, dim, t);
     let direct = hx.dim_port(cur, dim, t);
     buf.clear();
-    let escape = core.push_candidates(
-        view,
-        buf,
-        vc,
-        svc_p,
-        Some(direct),
-        at_dim_injection.then(|| hx.main_ports(cur, dim)),
-    );
+    let main = at_dim_injection.then(|| hx.main_ports(cur, dim));
+    let escape = if batched {
+        core.push_candidates_batched(view, buf, vc, svc_p, Some(direct), main)
+    } else {
+        core.push_candidates(view, buf, vc, svc_p, Some(direct), main)
+    };
     let escape = (pkt.blocked >= ESCAPE_PATIENCE).then_some(escape);
-    let pick = select_weighted_or_escape(view, buf.as_slice(), escape, rng)?;
+    let pick = select_weighted_or_escape(view, buf, escape, rng)?;
     pkt.scratch |= hop_bit;
     Some(pick)
 }
@@ -252,6 +316,26 @@ impl DorTeraRouter {
     }
 }
 
+impl DorTeraRouter {
+    fn route_impl(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+        batched: bool,
+    ) -> Option<Decision> {
+        let cur = view.sw;
+        let dst = pkt.dst_sw as usize;
+        let dim = if self.hx.coord(cur, 0) != self.hx.coord(dst, 0) {
+            0
+        } else {
+            1
+        };
+        route_in_dim(&self.core, &self.hx, view, pkt, dim, 0, rng, buf, batched)
+    }
+}
+
 impl Router for DorTeraRouter {
     fn num_vcs(&self) -> usize {
         1
@@ -265,14 +349,18 @@ impl Router for DorTeraRouter {
         rng: &mut Rng,
         buf: &mut CandidateBuf,
     ) -> Option<Decision> {
-        let cur = view.sw;
-        let dst = pkt.dst_sw as usize;
-        let dim = if self.hx.coord(cur, 0) != self.hx.coord(dst, 0) {
-            0
-        } else {
-            1
-        };
-        route_in_dim(&self.core, &self.hx, view, pkt, dim, 0, rng, buf)
+        self.route_impl(view, pkt, rng, buf, false)
+    }
+
+    fn route_batched(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        _at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+    ) -> Option<Decision> {
+        self.route_impl(view, pkt, rng, buf, true)
     }
 
     fn name(&self) -> String {
@@ -303,18 +391,15 @@ impl O1TurnTeraRouter {
     }
 }
 
-impl Router for O1TurnTeraRouter {
-    fn num_vcs(&self) -> usize {
-        2
-    }
-
-    fn route(
+impl O1TurnTeraRouter {
+    fn route_impl(
         &self,
         view: &SwitchView,
         pkt: &mut Packet,
         at_injection: bool,
         rng: &mut Rng,
         buf: &mut CandidateBuf,
+        batched: bool,
     ) -> Option<Decision> {
         let cur = view.sw;
         let dst = pkt.dst_sw as usize;
@@ -336,7 +421,35 @@ impl Router for O1TurnTeraRouter {
             dim = order[0];
             vc = 0;
         }
-        route_in_dim(&self.core, &self.hx, view, pkt, dim, vc, rng, buf)
+        route_in_dim(&self.core, &self.hx, view, pkt, dim, vc, rng, buf, batched)
+    }
+}
+
+impl Router for O1TurnTeraRouter {
+    fn num_vcs(&self) -> usize {
+        2
+    }
+
+    fn route(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+    ) -> Option<Decision> {
+        self.route_impl(view, pkt, at_injection, rng, buf, false)
+    }
+
+    fn route_batched(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+    ) -> Option<Decision> {
+        self.route_impl(view, pkt, at_injection, rng, buf, true)
     }
 
     fn name(&self) -> String {

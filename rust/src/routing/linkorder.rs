@@ -178,20 +178,19 @@ impl LinkOrderRouter {
     pub fn labels(&self) -> &[u32] {
         self.tables.link_labels().expect("compiled with labels")
     }
-}
 
-impl Router for LinkOrderRouter {
-    fn num_vcs(&self) -> usize {
-        1 // the whole point
-    }
-
-    fn route(
+    /// Shared policy body; `batched` swaps the injection-time per-port
+    /// `occ_flits` probes for one streamed fill over the compiled
+    /// allowed-intermediate row ([`CandidateBuf::extend_weighted`]) — the
+    /// decision and every RNG draw are bit-identical either way.
+    fn route_impl(
         &self,
         view: &SwitchView,
         pkt: &mut Packet,
         at_injection: bool,
         rng: &mut Rng,
         buf: &mut CandidateBuf,
+        batched: bool,
     ) -> Option<Decision> {
         let n = self.tables.n();
         let s = view.sw;
@@ -216,15 +215,49 @@ impl Router for LinkOrderRouter {
         // min-weight port deadlock-safe (arcs drain in decreasing label
         // order).
         buf.clear();
-        buf.push(direct, 0, view.occ_flits(direct));
-        for &p in self.tables.allowed_ports(s, d) {
-            let p = p as usize;
-            buf.push(p, 0, view.occ_flits(p) + self.q);
+        if batched {
+            let occ = view.occ_slice();
+            buf.push(direct, 0, occ[direct]);
+            buf.extend_weighted(self.tables.allowed_ports(s, d), occ, 0, self.q);
+        } else {
+            buf.push(direct, 0, view.occ_flits(direct));
+            for &p in self.tables.allowed_ports(s, d) {
+                let p = p as usize;
+                buf.push(p, 0, view.occ_flits(p) + self.q);
+            }
         }
-        let pick = select_weighted_or_escape(view, buf.as_slice(), None, rng)?;
+        let pick = select_weighted_or_escape(view, buf, None, rng)?;
         let to = self.tables.topo().neighbor(s, pick.0);
         pkt.scratch = labels[s * n + to] + 1;
         Some(pick)
+    }
+}
+
+impl Router for LinkOrderRouter {
+    fn num_vcs(&self) -> usize {
+        1 // the whole point
+    }
+
+    fn route(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+    ) -> Option<Decision> {
+        self.route_impl(view, pkt, at_injection, rng, buf, false)
+    }
+
+    fn route_batched(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+    ) -> Option<Decision> {
+        self.route_impl(view, pkt, at_injection, rng, buf, true)
     }
 
     fn name(&self) -> String {

@@ -25,6 +25,9 @@ impl MinRouter {
     }
 }
 
+// `route_batched` keeps the trait's default delegation: MIN scores no
+// candidate set (one table read, one `has_space` probe, no RNG), so the
+// scalar body *is* the batched body — delegation is exact by construction.
 impl Router for MinRouter {
     fn num_vcs(&self) -> usize {
         1

@@ -72,6 +72,24 @@ pub trait Router: Send + Sync {
         buf: &mut CandidateBuf,
     ) -> Option<Decision>;
 
+    /// Batched twin of [`Self::route`], called from the simulator's
+    /// batched compute phase. The contract is **bit identity**: the same
+    /// decision, the same packet mutations and the same RNG consumption
+    /// (sequence *and* arguments of every draw) as `route` — pinned by the
+    /// `tests/engine.rs` batched-vs-scalar matrix. The default delegates;
+    /// routers whose scoring benefits from streamed occupancy reads and
+    /// the SoA `extend_*` fills override it.
+    fn route_batched(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+    ) -> Option<Decision> {
+        self.route(view, pkt, at_injection, rng, buf)
+    }
+
     /// Algorithm name as it appears in the paper's figures.
     fn name(&self) -> String;
 
@@ -85,33 +103,38 @@ pub trait Router: Send + Sync {
 /// ties randomly (used by the WAR-style algorithms, which spray across
 /// their VC-protected candidate sets by design).
 ///
-/// Candidates are `(port, vc, weight)`.
+/// Scans the [`CandidateBuf`] weight lane (one contiguous `u32` slice)
+/// and tracks the best *index*, reconstructing the `(port, vc)` decision
+/// only for the winner.
 pub fn select_min_weight(
     view: &SwitchView,
-    candidates: &[(usize, usize, u32)],
+    candidates: &CandidateBuf,
     rng: &mut Rng,
 ) -> Option<Decision> {
-    let mut best: Option<Decision> = None;
+    let weights = candidates.weights();
+    let mut best = usize::MAX;
     let mut best_w = u32::MAX;
     let mut ties = 0u32;
-    for &(port, vc, w) in candidates {
+    for i in 0..candidates.len() {
+        let (port, vc) = candidates.get(i);
         if !view.has_space(port, vc) {
             continue;
         }
+        let w = weights[i];
         if w < best_w {
             best_w = w;
-            best = Some((port, vc));
+            best = i;
             ties = 1;
         } else if w == best_w {
             // Reservoir-sample among equal-weight candidates for an unbiased
             // random tie-break without collecting them.
             ties += 1;
             if rng.gen_range(ties as usize) == 0 {
-                best = Some((port, vc));
+                best = i;
             }
         }
     }
-    best
+    (best != usize::MAX).then(|| candidates.get(best))
 }
 
 /// Algorithm-1 selection: pick the minimum-weight candidate **without**
@@ -128,7 +151,7 @@ pub fn select_min_weight(
 /// waiting safe (arcs drain in decreasing label order).
 pub fn select_weighted_or_escape(
     view: &SwitchView,
-    candidates: &[(usize, usize, u32)],
+    candidates: &CandidateBuf,
     escape: Option<(usize, usize)>,
     rng: &mut Rng,
 ) -> Option<Decision> {
@@ -146,27 +169,26 @@ pub fn select_weighted_or_escape(
 
 /// Minimum-weight candidate with unbiased reservoir tie-breaking and
 /// fullness NOT masked — the one copy of the Algorithm-1 selection loop,
-/// shared by [`select_weighted_or_escape`] and [`TeraCore::best`].
-pub(crate) fn best_unmasked(
-    candidates: &[(usize, usize, u32)],
-    rng: &mut Rng,
-) -> Option<Decision> {
-    let mut best: Option<Decision> = None;
+/// shared by [`select_weighted_or_escape`] and [`TeraCore::best`]. Scans
+/// the contiguous weight lane; the `(port, vc)` lanes are only touched to
+/// materialize the winner.
+pub(crate) fn best_unmasked(candidates: &CandidateBuf, rng: &mut Rng) -> Option<Decision> {
+    let mut best = usize::MAX;
     let mut best_w = u32::MAX;
     let mut ties = 0u32;
-    for &(port, vc, w) in candidates {
+    for (i, &w) in candidates.weights().iter().enumerate() {
         if w < best_w {
             best_w = w;
-            best = Some((port, vc));
+            best = i;
             ties = 1;
         } else if w == best_w {
             ties += 1;
             if rng.gen_range(ties as usize) == 0 {
-                best = Some((port, vc));
+                best = i;
             }
         }
     }
-    best
+    (best != usize::MAX).then(|| candidates.get(best))
 }
 
 #[cfg(test)]

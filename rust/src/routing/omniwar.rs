@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use super::{CandidateBuf, Decision, Router, RoutingTables};
+use super::{select_min_weight, CandidateBuf, Decision, Router, RoutingTables};
 use crate::sim::packet::Packet;
 use crate::sim::SwitchView;
 use crate::topology::TopoKind;
@@ -82,6 +82,34 @@ impl Router for OmniWarRouter {
             }
         }
         best
+    }
+
+    /// Batched twin: the same candidate set and weights as the fused
+    /// scalar loop above, filled in one pass off the flat occupancy slice
+    /// ([`CandidateBuf::extend_war`]) and selected by
+    /// [`select_min_weight`]. Both paths draw the RNG under exactly the
+    /// same conditions (candidate has space *and* ties the running
+    /// minimum), so the two are bit-identical.
+    fn route_batched(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+    ) -> Option<Decision> {
+        let dst = pkt.dst_sw as usize;
+        let min_port = self.tables.min_port(view.sw, dst);
+        if !at_injection {
+            return if view.has_space(min_port, 1) {
+                Some((min_port, 1))
+            } else {
+                None
+            };
+        }
+        buf.clear();
+        buf.extend_war(view.degree, view.occ_slice(), 0, min_port, self.bias);
+        select_min_weight(view, buf, rng)
     }
 
     fn name(&self) -> String {

@@ -93,15 +93,27 @@ impl Csr {
 // Candidate scratch
 // --------------------------------------------------------------------------
 
-/// Reusable `(port, vc, weight)` candidate scratch. The simulator owns one
-/// and threads it through every [`super::Router::route`] call; routers
-/// `clear()` it and push their candidate set, so after the buffer has grown
-/// to the largest set once, route decisions perform zero heap allocation
-/// (pinned by the `perf_hotpath` route-throughput bench's counting
-/// allocator).
+/// Reusable candidate scratch in structure-of-arrays layout: parallel
+/// `ports` / `vcs` / `weights` lanes instead of an array of
+/// `(usize, usize, u32)` tuples. The simulator owns one and threads it
+/// through every [`super::Router::route`] call; routers `clear()` it and
+/// push their candidate set, so after the buffer has grown to the largest
+/// set once, route decisions perform zero heap allocation (pinned by the
+/// `perf_hotpath` route-throughput bench's counting allocator and the
+/// `hotpath_alloc` integration test).
+///
+/// The SoA split is what makes the batched scoring path autovectorizable:
+/// selection loops scan [`Self::weights`] — one contiguous `u32` slice,
+/// 4 bytes per candidate instead of a 24-byte tuple stride — and only
+/// reconstruct the winning [`Decision`] via [`Self::get`]. The
+/// `extend_*` fills build whole candidate sets from a port row plus the
+/// flat per-port occupancy slice (`SwitchView::occ_slice`) in one tight
+/// loop each.
 #[derive(Default)]
 pub struct CandidateBuf {
-    cands: Vec<(usize, usize, u32)>,
+    ports: Vec<u32>,
+    vcs: Vec<u32>,
+    weights: Vec<u32>,
 }
 
 impl CandidateBuf {
@@ -111,27 +123,101 @@ impl CandidateBuf {
 
     #[inline]
     pub fn clear(&mut self) {
-        self.cands.clear();
+        self.ports.clear();
+        self.vcs.clear();
+        self.weights.clear();
     }
 
     #[inline]
     pub fn push(&mut self, port: usize, vc: usize, weight: u32) {
-        self.cands.push((port, vc, weight));
+        self.ports.push(port as u32);
+        self.vcs.push(vc as u32);
+        self.weights.push(weight);
     }
 
+    /// Candidate `i` as a `(port, vc)` decision.
     #[inline]
-    pub fn as_slice(&self) -> &[(usize, usize, u32)] {
-        &self.cands
+    pub fn get(&self, i: usize) -> Decision {
+        (self.ports[i] as usize, self.vcs[i] as usize)
+    }
+
+    /// The weight lane — one contiguous `u32` slice, the stream the
+    /// batched selection loops scan.
+    #[inline]
+    pub fn weights(&self) -> &[u32] {
+        &self.weights
     }
 
     #[inline]
     pub fn len(&self) -> usize {
-        self.cands.len()
+        self.ports.len()
     }
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.cands.is_empty()
+        self.ports.is_empty()
+    }
+
+    /// Batched fill: every port of `row` at weight `occ[p] + penalty`.
+    /// (Link-ordering allowed-intermediate sets: the non-minimal `q`.)
+    #[inline]
+    pub fn extend_weighted(&mut self, row: &[u16], occ: &[u32], vc: usize, penalty: u32) {
+        for &p in row {
+            self.push(p as usize, vc, occ[p as usize] + penalty);
+        }
+    }
+
+    /// Batched Algorithm-1 fill over a main-port row: weight `occ[p]`,
+    /// plus `q` unless `p` is the direct port (pass `direct = u32::MAX`
+    /// when no direct port exists — no port compares equal).
+    #[inline]
+    pub fn extend_tera(&mut self, row: &[u16], occ: &[u32], vc: usize, q: u32, direct: u32) {
+        for &p in row {
+            let w = occ[p as usize] + q * u32::from(u32::from(p) != direct);
+            self.push(p as usize, vc, w);
+        }
+    }
+
+    /// Batched WAR fill over all `degree` ports: `occ[p]` at the minimal
+    /// port, `2 * occ[p] + bias` at every deroute.
+    #[inline]
+    pub fn extend_war(
+        &mut self,
+        degree: usize,
+        occ: &[u32],
+        vc: usize,
+        min_port: usize,
+        bias: u32,
+    ) {
+        for p in 0..degree {
+            let w = if p == min_port {
+                occ[p]
+            } else {
+                2 * occ[p] + bias
+            };
+            self.push(p, vc, w);
+        }
+    }
+
+    /// Batched deroute fill over a dimension row (`row[v]` = port toward
+    /// coordinate `v`), skipping coordinates `skip_a` / `skip_b` (own and
+    /// target coordinate): `2 * occ[p] + bias` each.
+    #[inline]
+    pub fn extend_deroutes(
+        &mut self,
+        row: &[u16],
+        skip_a: usize,
+        skip_b: usize,
+        occ: &[u32],
+        vc: usize,
+        bias: u32,
+    ) {
+        for (v, &p) in row.iter().enumerate() {
+            if v == skip_a || v == skip_b {
+                continue;
+            }
+            self.push(p as usize, vc, 2 * occ[p as usize] + bias);
+        }
     }
 }
 
@@ -623,12 +709,43 @@ impl TeraCore {
         (svc_port, vc)
     }
 
+    /// Batched twin of [`Self::push_candidates`]: the same candidate set
+    /// in the same order (bit-identical selection downstream), with the
+    /// weights computed by streaming the flat per-port occupancy slice
+    /// ([`SwitchView::occ_slice`]) through [`CandidateBuf::extend_tera`]
+    /// instead of calling `occ_flits` per candidate.
+    pub fn push_candidates_batched(
+        &self,
+        view: &SwitchView,
+        buf: &mut CandidateBuf,
+        vc: usize,
+        svc_port: usize,
+        direct_port: Option<usize>,
+        main: Option<&[u16]>,
+    ) -> (usize, usize) {
+        let occ = view.occ_slice();
+        let direct = direct_port.map_or(u32::MAX, |p| p as u32);
+        buf.push(
+            svc_port,
+            vc,
+            occ[svc_port] + self.q * u32::from(svc_port as u32 != direct),
+        );
+        if let Some(main) = main {
+            buf.extend_tera(main, occ, vc, self.q, direct);
+        } else if let Some(dp) = direct_port {
+            if dp != svc_port {
+                buf.push(dp, vc, occ[dp]);
+            }
+        }
+        (svc_port, vc)
+    }
+
     /// Minimum-weight candidate, ties broken by unbiased reservoir
     /// sampling. Fullness is deliberately NOT masked — Algorithm-1 commit
     /// semantics let a packet wait on its best port (see
     /// [`super::select_weighted_or_escape`], which shares this exact loop
     /// via [`super::best_unmasked`]).
-    pub fn best(&self, cands: &[(usize, usize, u32)], rng: &mut Rng) -> Option<Decision> {
+    pub fn best(&self, cands: &CandidateBuf, rng: &mut Rng) -> Option<Decision> {
         super::best_unmasked(cands, rng)
     }
 }

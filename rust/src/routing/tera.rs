@@ -98,20 +98,19 @@ impl TeraRouter {
     pub fn main_ratio(&self) -> f64 {
         self.tables.main_ratio()
     }
-}
 
-impl Router for TeraRouter {
-    fn num_vcs(&self) -> usize {
-        1 // the paper's headline: deadlock-free non-minimal routing, 1 VC
-    }
-
-    fn route(
+    /// The Algorithm-1 policy body shared by `route` and `route_batched`;
+    /// `batched` only switches the injection-time candidate fill between
+    /// [`TeraCore::push_candidates`] and its streamed twin — the decision
+    /// and every RNG draw are bit-identical either way.
+    fn route_impl(
         &self,
         view: &SwitchView,
         pkt: &mut Packet,
         at_injection: bool,
         rng: &mut Rng,
         buf: &mut CandidateBuf,
+        batched: bool,
     ) -> Option<Decision> {
         let s = view.sw;
         let d = pkt.dst_sw as usize;
@@ -153,15 +152,14 @@ impl Router for TeraRouter {
         // committed via scratch, granted only if the port has space.
         let best = if at_injection {
             buf.clear();
-            self.core.push_candidates(
-                view,
-                buf,
-                0,
-                svc_p,
-                direct,
-                Some(self.tables.main_ports(s)),
-            );
-            self.core.best(buf.as_slice(), rng).expect("non-empty set").0
+            let main = Some(self.tables.main_ports(s));
+            if batched {
+                self.core
+                    .push_candidates_batched(view, buf, 0, svc_p, direct, main);
+            } else {
+                self.core.push_candidates(view, buf, 0, svc_p, direct, main);
+            }
+            self.core.best(buf, rng).expect("non-empty set").0
         } else {
             // ports ← R_serv ∪ R_min. On a non-complete host the direct
             // link may not exist mid-route; the service path is then the
@@ -186,6 +184,34 @@ impl Router for TeraRouter {
         } else {
             None // wait on the committed port
         }
+    }
+}
+
+impl Router for TeraRouter {
+    fn num_vcs(&self) -> usize {
+        1 // the paper's headline: deadlock-free non-minimal routing, 1 VC
+    }
+
+    fn route(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+    ) -> Option<Decision> {
+        self.route_impl(view, pkt, at_injection, rng, buf, false)
+    }
+
+    fn route_batched(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+    ) -> Option<Decision> {
+        self.route_impl(view, pkt, at_injection, rng, buf, true)
     }
 
     fn name(&self) -> String {

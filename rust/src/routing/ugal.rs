@@ -37,6 +37,10 @@ impl UgalRouter {
     }
 }
 
+// `route_batched` keeps the trait's default delegation: UGAL compares
+// exactly two ports (no candidate buffer, the intermediate draw is the
+// only RNG use), so delegation to the scalar body is exact by
+// construction.
 impl Router for UgalRouter {
     fn num_vcs(&self) -> usize {
         2

@@ -39,6 +39,9 @@ impl ValiantRouter {
     }
 }
 
+// `route_batched` keeps the trait's default delegation: VLB weighs no
+// candidate set (its only RNG draw picks the intermediate, identically in
+// either mode), so delegation to the scalar body is exact by construction.
 impl Router for ValiantRouter {
     fn num_vcs(&self) -> usize {
         2

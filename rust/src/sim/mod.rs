@@ -100,6 +100,14 @@ pub struct SimConfig {
     /// pure wall-clock knob. 1 (the default) runs fully inline with no
     /// worker threads.
     pub shards: usize,
+    /// Batched compute-phase bodies (default on): gather each switch's
+    /// eligible lanes into contiguous scratch, score/commit in tight
+    /// passes (`shard::ShardState`, DESIGN.md "Batched hot path"). Results
+    /// are **bit-identical** with this on or off — pinned by
+    /// `tests/engine.rs` — so it is a pure wall-clock knob
+    /// (`batched_compute = false` in an experiment spec selects the scalar
+    /// reference path).
+    pub batched: bool,
 }
 
 impl Default for SimConfig {
@@ -114,6 +122,7 @@ impl Default for SimConfig {
             seed: 1,
             watchdog_cycles: 20_000,
             shards: 1,
+            batched: true,
         }
     }
 }
@@ -327,6 +336,7 @@ impl Network {
                 credit_out: Vec::new(),
                 link_flits: vec![0; (hi - lo) * max_degree],
                 route_buf: crate::routing::CandidateBuf::new(),
+                lane_buf: vec![0u32; max_degree + spc],
                 progress: false,
             });
         }

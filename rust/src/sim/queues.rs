@@ -79,7 +79,11 @@ impl QueuePool {
     }
 
     /// Queue lengths of the contiguous id range `[q0, q0 + n)` — the
-    /// occupancy slice handed to routing via `SwitchView`.
+    /// occupancy slice handed to routing via `SwitchView`, and the
+    /// streaming read the batched compute phase gathers eligible lanes
+    /// from: a switch's queues are id-contiguous by construction, so one
+    /// `lens` call per switch replaces per-port `len` lookups with a
+    /// single cache-friendly slice scan.
     #[inline]
     pub fn lens(&self, q0: usize, n: usize) -> &[u32] {
         &self.len[q0..q0 + n]

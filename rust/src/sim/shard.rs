@@ -61,6 +61,22 @@ pub(super) struct ComputeCtx {
 
 /// One shard: exclusive owner of the switches in `[lo, lo + switches.len())`
 /// and of every packet currently buffered in them.
+///
+/// The compute phase has two interchangeable bodies per switch
+/// (`SimConfig::batched` selects one; see DESIGN.md, "Batched hot path"):
+///
+/// * **scalar** — [`Self::allocate_switch`] / [`Self::transmit_switch`]:
+///   rotated scan over every port, probing eligibility (busy/occupancy)
+///   per port as it goes;
+/// * **batched** — [`Self::allocate_switch_batched`] /
+///   [`Self::transmit_switch_batched`]: a branchless *gather* pass first
+///   compacts the eligible lanes into [`Self::lane_buf`] by streaming the
+///   contiguous queue-length slice (`QueuePool::lens`) against the busy /
+///   link-free vectors, then a second pass *commits* grants over just
+///   those lanes. Both passes funnel into the same per-lane helpers
+///   ([`Self::try_grant_input`] / [`Self::try_transmit_output`]), so the
+///   two bodies are bit-identical by construction — same grants, same
+///   RNG draw sequence (pinned by `tests/engine.rs`).
 pub(super) struct ShardState {
     /// Global id of the first switch in this shard.
     pub lo: usize,
@@ -87,6 +103,10 @@ pub(super) struct ShardState {
     pub link_flits: Vec<u64>,
     /// Reused candidate scratch for `Router::route`.
     pub route_buf: CandidateBuf,
+    /// Eligible-lane scratch for the batched gather passes, preallocated
+    /// to the widest switch (`max_degree + servers_per_switch`) so the
+    /// batched hot path stays allocation-free.
+    pub lane_buf: Vec<u32>,
     /// Did any flit move in this shard this cycle? (watchdog input)
     pub progress: bool,
 }
@@ -107,6 +127,7 @@ impl ShardState {
             credit_out: Vec::new(),
             link_flits: Vec::new(),
             route_buf: CandidateBuf::new(),
+            lane_buf: Vec::new(),
             progress: false,
         }
     }
@@ -157,11 +178,17 @@ impl ShardState {
             }
         });
         self.active.sort_unstable();
+        let batched = ctx.cfg.batched;
         let mut i = 0;
         while i < self.active.len() {
             let s = self.active[i] as usize;
-            self.allocate_switch(s, now, ctx);
-            self.transmit_switch(s, now, ctx);
+            if batched {
+                self.allocate_switch_batched(s, now, ctx);
+                self.transmit_switch_batched(s, now, ctx);
+            } else {
+                self.allocate_switch(s, now, ctx);
+                self.transmit_switch(s, now, ctx);
+            }
             i += 1;
         }
     }
@@ -172,14 +199,8 @@ impl ShardState {
     /// the switch's private stream and credits go to `credit_out`.
     fn allocate_switch(&mut self, s: usize, now: u64, ctx: &ComputeCtx) {
         let ls = s - self.lo;
-        let vcs = self.switches[ls].vcs;
         let num_inputs = self.switches[ls].ports;
-        let degree = self.switches[ls].degree;
-        let spc = ctx.cfg.servers_per_switch;
         let offset = self.rngs[ls].gen_range(num_inputs);
-        let xbar_cycles =
-            (ctx.cfg.pkt_flits as u64 + ctx.cfg.speedup - 1) / ctx.cfg.speedup;
-
         for k in 0..num_inputs {
             let i = (k + offset) % num_inputs;
             if self.switches[ls].busy_until[i] > now
@@ -187,99 +208,169 @@ impl ShardState {
             {
                 continue;
             }
-            let at_injection = i >= degree;
-            let vc_off = if vcs > 1 {
-                self.rngs[ls].gen_range(vcs)
+            self.try_grant_input(s, i, now, ctx, false);
+        }
+    }
+
+    /// Batched crossbar allocation: gather, then commit.
+    ///
+    /// **Gather** — one branchless compaction pass streams the contiguous
+    /// input queue-length slice against `busy_until` and writes the
+    /// eligible lane ids (ascending) into `lane_buf`. Eligibility of an
+    /// input is unaffected by grants committed for *other* inputs of the
+    /// same switch in the same cycle (a grant touches output-side state
+    /// plus its own lane's queue and busy slot), so gathering up front is
+    /// exact, not an approximation.
+    ///
+    /// **Commit** — the rotating-priority order of the scalar scan,
+    /// restricted to eligible lanes, is recovered without any per-port
+    /// `%`: the ascending lane list is split at `offset`
+    /// (`partition_point`) and walked `[split..k)` then `[0..split)`.
+    /// Every lane then funnels into the same [`Self::try_grant_input`]
+    /// as the scalar path — the one difference (`route` vs
+    /// `route_batched`) is itself bit-identical by the router contract.
+    fn allocate_switch_batched(&mut self, s: usize, now: u64, ctx: &ComputeCtx) {
+        let ls = s - self.lo;
+        let num_inputs = self.switches[ls].ports;
+        let offset = self.rngs[ls].gen_range(num_inputs);
+        let k = {
+            let sw = &self.switches[ls];
+            let vcs = sw.vcs;
+            let lens = self.queues.lens(sw.in_q0, sw.ports * vcs);
+            let busy = &sw.busy_until;
+            let lanes = &mut self.lane_buf;
+            let mut k = 0usize;
+            if vcs == 1 {
+                for p in 0..num_inputs {
+                    lanes[k] = p as u32;
+                    k += usize::from((lens[p] != 0) & (busy[p] <= now));
+                }
             } else {
-                0
-            };
-            'vc_scan: for kv in 0..vcs {
-                let vc = (kv + vc_off) % vcs;
-                let q_in = self.switches[ls].in_q(i, vc);
-                let Some(pkt_id) = self.queues.front(q_in) else {
-                    continue;
-                };
-                // Routing decision (slices borrowed immutably, packet
-                // mutably — all disjoint fields of the shard).
-                let decision = {
-                    let sw = &self.switches[ls];
-                    let view = SwitchView {
-                        sw: s,
-                        degree,
-                        now,
-                        speedup: ctx.cfg.speedup,
-                        vcs,
-                        output_cap_pkts: ctx.cfg.output_cap_pkts,
-                        occ_flits: &sw.occ_flits,
-                        out_lens: self.queues.lens(sw.out_q0, sw.ports * vcs),
-                        grants_this_cycle: &sw.grants_this_cycle,
-                        last_grant_cycle: &sw.last_grant_cycle,
-                    };
-                    let pkt = self.arena.get_mut(pkt_id);
-                    if pkt.dst_sw as usize == s {
-                        // Eject toward the destination server, keeping the
-                        // packet's current VC.
-                        let local = pkt.dst_server as usize % spc;
-                        let port = degree + local;
-                        if view.has_space(port, pkt.vc as usize) {
-                            Some((port, pkt.vc as usize))
-                        } else {
-                            None
-                        }
-                    } else {
-                        ctx.router.route(
-                            &view,
-                            pkt,
-                            at_injection,
-                            &mut self.rngs[ls],
-                            &mut self.route_buf,
-                        )
-                    }
-                };
-                let Some((out_port, out_vc)) = decision else {
-                    // Head packet stays blocked: bump its patience counter
-                    // (escape-based routers consult it).
-                    let pkt = self.arena.get_mut(pkt_id);
-                    pkt.blocked = pkt.blocked.saturating_add(1);
-                    continue 'vc_scan;
-                };
-                // Commit the grant (routers only return grantable ports —
-                // SwitchView::has_space folds in the speedup limit).
-                let q_out;
-                {
-                    let sw = &mut self.switches[ls];
-                    if sw.last_grant_cycle[out_port] != now {
-                        sw.last_grant_cycle[out_port] = now;
-                        sw.grants_this_cycle[out_port] = 0;
-                    }
-                    debug_assert!((sw.grants_this_cycle[out_port] as u64) < ctx.cfg.speedup);
-                    sw.grants_this_cycle[out_port] += 1;
-                    sw.occ_flits[out_port] += ctx.cfg.pkt_flits as u32;
-                    sw.busy_until[i] = now + xbar_cycles;
-                    q_out = sw.out_q(out_port, out_vc);
-                    if let Some((usw, uport)) = sw.upstream[i] {
-                        self.credit_out.push((usw, uport, vc as u8));
-                    }
+                for p in 0..num_inputs {
+                    let occ: u32 = lens[p * vcs..(p + 1) * vcs].iter().sum();
+                    lanes[k] = p as u32;
+                    k += usize::from((occ != 0) & (busy[p] <= now));
                 }
-                debug_assert!(self.queues.len(q_out) < ctx.cfg.output_cap_pkts);
-                self.queues.push_back(q_out, pkt_id);
-                let popped = self.queues.pop_front(q_in);
-                debug_assert_eq!(popped, Some(pkt_id));
-                let pkt = self.arena.get_mut(pkt_id);
-                pkt.vc = out_vc as u8;
-                pkt.blocked = 0;
-                if out_port < degree {
-                    pkt.hops += 1;
-                    debug_assert!(
-                        (pkt.hops as usize) <= ctx.max_hops,
-                        "hop bound exceeded at switch {s}: {} hops (router {})",
-                        pkt.hops,
-                        ctx.router.name()
-                    );
-                }
-                self.progress = true;
-                break 'vc_scan; // one grant per input port per cycle
             }
+            k
+        };
+        let split = self.lane_buf[..k].partition_point(|&p| (p as usize) < offset);
+        for idx in (split..k).chain(0..split) {
+            let i = self.lane_buf[idx] as usize;
+            self.try_grant_input(s, i, now, ctx, true);
+        }
+    }
+
+    /// One input port's allocation attempt — the shared per-lane body of
+    /// the scalar and batched passes: rotated VC scan, routing decision,
+    /// grant commit. `batched` only selects `Router::route` vs
+    /// `Router::route_batched` (bit-identical by contract).
+    fn try_grant_input(&mut self, s: usize, i: usize, now: u64, ctx: &ComputeCtx, batched: bool) {
+        let ls = s - self.lo;
+        let vcs = self.switches[ls].vcs;
+        let degree = self.switches[ls].degree;
+        let spc = ctx.cfg.servers_per_switch;
+        let xbar_cycles = (ctx.cfg.pkt_flits as u64 + ctx.cfg.speedup - 1) / ctx.cfg.speedup;
+        let at_injection = i >= degree;
+        let vc_off = if vcs > 1 {
+            self.rngs[ls].gen_range(vcs)
+        } else {
+            0
+        };
+        'vc_scan: for kv in 0..vcs {
+            let vc = (kv + vc_off) % vcs;
+            let q_in = self.switches[ls].in_q(i, vc);
+            let Some(pkt_id) = self.queues.front(q_in) else {
+                continue;
+            };
+            // Routing decision (slices borrowed immutably, packet
+            // mutably — all disjoint fields of the shard).
+            let decision = {
+                let sw = &self.switches[ls];
+                let view = SwitchView {
+                    sw: s,
+                    degree,
+                    now,
+                    speedup: ctx.cfg.speedup,
+                    vcs,
+                    output_cap_pkts: ctx.cfg.output_cap_pkts,
+                    occ_flits: &sw.occ_flits,
+                    out_lens: self.queues.lens(sw.out_q0, sw.ports * vcs),
+                    grants_this_cycle: &sw.grants_this_cycle,
+                    last_grant_cycle: &sw.last_grant_cycle,
+                };
+                let pkt = self.arena.get_mut(pkt_id);
+                if pkt.dst_sw as usize == s {
+                    // Eject toward the destination server, keeping the
+                    // packet's current VC.
+                    let local = pkt.dst_server as usize % spc;
+                    let port = degree + local;
+                    if view.has_space(port, pkt.vc as usize) {
+                        Some((port, pkt.vc as usize))
+                    } else {
+                        None
+                    }
+                } else if batched {
+                    ctx.router.route_batched(
+                        &view,
+                        pkt,
+                        at_injection,
+                        &mut self.rngs[ls],
+                        &mut self.route_buf,
+                    )
+                } else {
+                    ctx.router.route(
+                        &view,
+                        pkt,
+                        at_injection,
+                        &mut self.rngs[ls],
+                        &mut self.route_buf,
+                    )
+                }
+            };
+            let Some((out_port, out_vc)) = decision else {
+                // Head packet stays blocked: bump its patience counter
+                // (escape-based routers consult it).
+                let pkt = self.arena.get_mut(pkt_id);
+                pkt.blocked = pkt.blocked.saturating_add(1);
+                continue 'vc_scan;
+            };
+            // Commit the grant (routers only return grantable ports —
+            // SwitchView::has_space folds in the speedup limit).
+            let q_out;
+            {
+                let sw = &mut self.switches[ls];
+                if sw.last_grant_cycle[out_port] != now {
+                    sw.last_grant_cycle[out_port] = now;
+                    sw.grants_this_cycle[out_port] = 0;
+                }
+                debug_assert!((sw.grants_this_cycle[out_port] as u64) < ctx.cfg.speedup);
+                sw.grants_this_cycle[out_port] += 1;
+                sw.occ_flits[out_port] += ctx.cfg.pkt_flits as u32;
+                sw.busy_until[i] = now + xbar_cycles;
+                q_out = sw.out_q(out_port, out_vc);
+                if let Some((usw, uport)) = sw.upstream[i] {
+                    self.credit_out.push((usw, uport, vc as u8));
+                }
+            }
+            debug_assert!(self.queues.len(q_out) < ctx.cfg.output_cap_pkts);
+            self.queues.push_back(q_out, pkt_id);
+            let popped = self.queues.pop_front(q_in);
+            debug_assert_eq!(popped, Some(pkt_id));
+            let pkt = self.arena.get_mut(pkt_id);
+            pkt.vc = out_vc as u8;
+            pkt.blocked = 0;
+            if out_port < degree {
+                pkt.hops += 1;
+                debug_assert!(
+                    (pkt.hops as usize) <= ctx.max_hops,
+                    "hop bound exceeded at switch {s}: {} hops (router {})",
+                    pkt.hops,
+                    ctx.router.name()
+                );
+            }
+            self.progress = true;
+            break 'vc_scan; // one grant per input port per cycle
         }
     }
 
@@ -290,72 +381,125 @@ impl ShardState {
     /// destination shard when the Arrive event fires.
     fn transmit_switch(&mut self, s: usize, now: u64, ctx: &ComputeCtx) {
         let ls = s - self.lo;
-        let flits = ctx.cfg.pkt_flits as u64;
-        let vcs = self.switches[ls].vcs;
         let num_outputs = self.switches[ls].ports;
-        let degree = self.switches[ls].degree;
-        let in_window = now >= ctx.warmup && now < ctx.window_end;
         for o in 0..num_outputs {
             if self.switches[ls].link_free_at[o] > now
                 || self.switches[ls].output_queued(&self.queues, o) == 0
             {
                 continue;
             }
-            let vc_off = if vcs > 1 {
-                self.rngs[ls].gen_range(vcs)
-            } else {
-                0
-            };
-            let mut chosen: Option<usize> = None;
-            for kv in 0..vcs {
-                let vc = (kv + vc_off) % vcs;
-                if !self.queues.is_empty(self.switches[ls].out_q(o, vc))
-                    && self.switches[ls].credits[o * vcs + vc] > 0
-                {
-                    chosen = Some(vc);
-                    break;
-                }
-            }
-            let Some(vc) = chosen else { continue };
-            let pkt_id = self
-                .queues
-                .pop_front(self.switches[ls].out_q(o, vc))
-                .unwrap();
-            {
-                let sw = &mut self.switches[ls];
-                sw.link_free_at[o] = now + flits;
-                // Occupancy is the *output queue* depth in flits (the
-                // paper's Algorithm-1 occupancy[p]; q = 54 is calibrated
-                // against the 5-packet output buffer): the packet leaves
-                // the queue now.
-                sw.occ_flits[o] = sw.occ_flits[o].saturating_sub(flits as u32);
-                sw.work -= 1;
-            }
-            let pkt = self.arena.get(pkt_id).clone();
-            self.arena.free(pkt_id);
-            if o < degree {
-                self.switches[ls].credits[o * vcs + vc] -= 1;
-                if in_window {
-                    self.link_flits[ls * ctx.max_degree + o] += flits;
-                }
-                let dst_sw = ctx.topo.neighbor(s, o) as u32;
-                let dst_port = ctx.topo.reverse_port(s, o) as u32;
-                self.outbox.push((
-                    now + ctx.cfg.link_latency,
-                    Event::Arrive {
-                        sw: dst_sw,
-                        port: dst_port,
-                        vc: vc as u8,
-                        pkt,
-                    },
-                ));
-            } else {
-                // Ejection: the server consumes at line rate; the tail is
-                // received `flits` cycles from now.
-                self.outbox.push((now + flits, Event::Deliver { pkt }));
-            }
-            self.progress = true;
+            self.try_transmit_output(s, o, now, ctx);
         }
+    }
+
+    /// Batched variant of [`Self::transmit_switch`]: gather the eligible
+    /// outputs (link free and at least one queued packet) into `lane_buf`
+    /// with one branchless compaction pass streaming the contiguous
+    /// out-queue length slice, then run the per-output transmit body over
+    /// the compacted list.
+    ///
+    /// Bit-identity with the scalar loop: the scalar path walks outputs in
+    /// plain ascending order (no rotation offset), and transmitting output
+    /// `o` mutates only `o`'s own state (`link_free_at[o]`, `occ_flits[o]`,
+    /// its queues/credits) — never another output's eligibility. The
+    /// compacted ascending list therefore visits exactly the outputs the
+    /// scalar loop would serve, in the same order, and the per-output RNG
+    /// draws (VC rotation, only when `vcs > 1`) happen for the same outputs
+    /// in the same sequence.
+    fn transmit_switch_batched(&mut self, s: usize, now: u64, ctx: &ComputeCtx) {
+        let ls = s - self.lo;
+        let num_outputs = self.switches[ls].ports;
+        let k = {
+            let sw = &self.switches[ls];
+            let vcs = sw.vcs;
+            let lens = self.queues.lens(sw.out_q0, sw.ports * vcs);
+            let free = &sw.link_free_at;
+            let lanes = &mut self.lane_buf;
+            let mut k = 0usize;
+            if vcs == 1 {
+                for o in 0..num_outputs {
+                    lanes[k] = o as u32;
+                    k += usize::from((lens[o] != 0) & (free[o] <= now));
+                }
+            } else {
+                for o in 0..num_outputs {
+                    let queued: u32 = lens[o * vcs..(o + 1) * vcs].iter().sum();
+                    lanes[k] = o as u32;
+                    k += usize::from((queued != 0) & (free[o] <= now));
+                }
+            }
+            k
+        };
+        for idx in 0..k {
+            let o = self.lane_buf[idx] as usize;
+            self.try_transmit_output(s, o, now, ctx);
+        }
+    }
+
+    /// Transmit at most one packet from output port `o` of switch `s` —
+    /// the shared per-output body behind [`Self::transmit_switch`] and
+    /// [`Self::transmit_switch_batched`] (byte-for-byte the same work, so
+    /// the two paths stay bit-identical). The caller has already checked
+    /// the link is free and the port has queued packets.
+    fn try_transmit_output(&mut self, s: usize, o: usize, now: u64, ctx: &ComputeCtx) {
+        let ls = s - self.lo;
+        let flits = ctx.cfg.pkt_flits as u64;
+        let vcs = self.switches[ls].vcs;
+        let degree = self.switches[ls].degree;
+        let vc_off = if vcs > 1 {
+            self.rngs[ls].gen_range(vcs)
+        } else {
+            0
+        };
+        let mut chosen: Option<usize> = None;
+        for kv in 0..vcs {
+            let vc = (kv + vc_off) % vcs;
+            if !self.queues.is_empty(self.switches[ls].out_q(o, vc))
+                && self.switches[ls].credits[o * vcs + vc] > 0
+            {
+                chosen = Some(vc);
+                break;
+            }
+        }
+        let Some(vc) = chosen else { return };
+        let pkt_id = self
+            .queues
+            .pop_front(self.switches[ls].out_q(o, vc))
+            .unwrap();
+        {
+            let sw = &mut self.switches[ls];
+            sw.link_free_at[o] = now + flits;
+            // Occupancy is the *output queue* depth in flits (the
+            // paper's Algorithm-1 occupancy[p]; q = 54 is calibrated
+            // against the 5-packet output buffer): the packet leaves
+            // the queue now.
+            sw.occ_flits[o] = sw.occ_flits[o].saturating_sub(flits as u32);
+            sw.work -= 1;
+        }
+        let pkt = self.arena.get(pkt_id).clone();
+        self.arena.free(pkt_id);
+        if o < degree {
+            self.switches[ls].credits[o * vcs + vc] -= 1;
+            if now >= ctx.warmup && now < ctx.window_end {
+                self.link_flits[ls * ctx.max_degree + o] += flits;
+            }
+            let dst_sw = ctx.topo.neighbor(s, o) as u32;
+            let dst_port = ctx.topo.reverse_port(s, o) as u32;
+            self.outbox.push((
+                now + ctx.cfg.link_latency,
+                Event::Arrive {
+                    sw: dst_sw,
+                    port: dst_port,
+                    vc: vc as u8,
+                    pkt,
+                },
+            ));
+        } else {
+            // Ejection: the server consumes at line rate; the tail is
+            // received `flits` cycles from now.
+            self.outbox.push((now + flits, Event::Deliver { pkt }));
+        }
+        self.progress = true;
     }
 }
 

@@ -150,6 +150,15 @@ impl<'a> SwitchView<'a> {
         self.occ_flits[port]
     }
 
+    /// The flat per-port occupancy vector as one contiguous `u32` slice —
+    /// what the batched scoring fills (`CandidateBuf::extend_*`,
+    /// `TeraCore::push_candidates_batched`) stream instead of per-port
+    /// [`Self::occ_flits`] calls.
+    #[inline]
+    pub fn occ_slice(&self) -> &[u32] {
+        self.occ_flits
+    }
+
     /// Can a packet be granted into output queue `(port, vc)` right now?
     /// Accounts for both queue capacity and the crossbar's per-cycle output
     /// grant limit, so a `Some` decision from a router always commits.

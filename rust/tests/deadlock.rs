@@ -52,7 +52,7 @@ impl Router for GreedyNonMinRouter {
                 buf.push(p, 0, view.occ_flits(p) + 16);
             }
         }
-        tera_net::routing::select_min_weight(view, buf.as_slice(), rng)
+        tera_net::routing::select_min_weight(view, buf, rng)
     }
 
     fn name(&self) -> String {

@@ -11,7 +11,7 @@ use tera_net::engine::{self, Engine};
 use tera_net::metrics::SimStats;
 use tera_net::sim::{Network, RunOpts, SimConfig};
 use tera_net::topology::full_mesh;
-use tera_net::traffic::{FixedWorkload, TrafficPattern};
+use tera_net::traffic::{FixedWorkload, FlowSpec, TrafficPattern};
 use tera_net::util::Rng;
 
 /// Run a fixed uniform burst on fm8 with an arbitrary link latency.
@@ -440,6 +440,99 @@ fn time_advance_bit_identical_hx8x8_every_router() {
             for spec in time_advance_specs("hx8x8", routing, "shift", seed) {
                 assert_time_advance_invariant(spec);
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched compute-phase hot path: the bit-identity contract.
+//
+// `SimConfig::batched` (spec knob `batched_compute`) switches the compute
+// phase between the scalar reference loops and the gather/score/commit
+// batched bodies (`sim::shard`, DESIGN.md "Batched hot path"). The contract
+// is that the switch is *unobservable*: batched on or off, at any shard
+// count, with time skip on or off, produces a bit-identical `SimStats` —
+// pinned here for all twelve routers of the evaluation (7 Full-mesh +
+// 5 2D-HyperX) on adversarial, uniform and incast-flow traffic.
+// ---------------------------------------------------------------------------
+
+/// Scalar serial fixed-tick reference vs the batched path across
+/// {1, 4} shards × skip on/off (plus batched-off re-run as a control).
+fn assert_batched_invariant(mut spec: ExperimentSpec) {
+    spec.batched_compute = false;
+    spec.shards = 1;
+    let base = run_adaptive(&spec, false);
+    assert!(base.delivered_packets > 0, "{}: nothing delivered", spec.name);
+    spec.batched_compute = true;
+    for (time_skip, shards) in [(false, 1usize), (true, 1), (false, 4), (true, 4)] {
+        spec.shards = shards;
+        let got = run_adaptive(&spec, time_skip);
+        assert_eq!(
+            base, got,
+            "{}: batched skip={time_skip}/shards={shards} diverged from the scalar run",
+            spec.name
+        );
+    }
+}
+
+/// Adversarial + uniform fixed bursts and an incast flow scenario for one
+/// (topology, routing, seed) triple.
+fn batched_specs(
+    topology: &str,
+    routing: &str,
+    adversarial: &str,
+    seed: u64,
+) -> Vec<ExperimentSpec> {
+    let base = ExperimentSpec {
+        topology: topology.into(),
+        servers_per_switch: 2,
+        routing: routing.into(),
+        seed,
+        max_cycles: 5_000_000,
+        ..Default::default()
+    };
+    let mut specs = Vec::new();
+    for pattern in [adversarial, "uniform"] {
+        specs.push(ExperimentSpec {
+            name: format!("batch-{topology}-{routing}-{pattern}-s{seed}"),
+            traffic: TrafficSpec::Fixed {
+                pattern: pattern.into(),
+                packets_per_server: 4,
+            },
+            ..base.clone()
+        });
+    }
+    specs.push(ExperimentSpec {
+        name: format!("batch-{topology}-{routing}-incast-s{seed}"),
+        traffic: TrafficSpec::Flows(FlowSpec {
+            scenario: "incast".into(),
+            fan_in: 16,
+            msg_pkts: 2,
+            ..FlowSpec::default()
+        }),
+        ..base
+    });
+    specs
+}
+
+/// All seven Full-mesh routers on FM64.
+#[test]
+fn batched_bit_identical_fm64_every_router() {
+    let routers = ["min", "valiant", "ugal", "omniwar", "brinr", "srinr", "tera-hx2"];
+    for routing in routers {
+        for spec in batched_specs("fm64", routing, "complement", 7) {
+            assert_batched_invariant(spec);
+        }
+    }
+}
+
+/// All five 2D-HyperX routers on HX[8x8].
+#[test]
+fn batched_bit_identical_hx8x8_every_router() {
+    let routers = ["min", "omniwar-hx", "dimwar", "dor-tera", "o1turn-tera"];
+    for routing in routers {
+        for spec in batched_specs("hx8x8", routing, "shift", 7) {
+            assert_batched_invariant(spec);
         }
     }
 }

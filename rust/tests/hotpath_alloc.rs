@@ -1,0 +1,144 @@
+//! Zero-allocation proof for the batched routing hot path.
+//!
+//! The batched compute phase (DESIGN.md "Batched hot path") promises zero
+//! per-decision heap traffic: candidate sets live in the caller's reused
+//! [`CandidateBuf`] SoA scratch and the gather passes reuse preallocated
+//! lane buffers. This binary installs a counting global allocator and
+//! drives `Router::route_batched` (and the scalar `Router::route`
+//! reference) over synthetic switch views for every router, asserting
+//! that after a short warmup — which is allowed to grow the scratch to
+//! steady-state capacity — the measured window performs NO allocator
+//! events at all.
+//!
+//! This is an integration-test binary on purpose: `#[global_allocator]`
+//! is process-wide, and the file holds a single `#[test]` so no parallel
+//! test can allocate concurrently and pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use tera_net::config::spec::{routing_by_name, topology_by_name};
+use tera_net::routing::CandidateBuf;
+use tera_net::sim::packet::{Packet, NO_SWITCH};
+use tera_net::sim::SwitchView;
+use tera_net::topology::TopoKind;
+use tera_net::util::Rng;
+
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Drive `iters` routing decisions over synthetic views and return the
+/// number of allocator events observed in the measured window (warmup
+/// excluded). Mirrors the `perf_hotpath` route-throughput harness so the
+/// test pins exactly what the bench measures.
+fn alloc_events(host: &str, routing: &str, iters: usize, batched: bool) -> u64 {
+    let topo = Arc::new(topology_by_name(host).unwrap());
+    let router = routing_by_name(routing, topo.clone(), 54).unwrap();
+    let n = topo.n;
+    let vcs = router.num_vcs();
+    let degree = topo.max_degree(); // FM and square HyperX are regular
+    let spc = 8;
+    let ports = degree + spc;
+    let mut rng = Rng::new(0xA110C);
+    let occ: Vec<u32> = (0..ports).map(|i| ((i * 37) % 160) as u32).collect();
+    let out_lens: Vec<u32> = (0..ports * vcs).map(|i| ((i * 13) % 5) as u32).collect();
+    let grants = vec![0u8; ports];
+    let last = vec![u64::MAX; ports];
+    let mut pkt = Packet {
+        src_server: 0,
+        dst_server: 0,
+        src_sw: 0,
+        dst_sw: 1,
+        intermediate: NO_SWITCH,
+        hops: 0,
+        vc: 0,
+        scratch: 0,
+        blocked: 0,
+        gen_cycle: 0,
+        inject_cycle: 0,
+        flits: 16,
+        msg: tera_net::sim::NO_MESSAGE,
+    };
+    let is_hx = matches!(topo.kind, TopoKind::HyperX { .. });
+    let mut buf = CandidateBuf::new();
+    let mut sink = 0usize;
+    let mut run = |iters: usize, rng: &mut Rng, sink: &mut usize| {
+        for i in 0..iters {
+            let s = i % n;
+            let mut d = (i * 7 + 1) % n;
+            if d == s {
+                d = (d + 1) % n;
+            }
+            pkt.src_sw = s as u32;
+            pkt.dst_sw = d as u32;
+            pkt.intermediate = NO_SWITCH;
+            pkt.hops = 0;
+            pkt.blocked = 0;
+            // Alternate injection/transit decisions to cover both paths;
+            // the 2D-HyperX routers track transit through scratch bits.
+            let transit = i % 2 == 1;
+            let at_injection = if is_hx { true } else { !transit };
+            pkt.scratch = if is_hx && transit { 0b111 } else { 0 };
+            let view = SwitchView::from_raw(
+                s, degree, 1, 2, vcs, 5, &occ, &out_lens, &grants, &last,
+            );
+            let decision = if batched {
+                router.route_batched(&view, &mut pkt, at_injection, rng, &mut buf)
+            } else {
+                router.route(&view, &mut pkt, at_injection, rng, &mut buf)
+            };
+            if let Some((p, _vc)) = decision {
+                *sink += p;
+            }
+        }
+    };
+    // Warmup grows the candidate buffer to its steady-state capacity.
+    run(1_000, &mut rng, &mut sink);
+    let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+    run(iters, &mut rng, &mut sink);
+    let events = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+    std::hint::black_box(sink);
+    events
+}
+
+#[test]
+fn routing_hot_path_is_allocation_free() {
+    // Every router on its host topology, scalar AND batched entry points.
+    let cases: [(&str, &[&str]); 2] = [
+        ("fm64", &["min", "valiant", "ugal", "omniwar", "brinr", "srinr", "tera-hx2"]),
+        ("hx8x8", &["min", "omniwar-hx", "dimwar", "dor-tera", "o1turn-tera"]),
+    ];
+    for (host, routings) in cases {
+        for routing in routings {
+            for batched in [false, true] {
+                let mode = if batched { "batched" } else { "scalar" };
+                let events = alloc_events(host, routing, 20_000, batched);
+                assert_eq!(
+                    events, 0,
+                    "{routing}@{host} ({mode}): allocated on the routing hot path"
+                );
+            }
+        }
+    }
+}

@@ -288,6 +288,17 @@ fn assert_decisions_match<L>(
 
 type LegacyDecision = Option<(usize, usize)>;
 
+/// Bridge the legacy mirrors' tuple-`Vec` candidate sets onto the SoA
+/// [`CandidateBuf`] the selection functions now take. Push order is
+/// preserved, so the paired-RNG tie-break comparison is unchanged.
+fn buf_of(cands: &[(usize, usize, u32)]) -> CandidateBuf {
+    let mut buf = CandidateBuf::new();
+    for &(p, v, w) in cands {
+        buf.push(p, v, w);
+    }
+    buf
+}
+
 /// Legacy MIN: DOR closed form + `port_to` per decision.
 fn legacy_min(
     topo: &Arc<PhysTopology>,
@@ -446,7 +457,7 @@ fn legacy_linkorder(
             let p = topo.port_to(s, m as usize).unwrap();
             cands.push((p, 0, view.occ_flits(p) + q));
         }
-        let pick = select_weighted_or_escape(view, &cands, None, rng)?;
+        let pick = select_weighted_or_escape(view, &buf_of(&cands), None, rng)?;
         let to = topo.neighbor(s, pick.0);
         pkt.scratch = labels[s * n + to] + 1;
         Some(pick)
@@ -670,7 +681,7 @@ fn legacy_dor_tera(
             &mut cands,
         );
         let escape = (pkt.blocked >= ESCAPE_PATIENCE).then_some(escape);
-        let pick = select_weighted_or_escape(view, &cands, escape, rng)?;
+        let pick = select_weighted_or_escape(view, &buf_of(&cands), escape, rng)?;
         pkt.scratch |= hop_bit;
         Some(pick)
     }
@@ -713,7 +724,7 @@ fn legacy_o1turn_tera(
             &mut cands,
         );
         let escape = (pkt.blocked >= ESCAPE_PATIENCE).then_some(escape);
-        let pick = select_weighted_or_escape(view, &cands, escape, rng)?;
+        let pick = select_weighted_or_escape(view, &buf_of(&cands), escape, rng)?;
         pkt.scratch |= hop_bit;
         Some(pick)
     }
@@ -746,7 +757,7 @@ fn legacy_dimwar(
                 }
             }
         }
-        let pick = select_min_weight(view, &cands, rng)?;
+        let pick = select_min_weight(view, &buf_of(&cands), rng)?;
         pkt.scratch |= hop_bit;
         Some(pick)
     }
@@ -779,7 +790,7 @@ fn legacy_omniwar_hx(
                 }
             }
         }
-        let pick = select_min_weight(view, &cands, rng)?;
+        let pick = select_min_weight(view, &buf_of(&cands), rng)?;
         let to = topo.neighbor(cur, pick.0);
         let dim = if geom.coord(to, 0) != geom.coord(cur, 0) {
             0
