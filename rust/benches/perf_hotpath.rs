@@ -14,6 +14,12 @@
 //!     the measured decisions in both modes (the table-driven-core
 //!     acceptance gate). Per-router scalar/batched rows also land in
 //!     **`BENCH_route.json`** (section `route`) for the perf gate;
+//!   * **routing-table tiers**: flat vs compressed compile wall time and
+//!     resident table bytes at FM300 / HX[8x8] / df65x16x8 (threaded
+//!     compile; ≥10× memory reduction at the ~1k-switch Dragonfly
+//!     asserted in-bench), plus the million-endpoint-class df2049x64x32
+//!     point compressed-only on full runs — **`BENCH_tables.json`**
+//!     (section `tables`);
 //!   * **batched hot path**: scalar vs batched compute-phase A/B on the
 //!     saturated FM300 RSP point (`SimConfig::batched`), with delivered
 //!     flits asserted equal — the gather/score/commit restructure's
@@ -51,11 +57,11 @@ use std::sync::Arc;
 use tera_net::config::spec::{routing_by_name, topology_by_name, ExperimentSpec, TrafficSpec};
 use tera_net::engine::Engine;
 use tera_net::metrics::SimStats;
-use tera_net::routing::{CandidateBuf, HxTables, RoutingTables};
-use tera_net::service::{HyperXService, ServiceTopology};
+use tera_net::routing::{CandidateBuf, HxTables, RoutingTables, TableTier};
+use tera_net::service::{DragonflyService, HyperXService, ServiceTopology};
 use tera_net::sim::packet::{Packet, NO_SWITCH};
 use tera_net::sim::{Network, RunOpts, SimConfig, SwitchView};
-use tera_net::topology::TopoKind;
+use tera_net::topology::{dragonfly, PhysTopology, TopoKind};
 use tera_net::traffic::kernels::{allreduce_rabenseifner, KernelWorkload, Mapping};
 use tera_net::traffic::FlowSpec;
 use tera_net::util::{Rng, Timer};
@@ -394,6 +400,28 @@ fn flow_point(scenario: &str, routing: &str) -> (f64, SimStats) {
     (t.elapsed_secs(), stats)
 }
 
+/// Compile the `RoutingTables` layer once for an instance/tier and return
+/// `(wall_secs, resident_table_bytes)`.
+fn table_build(
+    topo: &Arc<PhysTopology>,
+    svc: Option<Arc<dyn ServiceTopology>>,
+    tier: TableTier,
+    threads: usize,
+) -> (f64, usize) {
+    let t = Timer::start();
+    let tables = RoutingTables::compile_with(topo.clone(), svc, tier, threads);
+    let wall = t.elapsed_secs();
+    (wall, std::hint::black_box(tables).table_bytes())
+}
+
+/// The tree4 group service lifted onto a Dragonfly host (the VC-less
+/// deadlock-free TERA embedding the table-tier headline is measured with).
+fn df_tree4(topo: &Arc<PhysTopology>) -> Arc<dyn ServiceTopology> {
+    let geom = topo.kind.df_geom().expect("dragonfly host");
+    let group = tera_net::service::by_name("tree4", geom.g).expect("tree4 group service");
+    Arc::new(DragonflyService::new(geom, group))
+}
+
 /// One FM300 Bernoulli sweep point, fixed budget (`stop_rel_ci = None`)
 /// or statistically early-terminated. Returns `(wall_secs, stats)`.
 fn fm300_point(stop_rel_ci: Option<f64>, horizon: u64) -> (f64, SimStats) {
@@ -435,6 +463,82 @@ fn main() {
         let _tables300 = RoutingTables::compile(fm300, None);
         println!("build fm300 min-port only  {:>8.3} ms", t.elapsed_ms());
     }
+
+    // ---- Hierarchical table tier: compile wall + resident bytes. ----
+    // Flat vs compressed at the paper-scale points, threaded compile. The
+    // acceptance headline (≥10× memory reduction at the ~1k-switch
+    // Dragonfly, compile in seconds) is asserted in-bench; the full run
+    // additionally builds the million-endpoint-class df2049x64x32 point
+    // (131,136 switches × 8 servers/switch) compressed-only — its flat
+    // tables would need ~100 GB. Rows land in BENCH_tables.json
+    // (section `tables`) for the perf gate.
+    println!("\n== routing-table tiers: compile wall + resident bytes ==\n");
+    println!("{:<26} {:>12} {:>14}", "instance-tier", "build ms", "table bytes");
+    let threads = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let mut trows: Vec<String> = Vec::new();
+    let mut trow = |rows: &mut Vec<String>, label: &str, wall: f64, bytes: usize| {
+        println!("{label:<26} {:>12.1} {bytes:>14}", wall * 1e3);
+        rows.push(format!(
+            "    {{\"section\": \"tables\", \"label\": \"{label}\", \
+             \"wall_secs\": {wall:.6}, \"table_bytes\": {bytes}}}"
+        ));
+    };
+    {
+        let fm300 = Arc::new(topology_by_name("fm300").unwrap());
+        let svc: Arc<dyn ServiceTopology> =
+            Arc::from(tera_net::service::by_name("path", fm300.n).unwrap());
+        let (w, b) = table_build(&fm300, Some(svc), TableTier::Flat, threads);
+        trow(&mut trows, "fm300-flat", w, b);
+        let hx = Arc::new(topology_by_name("hx8x8").unwrap());
+        let svc: Arc<dyn ServiceTopology> =
+            Arc::from(tera_net::service::by_name("mesh2", hx.n).unwrap());
+        let (w, b) = table_build(&hx, Some(svc), TableTier::Flat, threads);
+        trow(&mut trows, "hx8x8-flat", w, b);
+        let df1k = Arc::new(dragonfly(65, 16, 8)); // 1040 switches
+        let svc = df_tree4(&df1k);
+        let (w_flat, b_flat) = table_build(&df1k, Some(svc.clone()), TableTier::Flat, threads);
+        trow(&mut trows, "df65x16x8-flat", w_flat, b_flat);
+        let (w_comp, b_comp) = table_build(&df1k, Some(svc), TableTier::Compressed, threads);
+        trow(&mut trows, "df65x16x8-compressed", w_comp, b_comp);
+        assert!(
+            b_flat >= 10 * b_comp,
+            "compressed tier must cut table memory ≥10× at the Dragonfly-1k \
+             point (flat {b_flat} B vs compressed {b_comp} B)"
+        );
+        assert!(
+            w_comp < 10.0,
+            "Dragonfly-1k compressed compile must finish in seconds (took {w_comp:.1}s)"
+        );
+        println!(
+            "df65x16x8 compression {:.1}x, compressed compile {:.1} ms",
+            b_flat as f64 / b_comp as f64,
+            w_comp * 1e3
+        );
+        if !quick() {
+            let t = Timer::start();
+            let big = Arc::new(dragonfly(2049, 64, 32)); // 131,136 switches
+            let topo_wall = t.elapsed_secs();
+            let svc = df_tree4(&big);
+            let (w, b) = table_build(&big, Some(svc), TableTier::Compressed, threads);
+            trow(&mut trows, "df2049x64x32-compressed", w, b);
+            println!(
+                "df2049x64x32: topology {topo_wall:.2}s + tables {w:.2}s, \
+                 {} switches ({} endpoints at 8 srv/sw)",
+                big.n,
+                big.n * 8
+            );
+        }
+    }
+    let tjson = format!(
+        "{{\n  \"bench\": \"table-tiers\",\n  \"quick\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        quick(),
+        trows.join(",\n")
+    );
+    match std::fs::write("BENCH_tables.json", &tjson) {
+        Ok(()) => println!("wrote BENCH_tables.json (≥10x compression at df-1k: VERIFIED)"),
+        Err(e) => println!("could not write BENCH_tables.json: {e}"),
+    }
+
     let mut bench = CycleBench::new();
     println!();
     println!(

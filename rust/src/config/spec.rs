@@ -7,9 +7,9 @@ use std::sync::Arc;
 
 use super::Value;
 use crate::metrics::SimStats;
-use crate::routing::{self, HxTables, Router, RoutingTables};
+use crate::routing::{self, HxTables, Router, RoutingTables, TableTier};
 use crate::sim::{Network, SimError};
-use crate::topology::{full_mesh, hyperx, PhysTopology};
+use crate::topology::{dragonfly, full_mesh, hyperx, PhysTopology};
 use crate::traffic::kernels::Mapping;
 use crate::traffic::{FlowSpec, Workload};
 
@@ -44,8 +44,16 @@ pub enum TrafficSpec {
 #[derive(Clone, Debug)]
 pub struct ExperimentSpec {
     pub name: String,
-    /// `fm<N>` (e.g. `fm64`) or `hx<A>x<B>` (e.g. `hx8x8`).
+    /// `fm<N>` (e.g. `fm64`), `hx<A>x<B>` (e.g. `hx8x8`) or
+    /// `df<G>x<A>x<H>` (e.g. `df9x4x2`).
     pub topology: String,
+    /// Optional host override for the TERA-on-any-host scenarios
+    /// (`--host hx8x8` with `routing = "tera-hx2"`). Kept *separate* from
+    /// `topology` so the engine's compiled-table cache can key on the
+    /// topology the run actually uses ([`Self::effective_topology`]) —
+    /// folding the override into `topology` at parse time used to make two
+    /// specs that differ only in `host` collide in the cache.
+    pub host: Option<String>,
     pub servers_per_switch: usize,
     /// Routing algorithm name, see [`routing_by_name`] for the vocabulary.
     pub routing: String,
@@ -82,6 +90,7 @@ impl Default for ExperimentSpec {
         Self {
             name: "experiment".into(),
             topology: "fm16".into(),
+            host: None,
             servers_per_switch: 4,
             routing: "tera-hx2".into(),
             q: crate::routing::tera::DEFAULT_Q,
@@ -101,7 +110,7 @@ impl Default for ExperimentSpec {
     }
 }
 
-/// Parse `fm64` / `hx8x8` into a physical topology.
+/// Parse `fm64` / `hx8x8` / `df9x4x2` into a physical topology.
 pub fn topology_by_name(name: &str) -> anyhow::Result<PhysTopology> {
     let lower = name.to_ascii_lowercase();
     if let Some(n) = lower.strip_prefix("fm") {
@@ -117,7 +126,26 @@ pub fn topology_by_name(name: &str) -> anyhow::Result<PhysTopology> {
         anyhow::ensure!(!dims.is_empty(), "hyperx needs dimensions");
         return Ok(hyperx(&dims));
     }
-    anyhow::bail!("unknown topology '{name}' (expected fm<N> or hx<A>x<B>)")
+    if let Some(rest) = lower.strip_prefix("df") {
+        let p: Vec<usize> = rest
+            .split('x')
+            .map(|s| s.parse::<usize>())
+            .collect::<Result<_, _>>()?;
+        anyhow::ensure!(
+            p.len() == 3,
+            "dragonfly needs df<groups>x<routers_per_group>x<globals_per_router>"
+        );
+        anyhow::ensure!(
+            p[0] <= 1 || (p[1] * p[2]) % (p[0] - 1) == 0,
+            "palmtree dragonfly df{}x{}x{} needs routers_per_group × \
+             globals_per_router divisible by groups − 1",
+            p[0],
+            p[1],
+            p[2]
+        );
+        return Ok(dragonfly(p[0], p[1], p[2]));
+    }
+    anyhow::bail!("unknown topology '{name}' (expected fm<N>, hx<A>x<B> or df<G>x<A>x<H>)")
 }
 
 /// Build a router by figure-name. Every name resolves to a *table
@@ -131,20 +159,38 @@ pub fn topology_by_name(name: &str) -> anyhow::Result<PhysTopology> {
 /// 2D-HyperX: `min`, `omniwar-hx`, `dimwar`, `dor-tera`, `o1turn-tera` —
 /// plus any `tera-<svc>` whose service edges the host contains (the
 /// `--host` knob; e.g. `tera-mesh2` on `hx4x4`).
+/// Dragonfly: `min`, `valiant`, `ugal`, `brinr`, `srinr` (group-level
+/// labels), and `tera-<svc>` where `<svc>` names a *tree* service over the
+/// full mesh of groups (`tera-path`, `tera-tree2`, `tera-tree4` —
+/// cyclic group services are rejected, see `service::dragonfly`).
 pub fn routing_by_name(
     name: &str,
     topo: Arc<PhysTopology>,
     q: u32,
 ) -> anyhow::Result<Arc<dyn Router>> {
+    routing_by_name_threads(name, topo, q, 1)
+}
+
+/// [`routing_by_name`] with an explicit thread budget for the one-time
+/// table compile (the engine passes its worker budget through here). The
+/// compiled tables — and therefore every routing decision — are
+/// bit-identical at any thread count; threads only cut compile wall time.
+pub fn routing_by_name_threads(
+    name: &str,
+    topo: Arc<PhysTopology>,
+    q: u32,
+    threads: usize,
+) -> anyhow::Result<Arc<dyn Router>> {
     let lower = name.to_ascii_lowercase();
-    let plain_tables = |topo| Arc::new(RoutingTables::compile(topo, None));
+    let plain_tables =
+        |topo| Arc::new(RoutingTables::compile_with(topo, None, TableTier::Auto, threads));
     Ok(match lower.as_str() {
         "min" => Arc::new(routing::MinRouter::new(plain_tables(topo))),
         "valiant" => Arc::new(routing::ValiantRouter::new(plain_tables(topo))),
         "ugal" => Arc::new(routing::UgalRouter::new(plain_tables(topo))),
         "omniwar" | "omni-war" => Arc::new(routing::OmniWarRouter::new(plain_tables(topo))),
-        "brinr" => Arc::new(routing::LinkOrderRouter::brinr(topo, q)),
-        "srinr" => Arc::new(routing::LinkOrderRouter::srinr(topo, q)),
+        "brinr" => Arc::new(routing::LinkOrderRouter::brinr_threads(topo, q, threads)),
+        "srinr" => Arc::new(routing::LinkOrderRouter::srinr_threads(topo, q, threads)),
         "omniwar-hx" => Arc::new(routing::OmniWarHxRouter::new(Arc::new(
             HxTables::geometry(topo),
         ))),
@@ -163,9 +209,25 @@ pub fn routing_by_name(
         }
         _ => {
             if let Some(svc_name) = lower.strip_prefix("tera-") {
-                let svc: Arc<dyn crate::service::ServiceTopology> =
-                    Arc::from(crate::service::by_name(svc_name, topo.n)?);
-                let tables = Arc::new(RoutingTables::compile(topo, Some(svc)));
+                // On a Dragonfly host the named service is interpreted one
+                // level up: it spans the g groups, and the TERA service
+                // topology is its hierarchical expansion (locals + one
+                // gateway link per group-service edge). `try_new` rejects
+                // non-tree group services — the expansion is only VC-less
+                // deadlock-free over a group tree.
+                let svc: Arc<dyn crate::service::ServiceTopology> = match topo.kind.df_geom() {
+                    Some(geom) => {
+                        let inner = crate::service::by_name(svc_name, geom.g)?;
+                        Arc::new(crate::service::DragonflyService::try_new(geom, inner)?)
+                    }
+                    None => Arc::from(crate::service::by_name(svc_name, topo.n)?),
+                };
+                let tables = Arc::new(RoutingTables::compile_with(
+                    topo,
+                    Some(svc),
+                    TableTier::Auto,
+                    threads,
+                ));
                 Arc::new(routing::TeraRouter::from_tables(tables, q))
             } else {
                 anyhow::bail!("unknown routing '{name}'")
@@ -197,6 +259,13 @@ fn sub_service(a: usize) -> anyhow::Result<Arc<dyn crate::service::ServiceTopolo
 }
 
 impl ExperimentSpec {
+    /// The topology name this run actually simulates: the `host` override
+    /// when present, else `topology`. Everything that builds or caches
+    /// per-topology state (engine, `build_network`) must go through this.
+    pub fn effective_topology(&self) -> &str {
+        self.host.as_deref().unwrap_or(&self.topology)
+    }
+
     /// Construct the workload for this spec (delegates to the engine).
     pub fn build_workload(&self, topo: &PhysTopology) -> anyhow::Result<Box<dyn Workload>> {
         crate::engine::build_workload(self, topo)
@@ -230,11 +299,12 @@ impl ExperimentSpec {
         if let Some(s) = get_str("topology") {
             spec.topology = s;
         }
-        // `host` is an alias for `topology`, named for the TERA-on-any-host
-        // scenarios (`host = "hx8x8"` with `routing = "tera-hx2"`); it wins
-        // when both are given.
+        // `host` overrides `topology` for the TERA-on-any-host scenarios
+        // (`host = "hx8x8"` with `routing = "tera-hx2"`). Stored as its own
+        // field — see [`ExperimentSpec::host`] — so the engine's compiled-
+        // table cache sees it.
         if let Some(s) = get_str("host") {
-            spec.topology = s;
+            spec.host = Some(s);
         }
         if let Some(i) = get_int("servers_per_switch") {
             spec.servers_per_switch = i as usize;
@@ -365,6 +435,12 @@ mod tests {
         assert_eq!(topology_by_name("fm16").unwrap().n, 16);
         assert_eq!(topology_by_name("hx8x8").unwrap().n, 64);
         assert_eq!(topology_by_name("hx4x4x4").unwrap().n, 64);
+        let df = topology_by_name("df9x4x2").unwrap();
+        assert_eq!(df.n, 36);
+        assert_eq!(df.name(), "DF[9x4x2]");
+        // Unbalanced palmtree parameters fail loudly, not in a panic.
+        assert!(topology_by_name("df10x4x2").is_err());
+        assert!(topology_by_name("df9x4").is_err());
         assert!(topology_by_name("ring5").is_err());
     }
 
@@ -422,8 +498,29 @@ mod tests {
         )
         .unwrap();
         let spec = ExperimentSpec::from_value(&cfg).unwrap();
-        assert_eq!(spec.topology, "hx4x4");
+        // The override is kept as its own field (so the engine's table
+        // cache can key on it) and wins at build time.
+        assert_eq!(spec.topology, "fm16");
+        assert_eq!(spec.host.as_deref(), Some("hx4x4"));
+        assert_eq!(spec.effective_topology(), "hx4x4");
         assert_eq!(spec.routing, "tera-mesh2");
+        let plain_cfg = crate::config::parse("topology = \"fm16\"\n").unwrap();
+        let plain = ExperimentSpec::from_value(&plain_cfg).unwrap();
+        assert_eq!(plain.effective_topology(), "fm16");
+    }
+
+    #[test]
+    fn all_df_routings_construct() {
+        for r in ["min", "valiant", "ugal", "brinr", "srinr", "tera-path", "tera-tree4"] {
+            let topo = Arc::new(topology_by_name("df9x4x2").unwrap());
+            let router = routing_by_name(r, topo, 54).unwrap();
+            assert!(!router.name().is_empty(), "{r}");
+        }
+        // TERA over a Dragonfly wraps the named service one level up and
+        // rejects cyclic group services (VC-less deadlock-freedom needs a
+        // group tree — see service::dragonfly).
+        let topo = Arc::new(topology_by_name("df9x4x2").unwrap());
+        assert!(routing_by_name("tera-mesh2", topo, 54).is_err());
     }
 
     #[test]

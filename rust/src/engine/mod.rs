@@ -14,9 +14,14 @@
 //!   `RoutingTables`/`HxTables` and a reused `CandidateBuf` — never a
 //!   trait call into the service topology. Compiled `(topology, router)`
 //!   pairs are **cached** inside the engine behind `Arc`s, keyed by
-//!   `(topology, routing, q)`: a 20-point load sweep on FM300 builds its
+//!   `(effective topology, routing, q)` — the *effective* topology, i.e.
+//!   with any `--host` override applied, so two specs differing only in
+//!   host never collide: a 20-point load sweep on FM300 builds its
 //!   tables once, not per point (routers are stateless policies, so
-//!   sharing them across concurrent runs is sound by construction);
+//!   sharing them across concurrent runs is sound by construction). Table
+//!   compilation itself fans out over the engine's thread budget
+//!   (`routing_by_name_threads` → `RoutingTables::compile_with`), which is
+//!   what keeps ~1k-switch Dragonfly table builds in seconds;
 //! * [`Engine::run_one`] — build and run a single spec;
 //! * [`Engine::run_batch`] — fan a batch out over worker threads (tokio is
 //!   not in the offline crate set; std threads are a perfect fit for
@@ -40,7 +45,9 @@
 use std::collections::HashMap;
 use std::sync::{mpsc, Arc, Mutex};
 
-use crate::config::spec::{routing_by_name, topology_by_name, ExperimentSpec, TrafficSpec};
+use crate::config::spec::{
+    routing_by_name, routing_by_name_threads, topology_by_name, ExperimentSpec, TrafficSpec,
+};
 use crate::metrics::{FctStats, LatencyHist, SimStats};
 use crate::routing::Router;
 use crate::sim::{Network, RunOpts, SimConfig, SimError};
@@ -144,7 +151,7 @@ pub fn build_workload(
 /// thread-budget clamp instead; use this free function when you want exact
 /// control, e.g. the sharding benches and determinism tests.
 pub fn build_network(spec: &ExperimentSpec) -> anyhow::Result<Network> {
-    let topo = Arc::new(topology_by_name(&spec.topology)?);
+    let topo = Arc::new(topology_by_name(spec.effective_topology())?);
     let router = routing_by_name(&spec.routing, topo.clone(), spec.q)?;
     Ok(Network::new(topo, router, sim_config(spec)))
 }
@@ -301,9 +308,12 @@ fn throughput_rel_ci_of(stats: &[SimStats]) -> Option<f64> {
     Some(crate::metrics::steady::t_975(k - 1) * sd / (k as f64).sqrt() / mean)
 }
 
-/// Cache key for compiled routing state: `(topology, routing, q)`,
-/// case-normalized. Everything else a spec can vary (seed, traffic, spc,
-/// shards) does not enter table compilation.
+/// Cache key for compiled routing state: `(effective topology, routing,
+/// q)`, case-normalized. The *effective* topology is the `--host` override
+/// when present (the old key used the raw `topology` field, so two specs
+/// differing only in `host` shared one compilation — and the second got
+/// the first one's tables). Everything else a spec can vary (seed,
+/// traffic, spc, shards) does not enter table compilation.
 type RouterKey = (String, String, u32);
 
 /// A compiled routing artifact: the topology and the table-backed router
@@ -355,12 +365,13 @@ impl Engine {
     }
 
     /// The compiled `(topology, router)` pair for a spec, built on first
-    /// use and shared afterwards. Misses build under the lock: table
-    /// compilation is milliseconds even at FM300, and serializing it
-    /// guarantees each key is built exactly once per engine.
+    /// use and shared afterwards. Misses build under the lock: even the
+    /// ~1k-switch Dragonfly compile is fast (it fans out over the engine's
+    /// thread budget), and serializing it guarantees each key is built
+    /// exactly once per engine.
     fn compiled_for(&self, spec: &ExperimentSpec) -> anyhow::Result<CompiledRouting> {
         let key = (
-            spec.topology.to_ascii_lowercase(),
+            spec.effective_topology().to_ascii_lowercase(),
             spec.routing.to_ascii_lowercase(),
             spec.q,
         );
@@ -368,8 +379,8 @@ impl Engine {
         if let Some((topo, router)) = cache.get(&key) {
             return Ok((topo.clone(), router.clone()));
         }
-        let topo = Arc::new(topology_by_name(&spec.topology)?);
-        let router = routing_by_name(&spec.routing, topo.clone(), spec.q)?;
+        let topo = Arc::new(topology_by_name(spec.effective_topology())?);
+        let router = routing_by_name_threads(&spec.routing, topo.clone(), spec.q, self.threads)?;
         cache.insert(key, (topo.clone(), router.clone()));
         Ok((topo, router))
     }
@@ -660,6 +671,35 @@ mod tests {
         let cold = Engine::single_threaded().run_one(&tiny_spec("tera-path", 2)).unwrap();
         let warm = engine.run_one(&tiny_spec("tera-path", 2)).unwrap();
         assert_eq!(cold, warm);
+    }
+
+    #[test]
+    fn host_override_gets_its_own_cache_entry() {
+        // Regression: the cache used to key on the raw `topology` field,
+        // so a spec with a `--host` override silently reused the tables
+        // compiled for the un-overridden topology.
+        let engine = Engine::single_threaded();
+        let base = ExperimentSpec {
+            topology: "fm16".into(),
+            servers_per_switch: 2,
+            routing: "tera-mesh2".into(),
+            traffic: TrafficSpec::Fixed {
+                pattern: "uniform".into(),
+                packets_per_server: 3,
+            },
+            ..Default::default()
+        };
+        let hosted = ExperimentSpec {
+            host: Some("hx4x4".into()),
+            ..base.clone()
+        };
+        // The hosted instance really runs on the override topology…
+        let inst = engine.build(&hosted).unwrap();
+        assert_eq!(inst.network.topo.name(), "HyperX[4x4]");
+        // …and the two specs compile two distinct table sets.
+        engine.run_one(&base).unwrap();
+        engine.run_one(&hosted).unwrap();
+        assert_eq!(engine.compiled_routers(), 2);
     }
 
     #[test]

@@ -129,14 +129,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     };
     let spec = ExperimentSpec {
         name: "cli-run".into(),
-        // `--host` is an alias for `--topology`, named for the TERA-on-any-
-        // host scenarios (`--routing tera-hx2 --host hx8x8`); it wins when
-        // both are given.
-        topology: args
-            .get("host")
-            .or_else(|| args.get("topology"))
-            .unwrap_or("fm16")
-            .into(),
+        // `--host` overrides `--topology` for the TERA-on-any-host
+        // scenarios (`--routing tera-hx2 --host hx8x8`). It is carried as
+        // its own spec field so the engine's compiled-table cache keys on
+        // the topology the run actually uses.
+        topology: args.get_or("topology", "fm16").into(),
+        host: args.get("host").map(str::to_string),
         servers_per_switch: args.get_usize("spc", 4)?,
         routing: args.get_or("routing", "tera-hx2").into(),
         q: args.get_usize("q", 54)? as u32,
@@ -403,9 +401,12 @@ COMMANDS:
   help                this text
 
 RUN FLAGS:
-  --topology fm64|hx8x8   --routing min|valiant|ugal|omniwar|brinr|srinr|
-                          tera-<svc>|dor-tera|o1turn-tera|dimwar|omniwar-hx
-  --host fm64|hx8x8       alias for --topology: run a TERA variant on either
+  --topology fm64|hx8x8|df9x4x2   --routing min|valiant|ugal|omniwar|brinr|
+                          srinr|tera-<svc>|dor-tera|o1turn-tera|dimwar|
+                          omniwar-hx  (df<G>x<A>x<H> = palmtree Dragonfly;
+                          tera-<svc> there takes a *tree* group service,
+                          e.g. tera-tree4, and compiles compressed tables)
+  --host fm64|hx8x8       overrides --topology: run a TERA variant on any
                           host, e.g. --routing tera-mesh2 --host hx8x8
                           (any tera-<svc> whose edges the host contains)
   --mode bernoulli|fixed|kernel|flows  --pattern uniform|rsp|fr|shift|complement

@@ -17,6 +17,18 @@
 //!   high-id switches serve far more pairs than low-id ones
 //!   (see DESIGN.md, Substitution 3).
 
+//!
+//! On a **Dragonfly** host the same schemes apply one level up: the group
+//! graph is a full mesh, so the labels order group arcs, and an allowed
+//! detour is one global hop into an intermediate group `m` with
+//! `L(g_s, m) < L(m, g_d)`, finished minimally. This is the natural RINR
+//! port to hierarchical topologies the paper's §3 machinery suggests; the
+//! intra-group local hops ride the minimal chain. The label argument
+//! acyclifies the *global*-channel dependencies only — the shared local
+//! channels keep the classic Dragonfly l–g–l hazard, so unlike the
+//! Full-mesh arm this mode is a baseline, not a deadlock-freedom claim
+//! (that is exactly the gap the TERA service embedding closes).
+
 use std::sync::Arc;
 
 use super::{select_weighted_or_escape, CandidateBuf, Decision, Router, RoutingTables};
@@ -152,11 +164,12 @@ impl LinkOrderRouter {
         Self::from_tables(tables, name, q)
     }
 
-    /// Build over pre-compiled tables (must carry link labels).
+    /// Build over pre-compiled tables (must carry switch-level link labels
+    /// — Full-mesh mode — or group-level labels — Dragonfly mode).
     pub fn from_tables(tables: Arc<RoutingTables>, name: &str, q: u32) -> Self {
         assert!(
-            tables.link_labels().is_some(),
-            "LinkOrderRouter needs tables compiled with link labels"
+            tables.link_labels().is_some() || tables.group_link_labels().is_some(),
+            "LinkOrderRouter needs tables compiled with link or group labels"
         );
         Self {
             tables,
@@ -165,18 +178,49 @@ impl LinkOrderRouter {
         }
     }
 
+    /// sRINR over the host's arc mesh: switch arcs on a Full-mesh, group
+    /// arcs on a Dragonfly.
     pub fn srinr(topo: Arc<PhysTopology>, q: u32) -> Self {
-        let labels = srinr_labels(topo.n);
-        Self::new(topo, labels, "sRINR", q)
+        Self::scheme(topo, q, 1, srinr_labels, "sRINR")
     }
 
+    /// bRINR over the host's arc mesh: switch arcs on a Full-mesh, group
+    /// arcs on a Dragonfly.
     pub fn brinr(topo: Arc<PhysTopology>, q: u32) -> Self {
-        let labels = brinr_labels(topo.n);
-        Self::new(topo, labels, "bRINR", q)
+        Self::scheme(topo, q, 1, brinr_labels, "bRINR")
+    }
+
+    /// [`Self::srinr`] with an explicit table-compile thread budget.
+    pub fn srinr_threads(topo: Arc<PhysTopology>, q: u32, threads: usize) -> Self {
+        Self::scheme(topo, q, threads, srinr_labels, "sRINR")
+    }
+
+    /// [`Self::brinr`] with an explicit table-compile thread budget.
+    pub fn brinr_threads(topo: Arc<PhysTopology>, q: u32, threads: usize) -> Self {
+        Self::scheme(topo, q, threads, brinr_labels, "bRINR")
+    }
+
+    fn scheme(
+        topo: Arc<PhysTopology>,
+        q: u32,
+        threads: usize,
+        labels: fn(usize) -> ArcLabels,
+        name: &str,
+    ) -> Self {
+        use super::tables::TableTier;
+        let tables = RoutingTables::compile_with(topo.clone(), None, TableTier::Auto, threads);
+        let tables = match topo.kind.df_geom() {
+            Some(geom) => tables.with_group_labels(labels(geom.g)),
+            None => tables.with_link_labels(labels(topo.n)),
+        };
+        Self::from_tables(Arc::new(tables), name, q)
     }
 
     pub fn labels(&self) -> &[u32] {
-        self.tables.link_labels().expect("compiled with labels")
+        self.tables
+            .link_labels()
+            .or_else(|| self.tables.group_link_labels())
+            .expect("compiled with labels")
     }
 
     /// Shared policy body; `batched` swaps the injection-time per-port
@@ -192,6 +236,9 @@ impl LinkOrderRouter {
         buf: &mut CandidateBuf,
         batched: bool,
     ) -> Option<Decision> {
+        if self.tables.group_link_labels().is_some() {
+            return self.route_df(view, pkt, at_injection, rng, buf, batched);
+        }
         let n = self.tables.n();
         let s = view.sw;
         let d = pkt.dst_sw as usize;
@@ -231,6 +278,56 @@ impl LinkOrderRouter {
         pkt.scratch = labels[s * n + to] + 1;
         Some(pick)
     }
+
+    /// Dragonfly (group-label) mode: at the source the candidates are the
+    /// direct hierarchical-minimal hop (no penalty) plus `s`'s own global
+    /// channels into every allowed intermediate group (`+q` each, from the
+    /// compiled [`RoutingTables::group_allowed_ports`] row); after
+    /// injection the packet finishes on the plain minimal chain (at most 3
+    /// hops, so a detoured packet takes ≤ 4 total).
+    fn route_df(
+        &self,
+        view: &SwitchView,
+        pkt: &mut Packet,
+        at_injection: bool,
+        rng: &mut Rng,
+        buf: &mut CandidateBuf,
+        batched: bool,
+    ) -> Option<Decision> {
+        let s = view.sw;
+        let d = pkt.dst_sw as usize;
+        let direct = self.tables.min_port(s, d);
+        if !at_injection {
+            return if view.has_space(direct, 0) {
+                Some((direct, 0))
+            } else {
+                None
+            };
+        }
+        let geom = self
+            .tables
+            .topo()
+            .kind
+            .df_geom()
+            .expect("group labels imply a Dragonfly host");
+        let gd = geom.group(d);
+        buf.clear();
+        if batched {
+            let occ = view.occ_slice();
+            buf.push(direct, 0, occ[direct]);
+            buf.extend_weighted(self.tables.group_allowed_ports(s, gd), occ, 0, self.q);
+        } else {
+            buf.push(direct, 0, view.occ_flits(direct));
+            for &p in self.tables.group_allowed_ports(s, gd) {
+                let p = p as usize;
+                buf.push(p, 0, view.occ_flits(p) + self.q);
+            }
+        }
+        // No escape, as in the Full-mesh arm: the group-arc labels strictly
+        // increase along any allowed detour, so waiting on the winner is
+        // the same §3 argument one level up.
+        select_weighted_or_escape(view, buf, None, rng)
+    }
 }
 
 impl Router for LinkOrderRouter {
@@ -265,7 +362,12 @@ impl Router for LinkOrderRouter {
     }
 
     fn max_hops(&self) -> usize {
-        2
+        if self.tables.group_link_labels().is_some() {
+            // One global detour hop + the ≤3-hop minimal finish.
+            4
+        } else {
+            2
+        }
     }
 }
 

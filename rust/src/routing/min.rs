@@ -3,14 +3,20 @@
 //! In a Full-mesh this is the single direct link (§1: "inherently
 //! deadlock-free", great under uniform traffic, collapses under adversarial
 //! patterns). On a HyperX the minimal route is resolved in dimension order
-//! (DOR), which stays deadlock-free with a single buffer class. Either way
-//! the decision is one compiled-table read: `RoutingTables::min_port`.
+//! (DOR), which stays deadlock-free with a single buffer class. On a
+//! Dragonfly it is the hierarchical local–global–local route
+//! ([`crate::topology::DfGeom::min_next`]) — note this one is *not*
+//! deadlock-free with a single buffer class (the classic Dragonfly
+//! hazard the paper's VC-less schemes exist to solve); MIN is kept as the
+//! latency baseline it is in every Dragonfly evaluation. Either way the
+//! decision is one compiled-table read: `RoutingTables::min_port`.
 
 use std::sync::Arc;
 
 use super::{CandidateBuf, Decision, Router, RoutingTables};
 use crate::sim::packet::Packet;
 use crate::sim::SwitchView;
+use crate::topology::TopoKind;
 use crate::util::Rng;
 
 pub struct MinRouter {
@@ -54,6 +60,12 @@ impl Router for MinRouter {
     }
 
     fn max_hops(&self) -> usize {
-        self.tables.topo().diameter()
+        match self.tables.topo().kind {
+            // The hierarchical l–g–l route can take 3 hops even where the
+            // graph distance is 2 (see `DfGeom::min_next`), so the bound is
+            // the route length, not the diameter.
+            TopoKind::Dragonfly { .. } => 3,
+            _ => self.tables.topo().diameter(),
+        }
     }
 }

@@ -33,7 +33,7 @@ pub use hyperx2d::{DimWarRouter, DorTeraRouter, O1TurnTeraRouter, OmniWarHxRoute
 pub use linkorder::{brinr_labels, srinr_labels, LinkOrderRouter};
 pub use min::MinRouter;
 pub use omniwar::OmniWarRouter;
-pub use tables::{CandidateBuf, Csr, HxTables, RoutingTables, TeraCore, NO_PORT16};
+pub use tables::{CandidateBuf, Csr, HxTables, RoutingTables, TableTier, TeraCore, NO_PORT16};
 pub use tera::TeraRouter;
 pub use ugal::UgalRouter;
 pub use valiant::ValiantRouter;

@@ -33,7 +33,7 @@ use std::sync::Arc;
 
 use crate::service::{Embedding, ServiceTopology};
 use crate::sim::SwitchView;
-use crate::topology::{coords, full_mesh, PhysTopology, TopoKind};
+use crate::topology::{coords, full_mesh, DfGeom, PhysTopology, TopoKind};
 use crate::util::Rng;
 
 use super::Decision;
@@ -225,18 +225,142 @@ impl CandidateBuf {
 // RoutingTables
 // --------------------------------------------------------------------------
 
+/// Which table representation [`RoutingTables::compile_with`] builds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TableTier {
+    /// Pick per topology: the compressed tier on a Dragonfly host (when the
+    /// service, if any, is group-structured), the flat tier otherwise.
+    #[default]
+    Auto,
+    /// Flat per-`(switch, dst)` arrays — O(n²) memory, any host.
+    Flat,
+    /// Hierarchical Dragonfly tables — O(a + h) per switch plus O(g²)
+    /// shared group matrices; lookups are closed-form.
+    Compressed,
+}
+
+/// The hierarchical (compressed) table tier for a Dragonfly host: per-switch
+/// state is one `u16` per *local peer* and one per *global channel* — the
+/// local radix — and the service routing lives in three shared `g × g`
+/// group matrices. Every flat-tier lookup is reproduced as O(1)/O(h)
+/// closed-form arithmetic over [`DfGeom`], so per-switch table state drops
+/// from O(n) to O(a + h) and million-endpoint instances become
+/// constructible. Decision-identity with the flat tier is pinned by
+/// `tests/table_tiers.rs`.
+struct DfTier {
+    geom: DfGeom,
+    /// `local_port[s * a + v]` — port of `s` toward local index `v` of its
+    /// own group (`NO_PORT16` at `s`'s own index).
+    local_port: Vec<u16>,
+    /// `glob_port[s * h + j]` — port of `s`'s `j`-th global channel
+    /// (empty when `g == 1`).
+    glob_port: Vec<u16>,
+    /// Group-level service matrices (copied out of
+    /// [`crate::service::DragonflyService`]); `None` without a service.
+    svc: Option<DfSvcMatrices>,
+}
+
+/// `g × g` group-level service matrices: next group on the service route,
+/// gateway-to-entry hop count, and the landing router in the destination
+/// group (see `service::dragonfly` for the exact semantics).
+struct DfSvcMatrices {
+    next: Vec<u16>,
+    base: Vec<u16>,
+    entry: Vec<u16>,
+}
+
+impl DfTier {
+    /// Closed-form DOR-minimal port — must agree with
+    /// `port_to(s, dor_next(s, d))` exactly (same `DfGeom` arithmetic on
+    /// both sides).
+    #[inline]
+    fn min_port(&self, s: usize, d: usize) -> usize {
+        let geom = &self.geom;
+        let (gs, rs) = (geom.group(s), geom.local(s));
+        let (gd, rd) = (geom.group(d), geom.local(d));
+        if gs == gd {
+            return self.local_port[s * geom.a + rd] as usize;
+        }
+        for j in 0..geom.h {
+            if geom.global_peer(gs, rs, j) == (gd, rd) {
+                return self.glob_port[s * geom.h + j] as usize;
+            }
+        }
+        if let Some(j) = geom.chan_to_group(gs, rs, gd) {
+            return self.glob_port[s * geom.h + j] as usize;
+        }
+        self.local_port[s * geom.a + geom.gate(gs, gd).0] as usize
+    }
+
+    /// Closed-form service next-hop port (mirrors
+    /// `DragonflyService::next_hop`).
+    #[inline]
+    fn svc_port(&self, s: usize, d: usize) -> usize {
+        let geom = &self.geom;
+        let m = self.svc.as_ref().expect("service matrices");
+        let (gs, rs) = (geom.group(s), geom.local(s));
+        let (gd, rd) = (geom.group(d), geom.local(d));
+        if gs == gd {
+            return self.local_port[s * geom.a + rd] as usize;
+        }
+        let nxt = m.next[gs * geom.g + gd] as usize;
+        let (xr, xj) = geom.gate(gs, nxt);
+        if rs == xr {
+            self.glob_port[s * geom.h + xj] as usize
+        } else {
+            self.local_port[s * geom.a + xr] as usize
+        }
+    }
+
+    /// Closed-form service distance (mirrors `DragonflyService::distance`).
+    #[inline]
+    fn svc_dist(&self, s: usize, d: usize) -> usize {
+        let geom = &self.geom;
+        let m = self.svc.as_ref().expect("service matrices");
+        let (gs, rs) = (geom.group(s), geom.local(s));
+        let (gd, rd) = (geom.group(d), geom.local(d));
+        if gs == gd {
+            return 1; // s == d is handled by the caller
+        }
+        let nxt = m.next[gs * geom.g + gd] as usize;
+        let (xr, _) = geom.gate(gs, nxt);
+        usize::from(rs != xr)
+            + m.base[gs * geom.g + gd] as usize
+            + usize::from(m.entry[gs * geom.g + gd] as usize != rd)
+    }
+
+    fn bytes(&self) -> usize {
+        let m = self
+            .svc
+            .as_ref()
+            .map_or(0, |m| m.next.len() + m.base.len() + m.entry.len());
+        (self.local_port.len() + self.glob_port.len() + m) * std::mem::size_of::<u16>()
+    }
+}
+
+/// The per-`(switch, dst)` representation behind the [`RoutingTables`]
+/// facade: flat O(n²) arrays, or the compressed Dragonfly tier.
+enum Tier {
+    Flat {
+        /// DOR-minimal next-hop port per `(s, d)`; `NO_PORT16` diagonal.
+        min_port: Vec<u16>,
+        /// Service next-hop port per `(s, d)` (empty without a service).
+        svc_port: Vec<u16>,
+        /// Service-path distance per `(s, d)` (empty without a service).
+        svc_dist: Vec<u16>,
+    },
+    Df(DfTier),
+}
+
 /// The compiled routing state of one `(host topology, service topology)`
-/// pair. Every accessor on the route path is an O(1) flat-array read.
+/// pair. Every accessor on the route path is an O(1) flat-array read (flat
+/// tier) or closed-form arithmetic over O(a + h) per-switch state
+/// (compressed Dragonfly tier) — same facade either way.
 pub struct RoutingTables {
     topo: Arc<PhysTopology>,
     svc: Option<Arc<dyn ServiceTopology>>,
     n: usize,
-    /// DOR-minimal next-hop port per `(s, d)`; `NO_PORT16` on the diagonal.
-    min_port: Vec<u16>,
-    /// Service next-hop port per `(s, d)` (empty without a service).
-    svc_port: Vec<u16>,
-    /// Service-path distance per `(s, d)` (empty without a service).
-    svc_dist: Vec<u16>,
+    tier: Tier,
     /// Per-switch port partition in one arena: row `2s` holds the main
     /// ports of switch `s`, row `2s + 1` its service ports. Without a
     /// service every port is a main port.
@@ -247,11 +371,19 @@ pub struct RoutingTables {
     /// Allowed intermediates per `(s, d)` under `labels`, stored as
     /// physical *ports* in ascending intermediate-id order.
     allowed: Option<Csr>,
+    /// Group-level link-order labels `L(i → j)` over the `g × g` group
+    /// arcs, when compiled with [`RoutingTables::with_group_labels`]
+    /// (Dragonfly hosts).
+    group_labels: Option<Vec<u32>>,
+    /// Allowed-deroute global ports per `(s, dst_group)` row under
+    /// `group_labels`, ascending in intermediate group id.
+    group_allowed: Option<Csr>,
 }
 
 /// DOR-minimal next switch from `cur` toward `dst` (the closed forms of
 /// [`super::MinRouter`]; Full-mesh: the destination itself, HyperX: fix the
-/// first unaligned dimension).
+/// first unaligned dimension, Dragonfly: the hierarchical
+/// local–global–local rule of [`DfGeom::min_next`]).
 fn dor_next(topo: &PhysTopology, cur: usize, dst: usize) -> usize {
     debug_assert_ne!(cur, dst);
     match &topo.kind {
@@ -268,31 +400,152 @@ fn dor_next(topo: &PhysTopology, cur: usize, dst: usize) -> usize {
             }
             unreachable!("cur == dst")
         }
+        TopoKind::Dragonfly { .. } => topo
+            .kind
+            .df_geom()
+            .expect("dragonfly kind")
+            .min_next(cur, dst),
     }
 }
 
+/// Fill `buf` (logically `rows × cols`) by calling `fill(row_index, row)`
+/// for every row, splitting the rows across up to `threads` scoped workers.
+/// Workers own disjoint `&mut` chunks, so the result is deterministic and
+/// identical to the serial fill — the parallel table compile inherits the
+/// engine's bit-identity contract for free.
+fn par_fill_rows<F>(buf: &mut [u16], cols: usize, threads: usize, fill: &F)
+where
+    F: Fn(usize, &mut [u16]) + Sync,
+{
+    let rows = buf.len() / cols.max(1);
+    let workers = threads.clamp(1, rows.max(1));
+    if workers <= 1 {
+        for (r, row) in buf.chunks_mut(cols).enumerate() {
+            fill(r, row);
+        }
+        return;
+    }
+    let per = rows.div_ceil(workers);
+    std::thread::scope(|sc| {
+        for (ci, chunk) in buf.chunks_mut(per * cols).enumerate() {
+            sc.spawn(move || {
+                for (k, row) in chunk.chunks_mut(cols).enumerate() {
+                    fill(ci * per + k, row);
+                }
+            });
+        }
+    });
+}
+
+/// Two-array variant of [`par_fill_rows`] for fills that produce a pair of
+/// same-shape tables in one pass (service port + service distance).
+fn par_fill_row_pairs<F>(a: &mut [u16], b: &mut [u16], cols: usize, threads: usize, fill: &F)
+where
+    F: Fn(usize, &mut [u16], &mut [u16]) + Sync,
+{
+    debug_assert_eq!(a.len(), b.len());
+    let rows = a.len() / cols.max(1);
+    let workers = threads.clamp(1, rows.max(1));
+    if workers <= 1 {
+        for (r, (ra, rb)) in a.chunks_mut(cols).zip(b.chunks_mut(cols)).enumerate() {
+            fill(r, ra, rb);
+        }
+        return;
+    }
+    let per = rows.div_ceil(workers);
+    std::thread::scope(|sc| {
+        for (ci, (ca, cb)) in a
+            .chunks_mut(per * cols)
+            .zip(b.chunks_mut(per * cols))
+            .enumerate()
+        {
+            sc.spawn(move || {
+                for (k, (ra, rb)) in ca.chunks_mut(cols).zip(cb.chunks_mut(cols)).enumerate() {
+                    fill(ci * per + k, ra, rb);
+                }
+            });
+        }
+    });
+}
+
 impl RoutingTables {
-    /// Compile the tables for `topo`, embedding `svc` if given. Panics —
-    /// loudly, at construction time — if the service does not span the
-    /// host or uses an edge the host does not have (via
-    /// [`Embedding::new`]), or if the host is too large for the 16-bit
-    /// port encoding.
+    /// Compile the tables for `topo`, embedding `svc` if given —
+    /// [`TableTier::Auto`] selection, single-threaded. Panics — loudly, at
+    /// construction time — if the service does not span the host or uses
+    /// an edge the host does not have, or if a flat-tier host is too large
+    /// for the 16-bit port encoding.
     pub fn compile(topo: Arc<PhysTopology>, svc: Option<Arc<dyn ServiceTopology>>) -> Self {
+        Self::compile_with(topo, svc, TableTier::Auto, 1)
+    }
+
+    /// Compile with an explicit tier choice and a thread budget for the
+    /// per-switch fill loops (the engine passes its shared budget). The
+    /// compiled tables are bit-identical for every `threads` value: workers
+    /// fill disjoint row ranges of the same arrays.
+    pub fn compile_with(
+        topo: Arc<PhysTopology>,
+        svc: Option<Arc<dyn ServiceTopology>>,
+        tier: TableTier,
+        threads: usize,
+    ) -> Self {
+        let compressed = match tier {
+            TableTier::Flat => false,
+            TableTier::Compressed => {
+                assert!(
+                    topo.kind.df_geom().is_some(),
+                    "the compressed table tier is defined for Dragonfly hosts \
+                     (got {})",
+                    topo.name()
+                );
+                if let Some(svc) = &svc {
+                    assert!(
+                        svc.as_dragonfly().is_some(),
+                        "the compressed tier needs a group-structured Dragonfly \
+                         service (got {}); use TableTier::Flat for arbitrary \
+                         embeddings",
+                        svc.name()
+                    );
+                }
+                true
+            }
+            TableTier::Auto => {
+                let svc_ok = match &svc {
+                    None => true,
+                    Some(s) => s.as_dragonfly().is_some(),
+                };
+                topo.kind.df_geom().is_some() && svc_ok
+            }
+        };
+        if compressed {
+            Self::compile_df(topo, svc, threads)
+        } else {
+            Self::compile_flat(topo, svc, threads)
+        }
+    }
+
+    /// The flat tier: O(n²) per-(switch, dst) arrays, any host topology.
+    fn compile_flat(
+        topo: Arc<PhysTopology>,
+        svc: Option<Arc<dyn ServiceTopology>>,
+        threads: usize,
+    ) -> Self {
         let n = topo.n;
         assert!(
             n < NO_PORT16 as usize,
-            "RoutingTables encodes ports as u16 (n = {n} too large)"
+            "the flat table tier encodes ports and destinations as u16 \
+             (n = {n} too large); Dragonfly hosts this size compile with the \
+             compressed tier"
         );
         let mut min_port = vec![NO_PORT16; n * n];
-        for s in 0..n {
-            for d in 0..n {
+        par_fill_rows(&mut min_port, n, threads, &|s, row| {
+            for (d, slot) in row.iter_mut().enumerate() {
                 if s != d {
                     let nxt = dor_next(&topo, s, d);
                     let p = topo.port_to(s, nxt).expect("DOR next hop is adjacent");
-                    min_port[s * n + d] = p as u16;
+                    *slot = p as u16;
                 }
             }
-        }
+        });
         let (svc_port, svc_dist, ports) = match &svc {
             None => {
                 // Without a service every inter-switch port is "main".
@@ -311,7 +564,7 @@ impl RoutingTables {
                 let emb = Embedding::new(&topo, svc.as_ref());
                 let mut svc_port = vec![NO_PORT16; n * n];
                 let mut svc_dist = vec![0u16; n * n];
-                for s in 0..n {
+                par_fill_row_pairs(&mut svc_port, &mut svc_dist, n, threads, &|s, prow, drow| {
                     for d in 0..n {
                         if s == d {
                             continue;
@@ -322,11 +575,11 @@ impl RoutingTables {
                             "service next hop {s}->{nh} must ride a service link"
                         );
                         let p = topo.port_to(s, nh).expect("service edge is host-adjacent");
-                        svc_port[s * n + d] = p as u16;
-                        svc_dist[s * n + d] =
+                        prow[d] = p as u16;
+                        drow[d] =
                             u16::try_from(svc.distance(s, d)).expect("service distance fits u16");
                     }
-                }
+                });
                 let mut rows: Vec<Vec<u16>> = Vec::with_capacity(2 * n);
                 for s in 0..n {
                     rows.push(emb.main_ports[s].iter().map(|&p| p as u16).collect());
@@ -339,12 +592,154 @@ impl RoutingTables {
             topo,
             svc,
             n,
-            min_port,
-            svc_port,
-            svc_dist,
+            tier: Tier::Flat {
+                min_port,
+                svc_port,
+                svc_dist,
+            },
             ports,
             labels: None,
             allowed: None,
+            group_labels: None,
+            group_allowed: None,
+        }
+    }
+
+    /// The compressed Dragonfly tier: per-switch local/global port rows
+    /// plus shared `g × g` service matrices. Deliberately bypasses
+    /// [`Embedding`] (whose O(n²) adjacency would defeat the point):
+    /// ports are classified per switch in ascending port order — the same
+    /// order `Embedding` produces — so the main/service CSR rows are
+    /// identical to the flat tier's.
+    fn compile_df(
+        topo: Arc<PhysTopology>,
+        svc: Option<Arc<dyn ServiceTopology>>,
+        threads: usize,
+    ) -> Self {
+        let geom = topo.kind.df_geom().expect("dragonfly host");
+        let n = topo.n;
+        assert!(
+            geom.a <= u16::MAX as usize && geom.g <= u16::MAX as usize,
+            "compressed tier encodes local/group indices as u16"
+        );
+        let df_svc = svc.as_ref().map(|s| {
+            s.as_dragonfly()
+                .expect("compressed tier needs a Dragonfly service")
+        });
+        if let Some(ds) = df_svc {
+            assert_eq!(ds.geom(), geom, "service embeds a different Dragonfly");
+        }
+
+        let mut local_port = vec![NO_PORT16; n * geom.a];
+        par_fill_rows(&mut local_port, geom.a, threads, &|s, row| {
+            let (gs, rs) = (geom.group(s), geom.local(s));
+            for (v, slot) in row.iter_mut().enumerate() {
+                if v != rs {
+                    let p = topo.port_to(s, geom.id(gs, v)).expect("local full mesh");
+                    *slot = p as u16;
+                }
+            }
+        });
+        let mut glob_port = Vec::new();
+        if geom.g > 1 {
+            glob_port = vec![NO_PORT16; n * geom.h];
+            par_fill_rows(&mut glob_port, geom.h, threads, &|s, row| {
+                let (gs, rs) = (geom.group(s), geom.local(s));
+                for (j, slot) in row.iter_mut().enumerate() {
+                    let (t, y) = geom.global_peer(gs, rs, j);
+                    let p = topo.port_to(s, geom.id(t, y)).expect("global link");
+                    *slot = p as u16;
+                }
+            });
+        }
+
+        // Main/service port split per switch, ascending port order.
+        let ports = match df_svc {
+            None => {
+                let rows: Vec<Vec<u16>> = (0..2 * n)
+                    .map(|r| {
+                        if r % 2 == 0 {
+                            (0..topo.degree(r / 2)).map(|p| p as u16).collect()
+                        } else {
+                            Vec::new()
+                        }
+                    })
+                    .collect();
+                Csr::from_rows(&rows)
+            }
+            Some(ds) => {
+                // Group-level service adjacency (g² bools — the only
+                // super-linear temporary, and it is group-sized).
+                let g = geom.g;
+                let mut group_adj = vec![false; g * g];
+                for (u, v) in ds.group_service().edges() {
+                    group_adj[u * g + v] = true;
+                    group_adj[v * g + u] = true;
+                }
+                let mut rows: Vec<Vec<u16>> = Vec::with_capacity(2 * n);
+                for s in 0..n {
+                    let (gs, rs) = (geom.group(s), geom.local(s));
+                    let mut main = Vec::new();
+                    let mut service = Vec::new();
+                    for p in 0..topo.degree(s) {
+                        let d = topo.neighbor(s, p);
+                        let (gd, rd) = (geom.group(d), geom.local(d));
+                        let is_svc = if gd == gs {
+                            true // every local link is a service link
+                        } else if group_adj[gs * g + gd] {
+                            // The one gateway link of the group edge:
+                            // endpoints are the two gateway routers.
+                            let (xr, xj) = geom.gate(gs, gd);
+                            rs == xr && geom.global_peer(gs, xr, xj) == (gd, rd)
+                        } else {
+                            false
+                        };
+                        if is_svc {
+                            service.push(p as u16);
+                        } else {
+                            main.push(p as u16);
+                        }
+                    }
+                    rows.push(main);
+                    rows.push(service);
+                }
+                Csr::from_rows(&rows)
+            }
+        };
+
+        let svc_matrices = df_svc.map(|ds| {
+            let g = geom.g;
+            let mut next = vec![0u16; g * g];
+            let mut base = vec![0u16; g * g];
+            let mut entry = vec![0u16; g * g];
+            for i in 0..g {
+                for t in 0..g {
+                    if i == t {
+                        continue;
+                    }
+                    next[i * g + t] = ds.next_group(i, t) as u16;
+                    base[i * g + t] = ds.base_hops(i, t) as u16;
+                    entry[i * g + t] = ds.entry_router(i, t) as u16;
+                }
+            }
+            DfSvcMatrices { next, base, entry }
+        });
+
+        Self {
+            topo,
+            svc,
+            n,
+            tier: Tier::Df(DfTier {
+                geom,
+                local_port,
+                glob_port,
+                svc: svc_matrices,
+            }),
+            ports,
+            labels: None,
+            allowed: None,
+            group_labels: None,
+            group_allowed: None,
         }
     }
 
@@ -380,6 +775,48 @@ impl RoutingTables {
         self
     }
 
+    /// Add *group-level* link-order labels for a Dragonfly host: `labels`
+    /// is a `g × g` label matrix over the full mesh of groups (the same §3
+    /// schemes, applied to group arcs), and the compiled rows hold, per
+    /// `(switch, dst_group)`, the ports of `s`'s own global channels into
+    /// every allowed intermediate group `m` (`L(g_s, m) < L(m, g_d)`),
+    /// ascending in `m`. Works with either tier — the rows depend only on
+    /// the closed-form geometry.
+    pub fn with_group_labels(mut self, labels: Vec<u32>) -> Self {
+        let geom = self
+            .topo
+            .kind
+            .df_geom()
+            .expect("group-level labels are defined on a Dragonfly host");
+        let g = geom.g;
+        assert_eq!(labels.len(), g * g, "need one label per group arc");
+        let n = self.n;
+        let mut rows: Vec<Vec<u16>> = Vec::with_capacity(n * g);
+        for s in 0..n {
+            let (gs, rs) = (geom.group(s), geom.local(s));
+            for gd in 0..g {
+                let mut row = Vec::new();
+                if gd != gs {
+                    for m in 0..g {
+                        if m == gs || m == gd || labels[gs * g + m] >= labels[m * g + gd] {
+                            continue;
+                        }
+                        if let Some(j) = geom.chan_to_group(gs, rs, m) {
+                            let (t, y) = geom.global_peer(gs, rs, j);
+                            debug_assert_eq!(t, m);
+                            let p = self.topo.port_to(s, geom.id(t, y)).expect("global link");
+                            row.push(p as u16);
+                        }
+                    }
+                }
+                rows.push(row);
+            }
+        }
+        self.group_allowed = Some(Csr::from_rows(&rows));
+        self.group_labels = Some(labels);
+        self
+    }
+
     #[inline]
     pub fn n(&self) -> usize {
         self.n
@@ -401,7 +838,10 @@ impl RoutingTables {
     #[inline]
     pub fn min_port(&self, s: usize, d: usize) -> usize {
         debug_assert_ne!(s, d);
-        self.min_port[s * self.n + d] as usize
+        match &self.tier {
+            Tier::Flat { min_port, .. } => min_port[s * self.n + d] as usize,
+            Tier::Df(t) => t.min_port(s, d),
+        }
     }
 
     /// Port of the link `s → d` if the two are adjacent (the literal
@@ -416,7 +856,10 @@ impl RoutingTables {
     pub fn svc_port(&self, s: usize, d: usize) -> usize {
         debug_assert!(self.has_service());
         debug_assert_ne!(s, d);
-        self.svc_port[s * self.n + d] as usize
+        match &self.tier {
+            Tier::Flat { svc_port, .. } => svc_port[s * self.n + d] as usize,
+            Tier::Df(t) => t.svc_port(s, d),
+        }
     }
 
     /// Service-path distance between `a` and `b`.
@@ -424,10 +867,39 @@ impl RoutingTables {
     pub fn svc_dist(&self, a: usize, b: usize) -> usize {
         debug_assert!(self.has_service());
         if a == b {
-            0
-        } else {
-            self.svc_dist[a * self.n + b] as usize
+            return 0;
         }
+        match &self.tier {
+            Tier::Flat { svc_dist, .. } => svc_dist[a * self.n + b] as usize,
+            Tier::Df(t) => t.svc_dist(a, b),
+        }
+    }
+
+    /// Is this the compressed (hierarchical) tier?
+    pub fn is_compressed(&self) -> bool {
+        matches!(self.tier, Tier::Df(_))
+    }
+
+    /// Resident bytes of the compiled table state: the tier arrays, the
+    /// main/service port arena, and any label/allowed structures. This is
+    /// the number the `tables` perf section and the ≥10× compression
+    /// acceptance check report.
+    pub fn table_bytes(&self) -> usize {
+        let u16s = std::mem::size_of::<u16>();
+        let tier = match &self.tier {
+            Tier::Flat {
+                min_port,
+                svc_port,
+                svc_dist,
+            } => (min_port.len() + svc_port.len() + svc_dist.len()) * u16s,
+            Tier::Df(t) => t.bytes(),
+        };
+        let csr_bytes = |c: &Csr| c.offsets.len() * 4 + c.data.len() * u16s;
+        let labels = self.labels.as_ref().map_or(0, |l| l.len() * 4)
+            + self.group_labels.as_ref().map_or(0, |l| l.len() * 4);
+        let allowed = self.allowed.as_ref().map_or(0, &csr_bytes)
+            + self.group_allowed.as_ref().map_or(0, &csr_bytes);
+        tier + csr_bytes(&self.ports) + labels + allowed
     }
 
     /// Main-topology ports of switch `s` (one contiguous slice).
@@ -462,6 +934,28 @@ impl RoutingTables {
             .as_ref()
             .expect("tables were compiled without link labels")
             .row(s * self.n + d)
+    }
+
+    /// The compiled group-level link-order labels, if any.
+    pub fn group_link_labels(&self) -> Option<&[u32]> {
+        self.group_labels.as_deref()
+    }
+
+    /// Global ports of `s` into the allowed intermediate groups for
+    /// destination group `dst_group` under the compiled group labels,
+    /// ascending in intermediate group id.
+    #[inline]
+    pub fn group_allowed_ports(&self, s: usize, dst_group: usize) -> &[u16] {
+        let g = self
+            .topo
+            .kind
+            .df_geom()
+            .expect("group labels imply a Dragonfly host")
+            .g;
+        self.group_allowed
+            .as_ref()
+            .expect("tables were compiled without group labels")
+            .row(s * g + dst_group)
     }
 }
 
@@ -849,5 +1343,119 @@ mod tests {
             assert_eq!(got, expect, "switch {s} row main peers");
         }
         assert_eq!(hx.sub_diameter(), 3);
+    }
+
+    fn df_service(g: usize, a: usize, h: usize, inner: &str) -> Arc<dyn ServiceTopology> {
+        use crate::service::{DragonflyService, TreeService};
+        let group: Box<dyn ServiceTopology> = match inner {
+            "path" => Box::new(MeshService::path(g)),
+            "tree4" => Box::new(TreeService::new(g, 4)),
+            _ => panic!("unknown inner {inner}"),
+        };
+        Arc::new(DragonflyService::new(DfGeom::new(g, a, h), group))
+    }
+
+    #[test]
+    fn df_compressed_tier_matches_flat_tables() {
+        use crate::topology::dragonfly;
+        for (g, a, h) in [(3usize, 2usize, 1usize), (5, 2, 2), (9, 4, 2)] {
+            let topo = Arc::new(dragonfly(g, a, h));
+            let svc = df_service(g, a, h, "path");
+            let flat =
+                RoutingTables::compile_with(topo.clone(), Some(svc.clone()), TableTier::Flat, 1);
+            let comp = RoutingTables::compile_with(
+                topo.clone(),
+                Some(svc.clone()),
+                TableTier::Compressed,
+                3,
+            );
+            assert!(!flat.is_compressed());
+            assert!(comp.is_compressed());
+            let n = topo.n;
+            for s in 0..n {
+                assert_eq!(flat.main_ports(s), comp.main_ports(s), "main ports {s}");
+                assert_eq!(
+                    flat.service_ports(s),
+                    comp.service_ports(s),
+                    "service ports {s}"
+                );
+                for d in 0..n {
+                    if s == d {
+                        assert_eq!(comp.svc_dist(s, d), 0);
+                        continue;
+                    }
+                    assert_eq!(flat.min_port(s, d), comp.min_port(s, d), "min {s}->{d}");
+                    assert_eq!(flat.svc_port(s, d), comp.svc_port(s, d), "svcp {s}->{d}");
+                    assert_eq!(flat.svc_dist(s, d), comp.svc_dist(s, d), "svcd {s}->{d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn df_group_allowed_rows_are_tier_independent() {
+        use crate::topology::dragonfly;
+        let (g, a, h) = (9usize, 4usize, 2usize);
+        let topo = Arc::new(dragonfly(g, a, h));
+        let labels = crate::routing::linkorder::srinr_labels(g);
+        let flat = RoutingTables::compile_with(topo.clone(), None, TableTier::Flat, 1)
+            .with_group_labels(labels.clone());
+        let comp = RoutingTables::compile_with(topo.clone(), None, TableTier::Compressed, 1)
+            .with_group_labels(labels);
+        for s in 0..topo.n {
+            for gd in 0..g {
+                assert_eq!(
+                    flat.group_allowed_ports(s, gd),
+                    comp.group_allowed_ports(s, gd),
+                    "s={s} gd={gd}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_tier_selection_and_compression_ratio() {
+        use crate::topology::dragonfly;
+        // FM stays flat; Dragonfly goes compressed (with or without a
+        // group-structured service).
+        let fm = RoutingTables::compile(Arc::new(full_mesh(16)), None);
+        assert!(!fm.is_compressed());
+        let topo = Arc::new(dragonfly(65, 16, 8)); // the ~1k-switch point
+        let bare = RoutingTables::compile(topo.clone(), None);
+        assert!(bare.is_compressed());
+        let svc = df_service(65, 16, 8, "tree4");
+        let auto = RoutingTables::compile_with(topo.clone(), Some(svc.clone()), TableTier::Auto, 4);
+        assert!(auto.is_compressed());
+        let flat = RoutingTables::compile_with(topo.clone(), Some(svc), TableTier::Flat, 4);
+        // The acceptance headline: ≥10× table-memory reduction at the
+        // Dragonfly-1k point (the measured ratio is ~50×).
+        assert!(
+            flat.table_bytes() >= 10 * auto.table_bytes(),
+            "flat {} vs compressed {}",
+            flat.table_bytes(),
+            auto.table_bytes()
+        );
+    }
+
+    #[test]
+    fn parallel_compile_is_bit_identical() {
+        let topo = Arc::new(full_mesh(24));
+        let svc: Arc<dyn ServiceTopology> = Arc::new(MeshService::path(24));
+        let serial =
+            RoutingTables::compile_with(topo.clone(), Some(svc.clone()), TableTier::Flat, 1);
+        let parallel =
+            RoutingTables::compile_with(topo.clone(), Some(svc.clone()), TableTier::Flat, 5);
+        for s in 0..24 {
+            assert_eq!(serial.main_ports(s), parallel.main_ports(s));
+            assert_eq!(serial.service_ports(s), parallel.service_ports(s));
+            for d in 0..24 {
+                if s == d {
+                    continue;
+                }
+                assert_eq!(serial.min_port(s, d), parallel.min_port(s, d));
+                assert_eq!(serial.svc_port(s, d), parallel.svc_port(s, d));
+                assert_eq!(serial.svc_dist(s, d), parallel.svc_dist(s, d));
+            }
+        }
     }
 }

@@ -1,9 +1,13 @@
-//! UGAL [Singh '05] on a Full-mesh: at the source switch, compare the
-//! queue of the minimal port against the (distance-weighted) queue toward
-//! ONE randomly drawn Valiant intermediate, and take the cheaper. Needs
-//! 2 VCs (§2.1.2: VC0 carries minimal or first non-minimal hops, VC1 only
+//! UGAL [Singh '05]: at the source switch, compare the queue of the
+//! minimal port against the (distance-weighted) queue toward ONE randomly
+//! drawn Valiant intermediate, and take the cheaper. Needs 2 VCs
+//! (§2.1.2: VC0 carries minimal or first non-minimal hops, VC1 only
 //! second non-minimal hops). Port lookups are `RoutingTables::min_port`
-//! table reads.
+//! table reads; the hop weights are the closed-form
+//! `PhysTopology::distance` (1 vs 2 on a Full-mesh — the classic
+//! `q_min ≤ 2·q_nonmin + T` rule — and the true hierarchical path lengths
+//! on a Dragonfly, where UGAL shares VLB's caveat: 2 VCs do not make the
+//! multi-hop minimal phases deadlock-free).
 //!
 //! §6.4 attributes UGAL's tail latency to exactly this single-candidate
 //! limitation — TERA and Omni-WAR adaptively consider many intermediates.
@@ -19,16 +23,18 @@ use crate::util::Rng;
 pub struct UgalRouter {
     tables: Arc<RoutingTables>,
     /// Decision threshold in flits (UGAL's `T`): non-minimal is taken when
-    /// `2·q_nonmin + threshold < q_min`.
+    /// `H_nonmin·q_nonmin + threshold < H_min·q_min`.
     pub threshold: u32,
 }
 
 impl UgalRouter {
     pub fn new(tables: Arc<RoutingTables>) -> Self {
-        assert_eq!(
-            tables.topo().kind,
-            TopoKind::FullMesh,
-            "UgalRouter is FM-only"
+        assert!(
+            matches!(
+                tables.topo().kind,
+                TopoKind::FullMesh | TopoKind::Dragonfly { .. }
+            ),
+            "UgalRouter supports Full-mesh and Dragonfly hosts"
         );
         Self {
             tables,
@@ -56,16 +62,31 @@ impl Router for UgalRouter {
     ) -> Option<Decision> {
         let dst = pkt.dst_sw as usize;
         if !at_injection {
-            // In transit (at the Valiant intermediate): final hop on VC 1.
-            let port = self.tables.min_port(view.sw, dst);
-            return if view.has_space(port, 1) {
-                Some((port, 1))
+            // In transit: finish the committed phase minimally. Phase 0
+            // (VC 0) heads for the chosen intermediate, phase 1 (VC 1) for
+            // the destination — on a Full-mesh the only transit switch is
+            // the intermediate itself, so this reduces to the classic
+            // "final hop on VC 1".
+            let m = pkt.intermediate;
+            return if pkt.vc == 0 && m != NO_SWITCH && view.sw != m as usize {
+                let port = self.tables.min_port(view.sw, m as usize);
+                if view.has_space(port, 0) {
+                    Some((port, 0))
+                } else {
+                    None
+                }
             } else {
-                None
+                let port = self.tables.min_port(view.sw, dst);
+                if view.has_space(port, 1) {
+                    Some((port, 1))
+                } else {
+                    None
+                }
             };
         }
         // Source decision, re-evaluated each stalled cycle with a fresh
         // random candidate (UGAL-L behaviour).
+        let topo = self.tables.topo();
         let n = self.tables.n();
         let min_port = self.tables.min_port(view.sw, dst);
         let m = loop {
@@ -77,8 +98,12 @@ impl Router for UgalRouter {
         let nonmin_port = self.tables.min_port(view.sw, m);
         let q_min = view.occ_flits(min_port);
         let q_nonmin = view.occ_flits(nonmin_port);
-        // H_min·q_min ≤ H_nonmin·q_nonmin + T  →  go minimal.
-        let go_min = q_min <= 2 * q_nonmin + self.threshold;
+        // H_min·q_min ≤ H_nonmin·q_nonmin + T  →  go minimal. The closed
+        // forms make the weights 1 and 2 on a Full-mesh; on a Dragonfly
+        // they are the real hierarchical path lengths.
+        let h_min = topo.distance(view.sw, dst) as u32;
+        let h_nonmin = (topo.distance(view.sw, m) + topo.distance(m, dst)) as u32;
+        let go_min = h_min * q_min <= h_nonmin * q_nonmin + self.threshold;
         if go_min {
             if view.has_space(min_port, 0) {
                 pkt.intermediate = NO_SWITCH;
@@ -98,6 +123,10 @@ impl Router for UgalRouter {
     }
 
     fn max_hops(&self) -> usize {
-        2
+        match self.tables.topo().kind {
+            // Two hierarchical minimal phases of up to 3 hops each.
+            TopoKind::Dragonfly { .. } => 6,
+            _ => 2,
+        }
     }
 }

@@ -1,9 +1,13 @@
-//! Valiant load balancing (VLB) [Valiant & Brebner '81] on a Full-mesh:
-//! every packet detours through a uniformly random intermediate switch.
-//! Needs 2 VCs for deadlock freedom (hop index = VC index); used by the
-//! paper as the non-adaptive non-minimal baseline. Port lookups are
-//! compiled-table reads (`RoutingTables::min_port` — on a Full-mesh the
-//! minimal port *is* the direct link).
+//! Valiant load balancing (VLB) [Valiant & Brebner '81]: every packet
+//! detours through a uniformly random intermediate switch, reaching it (and
+//! then the destination) minimally. Needs 2 VCs for deadlock freedom on a
+//! Full-mesh (phase index = VC index); used by the paper as the
+//! non-adaptive non-minimal baseline. On a Dragonfly each phase is the
+//! hierarchical minimal route (up to 3 hops), and — as in every Dragonfly
+//! study — one VC per phase is *not* enough to break local–global–local
+//! cycles; VLB is carried as the classic baseline the VC-less schemes are
+//! measured against, not as a deadlock-free design point. Port lookups are
+//! compiled-table reads (`RoutingTables::min_port`).
 
 use std::sync::Arc;
 
@@ -19,10 +23,12 @@ pub struct ValiantRouter {
 
 impl ValiantRouter {
     pub fn new(tables: Arc<RoutingTables>) -> Self {
-        assert_eq!(
-            tables.topo().kind,
-            TopoKind::FullMesh,
-            "ValiantRouter is FM-only"
+        assert!(
+            matches!(
+                tables.topo().kind,
+                TopoKind::FullMesh | TopoKind::Dragonfly { .. }
+            ),
+            "ValiantRouter supports Full-mesh and Dragonfly hosts"
         );
         Self { tables }
     }
@@ -56,21 +62,26 @@ impl Router for ValiantRouter {
         _buf: &mut CandidateBuf,
     ) -> Option<Decision> {
         let dst = pkt.dst_sw as usize;
-        if at_injection {
+        if at_injection && pkt.intermediate == NO_SWITCH {
             // Commit to a random intermediate once; keep it across stalled
             // cycles so the packet doesn't rebalance away from congestion
             // (pure VLB is oblivious by design).
-            if pkt.intermediate == NO_SWITCH {
-                pkt.intermediate = self.pick_intermediate(view.sw, dst, rng);
-            }
-            let port = self.tables.min_port(view.sw, pkt.intermediate as usize);
+            pkt.intermediate = self.pick_intermediate(view.sw, dst, rng);
+        }
+        let m = pkt.intermediate;
+        // Phase 0 (VC 0): minimally toward the intermediate. Phase 1
+        // (VC 1): minimally toward the destination. The packet's current VC
+        // marks the phase, so multi-hop minimal segments (Dragonfly) stay
+        // in phase; on a Full-mesh each phase is one hop and this is
+        // bit-identical to the classic two-arm VLB.
+        if pkt.vc == 0 && m != NO_SWITCH && view.sw != m as usize {
+            let port = self.tables.min_port(view.sw, m as usize);
             if view.has_space(port, 0) {
                 Some((port, 0))
             } else {
                 None
             }
         } else {
-            // Second (final) hop on VC 1.
             let port = self.tables.min_port(view.sw, dst);
             if view.has_space(port, 1) {
                 Some((port, 1))
@@ -85,6 +96,10 @@ impl Router for ValiantRouter {
     }
 
     fn max_hops(&self) -> usize {
-        2
+        match self.tables.topo().kind {
+            // Two hierarchical minimal phases of up to 3 hops each.
+            TopoKind::Dragonfly { .. } => 6,
+            _ => 2,
+        }
     }
 }

@@ -1,0 +1,364 @@
+//! Hierarchical TERA service embedding for Dragonfly hosts.
+//!
+//! The paper's escape construction needs a spanning service topology with a
+//! deadlock-free VC-less minimal routing. On a Dragonfly the natural host
+//! structure to exploit is the *full mesh of groups*: we lift a group-level
+//! service topology `S_g` over the `g` groups onto the switch graph by
+//! taking
+//!
+//!   * **all local links** (every group's internal full mesh), and
+//!   * for every group-level service edge `{i, t}`, the single **canonical
+//!     gateway link** — the copy-0 palmtree channel of `i → t`, whose two
+//!     ends are, by the palmtree involution, exactly the gateway routers of
+//!     `i → t` and `t → i` (see [`DfGeom::gate`]).
+//!
+//! Routing is hierarchical: inside the destination group deliver locally;
+//! otherwise hop (locally, if needed) to the gateway router of the next
+//! group on `S_g`'s route and ride its gateway link.
+//!
+//! **Why `S_g` must be a tree.** Service paths produce only local→global
+//! and global→local channel dependencies (never local→local: after a local
+//! hop the packet is at a gateway or delivered). A dependency chain from
+//! global arc `(a→b)` to global arc `(b→d)` needs a bridging local channel
+//! from the entry router of `(a,b)` to the gateway router of `(b,d)` — and
+//! because the entry router of `(a,b)` *is* the gateway router of `(b,a)`
+//! (one physical link serves both directions), that bridge degenerates to
+//! nothing exactly when `d = a`. So the channel dependency graph projects
+//! onto non-backtracking walks over `S_g`'s arcs; on a tree those cannot
+//! close a cycle, hence the CDG is acyclic and the escape is deadlock-free
+//! with zero VCs. On a cyclic `S_g` (e.g. a group-level mesh2) the bridge
+//! channels are shared by injection-side and delivery-side traffic and a
+//! buffer cycle is constructible — so the constructor rejects non-trees.
+//! `cdg::service_cdg` re-proves acyclicity instance-by-instance in tests.
+//!
+//! Everything the routing tables need is O(g²) group-level state
+//! ([`DragonflyService::matrix_bytes`]) plus the closed-form geometry — no
+//! O(n²) arrays — which is what makes the compressed table tier (and
+//! million-endpoint instances) possible.
+
+use super::ServiceTopology;
+use crate::topology::DfGeom;
+
+pub struct DragonflyService {
+    geom: DfGeom,
+    /// Group-level service (a tree over `g` nodes).
+    inner: Box<dyn ServiceTopology>,
+    /// `svc_next[i*g + t]` — next group after `i` on the service route to
+    /// group `t` (diagonal unused).
+    svc_next: Vec<u16>,
+    /// `base[i*g + t]` — hops from the gateway router of group `i` (toward
+    /// the next group) to the entry router in group `t`, inclusive of all
+    /// global hops and intermediate local transfers.
+    base: Vec<u16>,
+    /// `entry[i*g + t]` — local index of the router in destination group
+    /// `t` where the service route from group `i` lands.
+    entry: Vec<u16>,
+    diam: usize,
+}
+
+impl DragonflyService {
+    /// Lift the group-level service `inner` (a tree spanning `geom.g`
+    /// groups) onto the Dragonfly `geom`.
+    pub fn try_new(geom: DfGeom, inner: Box<dyn ServiceTopology>) -> anyhow::Result<Self> {
+        let g = geom.g;
+        anyhow::ensure!(
+            inner.n() == g,
+            "group-level service must span the {} groups (got {})",
+            g,
+            inner.n()
+        );
+        anyhow::ensure!(
+            g == 1 || inner.num_links() == g - 1,
+            "group-level service for a Dragonfly must be a tree (path/tree2/tree4): \
+             {} has {} links over {} groups, needs {} — a cyclic group service \
+             admits channel-dependency cycles through shared gateway-side local links",
+            inner.name(),
+            inner.num_links(),
+            g,
+            g - 1
+        );
+        anyhow::ensure!(
+            g <= u16::MAX as usize && geom.a <= u16::MAX as usize,
+            "group count and group size must fit u16"
+        );
+
+        let mut svc_next = vec![0u16; g * g];
+        let mut dist = vec![0u16; g * g];
+        let mut maxd = 0usize;
+        for i in 0..g {
+            for t in 0..g {
+                if i == t {
+                    continue;
+                }
+                svc_next[i * g + t] = inner.next_hop(i, t) as u16;
+                let d = inner.distance(i, t);
+                dist[i * g + t] = d as u16;
+                maxd = maxd.max(d);
+            }
+        }
+        // base/entry satisfy a recursion along the service route; fill in
+        // increasing group-distance order so the tail is always ready.
+        let mut base = vec![0u16; g * g];
+        let mut entry = vec![0u16; g * g];
+        for want in 1..=maxd {
+            for i in 0..g {
+                for t in 0..g {
+                    if i == t || dist[i * g + t] as usize != want {
+                        continue;
+                    }
+                    let nxt = svc_next[i * g + t] as usize;
+                    let (xr, xj) = geom.gate(i, nxt);
+                    let (_, y) = geom.global_peer(i, xr, xj);
+                    if nxt == t {
+                        base[i * g + t] = 1;
+                        entry[i * g + t] = y as u16;
+                    } else {
+                        let x2 = geom.gate(nxt, svc_next[nxt * g + t] as usize).0;
+                        base[i * g + t] = 1 + u16::from(y != x2) + base[nxt * g + t];
+                        entry[i * g + t] = entry[nxt * g + t];
+                    }
+                }
+            }
+        }
+        let mut max_base = 0usize;
+        for i in 0..g {
+            for t in 0..g {
+                if i != t {
+                    max_base = max_base.max(base[i * g + t] as usize);
+                }
+            }
+        }
+        // Distance = (source local hop?) + base + (destination local hop?);
+        // both extras are attainable iff a group has a non-gateway router.
+        let diam = if g == 1 {
+            usize::from(geom.a >= 2)
+        } else {
+            let extras = if geom.a >= 2 { 2 } else { 0 };
+            (max_base + extras).max(usize::from(geom.a >= 2))
+        };
+        Ok(Self {
+            geom,
+            inner,
+            svc_next,
+            base,
+            entry,
+            diam,
+        })
+    }
+
+    pub fn new(geom: DfGeom, inner: Box<dyn ServiceTopology>) -> Self {
+        Self::try_new(geom, inner).expect("valid dragonfly service")
+    }
+
+    #[inline]
+    pub fn geom(&self) -> DfGeom {
+        self.geom
+    }
+
+    /// Next group after `i` on the service route toward group `t`.
+    #[inline]
+    pub fn next_group(&self, i: usize, t: usize) -> usize {
+        self.svc_next[i * self.geom.g + t] as usize
+    }
+
+    /// Gateway-to-entry hop count of the service route from group `i` to
+    /// group `t` (see field doc).
+    #[inline]
+    pub fn base_hops(&self, i: usize, t: usize) -> usize {
+        self.base[i * self.geom.g + t] as usize
+    }
+
+    /// Local index of the landing router in destination group `t` for
+    /// service routes originating in group `i`.
+    #[inline]
+    pub fn entry_router(&self, i: usize, t: usize) -> usize {
+        self.entry[i * self.geom.g + t] as usize
+    }
+
+    /// Resident bytes of the group-level matrices (the whole per-instance
+    /// service state — compare with the flat tier's O(n²) arrays).
+    pub fn matrix_bytes(&self) -> usize {
+        (self.svc_next.len() + self.base.len() + self.entry.len()) * std::mem::size_of::<u16>()
+    }
+
+    /// The group-level service this embedding lifts.
+    pub fn group_service(&self) -> &dyn ServiceTopology {
+        self.inner.as_ref()
+    }
+}
+
+impl ServiceTopology for DragonflyService {
+    fn n(&self) -> usize {
+        self.geom.n()
+    }
+
+    fn name(&self) -> String {
+        format!("DF{}-{}", self.geom.g, self.inner.name())
+    }
+
+    fn edges(&self) -> Vec<(usize, usize)> {
+        let geom = self.geom;
+        let mut e = Vec::new();
+        for i in 0..geom.g {
+            for r in 0..geom.a {
+                for r2 in (r + 1)..geom.a {
+                    e.push((geom.id(i, r), geom.id(i, r2)));
+                }
+            }
+        }
+        for (i, t) in self.inner.edges() {
+            let (xr, xj) = geom.gate(i, t);
+            let (t2, yr) = geom.global_peer(i, xr, xj);
+            debug_assert_eq!(t2, t);
+            e.push((geom.id(i, xr), geom.id(t, yr)));
+        }
+        e
+    }
+
+    fn next_hop(&self, cur: usize, dst: usize) -> usize {
+        debug_assert_ne!(cur, dst);
+        let geom = self.geom;
+        let (gi, r) = (geom.group(cur), geom.local(cur));
+        let gd = geom.group(dst);
+        if gi == gd {
+            return dst;
+        }
+        let nxt = self.next_group(gi, gd);
+        let (xr, xj) = geom.gate(gi, nxt);
+        if r == xr {
+            let (_, y) = geom.global_peer(gi, xr, xj);
+            geom.id(nxt, y)
+        } else {
+            geom.id(gi, xr)
+        }
+    }
+
+    fn distance(&self, a: usize, b: usize) -> usize {
+        if a == b {
+            return 0;
+        }
+        let geom = self.geom;
+        let (ga, ra) = (geom.group(a), geom.local(a));
+        let (gb, rb) = (geom.group(b), geom.local(b));
+        if ga == gb {
+            return 1;
+        }
+        let nxt = self.next_group(ga, gb);
+        let (xr, _) = geom.gate(ga, nxt);
+        usize::from(ra != xr)
+            + self.base_hops(ga, gb)
+            + usize::from(self.entry_router(ga, gb) != rb)
+    }
+
+    fn diameter(&self) -> usize {
+        self.diam
+    }
+
+    fn symmetric(&self) -> bool {
+        false
+    }
+
+    fn num_links(&self) -> usize {
+        self.geom.g * self.geom.a * (self.geom.a - 1) / 2 + self.inner.num_links()
+    }
+
+    fn as_dragonfly(&self) -> Option<&DragonflyService> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::cdg::service_cdg;
+    use crate::service::{MeshService, TreeService};
+    use crate::topology::dragonfly;
+
+    fn svc(g: usize, a: usize, h: usize, inner: &str) -> DragonflyService {
+        let group: Box<dyn ServiceTopology> = match inner {
+            "path" => Box::new(MeshService::path(g)),
+            "tree2" => Box::new(TreeService::new(g, 2)),
+            "tree4" => Box::new(TreeService::new(g, 4)),
+            _ => panic!("unknown inner {inner}"),
+        };
+        DragonflyService::new(DfGeom::new(g, a, h), group)
+    }
+
+    #[test]
+    fn rejects_cyclic_group_service() {
+        let inner: Box<dyn ServiceTopology> = Box::new(MeshService::square(9).unwrap());
+        let err = DragonflyService::try_new(DfGeom::new(9, 4, 2), inner);
+        assert!(err.is_err(), "mesh2 group service must be rejected");
+    }
+
+    #[test]
+    fn next_hop_walk_matches_distance_and_stays_on_edges() {
+        for (g, a, h, inner) in [
+            (3, 2, 1, "path"),
+            (5, 2, 2, "tree2"),
+            (9, 4, 2, "path"),
+            (9, 4, 2, "tree4"),
+            (2, 3, 2, "path"),
+        ] {
+            let s = svc(g, a, h, inner);
+            let host = dragonfly(g, a, h);
+            // Service edges must all be host links.
+            let mut adj = vec![false; host.n * host.n];
+            for (u, v) in s.edges() {
+                assert!(host.port_to(u, v).is_some(), "service edge ({u},{v})");
+                adj[u * host.n + v] = true;
+                adj[v * host.n + u] = true;
+            }
+            let mut diam = 0;
+            for src in 0..s.n() {
+                for dst in 0..s.n() {
+                    if src == dst {
+                        assert_eq!(s.distance(src, dst), 0);
+                        continue;
+                    }
+                    let mut cur = src;
+                    let mut hops = 0;
+                    while cur != dst {
+                        let nh = s.next_hop(cur, dst);
+                        assert!(adj[cur * host.n + nh], "hop ({cur},{nh}) not a service edge");
+                        cur = nh;
+                        hops += 1;
+                        assert!(hops <= s.n(), "service route loops for {src}->{dst}");
+                    }
+                    assert_eq!(s.distance(src, dst), hops, "{inner} g={g} {src}->{dst}");
+                    diam = diam.max(hops);
+                }
+            }
+            assert_eq!(s.diameter(), diam, "{inner} g={g} a={a} h={h}");
+        }
+    }
+
+    #[test]
+    fn cdg_is_acyclic() {
+        // The module-doc proof, checked instance-by-instance — including
+        // h>1 cases where distinct group pairs share a gateway router.
+        for (g, a, h, inner) in [
+            (3, 2, 1, "path"),
+            (5, 2, 2, "tree2"),
+            (9, 4, 2, "path"),
+            (9, 4, 2, "tree4"),
+            (13, 4, 3, "tree2"),
+        ] {
+            let s = svc(g, a, h, inner);
+            let cdg = service_cdg(&s);
+            assert!(
+                cdg.is_acyclic(),
+                "DF[{g}x{a}x{h}]+{inner} service CDG has a cycle: {:?}",
+                cdg.find_cycle()
+            );
+        }
+    }
+
+    #[test]
+    fn matrices_are_group_sized() {
+        let s = svc(9, 4, 2, "path");
+        assert_eq!(s.matrix_bytes(), 3 * 9 * 9 * 2);
+        assert_eq!(s.n(), 36);
+        assert!(s.as_dragonfly().is_some());
+    }
+}

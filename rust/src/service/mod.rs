@@ -9,10 +9,12 @@
 //! escapes over `S`, whose routing guarantees forward progress.
 
 pub mod cdg;
+pub mod dragonfly;
 pub mod mesh_like;
 pub mod tree;
 
 pub use cdg::ChannelDepGraph;
+pub use dragonfly::DragonflyService;
 pub use mesh_like::{HyperXService, MeshService};
 pub use tree::TreeService;
 
@@ -56,6 +58,14 @@ pub trait ServiceTopology: Send + Sync {
     /// Number of undirected service links (Table 1 column).
     fn num_links(&self) -> usize {
         self.edges().len()
+    }
+
+    /// Downcast hook for the hierarchical Dragonfly service: the compressed
+    /// table tier (see `routing::tables`) can only be selected when the
+    /// service is group-structured, and it reads the group-level matrices
+    /// through this accessor instead of materializing O(n²) state.
+    fn as_dragonfly(&self) -> Option<&DragonflyService> {
+        None
     }
 }
 

@@ -1,0 +1,404 @@
+//! Dragonfly physical topology [Kim, Dally, Scott, Abts — ISCA'08] with the
+//! *palmtree* global-link arrangement.
+//!
+//! Canonical a/g/h parameterization: `g` groups of `a` routers each; every
+//! router serves `h` global channels (and, separately from this switch
+//! graph, `p` hosts — the simulator's `servers_per_switch`). Inside a group
+//! the `a` routers form a complete graph (the "local" full mesh K_a);
+//! the `a·h` global channels of each group connect it to the other `g − 1`
+//! groups, so the *group graph* is a full mesh of groups — exactly the
+//! structure the paper's TERA service embedding targets (PAPERS.md: both
+//! related papers name Dragonfly as where VC/routing-state costs bite).
+//!
+//! **Palmtree arrangement.** Group `i` numbers its global channels
+//! `c = r·h + j` (router `r`, global port `j`) and channel `c` connects to
+//! group `(i − (c mod (g−1)) − 1) mod g`: consecutive channels sweep the
+//! groups `i−1, i−2, …` and wrap. With `off = c mod (g−1)` and copy index
+//! `k = c div (g−1)`, the reverse channel in the target group
+//! `t = (i − off − 1) mod g` is `c' = (g − 2 − off) + k·(g−1)` — an
+//! involution, so every global link is consistently bidirectional. The
+//! arrangement is invariant under group rotation, which is what makes the
+//! closed forms below (and the compressed routing tables built on them)
+//! O(1)-per-query without any per-pair state.
+//!
+//! We require `(a·h) mod (g−1) == 0` (when `g > 1`): every group then has
+//! exactly `a·h / (g−1)` parallel channels to every other group and no
+//! channel is left unpaired. The canonical balanced Dragonfly
+//! (`g = a·h + 1`) satisfies this with one channel per group pair.
+
+use super::{PhysTopology, TopoKind};
+
+/// Closed-form Dragonfly geometry: every structural query (global peers,
+/// channels toward a group, gateway routers, hop distance) is pure
+/// arithmetic over `(g, a, h)` — no adjacency state, no allocation. This
+/// is the single source of truth shared by the topology builder, the
+/// closed-form `PhysTopology::distance`, the minimal-route next hop and
+/// the compressed table tier, so the flat and compressed tiers can never
+/// disagree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DfGeom {
+    /// Number of groups.
+    pub g: usize,
+    /// Routers per group (local full-mesh size).
+    pub a: usize,
+    /// Global channels per router.
+    pub h: usize,
+}
+
+impl DfGeom {
+    pub fn new(g: usize, a: usize, h: usize) -> Self {
+        assert!(g >= 1 && a >= 1 && h >= 1, "dragonfly needs g, a, h >= 1");
+        assert!(
+            g == 1 || (a * h) % (g - 1) == 0,
+            "palmtree dragonfly needs (a*h) % (g-1) == 0 so every group pair \
+             gets the same number of global channels (got a={a} h={h} g={g}: \
+             {} % {} != 0)",
+            a * h,
+            g - 1
+        );
+        Self { g, a, h }
+    }
+
+    /// Total switches.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.g * self.a
+    }
+
+    /// Group of switch `s`.
+    #[inline]
+    pub fn group(&self, s: usize) -> usize {
+        s / self.a
+    }
+
+    /// Local router index of switch `s` inside its group.
+    #[inline]
+    pub fn local(&self, s: usize) -> usize {
+        s % self.a
+    }
+
+    /// Switch id of local router `r` in group `i`.
+    #[inline]
+    pub fn id(&self, i: usize, r: usize) -> usize {
+        i * self.a + r
+    }
+
+    /// Target `(group, local router)` of global channel `j` of local
+    /// router `r` in group `i` (palmtree closed form; requires `g > 1`).
+    #[inline]
+    pub fn global_peer(&self, i: usize, r: usize, j: usize) -> (usize, usize) {
+        debug_assert!(self.g > 1 && r < self.a && j < self.h);
+        let gm1 = self.g - 1;
+        let c = r * self.h + j;
+        let off = c % gm1;
+        let k = c / gm1;
+        let t = (i + self.g - 1 - off) % self.g;
+        let c_rev = (gm1 - 1 - off) + k * gm1;
+        (t, c_rev / self.h)
+    }
+
+    /// Lowest global-port index `j` of local router `r` whose channel lands
+    /// in group `t` as seen from group `i`, or `None` when `r` has no
+    /// channel toward `t`. Rotation-invariant: depends only on
+    /// `(t − i) mod g` and `r`.
+    #[inline]
+    pub fn chan_to_group(&self, i: usize, r: usize, t: usize) -> Option<usize> {
+        if self.g == 1 || t == i {
+            return None;
+        }
+        let gm1 = self.g - 1;
+        let off = (i + self.g - 1 - t) % self.g; // (i − t − 1) mod g, in [0, g−2]
+        let j0 = (off + gm1 - (r * self.h) % gm1) % gm1;
+        (j0 < self.h).then_some(j0)
+    }
+
+    /// Designated gateway of group `i` toward group `t` (`t != i`): the
+    /// `(local router, global port)` of the lowest-numbered (copy-0)
+    /// channel toward `t`. Symmetric by the palmtree involution: the
+    /// gateway channels of `i → t` and `t → i` are the two ends of one
+    /// physical link.
+    #[inline]
+    pub fn gate(&self, i: usize, t: usize) -> (usize, usize) {
+        debug_assert!(self.g > 1 && t != i);
+        let off = (i + self.g - 1 - t) % self.g;
+        (off / self.h, off % self.h)
+    }
+
+    /// Hop distance between switches (closed form, O(h²) worst case, no
+    /// allocation — UGAL reads this per decision on the hot path).
+    pub fn distance(&self, s: usize, d: usize) -> usize {
+        if s == d {
+            return 0;
+        }
+        let (gs, rs) = (self.group(s), self.local(s));
+        let (gd, rd) = (self.group(d), self.local(d));
+        if gs == gd {
+            return 1; // local full mesh
+        }
+        // Direct global link s — d?
+        for j in 0..self.h {
+            if self.global_peer(gs, rs, j) == (gd, rd) {
+                return 1;
+            }
+        }
+        // Two hops: global into d's group, then local …
+        if self.chan_to_group(gs, rs, gd).is_some() {
+            return 2;
+        }
+        // … or local to a groupmate whose global lands exactly on d
+        // (equivalently: one of d's channels lands in s's group) …
+        for j in 0..self.h {
+            let (t, _) = self.global_peer(gd, rd, j);
+            if t == gs {
+                return 2;
+            }
+        }
+        // … or global + global through an intermediate group.
+        for j in 0..self.h {
+            let (t, r2) = self.global_peer(gs, rs, j);
+            for j2 in 0..self.h {
+                if self.global_peer(t, r2, j2) == (gd, rd) {
+                    return 2;
+                }
+            }
+        }
+        3 // local to the gateway, global, local — always available
+    }
+
+    /// Network diameter. Group rotation symmetry lets the scan fix the
+    /// source in group 0; it early-exits on the first distance-3 pair, so
+    /// large diameter-3 instances (every realistic Dragonfly) return
+    /// almost immediately.
+    pub fn diameter(&self) -> usize {
+        if self.n() == 1 {
+            return 0;
+        }
+        if self.g == 1 {
+            return 1;
+        }
+        let mut dmax = 1; // a >= 2 or g >= 2 guarantees some pair at >= 1
+        for rs in 0..self.a {
+            let s = self.id(0, rs);
+            for d in self.a..self.n() {
+                dmax = dmax.max(self.distance(s, d));
+                if dmax == 3 {
+                    return 3;
+                }
+            }
+        }
+        dmax
+    }
+
+    /// Canonical hierarchical minimal (local–global–local) next switch
+    /// from `cur` toward `dst` (`cur != dst`): direct local inside the
+    /// group; a direct global link to `dst` itself when one exists; else
+    /// any own channel into `dst`'s group (lowest port); else a local hop
+    /// to the designated gateway. At most 3 hops end to end — the bound
+    /// `MinRouter` advertises on Dragonfly (the l–g–l route is the
+    /// *hierarchical* minimal path; the graph distance can be 2 where this
+    /// route takes 3, which is why the router does not advertise
+    /// `diameter()`).
+    pub fn min_next(&self, cur: usize, dst: usize) -> usize {
+        debug_assert_ne!(cur, dst);
+        let (gi, r) = (self.group(cur), self.local(cur));
+        let (gt, rd) = (self.group(dst), self.local(dst));
+        if gi == gt {
+            return dst;
+        }
+        for j in 0..self.h {
+            if self.global_peer(gi, r, j) == (gt, rd) {
+                return dst;
+            }
+        }
+        if let Some(j) = self.chan_to_group(gi, r, gt) {
+            let (_, y) = self.global_peer(gi, r, j);
+            return self.id(gt, y);
+        }
+        let (xr, _) = self.gate(gi, gt);
+        debug_assert_ne!(xr, r, "gateway owns a channel toward gt");
+        self.id(gi, xr)
+    }
+}
+
+/// Build a palmtree Dragonfly with `g` groups of `a` routers and `h`
+/// global channels per router. Parallel channels between a router pair
+/// (possible when `h > g − 1`) collapse into one physical link — the
+/// switch graph stays simple; the closed forms are unaffected.
+pub fn dragonfly(g: usize, a: usize, h: usize) -> PhysTopology {
+    let geom = DfGeom::new(g, a, h);
+    assert!(geom.n() >= 2, "a dragonfly needs at least 2 switches");
+    let n = geom.n();
+    let mut neighbors: Vec<Vec<usize>> = Vec::with_capacity(n);
+    for i in 0..g {
+        for r in 0..a {
+            let mut l = Vec::with_capacity(a - 1 + h);
+            for r2 in 0..a {
+                if r2 != r {
+                    l.push(geom.id(i, r2));
+                }
+            }
+            if g > 1 {
+                for j in 0..h {
+                    let (t, r2) = geom.global_peer(i, r, j);
+                    l.push(geom.id(t, r2));
+                }
+            }
+            neighbors.push(l);
+        }
+    }
+    PhysTopology::from_adjacency(
+        neighbors,
+        TopoKind::Dragonfly {
+            groups: g,
+            routers_per_group: a,
+            hosts_per_router: h,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small instances used across the test suite; all satisfy the
+    /// divisibility constraint and cover K = 1 (balanced), K > 1
+    /// (parallel group channels) and a diameter-3 local–global–local case.
+    pub(crate) fn test_instances() -> Vec<(usize, usize, usize)> {
+        vec![(3, 2, 1), (5, 2, 2), (9, 4, 2), (4, 3, 1), (2, 3, 2)]
+    }
+
+    #[test]
+    fn global_links_are_an_involution() {
+        for (g, a, h) in test_instances() {
+            let geom = DfGeom::new(g, a, h);
+            for i in 0..g {
+                for r in 0..a {
+                    for j in 0..h {
+                        let (t, r2) = geom.global_peer(i, r, j);
+                        assert_ne!(t, i, "global channels leave the group");
+                        // Some channel of (t, r2) must point back at (i, r).
+                        let back = (0..h).any(|j2| geom.global_peer(t, r2, j2) == (i, r));
+                        assert!(back, "g={g} a={a} h={h}: ({i},{r},{j})→({t},{r2}) unpaired");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_group_pair_is_connected() {
+        for (g, a, h) in test_instances() {
+            let geom = DfGeom::new(g, a, h);
+            if g == 1 {
+                continue;
+            }
+            let copies = a * h / (g - 1);
+            for i in 0..g {
+                for t in 0..g {
+                    if i == t {
+                        continue;
+                    }
+                    let count: usize = (0..a)
+                        .map(|r| {
+                            (0..h)
+                                .filter(|&j| geom.global_peer(i, r, j).0 == t)
+                                .count()
+                        })
+                        .sum();
+                    assert_eq!(count, copies, "channels {i}→{t} in g={g} a={a} h={h}");
+                    // The designated gateway really owns a channel toward t.
+                    let (xr, xj) = geom.gate(i, t);
+                    assert_eq!(geom.global_peer(i, xr, xj).0, t);
+                    assert_eq!(geom.chan_to_group(i, xr, t), Some(xj));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gate_is_symmetric() {
+        // The copy-0 gateway channels of i→t and t→i are the two ends of
+        // one physical link — the invariant the service embedding needs.
+        for (g, a, h) in test_instances() {
+            let geom = DfGeom::new(g, a, h);
+            for i in 0..g {
+                for t in 0..g {
+                    if i == t {
+                        continue;
+                    }
+                    let (xr, xj) = geom.gate(i, t);
+                    let (yr, yj) = geom.gate(t, i);
+                    assert_eq!(geom.global_peer(i, xr, xj), (t, yr));
+                    assert_eq!(geom.global_peer(t, yr, yj), (i, xr));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chan_to_group_matches_scan() {
+        for (g, a, h) in test_instances() {
+            let geom = DfGeom::new(g, a, h);
+            for i in 0..g {
+                for r in 0..a {
+                    for t in 0..g {
+                        let scan = (0..h).find(|&j| t != i && geom.global_peer(i, r, j).0 == t);
+                        assert_eq!(
+                            geom.chan_to_group(i, r, t),
+                            scan,
+                            "g={g} a={a} h={h} ({i},{r})→{t}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn df_structure() {
+        let t = dragonfly(9, 4, 2);
+        assert_eq!(t.n, 36);
+        // Balanced (a*h = g−1, one channel per group pair): degree is
+        // exactly a−1+h everywhere.
+        for s in 0..t.n {
+            assert_eq!(t.degree(s), 5);
+        }
+        assert_eq!(t.num_links(), 36 * 5 / 2);
+        assert_eq!(t.name(), "DF[9x4x2]");
+    }
+
+    #[test]
+    fn min_next_reaches_destination_within_three_hops() {
+        for (g, a, h) in test_instances() {
+            let geom = DfGeom::new(g, a, h);
+            let t = dragonfly(g, a, h);
+            for s in 0..t.n {
+                for d in 0..t.n {
+                    if s == d {
+                        continue;
+                    }
+                    let mut cur = s;
+                    let mut hops = 0;
+                    while cur != d {
+                        let nxt = geom.min_next(cur, d);
+                        assert!(t.port_to(cur, nxt).is_some(), "min hop must be adjacent");
+                        cur = nxt;
+                        hops += 1;
+                        assert!(hops <= 3, "l-g-l bound violated for {s}→{d}");
+                    }
+                    assert!(hops >= t.distance(s, d), "shorter than the distance?!");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diameter_three_case_exists() {
+        // g=3, a=2, h=1: router 0 of group i reaches group i+1 only through
+        // its groupmate — a genuine local–global–local diameter-3 instance.
+        let t = dragonfly(3, 2, 1);
+        assert_eq!(t.diameter(), 3);
+        // g=2: every global channel lands in the one other group → 2.
+        assert_eq!(dragonfly(2, 3, 2).diameter(), 2);
+    }
+}

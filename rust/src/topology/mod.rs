@@ -10,9 +10,11 @@
 //! ports (port `p` connects to `neighbors[s][p]`), followed by the servers'
 //! injection/ejection ports, which the simulator manages separately.
 
+pub mod dragonfly;
 pub mod fullmesh;
 pub mod hyperx;
 
+pub use dragonfly::{dragonfly, DfGeom};
 pub use fullmesh::full_mesh;
 pub use hyperx::{hyperx, hyperx2d};
 
@@ -24,6 +26,28 @@ pub enum TopoKind {
     /// d-dimensional HyperX: switches are points of a mixed-radix grid and
     /// each "row" along every dimension is a complete graph.
     HyperX { dims: Vec<usize> },
+    /// Dragonfly (palmtree arrangement): `groups` groups of
+    /// `routers_per_group` routers, each serving `hosts_per_router` global
+    /// channels; the group graph is a full mesh. See [`dragonfly`].
+    Dragonfly {
+        groups: usize,
+        routers_per_group: usize,
+        hosts_per_router: usize,
+    },
+}
+
+impl TopoKind {
+    /// Closed-form Dragonfly geometry, when this kind is a Dragonfly.
+    pub fn df_geom(&self) -> Option<DfGeom> {
+        match self {
+            TopoKind::Dragonfly {
+                groups,
+                routers_per_group,
+                hosts_per_router,
+            } => Some(DfGeom::new(*groups, *routers_per_group, *hosts_per_router)),
+            _ => None,
+        }
+    }
 }
 
 /// A physical switch-to-switch topology with O(1) port lookup.
@@ -35,12 +59,19 @@ pub struct PhysTopology {
     /// the index within the list is the port number.
     pub neighbors: Vec<Vec<usize>>,
     /// Dense `n × n` port map: `port_to[s * n + d]` is the port of `s` that
-    /// connects directly to `d`, or `NO_PORT`.
+    /// connects directly to `d`, or `NO_PORT`. Built only while
+    /// `n <= DENSE_PORT_MAP_MAX` (empty above that); [`Self::port_to`]
+    /// falls back to a binary search of the sorted neighbor list, so
+    /// million-endpoint-class instances stay constructible.
     port_to: Vec<u32>,
     pub kind: TopoKind,
 }
 
 pub const NO_PORT: u32 = u32::MAX;
+
+/// Largest switch count for which the dense `n × n` port map is built
+/// (2048² × 4 B = 16 MiB). Above it, `port_to` costs O(log degree).
+pub const DENSE_PORT_MAP_MAX: usize = 2048;
 
 impl PhysTopology {
     /// Build from an adjacency list (neighbors get sorted; port map derived).
@@ -51,11 +82,16 @@ impl PhysTopology {
             l.sort_unstable();
             l.dedup();
         }
-        let mut port_to = vec![NO_PORT; n * n];
+        let mut port_to = Vec::new();
+        if n <= DENSE_PORT_MAP_MAX {
+            port_to = vec![NO_PORT; n * n];
+        }
         for (s, l) in neighbors.iter().enumerate() {
             for (p, &d) in l.iter().enumerate() {
                 assert!(d < n && d != s, "bad neighbor {d} of {s}");
-                port_to[s * n + d] = p as u32;
+                if !port_to.is_empty() {
+                    port_to[s * n + d] = p as u32;
+                }
             }
         }
         Self {
@@ -86,6 +122,9 @@ impl PhysTopology {
     /// Port of `s` that connects directly to `d` (None if not adjacent).
     #[inline]
     pub fn port_to(&self, s: usize, d: usize) -> Option<usize> {
+        if self.port_to.is_empty() {
+            return self.neighbors[s].binary_search(&d).ok();
+        }
         let p = self.port_to[s * self.n + d];
         if p == NO_PORT {
             None
@@ -125,6 +164,9 @@ impl PhysTopology {
                 let cb = coords(b, dims);
                 ca.iter().zip(&cb).filter(|(x, y)| x != y).count()
             }
+            TopoKind::Dragonfly { .. } => {
+                self.kind.df_geom().expect("dragonfly kind").distance(a, b)
+            }
         }
     }
 
@@ -133,6 +175,7 @@ impl PhysTopology {
         match &self.kind {
             TopoKind::FullMesh => 1,
             TopoKind::HyperX { dims } => dims.len(),
+            TopoKind::Dragonfly { .. } => self.kind.df_geom().expect("dragonfly kind").diameter(),
         }
     }
 
@@ -143,6 +186,11 @@ impl PhysTopology {
                 let d: Vec<String> = dims.iter().map(|x| x.to_string()).collect();
                 format!("HyperX[{}]", d.join("x"))
             }
+            TopoKind::Dragonfly {
+                groups,
+                routers_per_group,
+                hosts_per_router,
+            } => format!("DF[{groups}x{routers_per_group}x{hosts_per_router}]"),
         }
     }
 }
@@ -201,7 +249,22 @@ mod tests {
 
     #[test]
     fn closed_form_distance_matches_bfs() {
-        for t in [full_mesh(8), hyperx(&[4, 3]), hyperx(&[2, 2, 2]), hyperx(&[4, 4])] {
+        for t in [
+            full_mesh(8),
+            hyperx(&[4, 3]),
+            hyperx(&[2, 2, 2]),
+            hyperx(&[4, 4]),
+            // Dragonfly closed forms, including the diameter-3
+            // local–global–local instance df3x2x1 (router 0 of a group
+            // reaches the next group only through its groupmate), a
+            // K>1 parallel-channel case (5x2x2) and the balanced 9x4x2.
+            dragonfly(3, 2, 1),
+            dragonfly(5, 2, 2),
+            dragonfly(9, 4, 2),
+            dragonfly(4, 3, 1),
+            dragonfly(2, 3, 2),
+            dragonfly(33, 16, 8),
+        ] {
             let mut diameter = 0;
             for a in 0..t.n {
                 let d = bfs_distances(&t, a);
@@ -216,14 +279,41 @@ mod tests {
 
     #[test]
     fn reverse_port_is_involution() {
-        let t = full_mesh(8);
-        for s in 0..t.n {
-            for p in 0..t.degree(s) {
-                let d = t.neighbor(s, p);
-                let rp = t.reverse_port(s, p);
-                assert_eq!(t.neighbor(d, rp), s);
-                assert_eq!(t.reverse_port(d, rp), p);
+        for t in [full_mesh(8), dragonfly(9, 4, 2), dragonfly(5, 2, 2)] {
+            for s in 0..t.n {
+                for p in 0..t.degree(s) {
+                    let d = t.neighbor(s, p);
+                    let rp = t.reverse_port(s, p);
+                    assert_eq!(t.neighbor(d, rp), s);
+                    assert_eq!(t.reverse_port(d, rp), p);
+                }
             }
         }
+    }
+
+    #[test]
+    fn sparse_port_map_fallback_matches_dense() {
+        // Above DENSE_PORT_MAP_MAX the n×n map is skipped and port_to
+        // binary-searches the neighbor list; the answers must be identical.
+        let big = dragonfly(65, 16, 8).n; // 1040 — still dense
+        assert!(big <= DENSE_PORT_MAP_MAX);
+        let dense = dragonfly(9, 4, 2);
+        let mut sparse = dense.clone();
+        sparse.port_to = Vec::new();
+        for s in 0..dense.n {
+            for d in 0..dense.n {
+                assert_eq!(dense.port_to(s, d), sparse.port_to(s, d), "{s}->{d}");
+            }
+        }
+        // And a genuinely-sparse construction works end to end.
+        let t = dragonfly(1025, 32, 32); // n = 32800 > DENSE_PORT_MAP_MAX
+        assert!(t.port_to.is_empty());
+        let s = 12345;
+        for p in 0..t.degree(s) {
+            let d = t.neighbor(s, p);
+            assert_eq!(t.port_to(s, d), Some(p));
+            assert_eq!(t.reverse_port(d, t.reverse_port(s, p)), p);
+        }
+        assert_eq!(t.port_to(s, s), None);
     }
 }

@@ -292,6 +292,27 @@ fn sharded_hx8x8_bit_identical_for_every_router() {
     }
 }
 
+/// The Dragonfly routers on DF[9x4x2] — the compressed table tier plus the
+/// phase-tracking Valiant/UGAL generalizations and the group-mode link
+/// orderings — adversarial (complement) and uniform traffic.
+#[test]
+fn sharded_df9x4x2_bit_identical_for_every_router() {
+    let routers = [
+        "min",
+        "valiant",
+        "ugal",
+        "brinr",
+        "srinr",
+        "tera-path",
+        "tera-tree4",
+    ];
+    for routing in routers {
+        for pattern in ["complement", "uniform"] {
+            assert_shard_invariant(shard_spec("df9x4x2", routing, pattern, 5));
+        }
+    }
+}
+
 /// Open-loop (Bernoulli) runs shard identically too: the windowed stats
 /// path (warmup gating of injections, latency and link counters) must not
 /// depend on the partition.
@@ -444,6 +465,25 @@ fn time_advance_bit_identical_hx8x8_every_router() {
     }
 }
 
+/// The Dragonfly routers on DF[9x4x2].
+#[test]
+fn time_advance_bit_identical_df9x4x2_every_router() {
+    let routers = [
+        "min",
+        "valiant",
+        "ugal",
+        "brinr",
+        "srinr",
+        "tera-path",
+        "tera-tree4",
+    ];
+    for routing in routers {
+        for spec in time_advance_specs("df9x4x2", routing, "complement", 5) {
+            assert_time_advance_invariant(spec);
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Batched compute-phase hot path: the bit-identity contract.
 //
@@ -532,6 +572,25 @@ fn batched_bit_identical_hx8x8_every_router() {
     let routers = ["min", "omniwar-hx", "dimwar", "dor-tera", "o1turn-tera"];
     for routing in routers {
         for spec in batched_specs("hx8x8", routing, "shift", 7) {
+            assert_batched_invariant(spec);
+        }
+    }
+}
+
+/// The Dragonfly routers on DF[9x4x2].
+#[test]
+fn batched_bit_identical_df9x4x2_every_router() {
+    let routers = [
+        "min",
+        "valiant",
+        "ugal",
+        "brinr",
+        "srinr",
+        "tera-path",
+        "tera-tree4",
+    ];
+    for routing in routers {
+        for spec in batched_specs("df9x4x2", routing, "complement", 7) {
             assert_batched_invariant(spec);
         }
     }

@@ -125,9 +125,12 @@ fn alloc_events(host: &str, routing: &str, iters: usize, batched: bool) -> u64 {
 #[test]
 fn routing_hot_path_is_allocation_free() {
     // Every router on its host topology, scalar AND batched entry points.
-    let cases: [(&str, &[&str]); 2] = [
+    let cases: [(&str, &[&str]); 3] = [
         ("fm64", &["min", "valiant", "ugal", "omniwar", "brinr", "srinr", "tera-hx2"]),
         ("hx8x8", &["min", "omniwar-hx", "dimwar", "dor-tera", "o1turn-tera"]),
+        // Dragonfly rides the compressed table tier: closed-form min_port
+        // plus CSR group-deroute rows, still zero per-decision heap traffic.
+        ("df9x4x2", &["min", "valiant", "ugal", "brinr", "srinr", "tera-tree4"]),
     ];
     for (host, routings) in cases {
         for routing in routings {

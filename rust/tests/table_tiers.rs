@@ -1,0 +1,416 @@
+//! Tier-equivalence suite for the hierarchical (compressed) table tier.
+//!
+//! The compressed Dragonfly tier replaces the flat O(n²) per-`(switch, dst)`
+//! arrays with per-switch local/global port rows plus shared `g × g` service
+//! matrices (DESIGN.md, "The hierarchical table tier"). The contract is that
+//! the tier is *unobservable* to routing:
+//!
+//! 1. **Table fidelity**: every accessor the routers read — `min_port`,
+//!    `svc_port`, `svc_dist`, the main/service port splits and the
+//!    group-deroute rows — agrees between a flat-tier and a compressed-tier
+//!    compile of the same host/service, over every `(s, d)` pair.
+//! 2. **Decision equivalence**: every Dragonfly router of the evaluation is
+//!    driven over flat-tier and compressed-tier tables with paired RNG
+//!    streams through randomized multi-hop episodes (scalar and batched
+//!    entry points alternating); every decision — including waits — and
+//!    every packet mutation must agree exactly.
+//! 3. **Off-Dragonfly hosts**: `TableTier::Auto` resolves to the flat tier
+//!    on FM300 and HX[8x8] and an Auto compile is decision-identical to an
+//!    explicit `TableTier::Flat` compile there.
+
+use std::sync::Arc;
+
+use tera_net::config::spec::topology_by_name;
+use tera_net::routing::tera::ESCAPE_PATIENCE;
+use tera_net::routing::{
+    srinr_labels, CandidateBuf, LinkOrderRouter, MinRouter, Router, RoutingTables, TableTier,
+    TeraRouter, UgalRouter, ValiantRouter,
+};
+use tera_net::service::{self, DragonflyService, ServiceTopology};
+use tera_net::sim::packet::{Packet, NO_SWITCH};
+use tera_net::sim::SwitchView;
+use tera_net::testing;
+use tera_net::topology::{dragonfly, PhysTopology};
+use tera_net::util::Rng;
+
+const NOW: u64 = 5;
+const SPEEDUP: u64 = 2;
+const OUT_CAP: usize = 5;
+const Q: u32 = 54;
+
+struct ViewData {
+    occ: Vec<u32>,
+    out_lens: Vec<u32>,
+    grants: Vec<u8>,
+    last: Vec<u64>,
+}
+
+fn random_view(rng: &mut Rng, ports: usize, vcs: usize) -> ViewData {
+    ViewData {
+        occ: (0..ports).map(|_| rng.gen_range(200) as u32).collect(),
+        // 0..=5 with cap 5: a healthy share of full output queues.
+        out_lens: (0..ports * vcs)
+            .map(|_| rng.gen_range(OUT_CAP + 1) as u32)
+            .collect(),
+        grants: (0..ports).map(|_| rng.gen_range(3) as u8).collect(),
+        last: (0..ports)
+            .map(|_| if rng.gen_bool(0.3) { NOW } else { 0 })
+            .collect(),
+    }
+}
+
+impl ViewData {
+    fn view(&self, sw: usize, degree: usize, vcs: usize) -> SwitchView<'_> {
+        SwitchView::from_raw(
+            sw,
+            degree,
+            NOW,
+            SPEEDUP,
+            vcs,
+            OUT_CAP,
+            &self.occ,
+            &self.out_lens,
+            &self.grants,
+            &self.last,
+        )
+    }
+}
+
+fn mk_pkt(src_sw: usize, dst_sw: usize) -> Packet {
+    Packet {
+        src_server: src_sw as u32,
+        dst_server: dst_sw as u32,
+        src_sw: src_sw as u32,
+        dst_sw: dst_sw as u32,
+        intermediate: NO_SWITCH,
+        hops: 0,
+        vc: 0,
+        scratch: 0,
+        blocked: 0,
+        gen_cycle: 0,
+        inject_cycle: 0,
+        flits: 16,
+        msg: tera_net::sim::NO_MESSAGE,
+    }
+}
+
+/// Drive two routers (same policy, different table tiers) through
+/// randomized multi-hop episodes with paired RNG streams, alternating the
+/// scalar and batched entry points; every decision (including waits) and
+/// every router-owned packet field must agree exactly.
+fn assert_tier_equivalent(
+    name: &str,
+    topo: &Arc<PhysTopology>,
+    flat: &dyn Router,
+    comp: &dyn Router,
+    cases: u64,
+) {
+    assert_eq!(flat.num_vcs(), comp.num_vcs(), "{name}: vc count");
+    assert_eq!(flat.max_hops(), comp.max_hops(), "{name}: max_hops");
+    let vcs = flat.num_vcs();
+    let n = topo.n;
+    let spc = 4;
+    testing::check(name, cases, |mrng| {
+        let src = mrng.gen_range(n);
+        let dst = loop {
+            let d = mrng.gen_range(n);
+            if d != src {
+                break d;
+            }
+        };
+        let seed = mrng.next_u64();
+        let mut rng_f = Rng::new(seed);
+        let mut rng_c = Rng::new(seed);
+        let mut pkt_f = mk_pkt(src, dst);
+        let mut pkt_c = mk_pkt(src, dst);
+        let mut buf_f = CandidateBuf::new();
+        let mut buf_c = CandidateBuf::new();
+        let mut cur = src;
+        let mut at_injection = true;
+        for step in 0..12 {
+            if cur == dst {
+                break;
+            }
+            // Occasionally push the packet past the escape-patience gate so
+            // the escape branches are compared too.
+            if mrng.gen_bool(0.25) {
+                let b = ESCAPE_PATIENCE + mrng.gen_range(4) as u16;
+                pkt_f.blocked = b;
+                pkt_c.blocked = b;
+            }
+            let degree = topo.degree(cur);
+            let vd = random_view(mrng, degree + spc, vcs);
+            let view = vd.view(cur, degree, vcs);
+            let batched = step % 2 == 1;
+            let d_f = if batched {
+                flat.route_batched(&view, &mut pkt_f, at_injection, &mut rng_f, &mut buf_f)
+            } else {
+                flat.route(&view, &mut pkt_f, at_injection, &mut rng_f, &mut buf_f)
+            };
+            let d_c = if batched {
+                comp.route_batched(&view, &mut pkt_c, at_injection, &mut rng_c, &mut buf_c)
+            } else {
+                comp.route(&view, &mut pkt_c, at_injection, &mut rng_c, &mut buf_c)
+            };
+            assert_eq!(
+                d_f, d_c,
+                "{name}: step {step} cur={cur} dst={dst} at_injection={at_injection}"
+            );
+            // Router-owned packet state must track identically too.
+            assert_eq!(pkt_f.intermediate, pkt_c.intermediate, "{name}: step {step}");
+            assert_eq!(pkt_f.scratch, pkt_c.scratch, "{name}: step {step}");
+            match d_f {
+                None => {
+                    pkt_f.blocked = pkt_f.blocked.saturating_add(1);
+                    pkt_c.blocked = pkt_c.blocked.saturating_add(1);
+                }
+                Some((port, vc)) => {
+                    assert!(port < degree, "{name}: routed to a non-switch port");
+                    cur = topo.neighbor(cur, port);
+                    pkt_f.hops += 1;
+                    pkt_c.hops += 1;
+                    pkt_f.vc = vc as u8;
+                    pkt_c.vc = vc as u8;
+                    pkt_f.blocked = 0;
+                    pkt_c.blocked = 0;
+                    at_injection = false;
+                }
+            }
+        }
+    });
+}
+
+/// Every accessor the routers read agrees between the tiers.
+fn assert_tables_agree(topo: &Arc<PhysTopology>, flat: &RoutingTables, comp: &RoutingTables) {
+    assert!(!flat.is_compressed());
+    assert!(comp.is_compressed());
+    let n = topo.n;
+    for s in 0..n {
+        assert_eq!(flat.main_ports(s), comp.main_ports(s), "main split of {s}");
+        assert_eq!(
+            flat.service_ports(s),
+            comp.service_ports(s),
+            "service split of {s}"
+        );
+        for d in 0..n {
+            if s == d {
+                continue;
+            }
+            assert_eq!(flat.min_port(s, d), comp.min_port(s, d), "min_port({s},{d})");
+            if flat.has_service() {
+                assert_eq!(flat.svc_port(s, d), comp.svc_port(s, d), "svc_port({s},{d})");
+                assert_eq!(flat.svc_dist(s, d), comp.svc_dist(s, d), "svc_dist({s},{d})");
+            }
+        }
+    }
+    assert!(
+        comp.table_bytes() < flat.table_bytes(),
+        "compression must not grow the tables even at toy sizes"
+    );
+}
+
+/// Group service of `inner` shape wrapped into the TERA Dragonfly embedding.
+fn df_service(topo: &Arc<PhysTopology>, inner: &str) -> Arc<dyn ServiceTopology> {
+    let geom = topo.kind.df_geom().expect("dragonfly host");
+    let group = service::by_name(inner, geom.g).unwrap();
+    Arc::new(DragonflyService::try_new(geom, group).unwrap())
+}
+
+#[test]
+fn df_routers_decide_identically_across_tiers() {
+    for (g, a, h) in [(9usize, 4usize, 2usize), (5, 2, 2)] {
+        let topo = Arc::new(dragonfly(g, a, h));
+        let tag = format!("df{g}x{a}x{h}");
+
+        // Service-free tables: MIN / Valiant / UGAL and the group-label
+        // link orderings (parallel compile on one side for extra coverage —
+        // tables are bit-identical for every thread budget).
+        let flat = Arc::new(RoutingTables::compile_with(
+            topo.clone(),
+            None,
+            TableTier::Flat,
+            1,
+        ));
+        let comp = Arc::new(RoutingTables::compile_with(
+            topo.clone(),
+            None,
+            TableTier::Compressed,
+            3,
+        ));
+        assert_tables_agree(&topo, &flat, &comp);
+        let policies: [(&str, fn(Arc<RoutingTables>) -> Box<dyn Router>); 3] = [
+            ("min", |t| Box::new(MinRouter::new(t))),
+            ("valiant", |t| Box::new(ValiantRouter::new(t))),
+            ("ugal", |t| Box::new(UgalRouter::new(t))),
+        ];
+        for (kind, build) in policies {
+            assert_tier_equivalent(
+                &format!("{kind}/{tag}"),
+                &topo,
+                build(flat.clone()).as_ref(),
+                build(comp.clone()).as_ref(),
+                16,
+            );
+        }
+        let labels = srinr_labels(g);
+        let flat_l = Arc::new(
+            RoutingTables::compile_with(topo.clone(), None, TableTier::Flat, 1)
+                .with_group_labels(labels.clone()),
+        );
+        let comp_l = Arc::new(
+            RoutingTables::compile_with(topo.clone(), None, TableTier::Compressed, 2)
+                .with_group_labels(labels),
+        );
+        assert_tier_equivalent(
+            &format!("srinr/{tag}"),
+            &topo,
+            &LinkOrderRouter::from_tables(flat_l, "sRINR", Q),
+            &LinkOrderRouter::from_tables(comp_l, "sRINR", Q),
+            16,
+        );
+
+        // TERA over tree-shaped group services (the VC-less deadlock-free
+        // configurations the Dragonfly embedding admits).
+        for inner in ["path", "tree4"] {
+            let svc = df_service(&topo, inner);
+            let flat_t = Arc::new(RoutingTables::compile_with(
+                topo.clone(),
+                Some(svc.clone()),
+                TableTier::Flat,
+                1,
+            ));
+            let comp_t = Arc::new(RoutingTables::compile_with(
+                topo.clone(),
+                Some(svc.clone()),
+                TableTier::Compressed,
+                3,
+            ));
+            assert_tables_agree(&topo, &flat_t, &comp_t);
+            assert_tier_equivalent(
+                &format!("tera-{inner}/{tag}"),
+                &topo,
+                &TeraRouter::from_tables(flat_t, Q),
+                &TeraRouter::from_tables(comp_t, Q),
+                16,
+            );
+        }
+    }
+}
+
+/// On non-Dragonfly hosts `Auto` stays flat — and is unobservable: routers
+/// over an Auto compile decide identically to routers over an explicit
+/// `TableTier::Flat` compile (FM300 exercises the u16-widened encoding,
+/// HX[8x8] the non-complete-host DOR rows).
+#[test]
+fn auto_tier_is_flat_and_unobservable_off_dragonfly() {
+    // FM300: the full-mesh router set.
+    let topo = Arc::new(topology_by_name("fm300").unwrap());
+    let auto = Arc::new(RoutingTables::compile_with(
+        topo.clone(),
+        None,
+        TableTier::Auto,
+        2,
+    ));
+    assert!(!auto.is_compressed(), "fm300: Auto must stay flat");
+    let flat = Arc::new(RoutingTables::compile_with(
+        topo.clone(),
+        None,
+        TableTier::Flat,
+        1,
+    ));
+    let policies: [(&str, fn(Arc<RoutingTables>) -> Box<dyn Router>); 3] = [
+        ("min", |t| Box::new(MinRouter::new(t))),
+        ("valiant", |t| Box::new(ValiantRouter::new(t))),
+        ("ugal", |t| Box::new(UgalRouter::new(t))),
+    ];
+    for (kind, build) in policies {
+        assert_tier_equivalent(
+            &format!("{kind}/fm300"),
+            &topo,
+            build(flat.clone()).as_ref(),
+            build(auto.clone()).as_ref(),
+            6,
+        );
+    }
+    let labels = srinr_labels(topo.n);
+    let flat_l = Arc::new(
+        RoutingTables::compile_with(topo.clone(), None, TableTier::Flat, 1)
+            .with_link_labels(labels.clone()),
+    );
+    let auto_l = Arc::new(
+        RoutingTables::compile_with(topo.clone(), None, TableTier::Auto, 2)
+            .with_link_labels(labels),
+    );
+    assert_tier_equivalent(
+        "srinr/fm300",
+        &topo,
+        &LinkOrderRouter::from_tables(flat_l, "sRINR", Q),
+        &LinkOrderRouter::from_tables(auto_l, "sRINR", Q),
+        6,
+    );
+    let svc: Arc<dyn ServiceTopology> = Arc::from(service::by_name("path", topo.n).unwrap());
+    let flat_t = Arc::new(RoutingTables::compile_with(
+        topo.clone(),
+        Some(svc.clone()),
+        TableTier::Flat,
+        1,
+    ));
+    let auto_t = Arc::new(RoutingTables::compile_with(
+        topo.clone(),
+        Some(svc),
+        TableTier::Auto,
+        2,
+    ));
+    assert_tier_equivalent(
+        "tera-path/fm300",
+        &topo,
+        &TeraRouter::from_tables(flat_t, Q),
+        &TeraRouter::from_tables(auto_t, Q),
+        6,
+    );
+
+    // HX[8x8]: the RoutingTables-backed policies there (MIN over DOR rows
+    // and TERA over an edge-exact mesh2 embedding; the 2D-decomposed
+    // routers read HxTables, which have no tier choice).
+    let topo = Arc::new(topology_by_name("hx8x8").unwrap());
+    let auto = Arc::new(RoutingTables::compile_with(
+        topo.clone(),
+        None,
+        TableTier::Auto,
+        2,
+    ));
+    assert!(!auto.is_compressed(), "hx8x8: Auto must stay flat");
+    let flat = Arc::new(RoutingTables::compile_with(
+        topo.clone(),
+        None,
+        TableTier::Flat,
+        1,
+    ));
+    assert_tier_equivalent(
+        "min/hx8x8",
+        &topo,
+        &MinRouter::new(flat),
+        &MinRouter::new(auto),
+        8,
+    );
+    let svc: Arc<dyn ServiceTopology> = Arc::from(service::by_name("mesh2", topo.n).unwrap());
+    let flat_t = Arc::new(RoutingTables::compile_with(
+        topo.clone(),
+        Some(svc.clone()),
+        TableTier::Flat,
+        1,
+    ));
+    let auto_t = Arc::new(RoutingTables::compile_with(
+        topo.clone(),
+        Some(svc),
+        TableTier::Auto,
+        2,
+    ));
+    assert_tier_equivalent(
+        "tera-mesh2/hx8x8",
+        &topo,
+        &TeraRouter::from_tables(flat_t, Q),
+        &TeraRouter::from_tables(auto_t, Q),
+        8,
+    );
+}
