@@ -20,6 +20,12 @@
 //!     asserted in-bench), plus the million-endpoint-class df2049x64x32
 //!     point compressed-only on full runs — **`BENCH_tables.json`**
 //!     (section `tables`);
+//!   * **fault reconfiguration**: degraded-rebuild latency at the same
+//!     three instance points — stop-the-world recompile vs incremental
+//!     patch of the deroute overlay for a single-link transition (the
+//!     patch asserted byte-equal to the recompile), plus end-to-end fm64
+//!     runs with 2% of links failing mid-run under both rebuild
+//!     strategies — **`BENCH_faults.json`** (section `faults`);
 //!   * **batched hot path**: scalar vs batched compute-phase A/B on the
 //!     saturated FM300 RSP point (`SimConfig::batched`), with delivered
 //!     flits asserted equal — the gather/score/commit restructure's
@@ -61,7 +67,7 @@ use tera_net::routing::{CandidateBuf, HxTables, RoutingTables, TableTier};
 use tera_net::service::{DragonflyService, HyperXService, ServiceTopology};
 use tera_net::sim::packet::{Packet, NO_SWITCH};
 use tera_net::sim::{Network, RunOpts, SimConfig, SwitchView};
-use tera_net::topology::{dragonfly, PhysTopology, TopoKind};
+use tera_net::topology::{dragonfly, DeadSet, PhysTopology, TopoKind};
 use tera_net::traffic::kernels::{allreduce_rabenseifner, KernelWorkload, Mapping};
 use tera_net::traffic::FlowSpec;
 use tera_net::util::{Rng, Timer};
@@ -537,6 +543,117 @@ fn main() {
     match std::fs::write("BENCH_tables.json", &tjson) {
         Ok(()) => println!("wrote BENCH_tables.json (≥10x compression at df-1k: VERIFIED)"),
         Err(e) => println!("could not write BENCH_tables.json: {e}"),
+    }
+
+    // ---- Fault reconfiguration: degraded-rebuild latency. ----
+    // Stop-the-world recompile vs incremental patch of the degraded
+    // deroute overlay, at the same instance points the table-tier section
+    // compiles. Four spread-out links fail at once to form the initial
+    // overlay, then one more link fails: both strategies rebuild for that
+    // transition, and the patch must be byte-equal to the recompile on
+    // the measured artifacts (the unit-test contract, re-asserted at
+    // paper scale). Two end-to-end fm64 runs with 2% of links failing
+    // mid-run close the loop through the timing-wheel fault events,
+    // drop/requeue and the online router swap. Rows land in
+    // BENCH_faults.json (section `faults`) for the perf gate.
+    println!("\n== fault reconfiguration: degraded-rebuild latency ==\n");
+    println!(
+        "{:<26} {:>14} {:>10} {:>8}",
+        "instance", "recompile ms", "patch ms", "speedup"
+    );
+    let mut frows: Vec<String> = Vec::new();
+    {
+        let mut frow = |label: &str, wall: f64| {
+            frows.push(format!(
+                "    {{\"section\": \"faults\", \"label\": \"{label}\", \
+                 \"wall_secs\": {wall:.6}}}"
+            ));
+        };
+        let mut rebuild_case = |label: &str,
+                                topo: &Arc<PhysTopology>,
+                                svc: Option<Arc<dyn ServiceTopology>>,
+                                tier: TableTier| {
+            let tables = RoutingTables::compile_with(topo.clone(), svc, tier, threads);
+            let mut dead = DeadSet::default();
+            for i in 0..4 {
+                let s = i * topo.n / 4;
+                dead.fail_link(s as u32, topo.neighbor(s, 0) as u32);
+            }
+            let prev = tables.degraded_full(&dead);
+            let (s, p) = (topo.n - 1, topo.degree(topo.n - 1) - 1);
+            let nb = topo.neighbor(s, p);
+            assert!(prev.dead.edge_alive(s, nb), "extra link must be fresh");
+            dead.fail_link(s as u32, nb as u32);
+            let t = Timer::start();
+            let full = tables.degraded_full(&dead);
+            let w_full = t.elapsed_secs();
+            let t = Timer::start();
+            let patched = tables.degraded_patch(&prev, &dead);
+            let w_patch = t.elapsed_secs();
+            assert!(
+                full == patched,
+                "incremental patch diverged from full recompile at {label}"
+            );
+            println!(
+                "{label:<26} {:>14.2} {:>10.2} {:>7.1}x",
+                w_full * 1e3,
+                w_patch * 1e3,
+                w_full / w_patch.max(1e-9)
+            );
+            frow(&format!("{label}-recompile"), w_full);
+            frow(&format!("{label}-patch"), w_patch);
+        };
+        let fm300 = Arc::new(topology_by_name("fm300").unwrap());
+        let svc: Arc<dyn ServiceTopology> =
+            Arc::from(tera_net::service::by_name("path", fm300.n).unwrap());
+        rebuild_case("fm300-flat", &fm300, Some(svc), TableTier::Flat);
+        let hx = Arc::new(topology_by_name("hx8x8").unwrap());
+        let svc: Arc<dyn ServiceTopology> =
+            Arc::from(tera_net::service::by_name("mesh2", hx.n).unwrap());
+        rebuild_case("hx8x8-flat", &hx, Some(svc), TableTier::Flat);
+        let df1k = Arc::new(dragonfly(65, 16, 8));
+        let svc = df_tree4(&df1k);
+        rebuild_case("df65x16x8-compressed", &df1k, Some(svc), TableTier::Compressed);
+
+        // End-to-end: 2% of fm64's links go down a quarter of the way in;
+        // the run must keep delivering through the TERA escape under both
+        // rebuild strategies, and the fault must actually have fired.
+        let horizon: u64 = if quick() { 4_000 } else { 20_000 };
+        for (strategy, tag) in [
+            (tera_net::config::RebuildStrategy::Recompile, "recompile"),
+            (tera_net::config::RebuildStrategy::Patch, "patch"),
+        ] {
+            let mut spec = bernoulli_spec("fm64", 8, "tera-hx2", "uniform", 0.20, horizon);
+            spec.faults.link_rate = Some((2.0, horizon / 4));
+            spec.faults.rebuild = strategy;
+            let mut net = tera_net::engine::build_network(&spec).expect("build");
+            let mut wl = spec.build_workload(&net.topo).expect("workload");
+            let opts = tera_net::engine::run_opts(&spec);
+            let t = Timer::start();
+            let stats = net.run(wl.as_mut(), &opts).expect("faulted run");
+            let wall = t.elapsed_secs();
+            assert!(
+                stats.delivered_packets > 0,
+                "faulted fm64 run delivered nothing"
+            );
+            let rebuilds = net.rebuild_log().len();
+            assert!(rebuilds > 0, "the 2% link-failure event never fired");
+            println!(
+                "fm64 2% links down ({tag}): {:.2} Mcyc/s, {rebuilds} rebuild(s), {} drops",
+                horizon as f64 / wall / 1e6,
+                stats.dropped_packets
+            );
+            frow(&format!("fm64-2pct-{tag}"), wall);
+        }
+    }
+    let fjson = format!(
+        "{{\n  \"bench\": \"fault-rebuild\",\n  \"quick\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        quick(),
+        frows.join(",\n")
+    );
+    match std::fs::write("BENCH_faults.json", &fjson) {
+        Ok(()) => println!("wrote BENCH_faults.json (patch = recompile byte-equality: VERIFIED)"),
+        Err(e) => println!("could not write BENCH_faults.json: {e}"),
     }
 
     let mut bench = CycleBench::new();

@@ -1,0 +1,334 @@
+//! Fault-schedule specification: which links/switches fail (and recover)
+//! at which cycles, and how routing tables are rebuilt afterwards.
+//!
+//! Grammar (shared by the CLI flags and the `[faults]` config table):
+//!
+//! ```text
+//! --fail-links    "0-1@500, 2-3@100:900, 2%@1000"
+//! --fail-switches "3@200:400"
+//! --fault-rebuild recompile|patch
+//! ```
+//!
+//! Each link item is `A-B@FAIL[:RECOVER]` (switch ids, fail cycle,
+//! optional recover cycle) or `P%@FAIL` — a failure-rate process that
+//! fails each link independently with probability `P/100` at cycle
+//! `FAIL` (expanded deterministically from the run seed at build time).
+//! Switch items are `SW@FAIL[:RECOVER]`. Validation here is purely
+//! syntactic/temporal (cycle ordering, rate range); existence and
+//! adjacency of the named elements is checked against the topology when
+//! the engine builds the network.
+
+use super::Value;
+
+/// Which element a fault event targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// The undirected link between two adjacent switches.
+    Link(u32, u32),
+    /// A whole switch (all its links at once, plus its queue state).
+    Switch(u32),
+}
+
+impl std::fmt::Display for FaultTarget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultTarget::Link(a, b) => write!(f, "link {a}-{b}"),
+            FaultTarget::Switch(s) => write!(f, "switch {s}"),
+        }
+    }
+}
+
+/// One scheduled failure, with an optional recovery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub target: FaultTarget,
+    /// Cycle at which the element goes down (>= 1: the timing wheel only
+    /// schedules strictly-future events, and the simulator starts at 0).
+    pub fail_at: u64,
+    /// Cycle at which it comes back, if it does (> `fail_at`).
+    pub recover_at: Option<u64>,
+}
+
+/// How routing state is rebuilt when the dead set changes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RebuildStrategy {
+    /// Stop-the-world: recompute the full degraded overlay (a BFS per
+    /// destination) from scratch.
+    #[default]
+    Recompile,
+    /// Incremental: only recompute destination columns whose rows can have
+    /// changed; every other column is carried over. Byte-equal to
+    /// [`RebuildStrategy::Recompile`] by construction (property-tested).
+    Patch,
+}
+
+impl RebuildStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            RebuildStrategy::Recompile => "recompile",
+            RebuildStrategy::Patch => "patch",
+        }
+    }
+}
+
+/// The complete fault schedule of an experiment. `Default` is the empty
+/// schedule (no faults — the simulator hot path is untouched).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    pub events: Vec<FaultEvent>,
+    /// `(percent, fail_at)` — fail each link of the topology independently
+    /// with probability `percent/100` at `fail_at`, sampled from the run
+    /// seed when the network is built (so replicas vary deterministically).
+    pub link_rate: Option<(f64, u64)>,
+    pub rebuild: RebuildStrategy,
+}
+
+impl FaultSpec {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.link_rate.is_none()
+    }
+
+    /// Parse a `--fail-links` item list into this spec.
+    pub fn parse_links(&mut self, src: &str) -> anyhow::Result<()> {
+        for item in split_items(src) {
+            if let Some((rate, at)) = item.split_once('%') {
+                let percent: f64 = rate
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad failure rate '{item}'"))?;
+                anyhow::ensure!(
+                    percent > 0.0 && percent <= 100.0,
+                    "link failure rate must be in (0, 100], got {percent}% in '{item}'"
+                );
+                let at = at
+                    .strip_prefix('@')
+                    .ok_or_else(|| anyhow::anyhow!("rate item '{item}' needs '@<cycle>'"))?;
+                let fail_at = parse_cycle(at, item)?;
+                anyhow::ensure!(
+                    self.link_rate.is_none(),
+                    "only one link failure-rate process per run ('{item}')"
+                );
+                self.link_rate = Some((percent, fail_at));
+                continue;
+            }
+            let (pair, times) = item
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("link item '{item}' needs '@<fail-cycle>'"))?;
+            let (a, b) = pair
+                .split_once('-')
+                .ok_or_else(|| anyhow::anyhow!("link item '{item}' needs 'A-B' endpoints"))?;
+            let a: u32 = a
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad switch id '{a}' in '{item}'"))?;
+            let b: u32 = b
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad switch id '{b}' in '{item}'"))?;
+            anyhow::ensure!(a != b, "link '{item}' connects a switch to itself");
+            let (fail_at, recover_at) = parse_times(times, item)?;
+            self.events.push(FaultEvent {
+                target: FaultTarget::Link(a, b),
+                fail_at,
+                recover_at,
+            });
+        }
+        Ok(())
+    }
+
+    /// Parse a `--fail-switches` item list into this spec.
+    pub fn parse_switches(&mut self, src: &str) -> anyhow::Result<()> {
+        for item in split_items(src) {
+            let (sw, times) = item
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("switch item '{item}' needs '@<fail-cycle>'"))?;
+            let sw: u32 = sw
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad switch id '{sw}' in '{item}'"))?;
+            let (fail_at, recover_at) = parse_times(times, item)?;
+            self.events.push(FaultEvent {
+                target: FaultTarget::Switch(sw),
+                fail_at,
+                recover_at,
+            });
+        }
+        Ok(())
+    }
+
+    /// Parse the `[faults]` table of a config file. Unknown keys are an
+    /// error — a mistyped fault knob silently running the healthy network
+    /// is exactly the failure mode this subsystem exists to study.
+    pub fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let table = v
+            .as_table()
+            .ok_or_else(|| anyhow::anyhow!("[faults] must be a table"))?;
+        let mut spec = FaultSpec::default();
+        for (key, val) in table {
+            match key.as_str() {
+                "links" | "switches" => {
+                    let items = val.as_array().map(|a| a.to_vec()).unwrap_or_else(|| {
+                        // A single string is accepted as a one-item list.
+                        vec![val.clone()]
+                    });
+                    for item in &items {
+                        let s = item.as_str().ok_or_else(|| {
+                            anyhow::anyhow!("faults.{key} items must be strings")
+                        })?;
+                        if key == "links" {
+                            spec.parse_links(s)?;
+                        } else {
+                            spec.parse_switches(s)?;
+                        }
+                    }
+                }
+                "rebuild" => {
+                    let s = val
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("faults.rebuild must be a string"))?;
+                    spec.rebuild = parse_rebuild(s)?;
+                }
+                other => anyhow::bail!(
+                    "unknown [faults] key '{other}' (expected links, switches or rebuild)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// Parse `recompile` / `patch`.
+pub fn parse_rebuild(s: &str) -> anyhow::Result<RebuildStrategy> {
+    match s.to_ascii_lowercase().as_str() {
+        "recompile" => Ok(RebuildStrategy::Recompile),
+        "patch" => Ok(RebuildStrategy::Patch),
+        other => anyhow::bail!("unknown rebuild strategy '{other}' (recompile|patch)"),
+    }
+}
+
+fn split_items(src: &str) -> impl Iterator<Item = &str> {
+    src.split(',').map(str::trim).filter(|s| !s.is_empty())
+}
+
+fn parse_cycle(s: &str, item: &str) -> anyhow::Result<u64> {
+    let c: u64 = s
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad cycle '{s}' in '{item}'"))?;
+    anyhow::ensure!(c >= 1, "fault cycles start at 1 (got {c} in '{item}')");
+    Ok(c)
+}
+
+/// Parse `FAIL[:RECOVER]`, rejecting recover-before-fail orderings.
+fn parse_times(times: &str, item: &str) -> anyhow::Result<(u64, Option<u64>)> {
+    let (fail, recover) = match times.split_once(':') {
+        Some((f, r)) => (f, Some(r)),
+        None => (times, None),
+    };
+    let fail_at = parse_cycle(fail, item)?;
+    let recover_at = match recover {
+        Some(r) => {
+            let r = parse_cycle(r, item)?;
+            anyhow::ensure!(
+                r > fail_at,
+                "'{item}' recovers at {r}, at or before its failure at {fail_at}"
+            );
+            Some(r)
+        }
+        None => None,
+    };
+    Ok((fail_at, recover_at))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_items_round_trip() {
+        let mut spec = FaultSpec::default();
+        spec.parse_links("0-1@500, 2-3@100:900").unwrap();
+        assert_eq!(
+            spec.events,
+            vec![
+                FaultEvent {
+                    target: FaultTarget::Link(0, 1),
+                    fail_at: 500,
+                    recover_at: None,
+                },
+                FaultEvent {
+                    target: FaultTarget::Link(2, 3),
+                    fail_at: 100,
+                    recover_at: Some(900),
+                },
+            ]
+        );
+        assert!(spec.link_rate.is_none());
+    }
+
+    #[test]
+    fn rate_items_parse_and_validate() {
+        let mut spec = FaultSpec::default();
+        spec.parse_links("2%@1000").unwrap();
+        assert_eq!(spec.link_rate, Some((2.0, 1000)));
+        // A second rate process is ambiguous.
+        assert!(spec.parse_links("5%@2000").is_err());
+        for bad in ["0%@100", "101%@100", "2%", "x%@100", "2%@0"] {
+            let mut s = FaultSpec::default();
+            assert!(s.parse_links(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn switch_items_round_trip() {
+        let mut spec = FaultSpec::default();
+        spec.parse_switches("3@200:400, 7@50").unwrap();
+        assert_eq!(spec.events.len(), 2);
+        assert_eq!(spec.events[0].target, FaultTarget::Switch(3));
+        assert_eq!(spec.events[0].recover_at, Some(400));
+        assert_eq!(spec.events[1].recover_at, None);
+    }
+
+    #[test]
+    fn temporal_orderings_are_validated() {
+        // Recover at or before fail can never happen; cycle 0 is the
+        // simulator's start and cannot carry a wheel event.
+        for bad in ["0-1@500:500", "0-1@500:100", "0-1@0", "0-1@9:0"] {
+            let mut s = FaultSpec::default();
+            assert!(s.parse_links(bad).is_err(), "{bad}");
+        }
+        for bad in ["3@10:10", "3@0", "3"] {
+            let mut s = FaultSpec::default();
+            assert!(s.parse_switches(bad).is_err(), "{bad}");
+        }
+        // Self-links are malformed regardless of timing.
+        let mut s = FaultSpec::default();
+        assert!(s.parse_links("4-4@100").is_err());
+    }
+
+    #[test]
+    fn faults_table_round_trips_and_rejects_unknown_keys() {
+        let cfg = crate::config::parse(
+            "[faults]\nlinks = [\"0-1@500\", \"2-3@100:900\"]\nswitches = [\"3@200:400\"]\nrebuild = \"patch\"\n",
+        )
+        .unwrap();
+        let spec = FaultSpec::from_value(cfg.get("faults").unwrap()).unwrap();
+        assert_eq!(spec.events.len(), 3);
+        assert_eq!(spec.rebuild, RebuildStrategy::Patch);
+
+        // Unknown keys fail loudly instead of silently running healthy.
+        let bad = crate::config::parse("[faults]\nlnks = [\"0-1@500\"]\n").unwrap();
+        let err = FaultSpec::from_value(bad.get("faults").unwrap()).unwrap_err();
+        assert!(err.to_string().contains("unknown [faults] key"), "{err}");
+
+        let bad = crate::config::parse("[faults]\nrebuild = \"sturdier\"\n").unwrap();
+        assert!(FaultSpec::from_value(bad.get("faults").unwrap()).is_err());
+    }
+
+    #[test]
+    fn single_string_is_a_one_item_list() {
+        let cfg = crate::config::parse("[faults]\nlinks = \"0-1@500\"\n").unwrap();
+        let spec = FaultSpec::from_value(cfg.get("faults").unwrap()).unwrap();
+        assert_eq!(spec.events.len(), 1);
+    }
+}

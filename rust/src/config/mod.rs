@@ -2,8 +2,10 @@
 //! offline crate set — see DESIGN.md Substitution 5) plus the typed
 //! experiment spec the coordinator consumes.
 
+pub mod faults;
 pub mod parser;
 pub mod spec;
 
+pub use faults::{FaultEvent, FaultSpec, FaultTarget, RebuildStrategy};
 pub use parser::{parse, ParseError, Value};
 pub use spec::ExperimentSpec;

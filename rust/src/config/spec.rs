@@ -83,6 +83,10 @@ pub struct ExperimentSpec {
     /// Bit-identical either way — a pure wall-clock knob, like `shards`
     /// and `time_skip`; the A/B is what `perf_hotpath` measures.
     pub batched_compute: bool,
+    /// Fault schedule: which links/switches die (and recover) at which
+    /// cycles, plus the table-rebuild strategy. Default: empty (healthy
+    /// network, hot path untouched). See [`crate::config::faults`].
+    pub faults: crate::config::FaultSpec,
 }
 
 impl Default for ExperimentSpec {
@@ -106,6 +110,7 @@ impl Default for ExperimentSpec {
             time_skip: true,
             stop_rel_ci: None,
             batched_compute: true,
+            faults: crate::config::FaultSpec::default(),
         }
     }
 }
@@ -336,6 +341,9 @@ impl ExperimentSpec {
         if let Some(f) = v.get("stop_rel_ci").and_then(Value::as_float) {
             anyhow::ensure!(f > 0.0, "stop_rel_ci must be positive");
             spec.stop_rel_ci = Some(f);
+        }
+        if let Some(f) = v.get("faults") {
+            spec.faults = crate::config::FaultSpec::from_value(f)?;
         }
         let mode = get_str("mode").unwrap_or_else(|| "bernoulli".into());
         spec.traffic = match mode.as_str() {
@@ -597,6 +605,25 @@ mod tests {
         }
         // A skew fraction outside [0, 1] can never be sampled: fail loudly.
         let bad = crate::config::parse("mode = \"flows\"\nhot_frac = 1.5\n").unwrap();
+        assert!(ExperimentSpec::from_value(&bad).is_err());
+    }
+
+    #[test]
+    fn faults_table_reaches_the_spec() {
+        let cfg = crate::config::parse(
+            "topology = \"fm16\"\n[faults]\nlinks = [\"0-1@500:900\"]\nrebuild = \"patch\"\n",
+        )
+        .unwrap();
+        let spec = ExperimentSpec::from_value(&cfg).unwrap();
+        assert_eq!(spec.faults.events.len(), 1);
+        assert_eq!(
+            spec.faults.rebuild,
+            crate::config::RebuildStrategy::Patch
+        );
+        // Defaults stay empty so healthy runs are untouched.
+        assert!(ExperimentSpec::default().faults.is_empty());
+        // A bad sub-table fails the whole spec, not silently.
+        let bad = crate::config::parse("[faults]\nlinks = [\"0-1@500:100\"]\n").unwrap();
         assert!(ExperimentSpec::from_value(&bad).is_err());
     }
 

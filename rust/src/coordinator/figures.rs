@@ -10,6 +10,7 @@
 
 use crate::analytic;
 use crate::config::spec::{ExperimentSpec, TrafficSpec};
+use crate::config::{FaultSpec, RebuildStrategy};
 use crate::coordinator::report::{ascii_bars, write_csv, Table};
 use crate::coordinator::sweep::SweepResult;
 use crate::engine::Engine;
@@ -788,6 +789,140 @@ pub fn fct(scale: Scale, seed: u64) -> anyhow::Result<String> {
     }
     write_csv("fct.csv", &t.to_csv())?;
     Ok(t.render())
+}
+
+// ---------------------------------------------------------------------
+// Degraded-network resilience — throughput/FCT vs link-failure rate
+// ---------------------------------------------------------------------
+
+/// Run one spec through the free-function engine path, keeping the
+/// network alive long enough to read its reconfiguration log.
+fn run_with_rebuild_log(
+    spec: &ExperimentSpec,
+) -> anyhow::Result<(crate::metrics::SimStats, Vec<crate::sim::RebuildRecord>)> {
+    let mut net = crate::engine::build_network(spec)?;
+    let mut wl = crate::engine::build_workload(spec, &net.topo)?;
+    let stats = net
+        .run(wl.as_mut(), &crate::engine::run_opts(spec))
+        .map_err(|e| anyhow::anyhow!("{}: {e}", spec.name))?;
+    let log = net.rebuild_log().to_vec();
+    Ok((stats, log))
+}
+
+/// The fault-injection figure: message completion (FCT p50/p99), accepted
+/// throughput and drop counts as a function of the link-failure rate, for
+/// TERA (service escape) vs the link-order scheme — plus table-rebuild
+/// latency annotations comparing the stop-the-world recompile against the
+/// incremental patch at the highest rate. Links fail permanently at cycle
+/// 200, mid-flight, so every point exercises drop/requeue and the online
+/// table swap.
+pub fn faults(scale: Scale, seed: u64) -> anyhow::Result<String> {
+    let (topo, spc) = fm(scale);
+    let rates: &[f64] = match scale {
+        Scale::Quick => &[0.0, 1.0, 2.0, 5.0],
+        Scale::Paper => &[0.0, 1.0, 2.0, 5.0, 10.0],
+    };
+    let (flows, msg_pkts) = match scale {
+        Scale::Quick => (128usize, 4u32),
+        Scale::Paper => (1024, 16),
+    };
+    let fail_at = 200u64;
+    let routings = ["tera-hx2", "srinr"];
+    let mut t = Table::new(
+        &format!(
+            "Degraded network — hotspot flows on {topo} ({spc} srv/sw), \
+             links failed permanently at cycle {fail_at}"
+        ),
+        &[
+            "routing", "fail%", "dead", "msgs", "fct p50", "fct p99", "thr f/c/s", "drops",
+            "rebuild us", "cycles",
+        ],
+    );
+    let spec_for = |routing: &str, rate: f64, rebuild| {
+        let mut faults = FaultSpec::default();
+        if rate > 0.0 {
+            faults.link_rate = Some((rate, fail_at));
+            faults.rebuild = rebuild;
+        }
+        ExperimentSpec {
+            name: format!("faults-{routing}-{rate}"),
+            topology: topo.clone(),
+            servers_per_switch: spc,
+            routing: routing.into(),
+            traffic: TrafficSpec::Flows(FlowSpec {
+                scenario: "hotspot".into(),
+                flows,
+                msg_pkts,
+                hot_frac: 0.5,
+                ..FlowSpec::default()
+            }),
+            seed,
+            max_cycles: 80_000_000,
+            faults,
+            ..Default::default()
+        }
+    };
+    let mut notes = String::new();
+    for routing in routings {
+        for &rate in rates {
+            let spec = spec_for(routing, rate, RebuildStrategy::Recompile);
+            match run_with_rebuild_log(&spec) {
+                Ok((s, log)) => {
+                    let f = s
+                        .fct
+                        .as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("flow run without FCT stats"))?;
+                    let servers = s.injected_per_server.len().max(1);
+                    let thr =
+                        s.delivered_flits as f64 / s.finish_cycle.max(1) as f64 / servers as f64;
+                    let dead = log.first().map_or(0, |r| r.dead_links);
+                    let micros: u64 = log.iter().map(|r| r.micros).sum();
+                    t.row(vec![
+                        routing.into(),
+                        format!("{rate:.0}"),
+                        dead.to_string(),
+                        f.completed.to_string(),
+                        f.fct_percentile(50.0).to_string(),
+                        f.fct_percentile(99.0).to_string(),
+                        format!("{thr:.4}"),
+                        s.dropped_packets.to_string(),
+                        if log.is_empty() { "-".into() } else { micros.to_string() },
+                        s.finish_cycle.to_string(),
+                    ]);
+                }
+                Err(e) => t.row(vec![
+                    routing.into(),
+                    format!("{rate:.0}"),
+                    format!("FAILED({e})"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+        // Rebuild-latency annotation: recompile vs incremental patch for
+        // the same (highest-rate) transition. The tables are byte-equal;
+        // only the rebuild wall time differs.
+        let top = *rates.last().expect("non-empty rate sweep");
+        let mut latency = Vec::new();
+        for rebuild in [RebuildStrategy::Recompile, RebuildStrategy::Patch] {
+            let (_, log) = run_with_rebuild_log(&spec_for(routing, top, rebuild))?;
+            let rec = log
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("rate {top}% produced no transition"))?;
+            latency.push(format!("{} {} us", rec.strategy, rec.micros));
+        }
+        notes.push_str(&format!(
+            "[{routing}] table rebuild at {top:.0}% failures: {}\n",
+            latency.join(", ")
+        ));
+    }
+    write_csv("faults.csv", &t.to_csv())?;
+    Ok(format!("{}{notes}", t.render()))
 }
 
 // ---------------------------------------------------------------------

@@ -48,6 +48,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use crate::config::spec::{
     routing_by_name, routing_by_name_threads, topology_by_name, ExperimentSpec, TrafficSpec,
 };
+use crate::config::{FaultSpec, FaultTarget};
 use crate::metrics::{FctStats, LatencyHist, SimStats};
 use crate::routing::Router;
 use crate::sim::{Network, RunOpts, SimConfig, SimError};
@@ -142,9 +143,85 @@ pub fn build_workload(
     })
 }
 
+/// RNG stream for the failure-rate fault expansion (disjoint from every
+/// other derived stream in the crate).
+const FAULT_STREAM: u64 = 0xFA_1175_0000;
+
+/// Expand and validate a fault schedule against the topology and router it
+/// will run on: named links must exist, switch ids must be in range, and
+/// the router must opt into online reconfiguration ([`Router::tables`] /
+/// [`Router::with_tables`]). A `link_rate` process is sampled here,
+/// deterministically from the run seed, over the canonical undirected link
+/// enumeration (ascending switch, then ascending neighbor). Returns
+/// `(cycle, target, fail)` transitions sorted by cycle — stably, so
+/// same-cycle transitions apply in spec order.
+pub fn expand_faults(
+    spec: &FaultSpec,
+    topo: &PhysTopology,
+    router: &dyn Router,
+    seed: u64,
+) -> anyhow::Result<Vec<(u64, FaultTarget, bool)>> {
+    if spec.is_empty() {
+        return Ok(Vec::new());
+    }
+    let reconfigurable = router
+        .tables()
+        .map_or(false, |t| router.with_tables(t.clone()).is_some());
+    anyhow::ensure!(
+        reconfigurable,
+        "routing '{}' does not support online reconfiguration; fault injection needs a \
+         table-driven router (min, valiant, ugal, omniwar, srinr, brinr, tera-*)",
+        router.name()
+    );
+    let n = topo.n;
+    let mut out: Vec<(u64, FaultTarget, bool)> = Vec::new();
+    for ev in &spec.events {
+        match ev.target {
+            FaultTarget::Link(a, b) => {
+                anyhow::ensure!(
+                    (a as usize) < n && (b as usize) < n,
+                    "link {a}-{b}: switch ids must be < {n} on {}",
+                    topo.name()
+                );
+                anyhow::ensure!(
+                    topo.port_to(a as usize, b as usize).is_some(),
+                    "link {a}-{b} does not exist on {}",
+                    topo.name()
+                );
+            }
+            FaultTarget::Switch(s) => {
+                anyhow::ensure!(
+                    (s as usize) < n,
+                    "switch {s}: ids must be < {n} on {}",
+                    topo.name()
+                );
+            }
+        }
+        out.push((ev.fail_at, ev.target, true));
+        if let Some(r) = ev.recover_at {
+            out.push((r, ev.target, false));
+        }
+    }
+    if let Some((percent, fail_at)) = spec.link_rate {
+        let mut rng = Rng::derive(seed, FAULT_STREAM);
+        let p = percent / 100.0;
+        for s in 0..n {
+            for port in 0..topo.degree(s) {
+                let nb = topo.neighbor(s, port);
+                if nb > s && rng.gen_bool(p) {
+                    out.push((fail_at, FaultTarget::Link(s as u32, nb as u32), true));
+                }
+            }
+        }
+    }
+    out.sort_by_key(|&(cycle, _, _)| cycle);
+    Ok(out)
+}
+
 /// Build the simulator network for a spec. This is where the routing
 /// tables get compiled (inside `routing_by_name`): all per-`(switch, dst)`
-/// routing state is flattened here, once, before the first cycle runs.
+/// routing state is flattened here, once, before the first cycle runs —
+/// and where any fault schedule is expanded, validated and installed.
 ///
 /// The spec's `shards` knob is honored verbatim (clamped only to the
 /// switch count, inside `Network::new`) — the engine methods apply the
@@ -153,7 +230,12 @@ pub fn build_workload(
 pub fn build_network(spec: &ExperimentSpec) -> anyhow::Result<Network> {
     let topo = Arc::new(topology_by_name(spec.effective_topology())?);
     let router = routing_by_name(&spec.routing, topo.clone(), spec.q)?;
-    Ok(Network::new(topo, router, sim_config(spec)))
+    let schedule = expand_faults(&spec.faults, &topo, router.as_ref(), spec.seed)?;
+    let mut net = Network::new(topo, router, sim_config(spec));
+    if !schedule.is_empty() {
+        net.install_faults(schedule, spec.faults.rebuild);
+    }
+    Ok(net)
 }
 
 /// The run options a spec's traffic mode implies: Bernoulli runs are
@@ -393,11 +475,16 @@ impl Engine {
         shard_budget: usize,
     ) -> anyhow::Result<Network> {
         let (topo, router) = self.compiled_for(spec)?;
+        let schedule = expand_faults(&spec.faults, &topo, router.as_ref(), spec.seed)?;
         let cfg = SimConfig {
             shards: spec.shards.clamp(1, shard_budget.max(1)),
             ..sim_config(spec)
         };
-        Ok(Network::new(topo, router, cfg))
+        let mut net = Network::new(topo, router, cfg);
+        if !schedule.is_empty() {
+            net.install_faults(schedule, spec.faults.rebuild);
+        }
+        Ok(net)
     }
 
     /// Build and run one point under a shard budget.

@@ -52,6 +52,7 @@ fn real_main() -> anyhow::Result<()> {
         "ablation-q" => print!("{}", figures::ablation_q(scale, seed)?),
         "early-stop" => print!("{}", figures::early_stop(scale, seed)?),
         "fct" => print!("{}", figures::fct(scale, seed)?),
+        "faults" => print!("{}", figures::faults(scale, seed)?),
         "figs" => {
             // Everything, in paper order.
             print!("{}", figures::table1(64)?);
@@ -159,6 +160,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             }
             None => None,
         },
+        faults: faults_from(args)?,
     };
     // An explicit --shards request widens the default thread budget so the
     // sharded core actually runs that wide (results are bit-identical
@@ -175,6 +177,27 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     } else {
         report_one(&engine, &spec)
     }
+}
+
+/// Parse the fault-injection flags (`--fail-links`, `--fail-switches`,
+/// `--fault-rebuild`) into a schedule; absent flags leave the spec's empty
+/// default, keeping the healthy hot path untouched.
+fn faults_from(args: &Args) -> anyhow::Result<tera_net::config::FaultSpec> {
+    let mut faults = tera_net::config::FaultSpec::default();
+    if let Some(links) = args.get("fail-links") {
+        faults.parse_links(links)?;
+    }
+    if let Some(switches) = args.get("fail-switches") {
+        faults.parse_switches(switches)?;
+    }
+    if let Some(s) = args.get("fault-rebuild") {
+        anyhow::ensure!(
+            !faults.is_empty(),
+            "--fault-rebuild needs --fail-links or --fail-switches"
+        );
+        faults.rebuild = tera_net::config::faults::parse_rebuild(s)?;
+    }
+    Ok(faults)
 }
 
 /// Build the engine the CLI flags ask for (`--threads N`, default: cores-1,
@@ -288,6 +311,10 @@ fn report_one(engine: &Engine, spec: &ExperimentSpec) -> anyhow::Result<()> {
     println!("p99_latency         {}", stats.latency.percentile(99.0));
     println!("p99.9_latency       {}", stats.latency.percentile(99.9));
     println!("mean_hops           {:.3}", stats.mean_hops());
+    if stats.dropped_packets > 0 {
+        println!("dropped_packets     {}", stats.dropped_packets);
+        println!("retransmitted       {}", stats.retransmitted_packets);
+    }
     if let Some(f) = &stats.fct {
         println!("messages_offered    {}", f.offered);
         println!("messages_completed  {}", f.completed);
@@ -397,6 +424,8 @@ COMMANDS:
   early-stop          fixed-budget vs --stop-rel-ci sweep comparison
   fct                 flow-completion-time comparison of all FM routers
                       under incast + hotspot message workloads
+  faults              throughput + FCT-p99 vs link-failure rate (TERA vs
+                      link-order), with table-rebuild latency annotations
   validate-artifacts  cross-check AOT artifacts against pure-Rust references
   help                this text
 
@@ -439,4 +468,11 @@ RUN FLAGS:
                           0.05); with --replicas N, also prunes replicas
                           beyond convergence. Default: fixed budget.
   --max-cycles N          hard cycle budget for drain-bound runs
+  --fail-links SPEC       fault injection: comma list of A-B@FAIL[:RECOVER]
+                          link items (switch ids + cycles) and/or one
+                          P%@CYCLE failure-rate process, e.g.
+                          \"0-1@500, 2-3@100:900\" or \"2%@1000\"
+  --fail-switches SPEC    comma list of SW@FAIL[:RECOVER] switch items
+  --fault-rebuild MODE    recompile (stop-the-world, default) | patch
+                          (incremental; byte-equal tables, lower latency)
 ";

@@ -49,6 +49,13 @@ pub struct SimStats {
     /// existing results are byte-identical. Included in `PartialEq`: the
     /// shard/skip determinism contract covers FCT recording too.
     pub fct: Option<FctStats>,
+    /// Packets dropped by fault injection (in flight on a dying link, or
+    /// queued behind one). Zero on healthy runs.
+    pub dropped_packets: u64,
+    /// Packets re-injected at their source after a fault drop. Equal to
+    /// `dropped_packets` under the always-retransmit policy; kept separate
+    /// so a future give-up policy stays observable.
+    pub retransmitted_packets: u64,
 }
 
 impl SimStats {

@@ -243,11 +243,18 @@ impl LinkOrderRouter {
         let s = view.sw;
         let d = pkt.dst_sw as usize;
         let labels = self.tables.link_labels().expect("compiled with labels");
-        let direct = self.tables.min_port(s, d);
+        // `None` (destination cut off by the current fault set) makes the
+        // packet wait — never a panic, never a black hole.
+        let direct = self.tables.min_port_opt(s, d)?;
         if !at_injection {
             // Monotone labels guaranteed by the injection-time choice.
+            // Degraded tables may deroute around dead links, so the §3
+            // invariant only binds on the healthy topology (the watchdog
+            // is the safety net while faults are active).
             debug_assert!(
-                pkt.scratch == 0 || labels[s * n + d] + 1 > pkt.scratch,
+                pkt.scratch == 0
+                    || self.tables.degraded().is_some()
+                    || labels[s * n + d] + 1 > pkt.scratch,
                 "label monotonicity violated"
             );
             return if view.has_space(direct, 0) {
@@ -260,16 +267,27 @@ impl LinkOrderRouter {
         // Source: direct (no penalty) vs every allowed intermediate (+q).
         // No escape port: label monotonicity makes waiting on the
         // min-weight port deadlock-safe (arcs drain in decreasing label
-        // order).
+        // order). Dead links (fault injection) never enter the candidate
+        // set — a zero-occupancy dead port would otherwise win the weight
+        // contest and the packet would wait on it forever.
         buf.clear();
         if batched {
             let occ = view.occ_slice();
             buf.push(direct, 0, occ[direct]);
-            buf.extend_weighted(self.tables.allowed_ports(s, d), occ, 0, self.q);
+            buf.extend_weighted(
+                self.tables.allowed_ports(s, d),
+                occ,
+                0,
+                self.q,
+                view.link_mask(),
+            );
         } else {
             buf.push(direct, 0, view.occ_flits(direct));
             for &p in self.tables.allowed_ports(s, d) {
                 let p = p as usize;
+                if !view.link_up(p) {
+                    continue;
+                }
                 buf.push(p, 0, view.occ_flits(p) + self.q);
             }
         }
@@ -296,7 +314,7 @@ impl LinkOrderRouter {
     ) -> Option<Decision> {
         let s = view.sw;
         let d = pkt.dst_sw as usize;
-        let direct = self.tables.min_port(s, d);
+        let direct = self.tables.min_port_opt(s, d)?;
         if !at_injection {
             return if view.has_space(direct, 0) {
                 Some((direct, 0))
@@ -315,11 +333,20 @@ impl LinkOrderRouter {
         if batched {
             let occ = view.occ_slice();
             buf.push(direct, 0, occ[direct]);
-            buf.extend_weighted(self.tables.group_allowed_ports(s, gd), occ, 0, self.q);
+            buf.extend_weighted(
+                self.tables.group_allowed_ports(s, gd),
+                occ,
+                0,
+                self.q,
+                view.link_mask(),
+            );
         } else {
             buf.push(direct, 0, view.occ_flits(direct));
             for &p in self.tables.group_allowed_ports(s, gd) {
                 let p = p as usize;
+                if !view.link_up(p) {
+                    continue;
+                }
                 buf.push(p, 0, view.occ_flits(p) + self.q);
             }
         }
@@ -359,6 +386,14 @@ impl Router for LinkOrderRouter {
 
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    fn tables(&self) -> Option<&Arc<RoutingTables>> {
+        Some(&self.tables)
+    }
+
+    fn with_tables(&self, tables: Arc<RoutingTables>) -> Option<Arc<dyn Router>> {
+        Some(Arc::new(Self::from_tables(tables, &self.name, self.q)))
     }
 
     fn max_hops(&self) -> usize {

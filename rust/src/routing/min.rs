@@ -47,7 +47,10 @@ impl Router for MinRouter {
         _rng: &mut Rng,
         _buf: &mut CandidateBuf,
     ) -> Option<Decision> {
-        let port = self.tables.min_port(view.sw, pkt.dst_sw as usize);
+        // `None` (destination unreachable under the current fault set)
+        // makes the packet wait — never a panic, never a black hole; the
+        // watchdog reports the stall if no recovery comes.
+        let port = self.tables.min_port_opt(view.sw, pkt.dst_sw as usize)?;
         if view.has_space(port, 0) {
             Some((port, 0))
         } else {
@@ -57,6 +60,14 @@ impl Router for MinRouter {
 
     fn name(&self) -> String {
         "MIN".into()
+    }
+
+    fn tables(&self) -> Option<&Arc<RoutingTables>> {
+        Some(&self.tables)
+    }
+
+    fn with_tables(&self, tables: Arc<RoutingTables>) -> Option<Arc<dyn Router>> {
+        Some(Arc::new(Self { tables }))
     }
 
     fn max_hops(&self) -> usize {

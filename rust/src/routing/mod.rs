@@ -33,7 +33,10 @@ pub use hyperx2d::{DimWarRouter, DorTeraRouter, O1TurnTeraRouter, OmniWarHxRoute
 pub use linkorder::{brinr_labels, srinr_labels, LinkOrderRouter};
 pub use min::MinRouter;
 pub use omniwar::OmniWarRouter;
-pub use tables::{CandidateBuf, Csr, HxTables, RoutingTables, TableTier, TeraCore, NO_PORT16};
+pub use tables::{
+    CandidateBuf, Csr, DegradedView, Deroutes, HxTables, RoutingTables, TableTier, TeraCore,
+    Unroutable, NO_PORT16,
+};
 pub use tera::TeraRouter;
 pub use ugal::UgalRouter;
 pub use valiant::ValiantRouter;
@@ -96,6 +99,29 @@ pub trait Router: Send + Sync {
     /// Livelock bound: the maximum switch-to-switch hops any packet may take
     /// (asserted by the simulator on every delivery).
     fn max_hops(&self) -> usize;
+
+    /// The compiled routing tables this router decides over, if it is
+    /// table-driven. `Some` is the opt-in to online reconfiguration: fault
+    /// injection derives degraded tables from this value and swaps the
+    /// router via [`Self::with_tables`]. The default (`None`) marks the
+    /// router as not reconfigurable (the engine rejects fault schedules
+    /// for it with a proper error).
+    fn tables(&self) -> Option<&std::sync::Arc<RoutingTables>> {
+        None
+    }
+
+    /// Rebuild this router over `tables` (same policy, same parameters,
+    /// new table set) — the reconfiguration half of [`Self::tables`].
+    /// Implementations must return a router that behaves identically on
+    /// healthy tables, so a swap with an unchanged table set is a no-op
+    /// behaviorally. Default: `None` (not reconfigurable).
+    fn with_tables(
+        &self,
+        tables: std::sync::Arc<RoutingTables>,
+    ) -> Option<std::sync::Arc<dyn Router>> {
+        let _ = tables;
+        None
+    }
 }
 
 /// Weighted adaptive selection used by most algorithms here: pick the

@@ -47,7 +47,7 @@ impl Router for OmniWarRouter {
         _buf: &mut CandidateBuf,
     ) -> Option<Decision> {
         let dst = pkt.dst_sw as usize;
-        let min_port = self.tables.min_port(view.sw, dst);
+        let min_port = self.tables.min_port_opt(view.sw, dst)?;
         if !at_injection {
             // At the intermediate: finish minimally on VC 1.
             return if view.has_space(min_port, 1) {
@@ -99,7 +99,7 @@ impl Router for OmniWarRouter {
         buf: &mut CandidateBuf,
     ) -> Option<Decision> {
         let dst = pkt.dst_sw as usize;
-        let min_port = self.tables.min_port(view.sw, dst);
+        let min_port = self.tables.min_port_opt(view.sw, dst)?;
         if !at_injection {
             return if view.has_space(min_port, 1) {
                 Some((min_port, 1))
@@ -114,6 +114,17 @@ impl Router for OmniWarRouter {
 
     fn name(&self) -> String {
         "Omni-WAR".into()
+    }
+
+    fn tables(&self) -> Option<&Arc<RoutingTables>> {
+        Some(&self.tables)
+    }
+
+    fn with_tables(&self, tables: Arc<RoutingTables>) -> Option<Arc<dyn Router>> {
+        Some(Arc::new(Self {
+            tables,
+            bias: self.bias,
+        }))
     }
 
     fn max_hops(&self) -> usize {

@@ -33,7 +33,7 @@ use std::sync::Arc;
 
 use crate::service::{Embedding, ServiceTopology};
 use crate::sim::SwitchView;
-use crate::topology::{coords, full_mesh, DfGeom, PhysTopology, TopoKind};
+use crate::topology::{coords, full_mesh, DeadSet, DfGeom, PhysTopology, TopoKind};
 use crate::util::Rng;
 
 use super::Decision;
@@ -160,19 +160,43 @@ impl CandidateBuf {
 
     /// Batched fill: every port of `row` at weight `occ[p] + penalty`.
     /// (Link-ordering allowed-intermediate sets: the non-minimal `q`.)
+    /// `up` masks ports whose link is down (fault injection); `None`
+    /// means all up.
     #[inline]
-    pub fn extend_weighted(&mut self, row: &[u16], occ: &[u32], vc: usize, penalty: u32) {
+    pub fn extend_weighted(
+        &mut self,
+        row: &[u16],
+        occ: &[u32],
+        vc: usize,
+        penalty: u32,
+        up: Option<&[bool]>,
+    ) {
         for &p in row {
+            if up.map_or(false, |u| !u[p as usize]) {
+                continue;
+            }
             self.push(p as usize, vc, occ[p as usize] + penalty);
         }
     }
 
     /// Batched Algorithm-1 fill over a main-port row: weight `occ[p]`,
     /// plus `q` unless `p` is the direct port (pass `direct = u32::MAX`
-    /// when no direct port exists — no port compares equal).
+    /// when no direct port exists — no port compares equal). `up` masks
+    /// ports whose link is down (fault injection); `None` means all up.
     #[inline]
-    pub fn extend_tera(&mut self, row: &[u16], occ: &[u32], vc: usize, q: u32, direct: u32) {
+    pub fn extend_tera(
+        &mut self,
+        row: &[u16],
+        occ: &[u32],
+        vc: usize,
+        q: u32,
+        direct: u32,
+        up: Option<&[bool]>,
+    ) {
         for &p in row {
+            if up.map_or(false, |u| !u[p as usize]) {
+                continue;
+            }
             let w = occ[p as usize] + q * u32::from(u32::from(p) != direct);
             self.push(p as usize, vc, w);
         }
@@ -247,6 +271,7 @@ pub enum TableTier {
 /// from O(n) to O(a + h) and million-endpoint instances become
 /// constructible. Decision-identity with the flat tier is pinned by
 /// `tests/table_tiers.rs`.
+#[derive(Clone)]
 struct DfTier {
     geom: DfGeom,
     /// `local_port[s * a + v]` — port of `s` toward local index `v` of its
@@ -263,6 +288,7 @@ struct DfTier {
 /// `g × g` group-level service matrices: next group on the service route,
 /// gateway-to-entry hop count, and the landing router in the destination
 /// group (see `service::dragonfly` for the exact semantics).
+#[derive(Clone)]
 struct DfSvcMatrices {
     next: Vec<u16>,
     base: Vec<u16>,
@@ -340,6 +366,7 @@ impl DfTier {
 
 /// The per-`(switch, dst)` representation behind the [`RoutingTables`]
 /// facade: flat O(n²) arrays, or the compressed Dragonfly tier.
+#[derive(Clone)]
 enum Tier {
     Flat {
         /// DOR-minimal next-hop port per `(s, d)`; `NO_PORT16` diagonal.
@@ -356,6 +383,13 @@ enum Tier {
 /// pair. Every accessor on the route path is an O(1) flat-array read (flat
 /// tier) or closed-form arithmetic over O(a + h) per-switch state
 /// (compressed Dragonfly tier) — same facade either way.
+///
+/// `Clone` is cheap relative to a compile (the tier arrays are plain
+/// memcpys and everything else is `Arc`-shared) and exists for the fault
+/// subsystem: a rebuild clones the healthy tables and attaches a
+/// [`DegradedView`] overlay ([`Self::with_degraded`]) instead of mutating
+/// tables that in-flight shard workers may still be reading.
+#[derive(Clone)]
 pub struct RoutingTables {
     topo: Arc<PhysTopology>,
     svc: Option<Arc<dyn ServiceTopology>>,
@@ -378,6 +412,10 @@ pub struct RoutingTables {
     /// Allowed-deroute global ports per `(s, dst_group)` row under
     /// `group_labels`, ascending in intermediate group id.
     group_allowed: Option<Csr>,
+    /// Deroute overlay for a degraded topology, `None` on healthy tables
+    /// (the hot-path accessors pay one `Option` branch for it). See
+    /// [`Self::degraded_full`] / [`Self::degraded_patch`].
+    degraded: Option<Arc<DegradedView>>,
 }
 
 /// DOR-minimal next switch from `cur` toward `dst` (the closed forms of
@@ -407,6 +445,134 @@ fn dor_next(topo: &PhysTopology, cur: usize, dst: usize) -> usize {
             .min_next(cur, dst),
     }
 }
+
+// --------------------------------------------------------------------------
+// Degraded-topology overlay
+// --------------------------------------------------------------------------
+
+/// Sparse per-`(switch, dst)` port overrides, CSR over switches with the
+/// destinations of each row sorted (lookup is a binary search of one row).
+/// A stored [`NO_PORT16`] means "destination unreachable in the degraded
+/// topology". `PartialEq` is byte-equality — the property the incremental
+/// patch is tested against.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Deroutes {
+    offsets: Vec<u32>,
+    dsts: Vec<u32>,
+    ports: Vec<u16>,
+}
+
+impl Deroutes {
+    /// Build from entries sorted by `(switch, dst)`.
+    fn from_entries(n: usize, entries: &[(u32, u32, u16)]) -> Self {
+        debug_assert!(entries.windows(2).all(|w| (w[0].0, w[0].1) < (w[1].0, w[1].1)));
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut dsts = Vec::with_capacity(entries.len());
+        let mut ports = Vec::with_capacity(entries.len());
+        for &(s, d, p) in entries {
+            while offsets.len() <= s as usize {
+                offsets.push(dsts.len() as u32);
+            }
+            dsts.push(d);
+            ports.push(p);
+        }
+        while offsets.len() <= n {
+            offsets.push(dsts.len() as u32);
+        }
+        Self {
+            offsets,
+            dsts,
+            ports,
+        }
+    }
+
+    /// The override for `(s, d)`, if any ([`NO_PORT16`] = unreachable).
+    #[inline]
+    pub fn get(&self, s: usize, d: usize) -> Option<u16> {
+        let lo = self.offsets[s] as usize;
+        let hi = self.offsets[s + 1] as usize;
+        self.dsts[lo..hi]
+            .binary_search(&(d as u32))
+            .ok()
+            .map(|i| self.ports[lo + i])
+    }
+
+    /// Number of overridden `(switch, dst)` pairs.
+    pub fn len(&self) -> usize {
+        self.dsts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dsts.is_empty()
+    }
+
+    /// Iterate `(s, d, port)` entries in `(s, d)` order.
+    fn entries(&self) -> impl Iterator<Item = (u32, u32, u16)> + '_ {
+        (0..self.offsets.len().saturating_sub(1)).flat_map(move |s| {
+            (self.offsets[s] as usize..self.offsets[s + 1] as usize)
+                .map(move |i| (s as u32, self.dsts[i], self.ports[i]))
+        })
+    }
+}
+
+/// The routing view of one degraded topology: deroute overrides for the
+/// DOR-minimal and service next-hop tables, plus the [`DeadSet`] they were
+/// computed for. Attached to cloned [`RoutingTables`] via
+/// [`RoutingTables::with_degraded`]; healthy `(s, d)` pairs fall through
+/// to the unmodified base tables.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DegradedView {
+    pub min: Deroutes,
+    pub svc: Deroutes,
+    /// The dead set this view routes around (also the patch baseline).
+    pub dead: DeadSet,
+    /// Number of `(switch, dst)` pairs with no alive path.
+    pub unreachable_pairs: u64,
+}
+
+impl DegradedView {
+    /// Structured totality check: `Ok` when every `(switch, dst)` pair
+    /// between alive switches still has a route; otherwise the error names
+    /// example unreachable pairs. This is the "never a silent black hole"
+    /// contract — a degraded compile itself always succeeds structurally.
+    pub fn ensure_routable(&self) -> Result<(), Unroutable> {
+        if self.unreachable_pairs == 0 {
+            return Ok(());
+        }
+        let pairs: Vec<(u32, u32)> = self
+            .min
+            .entries()
+            .filter(|&(_, _, p)| p == NO_PORT16)
+            .map(|(s, d, _)| (s, d))
+            .take(8)
+            .collect();
+        Err(Unroutable {
+            pairs,
+            total: self.unreachable_pairs,
+        })
+    }
+}
+
+/// Structured "no route exists" report for a degraded topology.
+#[derive(Clone, Debug)]
+pub struct Unroutable {
+    /// Example unreachable `(switch, dst)` pairs (capped).
+    pub pairs: Vec<(u32, u32)>,
+    /// Total number of unreachable pairs.
+    pub total: u64,
+}
+
+impl std::fmt::Display for Unroutable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "degraded topology disconnects {} (switch, dst) pairs, e.g. {:?}",
+            self.total, self.pairs
+        )
+    }
+}
+
+impl std::error::Error for Unroutable {}
 
 /// Fill `buf` (logically `rows × cols`) by calling `fill(row_index, row)`
 /// for every row, splitting the rows across up to `threads` scoped workers.
@@ -602,6 +768,7 @@ impl RoutingTables {
             allowed: None,
             group_labels: None,
             group_allowed: None,
+            degraded: None,
         }
     }
 
@@ -740,6 +907,7 @@ impl RoutingTables {
             allowed: None,
             group_labels: None,
             group_allowed: None,
+            degraded: None,
         }
     }
 
@@ -834,14 +1002,40 @@ impl RoutingTables {
         self.svc.is_some()
     }
 
-    /// DOR-minimal next-hop port from `s` toward `d` (`s != d`).
+    /// DOR-minimal next-hop port of the *healthy* tables (ignores any
+    /// degraded overlay — the base the overlay is computed against).
     #[inline]
-    pub fn min_port(&self, s: usize, d: usize) -> usize {
+    fn base_min_port(&self, s: usize, d: usize) -> usize {
         debug_assert_ne!(s, d);
         match &self.tier {
             Tier::Flat { min_port, .. } => min_port[s * self.n + d] as usize,
             Tier::Df(t) => t.min_port(s, d),
         }
+    }
+
+    /// DOR-minimal next-hop port from `s` toward `d` (`s != d`), following
+    /// the degraded overlay when one is attached. Panics if `d` is
+    /// unreachable in the degraded topology — fault-aware callers use
+    /// [`Self::min_port_opt`].
+    #[inline]
+    pub fn min_port(&self, s: usize, d: usize) -> usize {
+        match self.min_port_opt(s, d) {
+            Some(p) => p,
+            None => panic!("switch {d} is unreachable from {s} in the degraded topology"),
+        }
+    }
+
+    /// [`Self::min_port`] that reports an unreachable destination as
+    /// `None` instead of panicking (routers hold such packets — the
+    /// destination may recover).
+    #[inline]
+    pub fn min_port_opt(&self, s: usize, d: usize) -> Option<usize> {
+        if let Some(dg) = &self.degraded {
+            if let Some(p) = dg.min.get(s, d) {
+                return if p == NO_PORT16 { None } else { Some(p as usize) };
+            }
+        }
+        Some(self.base_min_port(s, d))
     }
 
     /// Port of the link `s → d` if the two are adjacent (the literal
@@ -851,15 +1045,38 @@ impl RoutingTables {
         self.topo.port_to(s, d)
     }
 
-    /// Service next-hop port from `s` toward `d` (`s != d`).
+    /// Service next-hop port of the *healthy* tables (overlay-blind).
     #[inline]
-    pub fn svc_port(&self, s: usize, d: usize) -> usize {
+    fn base_svc_port(&self, s: usize, d: usize) -> usize {
         debug_assert!(self.has_service());
         debug_assert_ne!(s, d);
         match &self.tier {
             Tier::Flat { svc_port, .. } => svc_port[s * self.n + d] as usize,
             Tier::Df(t) => t.svc_port(s, d),
         }
+    }
+
+    /// Service next-hop port from `s` toward `d` (`s != d`), following the
+    /// degraded overlay when one is attached. Panics on an unreachable
+    /// destination — fault-aware callers use [`Self::svc_port_opt`].
+    #[inline]
+    pub fn svc_port(&self, s: usize, d: usize) -> usize {
+        match self.svc_port_opt(s, d) {
+            Some(p) => p,
+            None => panic!("switch {d} is unreachable from {s} in the degraded topology"),
+        }
+    }
+
+    /// [`Self::svc_port`] that reports an unreachable destination as
+    /// `None` instead of panicking.
+    #[inline]
+    pub fn svc_port_opt(&self, s: usize, d: usize) -> Option<usize> {
+        if let Some(dg) = &self.degraded {
+            if let Some(p) = dg.svc.get(s, d) {
+                return if p == NO_PORT16 { None } else { Some(p as usize) };
+            }
+        }
+        Some(self.base_svc_port(s, d))
     }
 
     /// Service-path distance between `a` and `b`.
@@ -956,6 +1173,246 @@ impl RoutingTables {
             .as_ref()
             .expect("tables were compiled without group labels")
             .row(s * g + dst_group)
+    }
+
+    // ----------------------------------------------------------------------
+    // Degraded-topology rebuilds
+    // ----------------------------------------------------------------------
+
+    /// The attached degraded overlay, if any.
+    pub fn degraded(&self) -> Option<&Arc<DegradedView>> {
+        self.degraded.as_ref()
+    }
+
+    /// A copy of these tables with `view` attached (or detached, restoring
+    /// healthy behaviour). The base arrays are cloned, never mutated — any
+    /// shard worker still holding the previous `Arc` keeps reading a
+    /// consistent snapshot.
+    pub fn with_degraded(&self, view: Option<Arc<DegradedView>>) -> Self {
+        let mut t = self.clone();
+        t.degraded = view;
+        t
+    }
+
+    /// Per-`(switch, port)` alive mask (stride = max degree) — turns the
+    /// `DeadSet` lookups into flat loads for the BFS inner loops.
+    fn alive_port_mask(&self, dead: &DeadSet) -> (Vec<bool>, usize) {
+        let stride = self.topo.max_degree();
+        let mut mask = vec![false; self.n * stride];
+        for s in 0..self.n {
+            if !dead.switch_alive(s) {
+                continue;
+            }
+            for p in 0..self.topo.degree(s) {
+                mask[s * stride + p] = dead.edge_alive(s, self.topo.neighbor(s, p));
+            }
+        }
+        (mask, stride)
+    }
+
+    /// Stop-the-world rebuild: one BFS per destination over the alive
+    /// subgraph, emitting a deroute entry for every `(s, d)` whose base
+    /// route is dead or no longer a shortest alive hop (and `NO_PORT16`
+    /// for disconnected pairs). Deterministic: ties pick the
+    /// smallest-id alive neighbor on a shortest alive path.
+    pub fn degraded_full(&self, dead: &DeadSet) -> DegradedView {
+        let (mask, stride) = self.alive_port_mask(dead);
+        let mut ent_min = Vec::new();
+        let mut ent_svc = Vec::new();
+        let mut unreachable = 0u64;
+        let mut dist = vec![u32::MAX; self.n];
+        let mut queue = std::collections::VecDeque::new();
+        for d in 0..self.n {
+            self.build_column(
+                dead,
+                &mask,
+                stride,
+                d,
+                &mut dist,
+                &mut queue,
+                &mut ent_min,
+                &mut ent_svc,
+                &mut unreachable,
+            );
+        }
+        ent_min.sort_unstable();
+        ent_svc.sort_unstable();
+        DegradedView {
+            min: Deroutes::from_entries(self.n, &ent_min),
+            svc: Deroutes::from_entries(self.n, &ent_svc),
+            dead: dead.clone(),
+            unreachable_pairs: unreachable,
+        }
+    }
+
+    /// Incremental rebuild: recompute only destination columns that the
+    /// transition `prev.dead → dead` can have touched (some base port
+    /// toward them crosses either dead set); every other column is carried
+    /// over from `prev` verbatim. Byte-equal to
+    /// [`Self::degraded_full`]`(dead)` — a column with no dead base port
+    /// toward it has alive shortest base paths from everywhere, hence no
+    /// entries under either strategy (property-tested).
+    pub fn degraded_patch(&self, prev: &DegradedView, dead: &DeadSet) -> DegradedView {
+        let mut flagged = vec![false; self.n];
+        self.flag_affected(&prev.dead, &mut flagged);
+        self.flag_affected(dead, &mut flagged);
+
+        let (mask, stride) = self.alive_port_mask(dead);
+        let mut ent_min = Vec::new();
+        let mut ent_svc = Vec::new();
+        let mut unreachable = 0u64;
+        let mut dist = vec![u32::MAX; self.n];
+        let mut queue = std::collections::VecDeque::new();
+        for d in 0..self.n {
+            if flagged[d] {
+                self.build_column(
+                    dead,
+                    &mask,
+                    stride,
+                    d,
+                    &mut dist,
+                    &mut queue,
+                    &mut ent_min,
+                    &mut ent_svc,
+                    &mut unreachable,
+                );
+            }
+        }
+        for (s, d, p) in prev.min.entries() {
+            if !flagged[d as usize] {
+                ent_min.push((s, d, p));
+                if p == NO_PORT16 {
+                    unreachable += 1;
+                }
+            }
+        }
+        for (s, d, p) in prev.svc.entries() {
+            if !flagged[d as usize] {
+                ent_svc.push((s, d, p));
+            }
+        }
+        ent_min.sort_unstable();
+        ent_svc.sort_unstable();
+        DegradedView {
+            min: Deroutes::from_entries(self.n, &ent_min),
+            svc: Deroutes::from_entries(self.n, &ent_svc),
+            dead: dead.clone(),
+            unreachable_pairs: unreachable,
+        }
+    }
+
+    /// Mark destinations whose columns `dead` can affect. A base port can
+    /// only be dead if its own endpoint switch is a dead-link endpoint, a
+    /// dead switch, or a dead switch's neighbor — so the scan is
+    /// O(|touched switches| × n), not O(n²).
+    fn flag_affected(&self, dead: &DeadSet, flagged: &mut [bool]) {
+        if dead.is_empty() {
+            return;
+        }
+        let mut hot = std::collections::BTreeSet::new();
+        for (a, b) in dead.dead_links() {
+            hot.insert(a as usize);
+            hot.insert(b as usize);
+        }
+        for sw in dead.dead_switches() {
+            hot.insert(sw as usize);
+            for &nb in &self.topo.neighbors[sw as usize] {
+                hot.insert(nb);
+            }
+        }
+        let has_svc = self.has_service();
+        for &s in &hot {
+            for d in 0..self.n {
+                if s == d || flagged[d] {
+                    continue;
+                }
+                let m = self.topo.neighbor(s, self.base_min_port(s, d));
+                if !dead.edge_alive(s, m) {
+                    flagged[d] = true;
+                    continue;
+                }
+                if has_svc {
+                    let m = self.topo.neighbor(s, self.base_svc_port(s, d));
+                    if !dead.edge_alive(s, m) {
+                        flagged[d] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    /// BFS the alive subgraph from `d` and emit column `d`'s overlay
+    /// entries (see [`Self::degraded_full`] for the emission rule).
+    #[allow(clippy::too_many_arguments)]
+    fn build_column(
+        &self,
+        dead: &DeadSet,
+        mask: &[bool],
+        stride: usize,
+        d: usize,
+        dist: &mut [u32],
+        queue: &mut std::collections::VecDeque<usize>,
+        ent_min: &mut Vec<(u32, u32, u16)>,
+        ent_svc: &mut Vec<(u32, u32, u16)>,
+        unreachable: &mut u64,
+    ) {
+        dist.fill(u32::MAX);
+        queue.clear();
+        if dead.switch_alive(d) {
+            dist[d] = 0;
+            queue.push_back(d);
+            while let Some(u) = queue.pop_front() {
+                let du = dist[u];
+                for p in 0..self.topo.degree(u) {
+                    if !mask[u * stride + p] {
+                        continue;
+                    }
+                    let v = self.topo.neighbor(u, p);
+                    if dist[v] == u32::MAX {
+                        dist[v] = du + 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+        }
+        let has_svc = self.has_service();
+        for s in 0..self.n {
+            if s == d || !dead.switch_alive(s) {
+                continue;
+            }
+            if dist[s] == u32::MAX {
+                ent_min.push((s as u32, d as u32, NO_PORT16));
+                *unreachable += 1;
+                if has_svc {
+                    ent_svc.push((s as u32, d as u32, NO_PORT16));
+                }
+                continue;
+            }
+            let bp = self.base_min_port(s, d);
+            let m = self.topo.neighbor(s, bp);
+            if !mask[s * stride + bp] || dist[m] != dist[s] - 1 {
+                ent_min.push((s as u32, d as u32, self.deroute_port(mask, stride, s, dist)));
+            }
+            if has_svc {
+                let sp = self.base_svc_port(s, d);
+                if !mask[s * stride + sp] {
+                    ent_svc.push((s as u32, d as u32, self.deroute_port(mask, stride, s, dist)));
+                }
+            }
+        }
+    }
+
+    /// Deterministic deroute choice at `s`: the smallest-id alive neighbor
+    /// one step closer to the BFS source (its BFS parent always qualifies,
+    /// and the neighbor list is sorted, so the first hit is the smallest).
+    fn deroute_port(&self, mask: &[bool], stride: usize, s: usize, dist: &[u32]) -> u16 {
+        let want = dist[s] - 1;
+        for p in 0..self.topo.degree(s) {
+            if mask[s * stride + p] && dist[self.topo.neighbor(s, p)] == want {
+                return p as u16;
+            }
+        }
+        unreachable!("a switch at finite BFS distance has a parent")
     }
 }
 
@@ -1189,9 +1646,14 @@ impl TeraCore {
         );
         if let Some(main) = main {
             // ports ← R_serv ∪ R_main (the direct link, when it exists, is
-            // either a main link or the service next hop itself).
+            // either a main link or the service next hop itself). Dead main
+            // links (fault injection) are masked out; the service escape
+            // above is always alive by overlay construction.
             for &p in main {
                 let p = p as usize;
+                if !view.link_up(p) {
+                    continue;
+                }
                 buf.push(p, vc, self.weight(view, p, direct_port == Some(p)));
             }
         } else if let Some(dp) = direct_port {
@@ -1225,7 +1687,7 @@ impl TeraCore {
             occ[svc_port] + self.q * u32::from(svc_port as u32 != direct),
         );
         if let Some(main) = main {
-            buf.extend_tera(main, occ, vc, self.q, direct);
+            buf.extend_tera(main, occ, vc, self.q, direct, view.link_mask());
         } else if let Some(dp) = direct_port {
             if dp != svc_port {
                 buf.push(dp, vc, occ[dp]);
@@ -1456,6 +1918,162 @@ mod tests {
                 assert_eq!(serial.svc_port(s, d), parallel.svc_port(s, d));
                 assert_eq!(serial.svc_dist(s, d), parallel.svc_dist(s, d));
             }
+        }
+    }
+
+    /// The overlay property-test fleet: FM64 (with service, so svc
+    /// deroutes are exercised), HX8x8 and df9x4x2.
+    fn fault_fleet() -> Vec<(&'static str, RoutingTables)> {
+        use crate::topology::dragonfly;
+        let fm = Arc::new(full_mesh(64));
+        let fm_svc: Arc<dyn ServiceTopology> = Arc::new(HyperXService::square(64).unwrap());
+        let hx = Arc::new(hyperx2d(8));
+        let df = Arc::new(dragonfly(9, 4, 2));
+        vec![
+            (
+                "fm64",
+                RoutingTables::compile_with(fm, Some(fm_svc), TableTier::Flat, 1),
+            ),
+            (
+                "hx8x8",
+                RoutingTables::compile_with(hx, None, TableTier::Flat, 1),
+            ),
+            (
+                "df9x4x2",
+                RoutingTables::compile_with(df, None, TableTier::Compressed, 1),
+            ),
+        ]
+    }
+
+    /// Follow the effective min route from `s` to `d` over the degraded
+    /// tables; every hop must cross an alive edge and the walk must reach
+    /// `d` within `n` hops (the overlay guarantees strict alive-distance
+    /// decrease, so any loop or dead edge is a bug).
+    fn walk_min(t: &RoutingTables, dead: &DeadSet, s: usize, d: usize) {
+        let mut cur = s;
+        for _ in 0..t.n() {
+            if cur == d {
+                return;
+            }
+            let p = t
+                .min_port_opt(cur, d)
+                .unwrap_or_else(|| panic!("{cur}->{d} lost a route"));
+            let nxt = t.topo().neighbor(cur, p);
+            assert!(dead.edge_alive(cur, nxt), "{cur}->{d} routed over dead edge");
+            cur = nxt;
+        }
+        panic!("{s}->{d} did not converge within n hops");
+    }
+
+    #[test]
+    fn single_link_removal_keeps_tables_total() {
+        for (name, base) in fault_fleet() {
+            let topo = base.topo().clone();
+            crate::testing::check(&format!("single-link totality {name}"), 24, |rng| {
+                // A uniformly random physical link.
+                let a = rng.gen_range(topo.n);
+                let nbrs = &topo.neighbors[a];
+                let b = nbrs[rng.gen_range(nbrs.len())];
+                let mut dead = DeadSet::default();
+                dead.fail_link(a as u32, b as u32);
+                let view = base.degraded_full(&dead);
+                // One link never disconnects these topologies.
+                assert_eq!(view.unreachable_pairs, 0, "{name} {a}-{b}");
+                view.ensure_routable().unwrap();
+                let t = base.with_degraded(Some(Arc::new(view)));
+                for s in 0..topo.n {
+                    for d in 0..topo.n {
+                        if s == d {
+                            continue;
+                        }
+                        // Totality: every pair still compiles to a port...
+                        let p = t.min_port_opt(s, d).expect("total");
+                        let m = topo.neighbor(s, p);
+                        assert!(dead.edge_alive(s, m));
+                        if t.has_service() {
+                            let sp = t.svc_port_opt(s, d).expect("svc total");
+                            assert!(dead.edge_alive(s, topo.neighbor(s, sp)));
+                        }
+                    }
+                }
+                // ...and the effective route actually delivers (sampled).
+                for _ in 0..32 {
+                    let s = rng.gen_range(topo.n);
+                    let d = rng.gen_range(topo.n);
+                    if s != d {
+                        walk_min(&t, &dead, s, d);
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn dead_switch_pairs_are_reported_not_panicked() {
+        // Killing a switch makes its column unreachable; the overlay must
+        // say so via `ensure_routable`, never panic or black-hole.
+        for (name, base) in fault_fleet() {
+            let n = base.n();
+            let mut dead = DeadSet::default();
+            dead.fail_switch(3);
+            let view = base.degraded_full(&dead);
+            let err = view.ensure_routable().unwrap_err();
+            assert!(err.total > 0, "{name}");
+            assert!(err.pairs.iter().all(|&(_, d)| d == 3), "{name}: {err}");
+            let t = base.with_degraded(Some(Arc::new(view)));
+            for s in 0..n {
+                if s == 3 {
+                    continue;
+                }
+                assert_eq!(t.min_port_opt(s, 3), None, "{name}: no black hole");
+                for d in 0..n {
+                    if d != s && d != 3 {
+                        walk_min(&t, &dead, s, d);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_patch_is_byte_equal_to_full_rebuild() {
+        for (name, base) in fault_fleet() {
+            let topo = base.topo().clone();
+            crate::testing::check(&format!("patch==full {name}"), 12, |rng| {
+                let mut dead = DeadSet::default();
+                let mut prev = base.degraded_full(&dead);
+                // A random flapping sequence: fail/recover links and
+                // switches, patching after each step.
+                for _ in 0..6 {
+                    match rng.gen_range(4) {
+                        0 => {
+                            let a = rng.gen_range(topo.n);
+                            let nbrs = &topo.neighbors[a];
+                            let b = nbrs[rng.gen_range(nbrs.len())];
+                            dead.fail_link(a as u32, b as u32);
+                        }
+                        1 => {
+                            let first = dead.dead_links().next();
+                            if let Some((a, b)) = first {
+                                dead.recover_link(a, b);
+                            }
+                        }
+                        2 => {
+                            dead.fail_switch(rng.gen_range(topo.n) as u32);
+                        }
+                        _ => {
+                            let first = dead.dead_switches().next();
+                            if let Some(s) = first {
+                                dead.recover_switch(s);
+                            }
+                        }
+                    }
+                    let full = base.degraded_full(&dead);
+                    let patched = base.degraded_patch(&prev, &dead);
+                    assert_eq!(full, patched, "{name}: patch diverged from full");
+                    prev = patched;
+                }
+            });
         }
     }
 }

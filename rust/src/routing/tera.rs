@@ -114,8 +114,12 @@ impl TeraRouter {
     ) -> Option<Decision> {
         let s = view.sw;
         let d = pkt.dst_sw as usize;
-        let svc_p = self.tables.svc_port(s, d);
-        let direct = self.tables.direct_port(s, d);
+        // `None` (destination cut off by the current fault set) makes the
+        // packet wait; a recovery or table rebuild re-opens the path.
+        let svc_p = self.tables.svc_port_opt(s, d)?;
+        // The direct link only counts while it is up — a dead direct port
+        // must neither enter the candidate set nor absorb the q exemption.
+        let direct = self.tables.direct_port(s, d).filter(|&dp| view.link_up(dp));
 
         // Commit-once adaptivity: the weight comparison happens when the
         // packet reaches the head of its FIFO; afterwards it waits for the
@@ -129,7 +133,9 @@ impl TeraRouter {
             let tag = pkt.scratch;
             (tag != 0 && (tag >> 16) as usize == s).then(|| (tag & 0xFFFF) as usize - 1)
         };
-        if let Some(port) = committed {
+        // A commitment to a port whose link has since died (fault) is
+        // void: fall through and re-decide over the live candidate set.
+        if let Some(port) = committed.filter(|&p| view.link_up(p)) {
             if pkt.blocked < ESCAPE_PATIENCE {
                 return if view.has_space(port, 0) {
                     Some((port, 0))
@@ -159,7 +165,8 @@ impl TeraRouter {
             } else {
                 self.core.push_candidates(view, buf, 0, svc_p, direct, main);
             }
-            self.core.best(buf, rng).expect("non-empty set").0
+            // Empty only when faults severed every candidate link: wait.
+            self.core.best(buf, rng)?.0
         } else {
             // ports ← R_serv ∪ R_min. On a non-complete host the direct
             // link may not exist mid-route; the service path is then the
@@ -229,6 +236,14 @@ impl Router for TeraRouter {
             svc
         };
         format!("TERA-{short}")
+    }
+
+    fn tables(&self) -> Option<&Arc<RoutingTables>> {
+        Some(&self.tables)
+    }
+
+    fn with_tables(&self, tables: Arc<RoutingTables>) -> Option<Arc<dyn Router>> {
+        Some(Arc::new(Self::from_tables(tables, self.core.q)))
     }
 
     fn max_hops(&self) -> usize {

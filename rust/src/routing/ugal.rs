@@ -68,34 +68,72 @@ impl Router for UgalRouter {
             // the intermediate itself, so this reduces to the classic
             // "final hop on VC 1".
             let m = pkt.intermediate;
-            return if pkt.vc == 0 && m != NO_SWITCH && view.sw != m as usize {
-                let port = self.tables.min_port(view.sw, m as usize);
-                if view.has_space(port, 0) {
-                    Some((port, 0))
-                } else {
-                    None
+            if pkt.vc == 0 && m != NO_SWITCH && view.sw != m as usize {
+                if let Some(port) = self.tables.min_port_opt(view.sw, m as usize) {
+                    return if view.has_space(port, 0) {
+                        Some((port, 0))
+                    } else {
+                        None
+                    };
                 }
+                // The committed intermediate became unreachable mid-flight
+                // (fault): abandon phase 0 and finish minimally on VC 1.
+            }
+            let port = self.tables.min_port_opt(view.sw, dst)?;
+            return if view.has_space(port, 1) {
+                Some((port, 1))
             } else {
-                let port = self.tables.min_port(view.sw, dst);
-                if view.has_space(port, 1) {
-                    Some((port, 1))
-                } else {
-                    None
-                }
+                None
             };
         }
         // Source decision, re-evaluated each stalled cycle with a fresh
         // random candidate (UGAL-L behaviour).
         let topo = self.tables.topo();
         let n = self.tables.n();
-        let min_port = self.tables.min_port(view.sw, dst);
-        let m = loop {
-            let m = rng.gen_range(n);
-            if m != view.sw && m != dst {
-                break m;
+        let min_port = self.tables.min_port_opt(view.sw, dst)?;
+        let m = if let Some(dview) = self.tables.degraded() {
+            // Degraded topology: the candidate intermediate must be alive
+            // and reachable in both phases. No viable draw within the
+            // budget ⇒ route minimally this cycle.
+            let mut found = None;
+            for _ in 0..4 * n.max(16) {
+                let m = rng.gen_range(n);
+                if m == view.sw
+                    || m == dst
+                    || !dview.dead.switch_alive(m)
+                    || self.tables.min_port_opt(view.sw, m).is_none()
+                    || self.tables.min_port_opt(m, dst).is_none()
+                {
+                    continue;
+                }
+                found = Some(m);
+                break;
+            }
+            match found {
+                Some(m) => m,
+                None => {
+                    return if view.has_space(min_port, 0) {
+                        pkt.intermediate = NO_SWITCH;
+                        Some((min_port, 0))
+                    } else {
+                        None
+                    };
+                }
+            }
+        } else {
+            // Healthy fast path: the original unbounded draw (identical
+            // RNG sequence to pre-fault builds).
+            loop {
+                let m = rng.gen_range(n);
+                if m != view.sw && m != dst {
+                    break m;
+                }
             }
         };
-        let nonmin_port = self.tables.min_port(view.sw, m);
+        let nonmin_port = self
+            .tables
+            .min_port_opt(view.sw, m)
+            .expect("intermediate pre-checked reachable");
         let q_min = view.occ_flits(min_port);
         let q_nonmin = view.occ_flits(nonmin_port);
         // H_min·q_min ≤ H_nonmin·q_nonmin + T  →  go minimal. The closed
@@ -120,6 +158,17 @@ impl Router for UgalRouter {
 
     fn name(&self) -> String {
         "UGAL".into()
+    }
+
+    fn tables(&self) -> Option<&Arc<RoutingTables>> {
+        Some(&self.tables)
+    }
+
+    fn with_tables(&self, tables: Arc<RoutingTables>) -> Option<Arc<dyn Router>> {
+        Some(Arc::new(Self {
+            tables,
+            threshold: self.threshold,
+        }))
     }
 
     fn max_hops(&self) -> usize {

@@ -33,15 +33,37 @@ impl ValiantRouter {
         Self { tables }
     }
 
-    /// Random intermediate, excluding source and destination.
-    fn pick_intermediate(&self, s: usize, d: usize, rng: &mut Rng) -> u32 {
+    /// Random intermediate, excluding source and destination. On a
+    /// degraded topology (fault injection) the intermediate must also be
+    /// alive and reachable in both phases; healthy runs never consult the
+    /// overlay, so their RNG draw sequence is untouched. Returns `None`
+    /// when no viable intermediate was found within the draw budget (the
+    /// packet waits and redraws next cycle).
+    fn pick_intermediate(&self, s: usize, d: usize, rng: &mut Rng) -> Option<u32> {
         let n = self.tables.n();
-        loop {
-            let m = rng.gen_range(n);
-            if m != s && m != d {
-                return m as u32;
+        let Some(view) = self.tables.degraded() else {
+            // Healthy fast path: the draw always terminates (n >= 3 by
+            // topology construction for VLB to make sense).
+            loop {
+                let m = rng.gen_range(n);
+                if m != s && m != d {
+                    return Some(m as u32);
+                }
             }
+        };
+        for _ in 0..4 * n.max(16) {
+            let m = rng.gen_range(n);
+            if m == s
+                || m == d
+                || !view.dead.switch_alive(m)
+                || self.tables.min_port_opt(s, m).is_none()
+                || self.tables.min_port_opt(m, d).is_none()
+            {
+                continue;
+            }
+            return Some(m as u32);
         }
+        None
     }
 }
 
@@ -66,7 +88,7 @@ impl Router for ValiantRouter {
             // Commit to a random intermediate once; keep it across stalled
             // cycles so the packet doesn't rebalance away from congestion
             // (pure VLB is oblivious by design).
-            pkt.intermediate = self.pick_intermediate(view.sw, dst, rng);
+            pkt.intermediate = self.pick_intermediate(view.sw, dst, rng)?;
         }
         let m = pkt.intermediate;
         // Phase 0 (VC 0): minimally toward the intermediate. Phase 1
@@ -75,24 +97,34 @@ impl Router for ValiantRouter {
         // in phase; on a Full-mesh each phase is one hop and this is
         // bit-identical to the classic two-arm VLB.
         if pkt.vc == 0 && m != NO_SWITCH && view.sw != m as usize {
-            let port = self.tables.min_port(view.sw, m as usize);
-            if view.has_space(port, 0) {
-                Some((port, 0))
-            } else {
-                None
+            if let Some(port) = self.tables.min_port_opt(view.sw, m as usize) {
+                return if view.has_space(port, 0) {
+                    Some((port, 0))
+                } else {
+                    None
+                };
             }
+            // The committed intermediate became unreachable mid-flight
+            // (fault): abandon phase 0 and finish minimally on VC 1.
+        }
+        let port = self.tables.min_port_opt(view.sw, dst)?;
+        if view.has_space(port, 1) {
+            Some((port, 1))
         } else {
-            let port = self.tables.min_port(view.sw, dst);
-            if view.has_space(port, 1) {
-                Some((port, 1))
-            } else {
-                None
-            }
+            None
         }
     }
 
     fn name(&self) -> String {
         "Valiant".into()
+    }
+
+    fn tables(&self) -> Option<&Arc<RoutingTables>> {
+        Some(&self.tables)
+    }
+
+    fn with_tables(&self, tables: Arc<RoutingTables>) -> Option<Arc<dyn Router>> {
+        Some(Arc::new(Self { tables }))
     }
 
     fn max_hops(&self) -> usize {

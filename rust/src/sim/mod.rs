@@ -60,15 +60,17 @@ pub use queues::QueuePool;
 pub use switch::{Switch, SwitchView};
 pub use wheel::TimingWheel;
 
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
+use crate::config::{FaultTarget, RebuildStrategy};
 use crate::metrics::SimStats;
+use crate::routing::tables::{DegradedView, RoutingTables};
 use crate::routing::Router;
-use crate::topology::PhysTopology;
+use crate::topology::{DeadSet, PhysTopology};
 use crate::traffic::Workload;
 use crate::util::Rng;
 
-use shard::{ComputeCtx, ShardState, WorkerPool, SWITCH_RNG_STREAM};
+use shard::{ComputeCtx, RouterSlot, ShardState, WorkerPool, SWITCH_RNG_STREAM};
 
 /// Simulator parameters (§5 defaults).
 #[derive(Clone, Debug)]
@@ -171,21 +173,66 @@ impl Default for RunOpts {
     }
 }
 
+/// One entry of the no-forward-progress watchdog's structured report: an
+/// input/output port pair holding packets that have not moved for the
+/// whole watchdog horizon.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StalledPort {
+    pub switch: u32,
+    pub port: u32,
+    /// Packets buffered in the port's input FIFOs / output queues.
+    pub queued_in: u32,
+    pub queued_out: u32,
+}
+
 /// Simulation failure modes.
 #[derive(Debug)]
 pub enum SimError {
-    Deadlock { cycle: u64, live: usize, idle: u64 },
+    Deadlock {
+        cycle: u64,
+        live: usize,
+        idle: u64,
+        /// First [`STALLED_REPORT_CAP`] stalled ports in canonical
+        /// `(switch, port)` order — the buffer cycle a deadlock traps.
+        stalled: Vec<StalledPort>,
+    },
     CycleLimit(u64),
 }
+
+/// Cap on the structured stalled-port report attached to a deadlock error.
+pub const STALLED_REPORT_CAP: usize = 16;
 
 impl std::fmt::Display for SimError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SimError::Deadlock { cycle, live, idle } => write!(
-                f,
-                "deadlock detected at cycle {cycle}: {live} packets stalled \
-                 (no flit moved for {idle} cycles)"
-            ),
+            SimError::Deadlock {
+                cycle,
+                live,
+                idle,
+                stalled,
+            } => {
+                write!(
+                    f,
+                    "deadlock detected at cycle {cycle}: {live} packets stalled \
+                     (no flit moved for {idle} cycles)"
+                )?;
+                if !stalled.is_empty() {
+                    write!(f, "; stalled ports")?;
+                    if stalled.len() >= STALLED_REPORT_CAP {
+                        write!(f, " (first {STALLED_REPORT_CAP})")?;
+                    }
+                    write!(f, ":")?;
+                    for (i, p) in stalled.iter().enumerate() {
+                        let sep = if i == 0 { ' ' } else { ',' };
+                        write!(
+                            f,
+                            "{sep}sw{}.p{}(in {}/out {})",
+                            p.switch, p.port, p.queued_in, p.queued_out
+                        )?;
+                    }
+                }
+                Ok(())
+            }
             SimError::CycleLimit(limit) => {
                 write!(f, "cycle limit {limit} reached before the workload drained")
             }
@@ -210,6 +257,50 @@ enum Event {
     },
     /// Packet tail reaches its destination server.
     Deliver { pkt: Packet },
+    /// Scheduled fault transition: entry `idx` of the installed fault
+    /// schedule fires. Carried on the wheel so the adaptive time advance
+    /// sees pending reconfigurations exactly like packet events (a fully
+    /// idle network still wakes on the cycle a link dies or recovers).
+    Fault { idx: u32 },
+}
+
+/// Routing-table rebuild record from one fault reconfiguration instant.
+/// Wall-clock rebuild latency is reported here (and in the `faults` bench)
+/// rather than in [`SimStats`], which must stay bit-deterministic across
+/// shard counts and host machines.
+#[derive(Clone, Debug)]
+pub struct RebuildRecord {
+    /// Cycle at which the transition batch was applied.
+    pub cycle: u64,
+    /// `"recompile"` (stop-the-world) or `"patch"` (incremental).
+    pub strategy: &'static str,
+    /// Wall-clock table rebuild time, microseconds.
+    pub micros: u64,
+    /// Dead links / switches after the transition.
+    pub dead_links: usize,
+    pub dead_switches: usize,
+    /// Deroute-overlay entries installed (min + service tiers).
+    pub deroutes: usize,
+    /// `(src, dst)` switch pairs left unroutable by the failures.
+    pub unreachable: u64,
+}
+
+/// Live fault-injection state (`Network::install_faults`).
+struct FaultState {
+    /// Flat transition schedule: `(cycle, target, fail?)`, indexed by the
+    /// `idx` carried in [`Event::Fault`].
+    schedule: Vec<(u64, FaultTarget, bool)>,
+    rebuild: RebuildStrategy,
+    /// Currently-failed links and switches.
+    dead: DeadSet,
+    /// Healthy tables the degraded views are computed against.
+    base_tables: Arc<RoutingTables>,
+    /// Router as constructed for the healthy topology; reconfiguration
+    /// re-instantiates it over the degraded tables (`Router::with_tables`).
+    base_router: Arc<dyn Router>,
+    /// Degraded view of the previous transition (incremental patching).
+    prev_view: Option<Arc<DegradedView>>,
+    rebuild_log: Vec<RebuildRecord>,
 }
 
 /// Per-server injection state.
@@ -223,7 +314,13 @@ struct ServerState {
 /// The simulated network: topology + sharded switches + servers + router.
 pub struct Network {
     pub topo: Arc<PhysTopology>,
+    /// Currently-installed router. Healthy runs keep the construction-time
+    /// router; fault reconfiguration swaps in a degraded-table clone (the
+    /// worker threads observe the swap through `router_slot`).
     pub router: Arc<dyn Router>,
+    /// Shared slot the compute phase reads its router from — the swap
+    /// point for online reconfiguration (see `shard::RouterSlot`).
+    router_slot: RouterSlot,
     pub cfg: SimConfig,
     /// Contiguous switch blocks, each owning its queues/arena/RNGs.
     shards: Vec<ShardState>,
@@ -257,6 +354,12 @@ pub struct Network {
     watchdog: u64,
     max_hops: usize,
     max_degree: usize,
+    /// Fault-injection state (`None` on healthy runs — the entire fault
+    /// machinery then costs one `Option` check per cycle phase).
+    faults: Option<FaultState>,
+    /// Fault-schedule indices due this cycle, in wheel pop order (reused
+    /// scratch).
+    fault_pending: Vec<u32>,
 }
 
 impl Network {
@@ -315,6 +418,7 @@ impl Network {
                     grants_this_cycle: vec![0; ports],
                     last_grant_cycle: vec![u64::MAX; ports],
                     credits,
+                    link_up: vec![true; ports],
                     work: 0,
                 });
             }
@@ -352,6 +456,7 @@ impl Network {
             .max(4 * (cfg.link_latency + cfg.pkt_flits as u64));
         Self {
             topo,
+            router_slot: Arc::new(RwLock::new(router.clone())),
             router,
             cfg,
             shards,
@@ -372,7 +477,58 @@ impl Network {
             watchdog,
             max_hops,
             max_degree,
+            faults: None,
+            fault_pending: Vec::new(),
         }
+    }
+
+    /// Install a fault schedule: `(cycle, target, fail?)` transitions,
+    /// pre-validated by the engine (targets exist on the topology, the
+    /// router supports online reconfiguration via `Router::tables` /
+    /// `Router::with_tables`). Transitions become timing-wheel events, so
+    /// the adaptive time advance and the shard determinism contract treat
+    /// them exactly like packet events. Must be called before the run
+    /// starts.
+    pub fn install_faults(
+        &mut self,
+        schedule: Vec<(u64, FaultTarget, bool)>,
+        rebuild: RebuildStrategy,
+    ) {
+        assert_eq!(self.now, 0, "faults must be installed before the run starts");
+        let base_tables = self
+            .router
+            .tables()
+            .expect("router supports online reconfiguration (engine-validated)")
+            .clone();
+        for (idx, &(cycle, _, _)) in schedule.iter().enumerate() {
+            assert!(cycle >= 1, "fault cycles start at 1");
+            self.wheel.schedule(0, cycle, Event::Fault { idx: idx as u32 });
+        }
+        // Deroutes around failures legitimately exceed the healthy
+        // topology's hop bounds; the livelock debug-asserts stay armed on
+        // healthy runs only.
+        self.max_hops = usize::MAX;
+        self.faults = Some(FaultState {
+            schedule,
+            rebuild,
+            dead: DeadSet::default(),
+            base_tables,
+            base_router: self.router.clone(),
+            prev_view: None,
+            rebuild_log: Vec::new(),
+        });
+    }
+
+    /// Reconfiguration records from fault injection (empty on healthy
+    /// runs): one entry per applied transition batch, with the wall-clock
+    /// table rebuild latency.
+    pub fn rebuild_log(&self) -> &[RebuildRecord] {
+        self.faults.as_ref().map_or(&[], |f| &f.rebuild_log)
+    }
+
+    /// Currently-failed links and switches (empty/absent on healthy runs).
+    pub fn dead_set(&self) -> Option<&DeadSet> {
+        self.faults.as_ref().map(|f| &f.dead)
     }
 
     /// Current simulation cycle.
@@ -421,7 +577,7 @@ impl Network {
     fn compute_ctx(&self) -> ComputeCtx {
         ComputeCtx {
             topo: self.topo.clone(),
-            router: self.router.clone(),
+            router: self.router_slot.clone(),
             cfg: self.cfg.clone(),
             warmup: self.warmup,
             window_end: self.window_end,
@@ -579,12 +735,39 @@ impl Network {
         let now = self.now;
         let flits = self.cfg.pkt_flits as u64;
 
-        // ---- Phase 1: timing-wheel events (arrivals, deliveries). ----
+        // ---- Phase 1: timing-wheel events (faults, arrivals, deliveries).
+        // Fault transitions apply before packet events: an arrival due
+        // this same cycle had already crossed its link when the link died,
+        // so it lands normally — unless its destination *switch* died, in
+        // which case it is dropped and retransmitted like the in-flight
+        // packets the fault pass extracts from the wheel. ----
         let mut events = std::mem::take(&mut self.event_buf);
         self.wheel.pop_due(now, &mut events);
+        if self.faults.is_some() {
+            for ev in events.iter() {
+                if let Event::Fault { idx } = ev {
+                    self.fault_pending.push(*idx);
+                }
+            }
+            if !self.fault_pending.is_empty() {
+                self.apply_due_faults(now);
+            }
+        }
         for ev in events.drain(..) {
             match ev {
+                Event::Fault { .. } => {} // applied above, before packet events
                 Event::Arrive { sw, port, vc, pkt } => {
+                    if self
+                        .faults
+                        .as_ref()
+                        .map_or(false, |f| !f.dead.switch_alive(sw as usize))
+                    {
+                        let u = self.topo.neighbor(sw as usize, port as usize) as u32;
+                        let up = self.topo.reverse_port(sw as usize, port as usize) as u32;
+                        self.restore_credit(u, up, vc);
+                        self.requeue_dropped(pkt);
+                        continue;
+                    }
                     let k = self.switch_shard[sw as usize] as usize;
                     let sh = &mut self.shards[k];
                     let ls = sw as usize - sh.lo;
@@ -650,6 +833,16 @@ impl Network {
                 continue;
             }
             let sw = srv / spc;
+            if self
+                .faults
+                .as_ref()
+                .map_or(false, |f| !f.dead.switch_alive(sw))
+            {
+                // Source switch is down: traffic holds at the NIC until
+                // (unless) the switch recovers.
+                idx += 1;
+                continue;
+            }
             let k = self.switch_shard[sw] as usize;
             let sh = &mut self.shards[k];
             let ls = sw - sh.lo;
@@ -730,18 +923,246 @@ impl Network {
             k += 1;
         }
 
-        // ---- Watchdog. ----
+        // ---- Watchdog: live packets but no flit movement for the whole
+        // horizon ⇒ structured no-forward-progress report. ----
         if self.live > 0 && now - self.last_progress > self.watchdog {
             return Err(SimError::Deadlock {
                 cycle: now,
                 live: self.live,
                 idle: now - self.last_progress,
+                stalled: self.collect_stalled(STALLED_REPORT_CAP),
             });
         }
 
         self.ticked += 1;
         self.now += 1;
         Ok(())
+    }
+
+    /// Apply the fault transitions collected in `fault_pending` (phase 1).
+    ///
+    /// Order of operations — all deterministic and shard-count-invariant:
+    ///
+    /// 1. fold every due transition into the dead set;
+    /// 2. refresh each switch's per-port `link_up` mask (consumed by
+    ///    routing candidate construction, `SwitchView::has_space` and both
+    ///    transmit paths);
+    /// 3. drop in-flight packets whose traversed link is now dead —
+    ///    extracted from the wheel in its deterministic scan order — and
+    ///    restore the downstream input-FIFO credit each one held;
+    /// 4. drain output queues committed onto dead edges and every queue of
+    ///    a dead switch, in ascending `(switch, port, vc)` order,
+    ///    requeueing the packets at their source NICs;
+    /// 5. rebuild the routing tables over the degraded topology
+    ///    (stop-the-world recompile or incremental patch) and swap the
+    ///    router every shard routes with from this cycle on.
+    fn apply_due_faults(&mut self, now: u64) {
+        let mut st = self.faults.take().expect("fault state present");
+        for &idx in &self.fault_pending {
+            let (_, target, fail) = st.schedule[idx as usize];
+            match (target, fail) {
+                (FaultTarget::Link(a, b), true) => st.dead.fail_link(a, b),
+                (FaultTarget::Link(a, b), false) => st.dead.recover_link(a, b),
+                (FaultTarget::Switch(s), true) => st.dead.fail_switch(s),
+                (FaultTarget::Switch(s), false) => st.dead.recover_switch(s),
+            }
+        }
+        self.fault_pending.clear();
+
+        // 2. Per-switch link masks.
+        for sh in &mut self.shards {
+            for (ls, sw) in sh.switches.iter_mut().enumerate() {
+                let s = sh.lo + ls;
+                let alive = st.dead.switch_alive(s);
+                for p in 0..sw.degree {
+                    sw.link_up[p] = alive && st.dead.edge_alive(s, self.topo.neighbor(s, p));
+                }
+            }
+        }
+
+        // 3. In-flight drops (the wheel scan visits events in a fixed
+        // order, so the requeue sequence is deterministic).
+        let mut dropped: Vec<(u64, Event)> = Vec::new();
+        {
+            let topo = &self.topo;
+            let dead = &st.dead;
+            self.wheel.extract_if(
+                |ev| match ev {
+                    Event::Arrive { sw, port, .. } => {
+                        let v = *sw as usize;
+                        !dead.edge_alive(topo.neighbor(v, *port as usize), v)
+                    }
+                    _ => false,
+                },
+                &mut dropped,
+            );
+        }
+        for (_, ev) in dropped {
+            let Event::Arrive { sw, port, vc, pkt } = ev else {
+                unreachable!("only arrivals are extracted")
+            };
+            let u = self.topo.neighbor(sw as usize, port as usize) as u32;
+            let up = self.topo.reverse_port(sw as usize, port as usize) as u32;
+            self.restore_credit(u, up, vc);
+            self.requeue_dropped(pkt);
+        }
+
+        // 4. Queue drains.
+        for s in 0..self.topo.n {
+            let sw_dead = !st.dead.switch_alive(s);
+            let k = self.switch_shard[s] as usize;
+            let ls = s - self.shards[k].lo;
+            let (degree, ports, vcs) = {
+                let sw = &self.shards[k].switches[ls];
+                (sw.degree, sw.ports, sw.vcs)
+            };
+            for p in 0..ports {
+                let out_dead = if p < degree {
+                    sw_dead || !st.dead.edge_alive(s, self.topo.neighbor(s, p))
+                } else {
+                    sw_dead
+                };
+                for vc in 0..vcs {
+                    if out_dead {
+                        // Output-queue packets never consumed the link
+                        // credit (that happens at transmit): no credit
+                        // moves, just uncount and retransmit.
+                        loop {
+                            let pkt = {
+                                let sh = &mut self.shards[k];
+                                let q = sh.switches[ls].out_q(p, vc);
+                                let Some(id) = sh.queues.pop_front(q) else { break };
+                                let pkt = sh.arena.get(id).clone();
+                                sh.arena.free(id);
+                                let swm = &mut sh.switches[ls];
+                                swm.occ_flits[p] =
+                                    swm.occ_flits[p].saturating_sub(pkt.flits as u32);
+                                swm.work -= 1;
+                                pkt
+                            };
+                            self.requeue_dropped(pkt);
+                        }
+                    }
+                    if sw_dead {
+                        // Input-FIFO packets of a dead switch each hold
+                        // one upstream credit (returned on grant in
+                        // healthy operation) — restore it.
+                        loop {
+                            let (pkt, upstream) = {
+                                let sh = &mut self.shards[k];
+                                let q = sh.switches[ls].in_q(p, vc);
+                                let Some(id) = sh.queues.pop_front(q) else { break };
+                                let pkt = sh.arena.get(id).clone();
+                                sh.arena.free(id);
+                                sh.switches[ls].work -= 1;
+                                (pkt, sh.switches[ls].upstream[p])
+                            };
+                            if let Some((usw, uport)) = upstream {
+                                self.restore_credit(usw, uport, vc as u8);
+                            }
+                            self.requeue_dropped(pkt);
+                        }
+                    }
+                }
+            }
+        }
+
+        // 5. Rebuild and swap. Wall-clock latency goes to the rebuild log,
+        // never into SimStats (which must stay bit-deterministic).
+        let t0 = std::time::Instant::now();
+        let view = if st.dead.is_empty() {
+            None
+        } else {
+            let v = match (st.rebuild, &st.prev_view) {
+                (RebuildStrategy::Patch, Some(prev)) => {
+                    st.base_tables.degraded_patch(prev, &st.dead)
+                }
+                _ => st.base_tables.degraded_full(&st.dead),
+            };
+            Some(Arc::new(v))
+        };
+        let micros = t0.elapsed().as_micros() as u64;
+        let (deroutes, unreachable) = view
+            .as_ref()
+            .map_or((0, 0), |v| (v.min.len() + v.svc.len(), v.unreachable_pairs));
+        st.prev_view = view.clone();
+        let tables = Arc::new(st.base_tables.with_degraded(view));
+        let router = st
+            .base_router
+            .with_tables(tables)
+            .expect("router supports online reconfiguration (engine-validated)");
+        self.router = router.clone();
+        *self.router_slot.write().expect("router slot poisoned") = router;
+        st.rebuild_log.push(RebuildRecord {
+            cycle: now,
+            strategy: st.rebuild.name(),
+            micros,
+            dead_links: st.dead.dead_links().count(),
+            dead_switches: st.dead.dead_switches().count(),
+            deroutes,
+            unreachable,
+        });
+        // Reconfiguration resets the forward-progress clock: rerouted
+        // traffic gets a full watchdog horizon before a deadlock verdict.
+        self.last_progress = now;
+        self.faults = Some(st);
+    }
+
+    /// Return one credit to `(sw, port, vc)` — the downstream input-FIFO
+    /// slot a dropped packet held.
+    fn restore_credit(&mut self, sw: u32, port: u32, vc: u8) {
+        let k = self.switch_shard[sw as usize] as usize;
+        let sh = &mut self.shards[k];
+        let s = &mut sh.switches[sw as usize - sh.lo];
+        s.credits[port as usize * s.vcs + vc as usize] += 1;
+    }
+
+    /// Drop a fault casualty and requeue it at its source NIC for
+    /// retransmission. `gen_cycle` is preserved (latency and FCT
+    /// accounting span the retransmission); routing state restarts fresh
+    /// at re-injection.
+    fn requeue_dropped(&mut self, pkt: Packet) {
+        let srv = pkt.src_server as usize;
+        self.servers[srv]
+            .queue
+            .push_back((pkt.dst_server, pkt.gen_cycle, pkt.msg));
+        self.pending_sources += 1;
+        if !self.server_active[srv] {
+            self.server_active[srv] = true;
+            self.active_servers.push(pkt.src_server);
+        }
+        self.live -= 1;
+        self.stats.dropped_packets += 1;
+        self.stats.retransmitted_packets += 1;
+    }
+
+    /// First `cap` ports still buffering packets, in canonical
+    /// `(switch, port)` order — the structured payload of a watchdog trip.
+    fn collect_stalled(&self, cap: usize) -> Vec<StalledPort> {
+        let mut out = Vec::new();
+        for sh in &self.shards {
+            for (ls, sw) in sh.switches.iter().enumerate() {
+                if sw.work == 0 {
+                    continue;
+                }
+                for p in 0..sw.ports {
+                    let queued_in = sw.input_occupancy(&sh.queues, p);
+                    let queued_out = sw.output_queued(&sh.queues, p);
+                    if queued_in + queued_out > 0 {
+                        out.push(StalledPort {
+                            switch: (sh.lo + ls) as u32,
+                            port: p as u32,
+                            queued_in,
+                            queued_out,
+                        });
+                        if out.len() >= cap {
+                            return out;
+                        }
+                    }
+                }
+            }
+        }
+        out
     }
 
     /// Total occupancy snapshot (flits buffered per output port of a

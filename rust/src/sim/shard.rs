@@ -30,7 +30,7 @@
 //! 4. packets cross shard boundaries *by value* through wheel events, so
 //!    arena ids are shard-local and never observable in routing decisions.
 
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, RwLock};
 use std::thread::JoinHandle;
 
 use super::{Event, PacketArena, QueuePool, SimConfig, Switch, SwitchView};
@@ -43,13 +43,21 @@ use crate::util::Rng;
 /// workload/pattern streams (`0x7AFF_1C`, small test streams).
 pub(super) const SWITCH_RNG_STREAM: u64 = 0x51_AC7E_0000;
 
+/// Swappable routing function. Fault injection replaces the router mid-run
+/// (online reconfiguration installs degraded tables), and worker threads
+/// clone their [`ComputeCtx`] once at pool spawn — sharing the *slot*
+/// rather than the router is what makes a swap visible to every worker at
+/// the next cycle. Read once per shard per cycle; uncontended except at
+/// reconfiguration instants.
+pub(super) type RouterSlot = Arc<RwLock<Arc<dyn Router>>>;
+
 /// Everything the compute phase reads but never writes — cloned into each
 /// worker thread (`Arc` handles + plain config), so workers are `'static`
 /// and never borrow the `Network`.
 #[derive(Clone)]
 pub(super) struct ComputeCtx {
     pub topo: Arc<PhysTopology>,
-    pub router: Arc<dyn Router>,
+    pub router: RouterSlot,
     pub cfg: SimConfig,
     /// Measurement window (per run): link utilization is only recorded for
     /// cycles in `[warmup, window_end)`.
@@ -179,14 +187,18 @@ impl ShardState {
         });
         self.active.sort_unstable();
         let batched = ctx.cfg.batched;
+        // Snapshot the (possibly reconfigured) router once per cycle; all
+        // switches of a cycle route under the same tables by construction
+        // (fault transitions apply in the serial phase, between cycles).
+        let router = ctx.router.read().expect("router slot poisoned").clone();
         let mut i = 0;
         while i < self.active.len() {
             let s = self.active[i] as usize;
             if batched {
-                self.allocate_switch_batched(s, now, ctx);
+                self.allocate_switch_batched(s, now, ctx, &router);
                 self.transmit_switch_batched(s, now, ctx);
             } else {
-                self.allocate_switch(s, now, ctx);
+                self.allocate_switch(s, now, ctx, &router);
                 self.transmit_switch(s, now, ctx);
             }
             i += 1;
@@ -197,7 +209,7 @@ impl ShardState {
     /// ports, one grant per input port, ≤ speedup grants per output port.
     /// Identical to the pre-shard logic except that randomness comes from
     /// the switch's private stream and credits go to `credit_out`.
-    fn allocate_switch(&mut self, s: usize, now: u64, ctx: &ComputeCtx) {
+    fn allocate_switch(&mut self, s: usize, now: u64, ctx: &ComputeCtx, router: &Arc<dyn Router>) {
         let ls = s - self.lo;
         let num_inputs = self.switches[ls].ports;
         let offset = self.rngs[ls].gen_range(num_inputs);
@@ -208,7 +220,7 @@ impl ShardState {
             {
                 continue;
             }
-            self.try_grant_input(s, i, now, ctx, false);
+            self.try_grant_input(s, i, now, ctx, router, false);
         }
     }
 
@@ -229,7 +241,13 @@ impl ShardState {
     /// Every lane then funnels into the same [`Self::try_grant_input`]
     /// as the scalar path — the one difference (`route` vs
     /// `route_batched`) is itself bit-identical by the router contract.
-    fn allocate_switch_batched(&mut self, s: usize, now: u64, ctx: &ComputeCtx) {
+    fn allocate_switch_batched(
+        &mut self,
+        s: usize,
+        now: u64,
+        ctx: &ComputeCtx,
+        router: &Arc<dyn Router>,
+    ) {
         let ls = s - self.lo;
         let num_inputs = self.switches[ls].ports;
         let offset = self.rngs[ls].gen_range(num_inputs);
@@ -257,7 +275,7 @@ impl ShardState {
         let split = self.lane_buf[..k].partition_point(|&p| (p as usize) < offset);
         for idx in (split..k).chain(0..split) {
             let i = self.lane_buf[idx] as usize;
-            self.try_grant_input(s, i, now, ctx, true);
+            self.try_grant_input(s, i, now, ctx, router, true);
         }
     }
 
@@ -265,7 +283,16 @@ impl ShardState {
     /// the scalar and batched passes: rotated VC scan, routing decision,
     /// grant commit. `batched` only selects `Router::route` vs
     /// `Router::route_batched` (bit-identical by contract).
-    fn try_grant_input(&mut self, s: usize, i: usize, now: u64, ctx: &ComputeCtx, batched: bool) {
+    #[allow(clippy::too_many_arguments)]
+    fn try_grant_input(
+        &mut self,
+        s: usize,
+        i: usize,
+        now: u64,
+        ctx: &ComputeCtx,
+        router: &Arc<dyn Router>,
+        batched: bool,
+    ) {
         let ls = s - self.lo;
         let vcs = self.switches[ls].vcs;
         let degree = self.switches[ls].degree;
@@ -298,6 +325,7 @@ impl ShardState {
                     out_lens: self.queues.lens(sw.out_q0, sw.ports * vcs),
                     grants_this_cycle: &sw.grants_this_cycle,
                     last_grant_cycle: &sw.last_grant_cycle,
+                    link_up: Some(&sw.link_up),
                 };
                 let pkt = self.arena.get_mut(pkt_id);
                 if pkt.dst_sw as usize == s {
@@ -311,7 +339,7 @@ impl ShardState {
                         None
                     }
                 } else if batched {
-                    ctx.router.route_batched(
+                    router.route_batched(
                         &view,
                         pkt,
                         at_injection,
@@ -319,7 +347,7 @@ impl ShardState {
                         &mut self.route_buf,
                     )
                 } else {
-                    ctx.router.route(
+                    router.route(
                         &view,
                         pkt,
                         at_injection,
@@ -366,7 +394,7 @@ impl ShardState {
                     (pkt.hops as usize) <= ctx.max_hops,
                     "hop bound exceeded at switch {s}: {} hops (router {})",
                     pkt.hops,
-                    ctx.router.name()
+                    router.name()
                 );
             }
             self.progress = true;
@@ -384,6 +412,7 @@ impl ShardState {
         let num_outputs = self.switches[ls].ports;
         for o in 0..num_outputs {
             if self.switches[ls].link_free_at[o] > now
+                || !self.switches[ls].link_up[o]
                 || self.switches[ls].output_queued(&self.queues, o) == 0
             {
                 continue;
@@ -393,7 +422,7 @@ impl ShardState {
     }
 
     /// Batched variant of [`Self::transmit_switch`]: gather the eligible
-    /// outputs (link free and at least one queued packet) into `lane_buf`
+    /// outputs (link free, link up, at least one queued packet) into `lane_buf`
     /// with one branchless compaction pass streaming the contiguous
     /// out-queue length slice, then run the per-output transmit body over
     /// the compacted list.
@@ -414,18 +443,19 @@ impl ShardState {
             let vcs = sw.vcs;
             let lens = self.queues.lens(sw.out_q0, sw.ports * vcs);
             let free = &sw.link_free_at;
+            let up = &sw.link_up;
             let lanes = &mut self.lane_buf;
             let mut k = 0usize;
             if vcs == 1 {
                 for o in 0..num_outputs {
                     lanes[k] = o as u32;
-                    k += usize::from((lens[o] != 0) & (free[o] <= now));
+                    k += usize::from((lens[o] != 0) & (free[o] <= now) & up[o]);
                 }
             } else {
                 for o in 0..num_outputs {
                     let queued: u32 = lens[o * vcs..(o + 1) * vcs].iter().sum();
                     lanes[k] = o as u32;
-                    k += usize::from((queued != 0) & (free[o] <= now));
+                    k += usize::from((queued != 0) & (free[o] <= now) & up[o]);
                 }
             }
             k

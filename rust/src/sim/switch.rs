@@ -48,6 +48,10 @@ pub struct Switch {
     /// the downstream input FIFO. Ejection ports hold a virtually infinite
     /// pool (the server always consumes).
     pub credits: Vec<u32>,
+    /// Per-port link state maintained by fault injection (`sim::mod`):
+    /// `false` while the attached link or the neighbor switch is down.
+    /// Server ports are always up. All-true on healthy runs.
+    pub link_up: Vec<bool>,
     /// Packets currently buffered in this switch (inputs + outputs) — the
     /// active-set membership criterion maintained by the simulator.
     pub work: u32,
@@ -101,6 +105,9 @@ pub struct SwitchView<'a> {
     pub(super) out_lens: &'a [u32],
     pub(super) grants_this_cycle: &'a [u8],
     pub(super) last_grant_cycle: &'a [u64],
+    /// Per-port link state under fault injection; `None` means every link
+    /// is up (bench/test harnesses that build views from raw parts).
+    pub(super) link_up: Option<&'a [bool]>,
 }
 
 impl<'a> SwitchView<'a> {
@@ -140,6 +147,7 @@ impl<'a> SwitchView<'a> {
             out_lens,
             grants_this_cycle,
             last_grant_cycle,
+            link_up: None,
         }
     }
 
@@ -159,12 +167,32 @@ impl<'a> SwitchView<'a> {
         self.occ_flits
     }
 
+    /// Is output port `port`'s link currently up? Always `true` on healthy
+    /// runs; fault injection (`sim::mod`) flips ports whose link or
+    /// neighbor switch is down. Routers that build candidate sets outside
+    /// the [`Self::has_space`] gate (TERA's direct set, link-ordering arcs)
+    /// must consult this explicitly.
+    #[inline]
+    pub fn link_up(&self, port: usize) -> bool {
+        self.link_up.map_or(true, |l| l[port])
+    }
+
+    /// The per-port link mask as a slice (`None` = all up) — what the
+    /// batched candidate fills (`CandidateBuf::extend_*`) stream instead
+    /// of per-port [`Self::link_up`] calls.
+    #[inline]
+    pub fn link_mask(&self) -> Option<&[bool]> {
+        self.link_up
+    }
+
     /// Can a packet be granted into output queue `(port, vc)` right now?
-    /// Accounts for both queue capacity and the crossbar's per-cycle output
-    /// grant limit, so a `Some` decision from a router always commits.
+    /// Accounts for queue capacity, the crossbar's per-cycle output grant
+    /// limit, and (under fault injection) link liveness, so a `Some`
+    /// decision from a router always commits onto a live link.
     #[inline]
     pub fn has_space(&self, port: usize, vc: usize) -> bool {
-        (self.out_lens[port * self.vcs + vc] as usize) < self.output_cap_pkts
+        self.link_up.map_or(true, |l| l[port])
+            && (self.out_lens[port * self.vcs + vc] as usize) < self.output_cap_pkts
             && (self.last_grant_cycle[port] != self.now
                 || (self.grants_this_cycle[port] as u64) < self.speedup)
     }
@@ -197,6 +225,7 @@ mod tests {
             grants_this_cycle: vec![0; ports],
             last_grant_cycle: vec![u64::MAX; ports],
             credits: vec![10; ports * vcs],
+            link_up: vec![true; ports],
             work: 0,
         }
     }
@@ -248,9 +277,34 @@ mod tests {
             out_lens: pool.lens(sw.out_q0, sw.ports),
             grants_this_cycle: &sw.grants_this_cycle,
             last_grant_cycle: &sw.last_grant_cycle,
+            link_up: None,
         };
         assert!(!view.has_space(0, 0), "full queue");
         assert!(!view.has_space(1, 0), "speedup exhausted this cycle");
         assert!(view.has_space(2, 0), "ejection port open");
+    }
+
+    #[test]
+    fn view_has_space_folds_in_link_liveness() {
+        let mut pool = QueuePool::new();
+        let sw = tiny_switch(&mut pool, 2, 1, 1);
+        let mask = [true, false, true];
+        let view = SwitchView {
+            sw: 0,
+            degree: 2,
+            now: 0,
+            speedup: 2,
+            vcs: 1,
+            output_cap_pkts: 5,
+            occ_flits: &sw.occ_flits,
+            out_lens: pool.lens(sw.out_q0, sw.ports),
+            grants_this_cycle: &sw.grants_this_cycle,
+            last_grant_cycle: &sw.last_grant_cycle,
+            link_up: Some(&mask),
+        };
+        assert!(view.has_space(0, 0), "live link with free queue");
+        assert!(!view.has_space(1, 0), "dead link masks the port");
+        assert!(view.link_up(0) && !view.link_up(1));
+        assert_eq!(view.link_mask(), Some(&mask[..]));
     }
 }

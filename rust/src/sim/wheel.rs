@@ -146,6 +146,36 @@ impl<T> TimingWheel<T> {
         }
     }
 
+    /// Remove every scheduled event matching `pred`, appending the removed
+    /// `(when, event)` pairs to `out` in wheel-scan order: near slots
+    /// 0..64, then far slots 0..64, then overflow, preserving in-slot
+    /// insertion order. The wheel's slot layout is bit-identical across
+    /// shard counts and time-advance modes (see the module doc), so this
+    /// order is deterministic too — the fault-injection drop pass relies
+    /// on it for canonical packet-requeue order.
+    pub fn extract_if<F: FnMut(&T) -> bool>(&mut self, mut pred: F, out: &mut Vec<(u64, T)>) {
+        let before = out.len();
+        for slot in self.near.iter_mut().chain(self.far.iter_mut()) {
+            let mut i = 0;
+            while i < slot.len() {
+                if pred(&slot[i].1) {
+                    out.push(slot.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        let mut i = 0;
+        while i < self.overflow.len() {
+            if pred(&self.overflow[i].1) {
+                out.push(self.overflow.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        self.len -= out.len() - before;
+    }
+
     /// Epoch boundary: re-dispatch the current far slot (all its events fall
     /// inside the next 64 cycles) and any overflow events that have come
     /// within range of the two wheel levels.
@@ -301,6 +331,23 @@ mod tests {
             .map(|&x| (x, x as u32))
             .collect();
         assert_eq!(got, want);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn extract_if_removes_across_all_levels() {
+        let mut w = TimingWheel::new();
+        for &when in &[3u64, 10, 100, 5000, 123_456] {
+            w.schedule(0, when, when as u32);
+        }
+        let mut out = Vec::new();
+        // Pull the even-valued events, wherever they sit.
+        w.extract_if(|&ev| ev % 2 == 0, &mut out);
+        assert_eq!(out, vec![(10, 10u32), (100, 100), (5000, 5000), (123_456, 123_456)]);
+        assert_eq!(w.len(), 1);
+        // The survivor still fires on time.
+        let got = drain(&mut w, 0, 16);
+        assert_eq!(got, vec![(3, 3)]);
         assert!(w.is_empty());
     }
 

@@ -195,6 +195,67 @@ impl PhysTopology {
     }
 }
 
+/// The set of failed elements of a [`PhysTopology`] at one instant: the
+/// degraded-topology view every fault-aware consumer (routing-table
+/// deroutes, the simulator's link masks) derives from. Links are stored
+/// canonically as `(min, max)` switch pairs; a dead *switch* implicitly
+/// kills every link incident to it — [`Self::edge_alive`] folds both in,
+/// so the port numbering of the healthy topology is never disturbed
+/// (tables and queue indices stay valid across fail/recover).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DeadSet {
+    links: std::collections::BTreeSet<(u32, u32)>,
+    switches: std::collections::BTreeSet<u32>,
+}
+
+impl DeadSet {
+    fn canon(a: u32, b: u32) -> (u32, u32) {
+        (a.min(b), a.max(b))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty() && self.switches.is_empty()
+    }
+
+    pub fn fail_link(&mut self, a: u32, b: u32) {
+        self.links.insert(Self::canon(a, b));
+    }
+
+    pub fn recover_link(&mut self, a: u32, b: u32) {
+        self.links.remove(&Self::canon(a, b));
+    }
+
+    pub fn fail_switch(&mut self, s: u32) {
+        self.switches.insert(s);
+    }
+
+    pub fn recover_switch(&mut self, s: u32) {
+        self.switches.remove(&s);
+    }
+
+    pub fn switch_alive(&self, s: usize) -> bool {
+        !self.switches.contains(&(s as u32))
+    }
+
+    /// Is the undirected link `a — b` usable (both endpoints alive and the
+    /// link itself not failed)?
+    pub fn edge_alive(&self, a: usize, b: usize) -> bool {
+        self.switch_alive(a)
+            && self.switch_alive(b)
+            && !self.links.contains(&Self::canon(a as u32, b as u32))
+    }
+
+    /// Explicitly failed links, canonical and sorted (excludes links that
+    /// are only down because an endpoint switch died).
+    pub fn dead_links(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.links.iter().copied()
+    }
+
+    pub fn dead_switches(&self) -> impl Iterator<Item = u32> + '_ {
+        self.switches.iter().copied()
+    }
+}
+
 /// Mixed-radix decomposition of a switch id: `id = c0 + c1*d0 + c2*d0*d1...`
 pub fn coords(id: usize, dims: &[usize]) -> Vec<usize> {
     let mut c = Vec::with_capacity(dims.len());

@@ -101,8 +101,29 @@ fn unrestricted_nonminimal_routing_deadlocks() {
     let mut deadlocks = 0;
     for seed in 0..4 {
         match run_burst(router.clone(), topo.clone(), 16, "complement", 300, seed) {
-            Err(SimError::Deadlock { live, .. }) => {
+            Err(e @ SimError::Deadlock { .. }) => {
+                let SimError::Deadlock { live, ref stalled, .. } = e else {
+                    unreachable!()
+                };
                 assert!(live > 0);
+                // The watchdog's structured report must name the ports
+                // trapped in the buffer cycle, in canonical order.
+                assert!(
+                    !stalled.is_empty(),
+                    "deadlock report named no stalled ports"
+                );
+                assert!(
+                    stalled.windows(2).all(|w| (w[0].switch, w[0].port)
+                        < (w[1].switch, w[1].port)),
+                    "stalled ports out of canonical order"
+                );
+                assert!(
+                    stalled.iter().all(|p| p.queued_in + p.queued_out > 0),
+                    "a stalled port must actually buffer packets"
+                );
+                let msg = e.to_string();
+                assert!(msg.contains("stalled ports"), "{msg}");
+                assert!(msg.contains("sw"), "{msg}");
                 deadlocks += 1;
             }
             Err(e) => panic!("unexpected error: {e}"),

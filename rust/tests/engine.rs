@@ -7,6 +7,7 @@
 use std::sync::Arc;
 
 use tera_net::config::spec::{routing_by_name, ExperimentSpec, TrafficSpec};
+use tera_net::config::{FaultSpec, RebuildStrategy};
 use tera_net::engine::{self, Engine};
 use tera_net::metrics::SimStats;
 use tera_net::sim::{Network, RunOpts, SimConfig};
@@ -724,6 +725,277 @@ fn run_replicas_ci_prunes_the_replica_budget() {
     let wide = Engine::with_threads(5).run_replicas_ci(&spec, 12, 0.05).unwrap();
     assert_eq!(summary.seeds, wide.seeds);
     assert_eq!(summary.stats, wide.stats);
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection: the degraded-run determinism and conservation contract.
+//
+// A fault schedule (links/switches failing and recovering mid-run) rides the
+// timing wheel, drops in-flight packets onto their source queues and swaps
+// the routing tables for a degraded overlay. The contract is threefold:
+// (1) the schedule is bit-deterministic — shards, time skip and the batched
+// compute path stay unobservable on faulted runs exactly as on healthy ones;
+// (2) packets are conserved — every drop is requeued and eventually
+// delivered, with the drop visible in `dropped_packets`; (3) the `patch`
+// rebuild is indistinguishable from `recompile` at the stats level.
+// ---------------------------------------------------------------------------
+
+/// A fault schedule from `--fail-links` grammar plus a rebuild strategy.
+fn fault_spec_links(links: &str, rebuild: RebuildStrategy) -> FaultSpec {
+    let mut f = FaultSpec::default();
+    f.parse_links(links).expect("fault grammar");
+    f.rebuild = rebuild;
+    f
+}
+
+/// Run a faulted spec honoring `spec.shards`/`spec.batched_compute`
+/// exactly, returning the stats and the reconfiguration log.
+fn faulted_run(
+    spec: &ExperimentSpec,
+    time_skip: bool,
+) -> (SimStats, Vec<tera_net::sim::RebuildRecord>) {
+    let mut net = engine::build_network(spec).expect("build");
+    let mut wl = engine::build_workload(spec, &net.topo).expect("workload");
+    let mut opts = engine::run_opts(spec);
+    opts.time_skip = time_skip;
+    let stats = net.run(wl.as_mut(), &opts).unwrap_or_else(|e| {
+        panic!(
+            "{} (skip={time_skip}, shards={}) failed: {e}",
+            spec.name, spec.shards
+        )
+    });
+    (stats, net.rebuild_log().to_vec())
+}
+
+/// Scalar serial fixed-tick faulted reference vs batched × {1, 4} shards ×
+/// skip on/off — all bit-identical, with the fault scenario demonstrably
+/// applied (≥ 2 reconfigurations, i.e. at least one fail *and* recover).
+fn assert_fault_invariant(mut spec: ExperimentSpec) {
+    spec.batched_compute = false;
+    spec.shards = 1;
+    let (base, log) = faulted_run(&spec, false);
+    assert!(base.delivered_packets > 0, "{}: nothing delivered", spec.name);
+    assert!(
+        log.len() >= 2,
+        "{}: fault scenario vacuous — only {} reconfigurations applied",
+        spec.name,
+        log.len()
+    );
+    spec.batched_compute = true;
+    for (time_skip, shards) in [(false, 1usize), (true, 1), (false, 4), (true, 4)] {
+        spec.shards = shards;
+        let (got, _) = faulted_run(&spec, time_skip);
+        assert_eq!(
+            base, got,
+            "{}: batched skip={time_skip}/shards={shards} diverged on the faulted run",
+            spec.name
+        );
+    }
+}
+
+/// In-flight packets on a dying link are dropped, requeued at their source
+/// and re-delivered: exact conservation with the drop visible in the
+/// counters, and a rebuild log recording both transitions. The `patch`
+/// rebuild must reproduce the `recompile` run bit-for-bit.
+#[test]
+fn fault_drops_requeue_and_conserve_packets() {
+    let spec = |rebuild| ExperimentSpec {
+        name: "fault-drop".into(),
+        topology: "fm8".into(),
+        servers_per_switch: 2,
+        routing: "min".into(),
+        traffic: TrafficSpec::Fixed {
+            pattern: "complement".into(),
+            packets_per_server: 40,
+        },
+        seed: 13,
+        max_cycles: 5_000_000,
+        faults: fault_spec_links("0-7@60:400", rebuild),
+        ..Default::default()
+    };
+    let (rec, log) = faulted_run(&spec(RebuildStrategy::Recompile), true);
+    assert_eq!(rec.delivered_packets, 8 * 2 * 40, "drop lost a packet");
+    assert_eq!(rec.latency.count(), rec.delivered_packets);
+    assert!(
+        rec.dropped_packets > 0,
+        "no packet was in flight on the dying complement link"
+    );
+    assert_eq!(rec.dropped_packets, rec.retransmitted_packets);
+    assert_eq!(log.len(), 2, "fail + recover transitions");
+    assert_eq!((log[0].cycle, log[0].dead_links), (60, 1));
+    assert_eq!((log[1].cycle, log[1].dead_links), (400, 0));
+    assert!(log[0].deroutes > 0, "killing a Full-mesh link must deroute");
+    assert!(log.iter().all(|r| r.strategy == "recompile" && r.unreachable == 0));
+
+    let (pat, plog) = faulted_run(&spec(RebuildStrategy::Patch), true);
+    assert_eq!(rec, pat, "patch rebuild diverged from recompile");
+    assert!(plog.iter().all(|r| r.strategy == "patch"));
+    assert_eq!(log[0].deroutes, plog[0].deroutes);
+}
+
+/// Fail + recover mid-run on FM64 for a table-driven router of each family
+/// (min, link-order escape, TERA service escape): bit-identical across the
+/// batched path, shard counts and time skip.
+#[test]
+fn faulted_fm64_bit_identical_across_shards_skip_and_batching() {
+    for routing in ["min", "srinr", "tera-hx2"] {
+        assert_fault_invariant(ExperimentSpec {
+            name: format!("fault-fm64-{routing}"),
+            topology: "fm64".into(),
+            servers_per_switch: 2,
+            routing: routing.into(),
+            traffic: TrafficSpec::Fixed {
+                pattern: "complement".into(),
+                packets_per_server: 16,
+            },
+            seed: 11,
+            max_cycles: 5_000_000,
+            faults: fault_spec_links("0-63@40:180, 1-62@90:230", RebuildStrategy::Recompile),
+            ..Default::default()
+        });
+    }
+}
+
+/// Same contract on the 2D-HyperX host (DOR min tables + degraded overlay).
+#[test]
+fn faulted_hx8x8_bit_identical() {
+    assert_fault_invariant(ExperimentSpec {
+        name: "fault-hx8x8-min".into(),
+        topology: "hx8x8".into(),
+        servers_per_switch: 2,
+        routing: "min".into(),
+        traffic: TrafficSpec::Fixed {
+            pattern: "shift".into(),
+            packets_per_server: 12,
+        },
+        seed: 7,
+        max_cycles: 5_000_000,
+        faults: fault_spec_links("0-1@40:200", RebuildStrategy::Recompile),
+        ..Default::default()
+    });
+}
+
+/// The acceptance scenario: a flapping link (fail, recover, fail, recover)
+/// on the large palmtree Dragonfly, incremental `patch` rebuilds, across
+/// shards {1, 4} × skip on/off × scalar/batched — all bit-identical.
+#[test]
+fn flapping_df65x16x8_bit_identical_with_patch_rebuild() {
+    assert_fault_invariant(ExperimentSpec {
+        name: "fault-df65x16x8-flap".into(),
+        topology: "df65x16x8".into(),
+        servers_per_switch: 1,
+        routing: "min".into(),
+        traffic: TrafficSpec::Fixed {
+            pattern: "uniform".into(),
+            packets_per_server: 4,
+        },
+        seed: 5,
+        max_cycles: 5_000_000,
+        faults: fault_spec_links("0-1@25:75, 0-1@110:160", RebuildStrategy::Patch),
+        ..Default::default()
+    });
+}
+
+/// The `P%@CYCLE` failure-rate process: expanded deterministically from the
+/// run seed (two runs agree exactly), and the degraded network still drains
+/// with exact conservation.
+#[test]
+fn link_rate_process_is_deterministic_and_drains() {
+    let spec = ExperimentSpec {
+        name: "fault-rate".into(),
+        topology: "fm16".into(),
+        servers_per_switch: 2,
+        routing: "min".into(),
+        traffic: TrafficSpec::Fixed {
+            pattern: "uniform".into(),
+            packets_per_server: 8,
+        },
+        seed: 21,
+        max_cycles: 5_000_000,
+        faults: fault_spec_links("20%@40", RebuildStrategy::Recompile),
+        ..Default::default()
+    };
+    let (a, log) = faulted_run(&spec, true);
+    let (b, _) = faulted_run(&spec, true);
+    assert_eq!(a, b, "rate expansion must be a pure function of the seed");
+    assert_eq!(a.delivered_packets, 16 * 2 * 8);
+    assert!(
+        !log.is_empty() && log[0].dead_links > 0,
+        "a 20% draw over 120 links produced no failures"
+    );
+}
+
+/// The escape-bearing VC-less routers survive a moderate permanent link
+/// failure rate on FM64 — the scenario the CI release smoke runs — with
+/// exact conservation and no watchdog trip.
+#[test]
+fn escape_routers_drain_under_permanent_link_failures() {
+    for routing in ["tera-hx2", "srinr"] {
+        let spec = ExperimentSpec {
+            name: format!("fault-smoke-{routing}"),
+            topology: "fm64".into(),
+            servers_per_switch: 2,
+            routing: routing.into(),
+            traffic: TrafficSpec::Fixed {
+                pattern: "uniform".into(),
+                packets_per_server: 6,
+            },
+            seed: 17,
+            shards: 2,
+            max_cycles: 5_000_000,
+            faults: fault_spec_links("2%@50", RebuildStrategy::Recompile),
+            ..Default::default()
+        };
+        let (stats, log) = faulted_run(&spec, true);
+        assert_eq!(stats.delivered_packets, 64 * 2 * 6, "{routing} lost packets");
+        assert!(!log.is_empty() && log[0].dead_links > 0, "{routing}: no link died");
+    }
+}
+
+/// Fault schedules are validated against the topology and router when the
+/// network is built: out-of-range ids, nonexistent links and routers
+/// without online-reconfiguration support all fail loudly.
+#[test]
+fn fault_specs_are_validated_against_topology_and_router() {
+    let base = ExperimentSpec {
+        name: "fault-validate".into(),
+        topology: "fm8".into(),
+        servers_per_switch: 2,
+        routing: "min".into(),
+        traffic: TrafficSpec::Fixed {
+            pattern: "uniform".into(),
+            packets_per_server: 2,
+        },
+        ..Default::default()
+    };
+
+    // Switch id out of range on fm8.
+    let mut spec = base.clone();
+    spec.faults = fault_spec_links("0-9@100", RebuildStrategy::Recompile);
+    let err = engine::build_network(&spec).unwrap_err().to_string();
+    assert!(err.contains("switch ids must be <"), "{err}");
+
+    // Non-adjacent pair on a 2D-HyperX ((0,0) and (1,1) share no link).
+    let mut spec = base.clone();
+    spec.topology = "hx4x4".into();
+    spec.faults = fault_spec_links("0-5@100", RebuildStrategy::Recompile);
+    let err = engine::build_network(&spec).unwrap_err().to_string();
+    assert!(err.contains("does not exist"), "{err}");
+
+    // A geometry-table router cannot hot-swap `RoutingTables`.
+    let mut spec = base.clone();
+    spec.topology = "hx4x4".into();
+    spec.routing = "dimwar".into();
+    spec.faults = fault_spec_links("0-1@100", RebuildStrategy::Recompile);
+    let err = engine::build_network(&spec).unwrap_err().to_string();
+    assert!(err.contains("online reconfiguration"), "{err}");
+
+    // The healthy path is untouched: an empty schedule builds fine even on
+    // a non-reconfigurable router.
+    let mut spec = base;
+    spec.topology = "hx4x4".into();
+    spec.routing = "dimwar".into();
+    assert!(engine::build_network(&spec).is_ok());
 }
 
 /// The engine's thread budget caps shard workers without changing results:
