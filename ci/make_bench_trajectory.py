@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Merge per-run BENCH_*.json files into one bench_trajectory.json artifact.
+
+Usage:
+    python3 ci/make_bench_trajectory.py --out bench_trajectory.json \
+        rust/BENCH_cycles.json rust/BENCH_flows.json [...]
+
+Each bench file carries a `results` list of rows with `wall_secs` and
+(optionally) `section` — the same shape ci/check_bench_regression.py
+gates on. This script folds every row into per-section wall-time totals
+and writes a single machine-readable snapshot:
+
+    {
+      "schema": "bench-trajectory/v1",
+      "commit": "<GITHUB_SHA or null>",
+      "run": "<GITHUB_RUN_ID or null>",
+      "quick": true,
+      "sections": {"route": 812.4, ...}   # section -> wall milliseconds
+    }
+
+One such file per CI run, uploaded next to the raw BENCH_*.json
+artifacts, makes the perf trajectory across PRs diffable with a one-line
+jq instead of re-aggregating scattered per-file artifacts. Sections use
+the gate's fold rule (rows without a `section` key land in `flows`), so
+the trajectory and the gate always agree on what a section's wall time
+is. Missing input files are skipped with a warning — the artifact should
+still capture the sections that did run.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_rows(paths):
+    """Fold bench JSONs into {section: total_wall_secs}, gate-compatible.
+
+    Also reports whether any input was produced by a PERF_QUICK=1 run
+    (the bench harness stamps a top-level `quick` flag)."""
+    sections = {}
+    quick = False
+    for path in paths:
+        if not os.path.exists(path):
+            # Bench binaries run with the package root as cwd; tolerate the
+            # workspace-root spelling of the same artifact.
+            alt = os.path.basename(path)
+            if os.path.exists(alt):
+                path = alt
+            else:
+                print(f"warning: {path} not found, skipping", file=sys.stderr)
+                continue
+        with open(path) as f:
+            data = json.load(f)
+        quick = quick or bool(data.get("quick", False))
+        for row in data.get("results", []):
+            section = row.get("section", "flows")
+            wall = float(row.get("wall_secs", 0.0))
+            sections[section] = sections.get(section, 0.0) + wall
+    return sections, quick
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="bench_trajectory.json")
+    ap.add_argument("fresh", nargs="+", help="BENCH_*.json files to merge")
+    args = ap.parse_args()
+
+    sections, quick = load_rows(args.fresh)
+    if not sections:
+        print("error: no bench sections found to merge", file=sys.stderr)
+        return 1
+
+    body = {
+        "schema": "bench-trajectory/v1",
+        "commit": os.environ.get("GITHUB_SHA"),
+        "run": os.environ.get("GITHUB_RUN_ID"),
+        "quick": quick,
+        "sections": {
+            k: round(sections[k] * 1e3, 3) for k in sorted(sections)
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(body, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(sections)} sections, wall in ms)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,6 +30,13 @@
 //!     saturated FM300 RSP point (`SimConfig::batched`), with delivered
 //!     flits asserted equal — the gather/score/commit restructure's
 //!     acceptance number (section `batched-fm300`);
+//!   * **shard scaling**: per-shard timing wheels vs the `--global-wheel`
+//!     A/B baseline on saturated FM300 and the palmtree df65x16x8, shards
+//!     1..8 — parallel efficiency printed, delivered-flit equality
+//!     asserted at every point, and the 4-shard sharded-wheel ≥ 1.5×
+//!     speedup over the global wheel asserted on full runs with ≥ 4
+//!     cores — **`BENCH_shards.json`** (section `shards`; rows land only
+//!     there so the section is gated once);
 //!   * saturated Mcycles/s and packet throughput of `Network::step` on the
 //!     Fig-7 RSP workload (the end-to-end hot path);
 //!   * routing decisions/second per algorithm (allocation inner loop);
@@ -47,10 +54,12 @@
 //!   * PJRT batched-scorer latency (the artifact decision path, `pjrt`
 //!     builds only).
 //!
-//! Every section also lands one row per measurement in
-//! **`BENCH_cycles.json`** (section, label, wall seconds, cycles,
-//! cycles/s) — the consolidated perf-trajectory baseline future PRs diff
-//! against; CI uploads all `BENCH_*.json` as workflow artifacts.
+//! Every section (bar shard scaling, which owns `BENCH_shards.json`) also
+//! lands one row per measurement in **`BENCH_cycles.json`** (section,
+//! label, wall seconds, cycles, cycles/s) — the consolidated
+//! perf-trajectory baseline future PRs diff against; CI uploads all
+//! `BENCH_*.json` as workflow artifacts and merges them into one
+//! `bench_trajectory.json` (section → wall ms) per run.
 //! `PERF_QUICK=1` shrinks horizons so CI finishes in seconds.
 //!
 //! Before/after numbers across optimization iterations are recorded in
@@ -165,7 +174,7 @@ fn bernoulli_spec(
 
 /// Simulated Mcycles/s and delivered flits of one spec through the free
 /// build path, which honors `spec.shards` exactly (the engine would clamp
-/// it to a thread budget). Used by the sharded-cycle-execution section.
+/// it to a thread budget). Used by the shard-scaling section.
 fn sharded_throughput(spec: &ExperimentSpec) -> (f64, u64) {
     let TrafficSpec::Bernoulli { horizon, .. } = &spec.traffic else {
         panic!("perf specs are Bernoulli");
@@ -755,29 +764,58 @@ fn main() {
         println!("  {r:<12} {:>12.2} M grants/s", d / 1e6);
     }
 
-    // ---- Sharded cycle execution: one replica across cores (FM300). ----
-    // The phase-parallel core partitions the switches into `--shards`
-    // blocks simulated concurrently within each cycle; results are
-    // bit-identical at any shard count (asserted below against the serial
-    // run), so this section measures the pure wall-clock win on the
-    // paper's FM300-class instance. Emits BENCH_shards.json as the
-    // perf-trajectory artifact.
-    println!("\n== sharded cycle execution (fm300 × 8 srv/sw, Bernoulli 0.35) ==\n");
+    // ---- Shard scaling: per-shard timing wheels (parallel pop+commit). ----
+    // The sharded-wheel Phase 1/6 kills the serial per-cycle bottleneck:
+    // each shard pops and commits its own wheel, leaving only the
+    // O(shards²) outbox pointer swap serial. This sweeps shards 1..8 on
+    // the two instances the paper cares about — saturated FM300 and the
+    // palmtree df65x16x8 — plus the `--global-wheel` A/B baseline at 4
+    // shards (same partition, one wheel: the pre-sharded-wheel Phase 1/6).
+    // Delivered-flit equality vs the serial run is asserted for every
+    // point, and on full runs with ≥ 4 cores the sharded wheel must beat
+    // the global-wheel baseline by ≥ 1.5× at 4 shards on FM300. Rows land
+    // in BENCH_shards.json (section `shards`) for the perf gate — and only
+    // there, so the section is gated once.
+    println!("\n== shard scaling (per-shard wheels vs --global-wheel) ==\n");
     println!(
-        "{:<12} {:>7} {:>12} {:>10}",
-        "pattern", "shards", "Mcycles/s", "speedup"
+        "{:<28} {:>7} {:>12} {:>9} {:>11}",
+        "instance", "shards", "Mcycles/s", "speedup", "efficiency"
     );
-    let mut artifact = String::from(
-        "{\n  \"bench\": \"sharded-cycle-execution\",\n  \"topology\": \"fm300\",\n  \
-         \"routing\": \"tera-path\",\n  \"load\": 0.35,\n  \"results\": [\n",
-    );
-    let mut first = true;
-    let shard_hz = 1_200u64;
-    for pattern in ["uniform", "rsp"] {
+    let mut srows: Vec<String> = Vec::new();
+    let mut srow = |label: &str, wall: f64, hz: u64, mcps: f64, speedup: f64| {
+        srows.push(format!(
+            "    {{\"section\": \"shards\", \"label\": \"{label}\", \
+             \"wall_secs\": {wall:.6}, \"cycles\": {hz}, \
+             \"mcycles_per_sec\": {mcps:.4}, \"speedup_vs_serial\": {speedup:.3}}}"
+        ));
+    };
+    let can_assert_speedup =
+        !quick() && std::thread::available_parallelism().map_or(1, |n| n.get()) >= 4;
+    for (tag, topo, spc, routing, pattern, load, hz) in [
+        (
+            "fm300-rsp0.7",
+            "fm300",
+            8usize,
+            "tera-path",
+            "rsp",
+            0.7,
+            if quick() { 400u64 } else { 1_600 },
+        ),
+        (
+            "df65x16x8-uni0.4",
+            "df65x16x8",
+            4,
+            "tera-path",
+            "uniform",
+            0.4,
+            if quick() { 200u64 } else { 800 },
+        ),
+    ] {
         let mut base_mcps = 0.0f64;
         let mut base_flits = 0u64;
+        let mut mcps_at_4 = 0.0f64;
         for shards in [1usize, 2, 4, 8] {
-            let mut spec = bernoulli_spec("fm300", 8, "tera-path", pattern, 0.35, shard_hz);
+            let mut spec = bernoulli_spec(topo, spc, routing, pattern, load, hz);
             spec.shards = shards;
             let (mcps, flits) = sharded_throughput(&spec);
             if shards == 1 {
@@ -786,30 +824,66 @@ fn main() {
             } else {
                 assert_eq!(
                     flits, base_flits,
-                    "{pattern}@{shards} shards: determinism violated vs serial run"
+                    "{tag}@{shards} shards: determinism violated vs serial run"
                 );
             }
-            let speedup = mcps / base_mcps;
-            println!("{pattern:<12} {shards:>7} {mcps:>12.3} {speedup:>9.2}x");
-            bench.add(
-                "sharded",
-                &format!("{pattern}-s{shards}"),
-                shard_hz as f64 / (mcps * 1e6),
-                shard_hz as f64,
-            );
-            if !first {
-                artifact.push_str(",\n");
+            if shards == 4 {
+                mcps_at_4 = mcps;
             }
-            first = false;
-            artifact.push_str(&format!(
-                "    {{\"pattern\": \"{pattern}\", \"shards\": {shards}, \
-                 \"mcycles_per_sec\": {mcps:.4}, \"speedup_vs_serial\": {speedup:.3}}}"
-            ));
+            let speedup = mcps / base_mcps;
+            println!(
+                "{tag:<28} {shards:>7} {mcps:>12.3} {speedup:>8.2}x {:>10.0}%",
+                100.0 * speedup / shards as f64
+            );
+            srow(
+                &format!("{tag}-s{shards}"),
+                hz as f64 / (mcps * 1e6),
+                hz,
+                mcps,
+                speedup,
+            );
+        }
+        // The A/B baseline: same 4-shard partition, one global wheel —
+        // Phase 1 pops and the commit fan-in re-serialize on shard 0.
+        let mut gspec = bernoulli_spec(topo, spc, routing, pattern, load, hz);
+        gspec.shards = 4;
+        gspec.global_wheel = true;
+        let (gmcps, gflits) = sharded_throughput(&gspec);
+        assert_eq!(
+            gflits, base_flits,
+            "{tag}: --global-wheel diverged from the per-shard-wheel run"
+        );
+        let wheel_speedup = mcps_at_4 / gmcps;
+        println!(
+            "{:<28} {:>7} {gmcps:>12.3} {:>8.2}x {:>11}",
+            format!("{tag} global-wheel"),
+            4,
+            gmcps / base_mcps,
+            "-"
+        );
+        println!("  sharded wheel vs --global-wheel at 4 shards: {wheel_speedup:.2}x");
+        srow(
+            &format!("{tag}-global-wheel-s4"),
+            hz as f64 / (gmcps * 1e6),
+            hz,
+            gmcps,
+            gmcps / base_mcps,
+        );
+        if can_assert_speedup && topo == "fm300" {
+            assert!(
+                wheel_speedup >= 1.5,
+                "sharded wheel below 1.5x over --global-wheel at 4 shards on {tag} \
+                 ({wheel_speedup:.2}x)"
+            );
         }
     }
-    artifact.push_str("\n  ]\n}\n");
+    let artifact = format!(
+        "{{\n  \"bench\": \"shard-scaling\",\n  \"quick\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        quick(),
+        srows.join(",\n")
+    );
     match std::fs::write("BENCH_shards.json", &artifact) {
-        Ok(()) => println!("\nwrote BENCH_shards.json (sharded determinism: VERIFIED)"),
+        Ok(()) => println!("\nwrote BENCH_shards.json (sharded-wheel determinism: VERIFIED)"),
         Err(e) => println!("\ncould not write BENCH_shards.json: {e}"),
     }
 

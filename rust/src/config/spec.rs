@@ -83,6 +83,15 @@ pub struct ExperimentSpec {
     /// Bit-identical either way — a pure wall-clock knob, like `shards`
     /// and `time_skip`; the A/B is what `perf_hotpath` measures.
     pub batched_compute: bool,
+    /// Home every timing-wheel event to shard 0's wheel instead of the
+    /// destination shard's (`--global-wheel` / `global_wheel = true`):
+    /// the A/B fallback for the sharded-wheel Phase 1/6. Bit-identical
+    /// either way — another pure wall-clock knob.
+    pub global_wheel: bool,
+    /// Report a per-phase wall-time breakdown (wheel / compute / exchange
+    /// / commit) to stderr when the run ends (`--phase-timings`). Wall
+    /// times never enter result artifacts.
+    pub phase_timings: bool,
     /// Fault schedule: which links/switches die (and recover) at which
     /// cycles, plus the table-rebuild strategy. Default: empty (healthy
     /// network, hot path untouched). See [`crate::config::faults`].
@@ -110,6 +119,8 @@ impl Default for ExperimentSpec {
             time_skip: true,
             stop_rel_ci: None,
             batched_compute: true,
+            global_wheel: false,
+            phase_timings: false,
             faults: crate::config::FaultSpec::default(),
         }
     }
@@ -337,6 +348,12 @@ impl ExperimentSpec {
         }
         if let Some(b) = v.get("batched_compute").and_then(Value::as_bool) {
             spec.batched_compute = b;
+        }
+        if let Some(b) = v.get("global_wheel").and_then(Value::as_bool) {
+            spec.global_wheel = b;
+        }
+        if let Some(b) = v.get("phase_timings").and_then(Value::as_bool) {
+            spec.phase_timings = b;
         }
         if let Some(f) = v.get("stop_rel_ci").and_then(Value::as_float) {
             anyhow::ensure!(f > 0.0, "stop_rel_ci must be positive");
@@ -583,6 +600,20 @@ mod tests {
         // A zero/negative CI target is meaningless and must fail loudly.
         let bad = crate::config::parse("stop_rel_ci = 0.0\n").unwrap();
         assert!(ExperimentSpec::from_value(&bad).is_err());
+    }
+
+    #[test]
+    fn wheel_knobs_parse_and_default_to_sharded_quiet() {
+        // Defaults: per-shard wheels on (global_wheel is the A/B opt-out),
+        // phase timings off (stderr diagnostics are opt-in).
+        let d = ExperimentSpec::default();
+        assert!(!d.global_wheel);
+        assert!(!d.phase_timings);
+        let cfg =
+            crate::config::parse("global_wheel = true\nphase_timings = true\n").unwrap();
+        let spec = ExperimentSpec::from_value(&cfg).unwrap();
+        assert!(spec.global_wheel);
+        assert!(spec.phase_timings);
     }
 
     #[test]

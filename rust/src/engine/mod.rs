@@ -77,6 +77,7 @@ pub fn sim_config(spec: &ExperimentSpec) -> SimConfig {
         seed: spec.seed,
         shards: spec.shards,
         batched: spec.batched_compute,
+        global_wheel: spec.global_wheel,
         ..SimConfig::default()
     }
 }
@@ -252,6 +253,7 @@ pub fn run_opts(spec: &ExperimentSpec) -> RunOpts {
             stop_when_drained: false,
             time_skip: spec.time_skip,
             stop_rel_ci: spec.stop_rel_ci,
+            phase_timings: spec.phase_timings,
         },
         _ => RunOpts {
             max_cycles: spec.max_cycles,
@@ -260,6 +262,7 @@ pub fn run_opts(spec: &ExperimentSpec) -> RunOpts {
             stop_when_drained: true,
             time_skip: spec.time_skip,
             stop_rel_ci: None,
+            phase_timings: spec.phase_timings,
         },
     }
 }
@@ -276,6 +279,7 @@ pub fn run_expect(spec: &ExperimentSpec) -> anyhow::Result<Result<SimStats, SimE
         stop_when_drained: !matches!(spec.traffic, TrafficSpec::Bernoulli { .. }),
         time_skip: spec.time_skip,
         stop_rel_ci: None,
+        phase_timings: spec.phase_timings,
     };
     Ok(net.run(workload.as_mut(), &opts))
 }

@@ -150,6 +150,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         // Scalar reference loops for the compute phase (bit-identical to
         // the default batched path; a pure wall-clock knob).
         batched_compute: !args.has("scalar-compute"),
+        // A/B fallback: one global wheel on shard 0 instead of per-shard
+        // wheels (bit-identical; re-serializes Phase 1 and the commit
+        // fan-in).
+        global_wheel: args.has("global-wheel"),
+        phase_timings: args.has("phase-timings"),
         stop_rel_ci: match args.get("stop-rel-ci") {
             Some(v) => {
                 let target: f64 = v.parse()?;
@@ -463,6 +468,13 @@ RUN FLAGS:
   --scalar-compute        use the scalar reference compute loops instead
                           of the batched gather/score/commit path (also
                           bit-identical; the A/B perf_hotpath measures)
+  --global-wheel          home all timing-wheel events to shard 0 instead
+                          of the per-shard wheels (also bit-identical;
+                          re-serializes event pop/commit — the A/B
+                          baseline of the shard-scaling bench)
+  --phase-timings         report a per-phase wall-time breakdown (wheel /
+                          compute / exchange / commit) to stderr when the
+                          run ends
   --stop-rel-ci X         stop a bernoulli point once the steady-state
                           estimator's relative CI half-width <= X (e.g.
                           0.05); with --replicas N, also prunes replicas

@@ -34,14 +34,19 @@
 //!   switch is listed iff it buffers at least one packet
 //!   (`Switch::work > 0`), a server iff its source queue is non-empty;
 //!   idle components cost zero;
-//! * in-flight events live on an overflow-safe hierarchical
-//!   [`TimingWheel`], so arbitrary `link_latency` values are exact;
+//! * in-flight events live on overflow-safe hierarchical [`TimingWheel`]s
+//!   — one per shard, holding the events destined to that shard's own
+//!   switches — so arbitrary `link_latency` values are exact;
 //! * switches are partitioned into `cfg.shards` contiguous blocks, each
-//!   owned by a [`shard::ShardState`]. Every cycle runs a **compute**
-//!   phase (allocation + transmission, per shard, concurrently on worker
-//!   threads) and a serial **commit** phase that drains shard outboxes in
-//!   canonical order onto the wheel — N-shard runs are bit-identical to
-//!   1-shard runs (DESIGN.md, "Phase-parallel invariants");
+//!   owned by a [`shard::ShardState`]. Every cycle runs a parallel **pop**
+//!   phase (each shard dispatches its own wheel's due events), a parallel
+//!   **compute** phase (allocation + transmission), a serial O(shards²)
+//!   pointer-swap **exchange**, and a parallel **commit** phase (each
+//!   shard drains its inbox rows in ascending source-shard order onto its
+//!   own wheel) — N-shard runs are bit-identical to 1-shard runs
+//!   (DESIGN.md, "Phase-parallel invariants"). `SimConfig::global_wheel`
+//!   opts back into one shard-0-homed wheel with serial pop/commit fan-in
+//!   (the A/B fallback — also bit-identical);
 //! * when a cycle ends with every shard idle, no server eligible to
 //!   inject, and nothing due on the wheel until `t'`, the clock jumps
 //!   straight to `t'` (**exact next-event time advance**, `RunOpts::
@@ -70,7 +75,7 @@ use crate::topology::{DeadSet, PhysTopology};
 use crate::traffic::Workload;
 use crate::util::Rng;
 
-use shard::{ComputeCtx, RouterSlot, ShardState, WorkerPool, SWITCH_RNG_STREAM};
+use shard::{ComputeCtx, Phase, RouterSlot, ShardState, WorkerPool, SWITCH_RNG_STREAM};
 
 /// Simulator parameters (§5 defaults).
 #[derive(Clone, Debug)]
@@ -110,6 +115,15 @@ pub struct SimConfig {
     /// (`batched_compute = false` in an experiment spec selects the scalar
     /// reference path).
     pub batched: bool,
+    /// Home every timing-wheel event to shard 0's wheel instead of the
+    /// destination shard's (`--global-wheel`): Phase 1 pops and the commit
+    /// fan-in then re-serialize on shard 0, which is the pre-sharded-wheel
+    /// behavior the shard-scaling bench A/Bs against. Results are
+    /// **bit-identical** with this on or off (pinned by
+    /// `tests/engine.rs`) — another pure wall-clock knob, and the right
+    /// fallback when debugging event-ordering questions with one wheel to
+    /// inspect.
+    pub global_wheel: bool,
 }
 
 impl Default for SimConfig {
@@ -125,6 +139,7 @@ impl Default for SimConfig {
             watchdog_cycles: 20_000,
             shards: 1,
             batched: true,
+            global_wheel: false,
         }
     }
 }
@@ -158,6 +173,11 @@ pub struct RunOpts {
     /// unchanged. The achieved half-width is reported in
     /// `SimStats::achieved_rel_ci`.
     pub stop_rel_ci: Option<f64>,
+    /// Accumulate a per-phase wall-time breakdown (wheel pop / compute /
+    /// exchange / commit) and report it to stderr when the run ends
+    /// (`--phase-timings`). Wall times never enter [`SimStats`] — those
+    /// must stay bit-deterministic across machines and shard counts.
+    pub phase_timings: bool,
 }
 
 impl Default for RunOpts {
@@ -169,8 +189,24 @@ impl Default for RunOpts {
             stop_when_drained: true,
             time_skip: true,
             stop_rel_ci: None,
+            phase_timings: false,
         }
     }
+}
+
+/// Cumulative per-phase wall time over one run (`RunOpts::phase_timings`):
+/// the serial-bottleneck diagnostic for shard-scaling work. Reported to
+/// stderr, never part of [`SimStats`].
+#[derive(Default)]
+struct PhaseTimings {
+    /// Phase 1: wheel pops + event dispatch (parallel residue included).
+    wheel: std::time::Duration,
+    /// Phases 4+5: crossbar allocation + link transmission.
+    compute: std::time::Duration,
+    /// The serial O(shards²) outbox/inbox pointer swap.
+    exchange: std::time::Duration,
+    /// Inbox → wheel scheduling + credit application.
+    commit: std::time::Duration,
 }
 
 /// One entry of the no-forward-progress watchdog's structured report: an
@@ -322,15 +358,21 @@ pub struct Network {
     /// point for online reconfiguration (see `shard::RouterSlot`).
     router_slot: RouterSlot,
     pub cfg: SimConfig,
-    /// Contiguous switch blocks, each owning its queues/arena/RNGs.
+    /// Contiguous switch blocks, each owning its queues/arena/RNGs and the
+    /// timing wheel of the events destined to its switches.
     shards: Vec<ShardState>,
     /// Shard index of every switch (blocks are near-equal, not exact
-    /// divisions, so this lookup is the source of truth).
-    switch_shard: Vec<u32>,
+    /// divisions, so this lookup is the source of truth). Shared with the
+    /// compute workers, which route cross-shard effects by it.
+    switch_shard: Arc<Vec<u32>>,
     servers: Vec<ServerState>,
-    wheel: TimingWheel<Event>,
-    /// Reused scratch buffer for the events popped each cycle.
+    /// Reused scratch buffer for the events popped by the serial Phase-1
+    /// path (global wheel / fault / single-threaded runs).
     event_buf: Vec<Event>,
+    /// Reused scratch for the serial path's canonically-sorted deliveries.
+    deliver_buf: Vec<Packet>,
+    /// Per-phase wall-time accumulator (`RunOpts::phase_timings`).
+    timings: Option<PhaseTimings>,
     /// Dirty worklist of servers with queued source packets.
     active_servers: Vec<u32>,
     server_active: Vec<bool>,
@@ -436,8 +478,13 @@ impl Network {
                 rngs,
                 active: Vec::with_capacity(hi - lo),
                 active_flag: vec![false; hi - lo],
-                outbox: Vec::new(),
-                credit_out: Vec::new(),
+                wheel: TimingWheel::new(),
+                outboxes: (0..nshards).map(|_| Vec::new()).collect(),
+                credit_out: (0..nshards).map(|_| Vec::new()).collect(),
+                inbox: (0..nshards).map(|_| Vec::new()).collect(),
+                credit_in: (0..nshards).map(|_| Vec::new()).collect(),
+                pop_buf: Vec::new(),
+                delivered: Vec::new(),
                 link_flits: vec![0; (hi - lo) * max_degree],
                 route_buf: crate::routing::CandidateBuf::new(),
                 lane_buf: vec![0u32; max_degree + spc],
@@ -460,10 +507,11 @@ impl Network {
             router,
             cfg,
             shards,
-            switch_shard,
+            switch_shard: Arc::new(switch_shard),
             servers,
-            wheel: TimingWheel::new(),
             event_buf: Vec::new(),
+            deliver_buf: Vec::new(),
+            timings: None,
             active_servers: Vec::with_capacity(n * spc),
             server_active: vec![false; n * spc],
             now: 0,
@@ -500,9 +548,25 @@ impl Network {
             .tables()
             .expect("router supports online reconfiguration (engine-validated)")
             .clone();
-        for (idx, &(cycle, _, _)) in schedule.iter().enumerate() {
+        for (idx, &(cycle, target, _)) in schedule.iter().enumerate() {
             assert!(cycle >= 1, "fault cycles start at 1");
-            self.wheel.schedule(0, cycle, Event::Fault { idx: idx as u32 });
+            // Fault events ride the owning shard's wheel — the shard of
+            // the transition's target (links home to their lower-numbered
+            // endpoint) — so the per-shard `next_event_at` min keeps
+            // seeing pending reconfigurations. Fault runs pop serially
+            // across all wheels, so ownership only has to be
+            // deterministic, not load-balanced.
+            let k = if self.cfg.global_wheel {
+                0
+            } else {
+                match target {
+                    FaultTarget::Link(a, b) => self.switch_shard[a.min(b) as usize] as usize,
+                    FaultTarget::Switch(s) => self.switch_shard[s as usize] as usize,
+                }
+            };
+            self.shards[k]
+                .wheel
+                .schedule(0, cycle, Event::Fault { idx: idx as u32 });
         }
         // Deroutes around failures legitimately exceed the healthy
         // topology's hop bounds; the livelock debug-asserts stay armed on
@@ -583,6 +647,8 @@ impl Network {
             window_end: self.window_end,
             max_degree: self.max_degree,
             max_hops: self.max_hops,
+            switch_shard: self.switch_shard.clone(),
+            global_wheel: self.cfg.global_wheel,
         }
     }
 
@@ -592,6 +658,10 @@ impl Network {
         self.warmup = opts.warmup;
         self.window_end = opts.warmup.saturating_add(opts.window.unwrap_or(u64::MAX / 2));
         self.last_progress = self.now;
+        // Wall-clock phase breakdown lives on `Network`, not `SimStats`:
+        // the bit-identity pins `assert_eq!` whole `SimStats` values, and
+        // wall time is the one thing that may differ between runs.
+        self.timings = opts.phase_timings.then(PhaseTimings::default);
         let ctx = self.compute_ctx();
         // Worker threads exist only for multi-shard runs, live for exactly
         // this run, and are joined on every exit path (WorkerPool::drop).
@@ -661,6 +731,18 @@ impl Network {
         if let Some(mon) = &monitor {
             stats.achieved_rel_ci = mon.achieved_rel_ci();
         }
+        if let Some(tm) = self.timings.take() {
+            let ms = |d: std::time::Duration| d.as_secs_f64() * 1e3;
+            eprintln!(
+                "phase-timings shards={} ticked={} wheel={:.1}ms compute={:.1}ms exchange={:.1}ms commit={:.1}ms",
+                self.shards.len(),
+                self.ticked,
+                ms(tm.wheel),
+                ms(tm.compute),
+                ms(tm.exchange),
+                ms(tm.commit),
+            );
+        }
         Ok(stats)
     }
 
@@ -673,7 +755,9 @@ impl Network {
     /// allocator randomness each cycle, so such cycles must tick — and the
     /// target is the minimum of the three remaining event sources:
     ///
-    /// * the timing wheel ([`TimingWheel::next_event_at`]);
+    /// * the per-shard timing wheels (`min` over
+    ///   [`TimingWheel::next_event_at`] — fault events ride the owning
+    ///   shard's wheel, so degraded runs are covered too);
     /// * the workload ([`Workload::next_injection_at`] — conservative by
     ///   default, e.g. Bernoulli pins it to `now` inside its horizon
     ///   because it consumes RNG every polled cycle);
@@ -705,7 +789,12 @@ impl Network {
         if injection == Some(self.now) {
             return;
         }
-        let mut next = self.wheel.next_event_at();
+        let mut next: Option<u64> = None;
+        for sh in &self.shards {
+            if let Some(t) = sh.wheel.next_event_at() {
+                next = Some(next.map_or(t, |n| n.min(t)));
+            }
+        }
         if let Some(t) = injection {
             next = Some(next.map_or(t, |n| n.min(t)));
         }
@@ -724,8 +813,10 @@ impl Network {
         }
     }
 
-    /// One simulated cycle: serial event/injection phases, the (possibly
-    /// parallel) per-shard compute phase, then the serial commit phase.
+    /// One simulated cycle: per-shard event pop+dispatch (parallel when a
+    /// worker pool exists), serial injection, the (possibly parallel)
+    /// per-shard compute phase, the serial cross-shard exchange, then the
+    /// (possibly parallel) per-shard commit.
     fn step(
         &mut self,
         workload: &mut dyn Workload,
@@ -736,70 +827,36 @@ impl Network {
         let flits = self.cfg.pkt_flits as u64;
 
         // ---- Phase 1: timing-wheel events (faults, arrivals, deliveries).
-        // Fault transitions apply before packet events: an arrival due
-        // this same cycle had already crossed its link when the link died,
-        // so it lands normally — unless its destination *switch* died, in
-        // which case it is dropped and retransmitted like the in-flight
-        // packets the fault pass extracts from the wheel. ----
-        let mut events = std::mem::take(&mut self.event_buf);
-        self.wheel.pop_due(now, &mut events);
-        if self.faults.is_some() {
-            for ev in events.iter() {
-                if let Event::Fault { idx } = ev {
-                    self.fault_pending.push(*idx);
+        // Every event already sits on the wheel of the shard that owns its
+        // effect (arrivals: destination switch; deliveries: ejecting
+        // switch), so the common path pops and dispatches per shard in
+        // parallel. The serial fallback covers single-shard runs,
+        // `--global-wheel` mode (everything homes to shard 0), and fault
+        // runs — fault transitions interleave with packet events and
+        // mutate cross-shard state, so they take the one-thread path. ----
+        let t0 = self.timings.is_some().then(std::time::Instant::now);
+        match pool {
+            Some(p) if !self.cfg.global_wheel && self.faults.is_none() => {
+                p.run_phase(Phase::Pop, &mut self.shards, now);
+                // Deliveries are staged per shard (sorted by destination
+                // server) and applied here on the main thread: shards own
+                // ascending contiguous server ranges, so draining shards
+                // in ascending order visits deliveries in global
+                // `dst_server` order — the same sequence the serial path
+                // produces after its sort.
+                for k in 0..self.shards.len() {
+                    let mut delivered = std::mem::take(&mut self.shards[k].delivered);
+                    for pkt in delivered.drain(..) {
+                        self.process_delivered(pkt, now, workload);
+                    }
+                    self.shards[k].delivered = delivered;
                 }
             }
-            if !self.fault_pending.is_empty() {
-                self.apply_due_faults(now);
-            }
+            _ => self.pop_events_serial(now, workload),
         }
-        for ev in events.drain(..) {
-            match ev {
-                Event::Fault { .. } => {} // applied above, before packet events
-                Event::Arrive { sw, port, vc, pkt } => {
-                    if self
-                        .faults
-                        .as_ref()
-                        .map_or(false, |f| !f.dead.switch_alive(sw as usize))
-                    {
-                        let u = self.topo.neighbor(sw as usize, port as usize) as u32;
-                        let up = self.topo.reverse_port(sw as usize, port as usize) as u32;
-                        self.restore_credit(u, up, vc);
-                        self.requeue_dropped(pkt);
-                        continue;
-                    }
-                    let k = self.switch_shard[sw as usize] as usize;
-                    let sh = &mut self.shards[k];
-                    let ls = sw as usize - sh.lo;
-                    let id = sh.arena.alloc(pkt);
-                    let q = sh.switches[ls].in_q(port as usize, vc as usize);
-                    sh.queues.push_back(q, id);
-                    sh.switches[ls].work += 1;
-                    sh.activate(sw);
-                }
-                Event::Deliver { pkt } => {
-                    debug_assert!(
-                        (pkt.hops as usize) <= self.max_hops,
-                        "livelock bound violated: {} hops > {} ({})",
-                        pkt.hops,
-                        self.max_hops,
-                        self.router.name()
-                    );
-                    if self.in_window(now) {
-                        self.stats.delivered_flits += pkt.flits as u64;
-                        self.stats.delivered_packets += 1;
-                    }
-                    if self.in_window(pkt.gen_cycle) {
-                        self.stats.latency.record(now - pkt.gen_cycle);
-                        let h = (pkt.hops as usize).min(self.stats.hops.len() - 1);
-                        self.stats.hops[h] += 1;
-                    }
-                    self.live -= 1;
-                    workload.on_delivered(pkt.src_server, pkt.dst_server, pkt.msg, now);
-                }
-            }
+        if let (Some(tm), Some(t)) = (self.timings.as_mut(), t0) {
+            tm.wheel += t.elapsed();
         }
-        self.event_buf = events;
 
         // ---- Phase 2: workload generation into source queues. ----
         {
@@ -886,41 +943,65 @@ impl Network {
 
         // ---- Phases 4+5 (compute): crossbar allocation then link
         // transmission, per active switch of each shard. Shards touch only
-        // their own state; cross-switch effects land in outboxes. ----
+        // their own state; cross-switch effects land in per-destination
+        // outbox rows. ----
+        let t0 = self.timings.is_some().then(std::time::Instant::now);
         match pool {
-            Some(p) => p.run_cycle(&mut self.shards, now),
+            Some(p) => p.run_phase(Phase::Compute, &mut self.shards, now),
             None => {
                 for sh in &mut self.shards {
                     sh.compute(now, ctx);
                 }
             }
         }
+        if let (Some(tm), Some(t)) = (self.timings.as_mut(), t0) {
+            tm.compute += t.elapsed();
+        }
 
-        // ---- Phase 6 (commit): drain shard outboxes in canonical order
-        // (shards hold ascending switch ranges and emit in ascending
-        // (switch, port) order, so this sequence is independent of the
-        // shard count), then apply the commutative credit returns. ----
-        let mut k = 0;
-        while k < self.shards.len() {
-            let mut outbox = std::mem::take(&mut self.shards[k].outbox);
-            for (when, ev) in outbox.drain(..) {
-                self.wheel.schedule(now, when, ev);
+        // ---- Phase 6a (exchange): serial O(shards²) pointer swap. Shard
+        // j's outbox row for shard k becomes shard k's inbox row from
+        // shard j (likewise for credit returns). Inbox rows are empty
+        // here — the previous commit drained them — so the swap also
+        // ping-pongs the row capacities back as fresh outboxes. ----
+        let t0 = self.timings.is_some().then(std::time::Instant::now);
+        let n = self.shards.len();
+        for j in 0..n {
+            for k in 0..n {
+                if j == k {
+                    let sh = &mut self.shards[j];
+                    std::mem::swap(&mut sh.outboxes[k], &mut sh.inbox[j]);
+                    std::mem::swap(&mut sh.credit_out[k], &mut sh.credit_in[j]);
+                } else {
+                    let (a, b) = pair_mut(&mut self.shards, j, k);
+                    std::mem::swap(&mut a.outboxes[k], &mut b.inbox[j]);
+                    std::mem::swap(&mut a.credit_out[k], &mut b.credit_in[j]);
+                }
             }
-            self.shards[k].outbox = outbox;
-            let mut credits = std::mem::take(&mut self.shards[k].credit_out);
-            for &(sw, port, vc) in credits.iter() {
-                let k2 = self.switch_shard[sw as usize] as usize;
-                let sh = &mut self.shards[k2];
-                let ls = sw as usize - sh.lo;
-                let s = &mut sh.switches[ls];
-                s.credits[port as usize * s.vcs + vc as usize] += 1;
+        }
+        if let (Some(tm), Some(t)) = (self.timings.as_mut(), t0) {
+            tm.exchange += t.elapsed();
+        }
+
+        // ---- Phase 6b (commit): each shard drains its inbox rows in
+        // ascending source-shard order onto its own wheel. Shards hold
+        // ascending switch ranges and emit in ascending (switch, port)
+        // order, so every destination wheel sees its events in the same
+        // sequence at any shard count; credit returns are commutative
+        // `+= 1`s, so their per-shard grouping is free. ----
+        let t0 = self.timings.is_some().then(std::time::Instant::now);
+        match pool {
+            Some(p) => p.run_phase(Phase::Commit, &mut self.shards, now),
+            None => {
+                for sh in &mut self.shards {
+                    sh.commit_phase(now);
+                }
             }
-            credits.clear();
-            self.shards[k].credit_out = credits;
-            if self.shards[k].progress {
-                self.last_progress = now;
-            }
-            k += 1;
+        }
+        if self.shards.iter().any(|sh| sh.progress) {
+            self.last_progress = now;
+        }
+        if let (Some(tm), Some(t)) = (self.timings.as_mut(), t0) {
+            tm.commit += t.elapsed();
         }
 
         // ---- Watchdog: live packets but no flit movement for the whole
@@ -939,6 +1020,96 @@ impl Network {
         Ok(())
     }
 
+    /// Serial Phase-1 path: pop every shard's wheel in ascending shard
+    /// order and dispatch on the main thread. Used for single-shard runs,
+    /// `--global-wheel` mode, and fault runs. Dispatch effects are
+    /// canonically ordered so this path and the parallel one produce
+    /// bit-identical state: dead-switch casualties requeue in
+    /// `(switch, port)` order and deliveries apply in `dst_server` order,
+    /// both independent of which wheel each event popped from.
+    fn pop_events_serial(&mut self, now: u64, workload: &mut dyn Workload) {
+        let mut events = std::mem::take(&mut self.event_buf);
+        events.clear();
+        for sh in &mut self.shards {
+            sh.wheel.pop_due(now, &mut events);
+        }
+        // Fault transitions apply before packet events: an arrival due
+        // this same cycle had already crossed its link when the link died,
+        // so it lands normally — unless its destination *switch* died, in
+        // which case it is dropped and retransmitted like the in-flight
+        // packets the fault pass extracts from the wheels.
+        if self.faults.is_some() {
+            for ev in events.iter() {
+                if let Event::Fault { idx } = ev {
+                    self.fault_pending.push(*idx);
+                }
+            }
+            if !self.fault_pending.is_empty() {
+                self.apply_due_faults(now);
+            }
+        }
+        let mut dead_arrivals: Vec<(u32, u32, u8, Packet)> = Vec::new();
+        let mut delivered = std::mem::take(&mut self.deliver_buf);
+        for ev in events.drain(..) {
+            match ev {
+                Event::Fault { .. } => {} // applied above, before packet events
+                Event::Arrive { sw, port, vc, pkt } => {
+                    if self
+                        .faults
+                        .as_ref()
+                        .map_or(false, |f| !f.dead.switch_alive(sw as usize))
+                    {
+                        dead_arrivals.push((sw, port, vc, pkt));
+                        continue;
+                    }
+                    let k = self.switch_shard[sw as usize] as usize;
+                    self.shards[k].dispatch_arrive(sw, port, vc, pkt);
+                }
+                Event::Deliver { pkt } => delivered.push(pkt),
+            }
+        }
+        self.event_buf = events;
+        // A link carries at most one arrival per cycle, so (switch, port)
+        // is unique within a cycle and this sort gives one canonical
+        // requeue order at any shard count.
+        dead_arrivals.sort_unstable_by_key(|&(sw, port, _, _)| (sw, port));
+        for (sw, port, vc, pkt) in dead_arrivals {
+            let u = self.topo.neighbor(sw as usize, port as usize) as u32;
+            let up = self.topo.reverse_port(sw as usize, port as usize) as u32;
+            self.restore_credit(u, up, vc);
+            self.requeue_dropped(pkt);
+        }
+        delivered.sort_unstable_by_key(|p| p.dst_server);
+        for pkt in delivered.drain(..) {
+            self.process_delivered(pkt, now, workload);
+        }
+        self.deliver_buf = delivered;
+    }
+
+    /// Deliver one packet to its destination server: livelock check,
+    /// window-gated stats, workload notification. Both Phase-1 paths
+    /// invoke this in global `dst_server` order.
+    fn process_delivered(&mut self, pkt: Packet, now: u64, workload: &mut dyn Workload) {
+        debug_assert!(
+            (pkt.hops as usize) <= self.max_hops,
+            "livelock bound violated: {} hops > {} ({})",
+            pkt.hops,
+            self.max_hops,
+            self.router.name()
+        );
+        if self.in_window(now) {
+            self.stats.delivered_flits += pkt.flits as u64;
+            self.stats.delivered_packets += 1;
+        }
+        if self.in_window(pkt.gen_cycle) {
+            self.stats.latency.record(now - pkt.gen_cycle);
+            let h = (pkt.hops as usize).min(self.stats.hops.len() - 1);
+            self.stats.hops[h] += 1;
+        }
+        self.live -= 1;
+        workload.on_delivered(pkt.src_server, pkt.dst_server, pkt.msg, now);
+    }
+
     /// Apply the fault transitions collected in `fault_pending` (phase 1).
     ///
     /// Order of operations — all deterministic and shard-count-invariant:
@@ -948,8 +1119,10 @@ impl Network {
     ///    routing candidate construction, `SwitchView::has_space` and both
     ///    transmit paths);
     /// 3. drop in-flight packets whose traversed link is now dead —
-    ///    extracted from the wheel in its deterministic scan order — and
-    ///    restore the downstream input-FIFO credit each one held;
+    ///    extracted from every shard's wheel, then sorted into canonical
+    ///    `(cycle, switch, port)` order so the requeue sequence is
+    ///    shard-count-invariant — and restore the downstream input-FIFO
+    ///    credit each one held;
     /// 4. drain output queues committed onto dead edges and every queue of
     ///    a dead switch, in ascending `(switch, port, vc)` order,
     ///    requeueing the packets at their source NICs;
@@ -958,6 +1131,10 @@ impl Network {
     ///    router every shard routes with from this cycle on.
     fn apply_due_faults(&mut self, now: u64) {
         let mut st = self.faults.take().expect("fault state present");
+        // Due indices were collected across per-shard wheels in pop order;
+        // sorting restores schedule order, so same-cycle transitions fold
+        // in the order the scenario listed them at any shard count.
+        self.fault_pending.sort_unstable();
         for &idx in &self.fault_pending {
             let (_, target, fail) = st.schedule[idx as usize];
             match (target, fail) {
@@ -980,23 +1157,31 @@ impl Network {
             }
         }
 
-        // 3. In-flight drops (the wheel scan visits events in a fixed
-        // order, so the requeue sequence is deterministic).
+        // 3. In-flight drops. Each wheel's scan order is fixed but the
+        // concatenation across shards is not, so sort the casualties into
+        // (cycle, switch, port) order — unique per in-flight packet, since
+        // a link carries at most one arrival per cycle.
         let mut dropped: Vec<(u64, Event)> = Vec::new();
         {
             let topo = &self.topo;
             let dead = &st.dead;
-            self.wheel.extract_if(
-                |ev| match ev {
-                    Event::Arrive { sw, port, .. } => {
-                        let v = *sw as usize;
-                        !dead.edge_alive(topo.neighbor(v, *port as usize), v)
-                    }
-                    _ => false,
-                },
-                &mut dropped,
-            );
+            for sh in &mut self.shards {
+                sh.wheel.extract_if(
+                    |ev| match ev {
+                        Event::Arrive { sw, port, .. } => {
+                            let v = *sw as usize;
+                            !dead.edge_alive(topo.neighbor(v, *port as usize), v)
+                        }
+                        _ => false,
+                    },
+                    &mut dropped,
+                );
+            }
         }
+        dropped.sort_unstable_by_key(|(when, ev)| match ev {
+            Event::Arrive { sw, port, .. } => (*when, *sw, *port),
+            _ => unreachable!("only arrivals are extracted"),
+        });
         for (_, ev) in dropped {
             let Event::Arrive { sw, port, vc, pkt } = ev else {
                 unreachable!("only arrivals are extracted")
@@ -1113,8 +1298,8 @@ impl Network {
     fn restore_credit(&mut self, sw: u32, port: u32, vc: u8) {
         let k = self.switch_shard[sw as usize] as usize;
         let sh = &mut self.shards[k];
-        let s = &mut sh.switches[sw as usize - sh.lo];
-        s.credits[port as usize * s.vcs + vc as usize] += 1;
+        let ls = sw as usize - sh.lo;
+        sh.switches[ls].return_credit(port as usize, vc as usize);
     }
 
     /// Drop a fault casualty and requeue it at its source NIC for
@@ -1170,6 +1355,20 @@ impl Network {
     pub fn occupancy_snapshot(&self, s: usize) -> Vec<u32> {
         let sh = &self.shards[self.switch_shard[s] as usize];
         sh.switches[s - sh.lo].occ_flits.clone()
+    }
+}
+
+/// Disjoint `&mut` references to two distinct slots of one slice —
+/// the exchange phase swaps outbox/inbox rows between shard pairs.
+#[inline]
+fn pair_mut<T>(xs: &mut [T], a: usize, b: usize) -> (&mut T, &mut T) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = xs.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = xs.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
     }
 }
 

@@ -1,21 +1,29 @@
-//! Deterministic phase-parallel execution: per-shard switch state and the
-//! compute half of the cycle loop.
+//! Deterministic phase-parallel execution: per-shard switch state, the
+//! per-shard timing wheel, and the parallel thirds of the cycle loop.
 //!
 //! The simulator partitions switches into `cfg.shards` contiguous blocks.
-//! Each cycle splits into two phases (see DESIGN.md, "Phase-parallel
+//! Each shard owns the timing wheel holding the events destined to its own
+//! switches — **destination-shard event ownership** — so a cycle splits
+//! into three parallelizable phases (see DESIGN.md, "Phase-parallel
 //! invariants"):
 //!
+//! * **pop** — each shard pops its own wheel's due events and dispatches
+//!   the locally-destined arrivals itself; deliveries are staged (sorted
+//!   by destination server) for the serial stats/workload residue.
 //! * **compute** — route + arbitrate + crossbar + link scheduling for every
 //!   active switch of a shard, touching *only* that shard's state. Effects
 //!   that cross a switch boundary are not applied; they are recorded in the
-//!   shard's outboxes (`outbox` for timing-wheel transfers, `credit_out`
-//!   for credit returns). Shards therefore run concurrently with no shared
-//!   mutable state at all — each [`ShardState`] *owns* its switches, queue
-//!   pool, packet arena and RNG streams, and is moved wholesale to a worker
-//!   thread and back each cycle (no `unsafe`, no locks on the hot path).
-//! * **commit** — the serial phase (in `sim::Network`) drains the outboxes
-//!   in canonical shard-ascending order onto the global timing wheel and
-//!   credit state.
+//!   shard's per-destination outboxes (`outboxes[k]` for timing-wheel
+//!   transfers owned by shard `k`, `credit_out[k]` for credit returns to
+//!   shard `k`'s switches). Shards therefore run concurrently with no
+//!   shared mutable state at all — each [`ShardState`] *owns* its switches,
+//!   queue pool, packet arena, RNG streams and wheel, and is moved
+//!   wholesale to a worker thread and back each phase (no `unsafe`, no
+//!   locks on the hot path).
+//! * **commit** — after a serial O(shards²) pointer-swap exchange
+//!   (`outboxes[k]` of shard `j` becomes `inbox[j]` of shard `k`), each
+//!   shard drains its inbox rows in ascending source-shard order onto its
+//!   own wheel and applies its own switches' credit returns.
 //!
 //! Determinism is the load-bearing invariant: an N-shard run is
 //! bit-identical to the 1-shard run for every router and seed, because
@@ -23,16 +31,24 @@
 //! 1. every switch owns a private RNG stream derived from `(seed, switch)`,
 //!    so allocator/VC randomness never depends on visit order;
 //! 2. each shard processes its active switches in ascending switch id, and
-//!    shards hold ascending switch ranges, so the concatenated outboxes are
-//!    in global `(switch, port)` order regardless of the shard count;
+//!    shards hold ascending contiguous switch ranges, so draining the
+//!    inbox rows in ascending source-shard order reproduces the global
+//!    `(switch, port)` emission order — every wheel sees the same schedule
+//!    sequence regardless of the shard count;
 //! 3. credit returns are commutative increments, applied wholesale between
 //!    cycles;
 //! 4. packets cross shard boundaries *by value* through wheel events, so
-//!    arena ids are shard-local and never observable in routing decisions.
+//!    arena ids are shard-local and never observable in routing decisions;
+//! 5. same-cycle effects that do not commute (workload delivery callbacks,
+//!    fault drops) are canonically re-ordered by the serial residue —
+//!    deliveries sort by destination server, fault extractions by
+//!    `(cycle, switch, port)`.
 
 use std::sync::{mpsc, Arc, RwLock};
 use std::thread::JoinHandle;
 
+use super::packet::Packet;
+use super::wheel::TimingWheel;
 use super::{Event, PacketArena, QueuePool, SimConfig, Switch, SwitchView};
 use crate::routing::{CandidateBuf, Router};
 use crate::topology::PhysTopology;
@@ -65,6 +81,13 @@ pub(super) struct ComputeCtx {
     pub window_end: u64,
     pub max_degree: usize,
     pub max_hops: usize,
+    /// Owning shard of every switch — the destination-shard ownership
+    /// lookup for cross-shard effects (wheel events, credit returns).
+    pub switch_shard: Arc<Vec<u32>>,
+    /// `--global-wheel`: home every event to shard 0's wheel instead of
+    /// the destination shard's (the A/B fallback; bit-identical, but Phase
+    /// 1 and the commit fan-in re-serialize on shard 0).
+    pub global_wheel: bool,
 }
 
 /// One shard: exclusive owner of the switches in `[lo, lo + switches.len())`
@@ -100,12 +123,31 @@ pub(super) struct ShardState {
     /// Dirty worklist of this shard's switches with `work > 0` (global ids).
     pub active: Vec<u32>,
     pub active_flag: Vec<bool>,
-    /// Timing-wheel transfers produced by compute, drained by commit:
-    /// `(due_cycle, event)` in ascending `(switch, port)` generation order.
-    pub outbox: Vec<(u64, Event)>,
-    /// Credit returns produced by compute: `(switch, port, vc)`, possibly
-    /// targeting other shards; applied wholesale at commit (commutative).
-    pub credit_out: Vec<(u32, u32, u8)>,
+    /// This shard's timing wheel: every pending event destined to a switch
+    /// this shard owns (`--global-wheel` homes everything to shard 0).
+    pub wheel: TimingWheel<Event>,
+    /// Timing-wheel transfers produced by compute, keyed by the *owning*
+    /// (destination) shard: `outboxes[k]` holds `(due_cycle, event)` pairs
+    /// for shard `k`'s wheel, each row in ascending `(switch, port)`
+    /// generation order.
+    pub outboxes: Vec<Vec<(u64, Event)>>,
+    /// Credit returns produced by compute, keyed by the shard owning the
+    /// upstream switch: `(switch, port, vc)` rows, commutative.
+    pub credit_out: Vec<Vec<(u32, u32, u8)>>,
+    /// Commit-phase fan-in: `inbox[j]` is shard `j`'s outbox row for this
+    /// shard, pointer-swapped in by the serial exchange step and drained
+    /// (ascending `j`) onto [`Self::wheel`] by [`Self::commit_phase`].
+    pub inbox: Vec<Vec<(u64, Event)>>,
+    /// Commit-phase credit fan-in, same exchange as [`Self::inbox`].
+    pub credit_in: Vec<Vec<(u32, u32, u8)>>,
+    /// Reused scratch for [`Self::pop_phase`]'s due-event drain.
+    pub pop_buf: Vec<Event>,
+    /// Deliveries popped by [`Self::pop_phase`], sorted by destination
+    /// server; the serial residue applies stats + workload callbacks in
+    /// ascending-shard order, which (contiguous shard ranges ⇒ contiguous
+    /// server ranges) is globally server-sorted — the canonical order all
+    /// paths share.
+    pub delivered: Vec<Packet>,
     /// Window-gated link utilization, `(local_switch · max_degree + port)`;
     /// merged into `SimStats::link_flits` when the run finishes.
     pub link_flits: Vec<u64>,
@@ -131,8 +173,13 @@ impl ShardState {
             rngs: Vec::new(),
             active: Vec::new(),
             active_flag: Vec::new(),
-            outbox: Vec::new(),
+            wheel: TimingWheel::new(),
+            outboxes: Vec::new(),
             credit_out: Vec::new(),
+            inbox: Vec::new(),
+            credit_in: Vec::new(),
+            pop_buf: Vec::new(),
+            delivered: Vec::new(),
             link_flits: Vec::new(),
             route_buf: CandidateBuf::new(),
             lane_buf: Vec::new(),
@@ -160,6 +207,85 @@ impl ShardState {
         if !self.active_flag[ls] {
             self.active_flag[ls] = true;
             self.active.push(sw);
+        }
+    }
+
+    /// Land an arriving packet on a switch this shard owns: allocate a
+    /// fresh arena slot (packets cross shards by value), enqueue at the
+    /// input FIFO, and activate the switch. Shared by the parallel
+    /// per-shard pop phase and the serial event path (global wheel / fault
+    /// runs). Arrival dispatch order is effect-invariant: link
+    /// serialization admits at most one arrival per `(switch, port)` per
+    /// cycle, `work` increments commute, and the active worklist is sorted
+    /// before compute — only the (unobservable) arena ids depend on it.
+    #[inline]
+    pub fn dispatch_arrive(&mut self, sw: u32, port: u32, vc: u8, pkt: Packet) {
+        let ls = sw as usize - self.lo;
+        let id = self.arena.alloc(pkt);
+        let q = self.switches[ls].in_q(port as usize, vc as usize);
+        self.queues.push_back(q, id);
+        self.switches[ls].work += 1;
+        self.activate(sw);
+    }
+
+    /// The parallel Phase 1 body for this shard: pop every event due at
+    /// `now` from the shard's own wheel, dispatch the locally-destined
+    /// arrivals, and stage deliveries (sorted by destination server) for
+    /// the serial stats/workload residue. Only healthy sharded-wheel runs
+    /// take this path — fault runs pop serially so transitions apply
+    /// before packet events, and [`Event::Fault`] is therefore
+    /// unreachable here.
+    pub fn pop_phase(&mut self, now: u64) {
+        let mut events = std::mem::take(&mut self.pop_buf);
+        events.clear();
+        self.wheel.pop_due(now, &mut events);
+        for ev in events.drain(..) {
+            match ev {
+                Event::Arrive { sw, port, vc, pkt } => self.dispatch_arrive(sw, port, vc, pkt),
+                Event::Deliver { pkt } => self.delivered.push(pkt),
+                Event::Fault { .. } => unreachable!("fault runs take the serial event path"),
+            }
+        }
+        self.pop_buf = events;
+        // Ejection serialization delivers at most one packet per server
+        // per cycle, so the key is unique; sorting makes the staged order
+        // canonical regardless of wheel level interleaving.
+        self.delivered.sort_unstable_by_key(|p| p.dst_server);
+    }
+
+    /// True when the commit phase has anything to do for this shard:
+    /// incoming wheel events or credit returns from any source shard.
+    #[inline]
+    pub fn has_commit_work(&self) -> bool {
+        self.inbox.iter().any(|row| !row.is_empty())
+            || self.credit_in.iter().any(|row| !row.is_empty())
+    }
+
+    /// The parallel commit body for this shard: drain the inbox rows in
+    /// ascending source-shard order onto the shard's own wheel, then apply
+    /// the (commutative) credit returns to its own switches. Source shards
+    /// emit in ascending `(switch, port)` order and hold ascending
+    /// contiguous switch ranges, so the ascending-row drain reproduces the
+    /// global emission order — the wheel sees the same schedule sequence
+    /// at any shard count.
+    pub fn commit_phase(&mut self, now: u64) {
+        let lo = self.lo;
+        let Self {
+            wheel,
+            inbox,
+            credit_in,
+            switches,
+            ..
+        } = self;
+        for row in inbox.iter_mut() {
+            for (when, ev) in row.drain(..) {
+                wheel.schedule(now, when, ev);
+            }
+        }
+        for row in credit_in.iter_mut() {
+            for (sw, port, vc) in row.drain(..) {
+                switches[sw as usize - lo].return_credit(port as usize, vc as usize);
+            }
         }
     }
 
@@ -378,7 +504,11 @@ impl ShardState {
                 sw.busy_until[i] = now + xbar_cycles;
                 q_out = sw.out_q(out_port, out_vc);
                 if let Some((usw, uport)) = sw.upstream[i] {
-                    self.credit_out.push((usw, uport, vc as u8));
+                    // Credits route by the owning (destination) shard in
+                    // both wheel modes — they are applied by that shard's
+                    // commit, not scheduled on a wheel.
+                    let owner = ctx.switch_shard[usw as usize] as usize;
+                    self.credit_out[owner].push((usw, uport, vc as u8));
                 }
             }
             debug_assert!(self.queues.len(q_out) < ctx.cfg.output_cap_pkts);
@@ -515,7 +645,15 @@ impl ShardState {
             }
             let dst_sw = ctx.topo.neighbor(s, o) as u32;
             let dst_port = ctx.topo.reverse_port(s, o) as u32;
-            self.outbox.push((
+            // Destination-shard event ownership: the Arrive belongs to the
+            // wheel of the shard owning `dst_sw` (`--global-wheel` homes
+            // everything to shard 0 instead).
+            let owner = if ctx.global_wheel {
+                0
+            } else {
+                ctx.switch_shard[dst_sw as usize] as usize
+            };
+            self.outboxes[owner].push((
                 now + ctx.cfg.link_latency,
                 Event::Arrive {
                     sw: dst_sw,
@@ -526,24 +664,41 @@ impl ShardState {
             ));
         } else {
             // Ejection: the server consumes at line rate; the tail is
-            // received `flits` cycles from now.
-            self.outbox.push((now + flits, Event::Deliver { pkt }));
+            // received `flits` cycles from now. The ejecting switch owns
+            // the Deliver, so it never crosses shards (sharded mode).
+            let owner = if ctx.global_wheel {
+                0
+            } else {
+                ctx.switch_shard[s] as usize
+            };
+            self.outboxes[owner].push((now + flits, Event::Deliver { pkt }));
         }
         self.progress = true;
     }
 }
 
+/// Which parallel third of the cycle a worker should run on a shard.
+#[derive(Clone, Copy)]
+pub(super) enum Phase {
+    /// Pop + dispatch the shard's own wheel ([`ShardState::pop_phase`]).
+    Pop,
+    /// Allocation + transmission ([`ShardState::compute`]).
+    Compute,
+    /// Inbox → wheel + credit application ([`ShardState::commit_phase`]).
+    Commit,
+}
+
 /// Persistent worker threads for multi-shard runs, one per shard. Shards
-/// are *moved* through channels each cycle (a few `Vec` headers) and moved
-/// back when their compute phase ends — no shared mutable state, no
-/// `unsafe`. Thread-budget policy lives a level up: the engine clamps
+/// are *moved* through channels each phase (a few `Vec` headers) and moved
+/// back when the phase body ends — no shared mutable state, no `unsafe`.
+/// Thread-budget policy lives a level up: the engine clamps
 /// `SimConfig::shards` to its budget (bit-identical at any value), so by
 /// the time a pool exists, one thread per shard *is* the budget.
 ///
 /// The pool is spawned once per `Network::run` and joined when the run
 /// ends (including error paths, via `Drop`).
 pub(super) struct WorkerPool {
-    job_txs: Vec<mpsc::Sender<(u64, usize, ShardState)>>,
+    job_txs: Vec<mpsc::Sender<(Phase, u64, usize, ShardState)>>,
     done_rx: mpsc::Receiver<(usize, ShardState)>,
     handles: Vec<JoinHandle<()>>,
 }
@@ -554,12 +709,16 @@ impl WorkerPool {
         let mut job_txs = Vec::with_capacity(nshards);
         let mut handles = Vec::with_capacity(nshards);
         for _ in 0..nshards {
-            let (tx, rx) = mpsc::channel::<(u64, usize, ShardState)>();
+            let (tx, rx) = mpsc::channel::<(Phase, u64, usize, ShardState)>();
             let done = done_tx.clone();
             let ctx = ctx.clone();
             handles.push(std::thread::spawn(move || {
-                while let Ok((now, idx, mut shard)) = rx.recv() {
-                    shard.compute(now, &ctx);
+                while let Ok((phase, now, idx, mut shard)) = rx.recv() {
+                    match phase {
+                        Phase::Pop => shard.pop_phase(now),
+                        Phase::Compute => shard.compute(now, &ctx),
+                        Phase::Commit => shard.commit_phase(now),
+                    }
                     if done.send((idx, shard)).is_err() {
                         break;
                     }
@@ -574,22 +733,33 @@ impl WorkerPool {
         }
     }
 
-    /// Run one compute phase: fan the shards with work out, wait for all
-    /// of them. Shards with an empty active worklist are skipped — their
-    /// compute phase is a no-op, and shipping them through the channels
-    /// would charge idle components a per-cycle cost the active-set
-    /// invariant promises not to (drain tails leave most shards idle).
-    pub fn run_cycle(&self, shards: &mut [ShardState], now: u64) {
+    /// Run one parallel phase: fan the shards with work out, wait for all
+    /// of them. Shards with nothing to do for this phase are skipped —
+    /// shipping them through the channels would charge idle components a
+    /// per-cycle cost the active-set invariant promises not to (drain
+    /// tails leave most shards idle, and most wheels empty).
+    pub fn run_phase(&self, phase: Phase, shards: &mut [ShardState], now: u64) {
         let mut outstanding = 0;
         for (i, slot) in shards.iter_mut().enumerate() {
-            if slot.is_idle() {
-                // What compute() would have left behind for an idle shard.
-                slot.progress = false;
+            let skip = match phase {
+                Phase::Pop => slot.wheel.is_empty(),
+                Phase::Compute => slot.is_idle(),
+                Phase::Commit => !slot.has_commit_work(),
+            };
+            if skip {
+                // What the phase body would have left behind.
+                match phase {
+                    // O(1): the empty-wheel fast path still records the
+                    // crossed epoch.
+                    Phase::Pop => slot.pop_phase(now),
+                    Phase::Compute => slot.progress = false,
+                    Phase::Commit => {}
+                }
                 continue;
             }
             let shard = std::mem::replace(slot, ShardState::placeholder());
             self.job_txs[i]
-                .send((now, i, shard))
+                .send((phase, now, i, shard))
                 .expect("shard worker died");
             outstanding += 1;
         }

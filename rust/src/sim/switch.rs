@@ -83,6 +83,15 @@ impl Switch {
         let q0 = self.out_q(port, 0);
         pool.lens(q0, self.vcs).iter().sum()
     }
+
+    /// Return one downstream credit for `(port, vc)`. Credit returns are
+    /// bare `+= 1`s on these counters — commutative, which is what lets
+    /// the sharded commit phase apply a cycle's credit batch in any
+    /// per-shard grouping (DESIGN.md, "Phase-parallel invariants").
+    #[inline]
+    pub fn return_credit(&mut self, port: usize, vc: usize) {
+        self.credits[port * self.vcs + vc] += 1;
+    }
 }
 
 /// Read-only view of a switch's output side handed to routing algorithms.

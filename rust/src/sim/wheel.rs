@@ -21,12 +21,17 @@
 //! FIFO arrival semantics reproducible — but it is not global
 //! schedule-time order across wheel levels.
 //!
-//! The phase-parallel simulator leans on exactly this property: shard
-//! compute phases never touch the wheel. They stage transfers in per-shard
-//! outboxes, and the serial commit phase schedules them in canonical
-//! `(switch, port)` order — so the wheel sees one deterministic schedule
-//! sequence regardless of the shard count, and same-cycle pops (hence FIFO
-//! arrival order downstream) are bit-identical to the serial engine's.
+//! The phase-parallel simulator leans on exactly this property: each
+//! shard owns the wheel holding the events destined to its own switches.
+//! Compute phases never touch any wheel — they stage transfers in
+//! per-(source, destination)-shard outboxes, and the commit phase feeds
+//! each wheel its incoming events in ascending source-shard order. Shards
+//! hold ascending contiguous switch ranges, so that drain order equals
+//! the global `(switch, port)` emission order — every wheel sees one
+//! deterministic schedule sequence regardless of the shard count, and
+//! same-cycle pops (hence FIFO arrival order downstream) are
+//! bit-identical to the serial engine's. See DESIGN.md, "Phase-parallel
+//! invariants".
 
 /// Slots per level; also the cascade epoch length in cycles.
 pub const NEAR: usize = 64;
@@ -134,6 +139,16 @@ impl<T> TimingWheel<T> {
     /// bit-identical to cycle-by-cycle driving.
     pub fn pop_due(&mut self, now: u64, out: &mut Vec<T>) {
         let e = now / NEAR as u64;
+        if self.len == 0 {
+            // Empty wheel: every slot is empty, so cascading crossed
+            // epochs and draining the near slot are both no-ops. Record
+            // the epoch directly so later cycle-by-cycle driving does not
+            // re-cascade boundaries this call already passed. With one
+            // wheel per shard, most shards are empty most cycles — this
+            // keeps their per-cycle cost at a compare and a store.
+            self.epoch = self.epoch.max(e);
+            return;
+        }
         while self.epoch < e {
             self.epoch += 1;
             self.cascade(self.epoch * NEAR as u64);
@@ -150,9 +165,11 @@ impl<T> TimingWheel<T> {
     /// `(when, event)` pairs to `out` in wheel-scan order: near slots
     /// 0..64, then far slots 0..64, then overflow, preserving in-slot
     /// insertion order. The wheel's slot layout is bit-identical across
-    /// shard counts and time-advance modes (see the module doc), so this
-    /// order is deterministic too — the fault-injection drop pass relies
-    /// on it for canonical packet-requeue order.
+    /// time-advance modes (see the module doc), so this order is
+    /// deterministic for any single wheel — but it is *per wheel*:
+    /// callers that extract across several sharded wheels and need one
+    /// canonical sequence (the fault-injection drop pass) sort the
+    /// collected `(when, event)` pairs themselves.
     pub fn extract_if<F: FnMut(&T) -> bool>(&mut self, mut pred: F, out: &mut Vec<(u64, T)>) {
         let before = out.len();
         for slot in self.near.iter_mut().chain(self.far.iter_mut()) {
@@ -351,13 +368,15 @@ mod tests {
         assert!(w.is_empty());
     }
 
-    /// Property (satellite of the adaptive time-advance PR): against a
-    /// naive shadow scheduler (a flat `Vec` scanned linearly),
-    /// `next_event_at` agrees at every step and pops deliver exactly the
-    /// shadow's due set, across random schedules spanning all wheel levels
-    /// (horizons up to ~6000 cycles cover near, far, and overflow — the
-    /// latency-5000 regression territory) and a random mix of single-cycle
-    /// ticks and exact next-event jumps.
+    /// Property (satellite of the adaptive time-advance PR, extended for
+    /// the sharded-wheel PR): against a naive shadow scheduler (a flat
+    /// `Vec` scanned linearly), `next_event_at` agrees at every step and
+    /// pops deliver exactly the shadow's due set, across random schedules
+    /// spanning all wheel levels (horizons up to ~6000 cycles cover near,
+    /// far, and overflow — the latency-5000 regression territory), a
+    /// random mix of single-cycle ticks and exact next-event jumps, and
+    /// random `extract_if` passes interleaved mid-flight the way the
+    /// fault-injection drop path fires them.
     #[test]
     fn next_event_at_matches_naive_scan() {
         crate::testing::check("wheel vs naive scheduler", 48, |rng| {
@@ -366,12 +385,34 @@ mod tests {
             let mut now = 0u64;
             let mut id = 0u32;
             let mut out = Vec::new();
+            let mut extracted = Vec::new();
             for _ in 0..300 {
                 for _ in 0..rng.gen_range(4) {
                     let dt = 1 + rng.gen_range(6_000) as u64;
                     w.schedule(now, now + dt, id);
                     shadow.push((now + dt, id));
                     id += 1;
+                }
+                // Occasionally rip out a random residue class mid-flight —
+                // the fault path's in-flight drop — and require the
+                // extracted multiset (and the survivors, via the checks
+                // below) to match the shadow. Events seeded into the
+                // overflow tier (dt up to 6000) get extracted here too.
+                if rng.gen_bool(0.15) {
+                    let k = 2 + rng.gen_range(3) as u32;
+                    let r = rng.gen_range(k as usize) as u32;
+                    extracted.clear();
+                    w.extract_if(|&ev| ev % k == r, &mut extracted);
+                    let mut got = extracted.clone();
+                    got.sort_unstable();
+                    let mut want: Vec<(u64, u32)> = shadow
+                        .iter()
+                        .copied()
+                        .filter(|&(_, i)| i % k == r)
+                        .collect();
+                    shadow.retain(|&(_, i)| i % k != r);
+                    want.sort_unstable();
+                    assert_eq!(got, want, "extract_if set mismatch at cycle {now}");
                 }
                 // The naive linear scan the wheel must agree with.
                 let naive = shadow.iter().map(|&(t, _)| t).min();

@@ -896,6 +896,100 @@ fn flapping_df65x16x8_bit_identical_with_patch_rebuild() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Sharded vs global timing wheel: the bit-identity contract.
+//
+// `SimConfig::global_wheel` (spec knob `global_wheel`, CLI `--global-wheel`)
+// homes every timing-wheel event to shard 0 instead of the destination
+// shard's own wheel. The contract (DESIGN.md, "Phase-parallel invariants")
+// is that the wheel layout is *unobservable*: global or per-shard, at any
+// shard count, with time skip on or off, produces a bit-identical
+// `SimStats` — pinned here for the PR-8 acceptance scenario (flapping
+// df65x16x8 link under patch rebuilds) and an incast flows workload,
+// shards {1, 4} × skip on/off × both wheel modes.
+// ---------------------------------------------------------------------------
+
+/// The flapping palmtree-Dragonfly fault scenario on the sharded-wheel
+/// path: fault events ride the owning shard's wheel and the in-flight
+/// extraction spans every wheel, yet the global-wheel serial reference is
+/// reproduced bit-for-bit at every (wheel mode, shards, skip) corner.
+#[test]
+fn global_wheel_flapping_df65x16x8_bit_identical() {
+    let mut spec = ExperimentSpec {
+        name: "wheel-df65x16x8-flap".into(),
+        topology: "df65x16x8".into(),
+        servers_per_switch: 1,
+        routing: "min".into(),
+        traffic: TrafficSpec::Fixed {
+            pattern: "uniform".into(),
+            packets_per_server: 4,
+        },
+        seed: 5,
+        max_cycles: 5_000_000,
+        faults: fault_spec_links("0-1@25:75, 0-1@110:160", RebuildStrategy::Patch),
+        ..Default::default()
+    };
+    spec.global_wheel = true;
+    spec.shards = 1;
+    let (base, log) = faulted_run(&spec, false);
+    assert!(base.delivered_packets > 0, "nothing delivered");
+    assert!(
+        log.len() >= 2,
+        "fault scenario vacuous — only {} reconfigurations applied",
+        log.len()
+    );
+    for global_wheel in [true, false] {
+        for (time_skip, shards) in [(false, 1usize), (true, 1), (false, 4), (true, 4)] {
+            spec.global_wheel = global_wheel;
+            spec.shards = shards;
+            let (got, _) = faulted_run(&spec, time_skip);
+            assert_eq!(
+                base, got,
+                "global_wheel={global_wheel}/skip={time_skip}/shards={shards} \
+                 diverged on the flapping run"
+            );
+        }
+    }
+}
+
+/// Incast flows exercise the delivery path hardest (fan-in of same-cycle
+/// ejections, FCT accounting keyed by delivery order): both wheel modes
+/// must agree with the serial global-wheel reference at every corner.
+#[test]
+fn global_wheel_incast_flows_bit_identical() {
+    let mut spec = ExperimentSpec {
+        name: "wheel-fm64-incast".into(),
+        topology: "fm64".into(),
+        servers_per_switch: 2,
+        routing: "tera-hx2".into(),
+        traffic: TrafficSpec::Flows(FlowSpec {
+            scenario: "incast".into(),
+            fan_in: 16,
+            msg_pkts: 2,
+            ..FlowSpec::default()
+        }),
+        seed: 9,
+        max_cycles: 5_000_000,
+        ..Default::default()
+    };
+    spec.global_wheel = true;
+    spec.shards = 1;
+    let base = run_adaptive(&spec, false);
+    assert!(base.delivered_packets > 0, "nothing delivered");
+    for global_wheel in [true, false] {
+        for (time_skip, shards) in [(false, 1usize), (true, 1), (false, 4), (true, 4)] {
+            spec.global_wheel = global_wheel;
+            spec.shards = shards;
+            let got = run_adaptive(&spec, time_skip);
+            assert_eq!(
+                base, got,
+                "global_wheel={global_wheel}/skip={time_skip}/shards={shards} \
+                 diverged on the incast run"
+            );
+        }
+    }
+}
+
 /// The `P%@CYCLE` failure-rate process: expanded deterministically from the
 /// run seed (two runs agree exactly), and the degraded network still drains
 /// with exact conservation.
