@@ -10,7 +10,7 @@
 
 use tera_net::config::spec::{ExperimentSpec, TrafficSpec};
 use tera_net::coordinator::report::ascii_bars;
-use tera_net::coordinator::sweep::{default_threads, run_sweep};
+use tera_net::engine::{default_threads, Engine};
 
 fn main() -> anyhow::Result<()> {
     let full = std::env::args().any(|a| a == "--full");
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         "adversarial burst on {topo} ({spc} srv/sw, {pkts} pkts/server), {} threads\n",
         default_threads()
     );
-    let results = run_sweep(specs, default_threads());
+    let results = Engine::new().run_batch(specs);
 
     let mut idx = 0;
     for pat in patterns {

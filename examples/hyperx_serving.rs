@@ -13,7 +13,7 @@
 
 use tera_net::config::spec::{ExperimentSpec, TrafficSpec};
 use tera_net::coordinator::report::Table;
-use tera_net::coordinator::sweep::{default_threads, run_sweep};
+use tera_net::engine::Engine;
 use tera_net::traffic::kernels::Mapping;
 
 fn main() -> anyhow::Result<()> {
@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let t0 = std::time::Instant::now();
-    let results = run_sweep(specs, default_threads());
+    let results = Engine::new().run_batch(specs);
 
     // Telemetry through the PJRT artifact when available.
     let telemetry = tera_net::runtime::Engine::cpu()

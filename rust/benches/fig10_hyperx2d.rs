@@ -6,13 +6,13 @@
 //! O1TURN-TERA near Omni-WAR at half the buffers and up to ~32% better
 //! than Dim-WAR at equal buffers.
 
-use tera_net::coordinator::figures::{self, Scale};
+use tera_net::coordinator::figures::{self, FigEnv, Scale};
 use tera_net::util::Timer;
 
 fn main() {
     let t = Timer::start();
     let scale = Scale::from_env(false);
-    match figures::fig10(scale, 1) {
+    match figures::fig10(&FigEnv::ephemeral(scale, 1)) {
         Ok(report) => {
             print!("{report}");
             println!(

@@ -7,13 +7,13 @@
 //! non-minimal baselines on these adversarial patterns (at 2× the buffer
 //! cost). Set FULL=1 for the paper-scale FM64 × 64 servers × 1250 pkts.
 
-use tera_net::coordinator::figures::{self, Scale};
+use tera_net::coordinator::figures::{self, FigEnv, Scale};
 use tera_net::util::Timer;
 
 fn main() {
     let t = Timer::start();
     let scale = Scale::from_env(false);
-    match figures::fig5(scale, 1) {
+    match figures::fig5(&FigEnv::ephemeral(scale, 1)) {
         Ok(report) => {
             print!("{report}");
             println!(

@@ -7,13 +7,13 @@
 //! bottlenecks dominate — making the symmetric HyperX family the overall
 //! choice.
 
-use tera_net::coordinator::figures::{self, Scale};
+use tera_net::coordinator::figures::{self, FigEnv, Scale};
 use tera_net::util::Timer;
 
 fn main() {
     let t = Timer::start();
     let scale = Scale::from_env(false);
-    match figures::fig6(scale, 1) {
+    match figures::fig6(&FigEnv::ephemeral(scale, 1)) {
         Ok(report) => {
             print!("{report}");
             println!(

@@ -7,13 +7,13 @@
 //! TERA-HX2 > UGAL > sRINR, TERA beating sRINR by ~80%; TERA's 3/4-hop
 //! share stays below ~1%.
 
-use tera_net::coordinator::figures::{self, Scale};
+use tera_net::coordinator::figures::{self, FigEnv, Scale};
 use tera_net::util::Timer;
 
 fn main() {
     let t = Timer::start();
     let scale = Scale::from_env(false);
-    match figures::fig7(scale, 1) {
+    match figures::fig7(&FigEnv::ephemeral(scale, 1)) {
         Ok(report) => {
             print!("{report}");
             println!(

@@ -6,13 +6,13 @@
 //! ~7% of Omni-WAR on average despite using a single VC; TERA beats UGAL
 //! clearly (up to ~47% on All-reduce).
 
-use tera_net::coordinator::figures::{self, Scale};
+use tera_net::coordinator::figures::{self, FigEnv, Scale};
 use tera_net::util::Timer;
 
 fn main() {
     let t = Timer::start();
     let scale = Scale::from_env(false);
-    match figures::fig8(scale, 1) {
+    match figures::fig8(&FigEnv::ephemeral(scale, 1)) {
         Ok(report) => {
             print!("{report}");
             println!(

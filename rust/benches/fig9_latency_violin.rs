@@ -7,13 +7,13 @@
 //! tail (single random Valiant candidate); at p99.9+ TERA stays on top
 //! except Stencil3D where it matches Omni-WAR.
 
-use tera_net::coordinator::figures::{self, Scale};
+use tera_net::coordinator::figures::{self, FigEnv, Scale};
 use tera_net::util::Timer;
 
 fn main() {
     let t = Timer::start();
     let scale = Scale::from_env(false);
-    match figures::fig9(scale, 1) {
+    match figures::fig9(&FigEnv::ephemeral(scale, 1)) {
         Ok(report) => {
             print!("{report}");
             println!(

@@ -76,6 +76,7 @@ use tera_net::routing::{CandidateBuf, HxTables, RoutingTables, TableTier};
 use tera_net::service::{DragonflyService, HyperXService, ServiceTopology};
 use tera_net::sim::packet::{Packet, NO_SWITCH};
 use tera_net::sim::{Network, RunOpts, SimConfig, SwitchView};
+use tera_net::store::json::Json;
 use tera_net::topology::{dragonfly, DeadSet, PhysTopology, TopoKind};
 use tera_net::traffic::kernels::{allreduce_rabenseifner, KernelWorkload, Mapping};
 use tera_net::traffic::FlowSpec;
@@ -89,9 +90,11 @@ fn quick() -> bool {
 }
 
 /// Consolidated per-section perf rows, flushed to `BENCH_cycles.json`:
-/// the perf-trajectory baseline future PRs compare against.
+/// the perf-trajectory baseline future PRs compare against. Built through
+/// the store's [`Json`] encoder (the schema the CI gate parses is plain
+/// JSON either way; the encoder just makes malformed rows unrepresentable).
 struct CycleBench {
-    rows: Vec<String>,
+    rows: Vec<Json>,
 }
 
 impl CycleBench {
@@ -101,21 +104,22 @@ impl CycleBench {
 
     fn add(&mut self, section: &str, label: &str, wall_secs: f64, cycles: f64) {
         let cps = if wall_secs > 0.0 { cycles / wall_secs } else { 0.0 };
-        self.rows.push(format!(
-            "    {{\"section\": \"{section}\", \"label\": \"{label}\", \
-             \"wall_secs\": {wall_secs:.6}, \"cycles\": {cycles:.0}, \
-             \"cycles_per_sec\": {cps:.0}}}"
-        ));
+        self.rows.push(Json::obj([
+            ("section", Json::Str(section.into())),
+            ("label", Json::Str(label.into())),
+            ("wall_secs", Json::Float(wall_secs)),
+            ("cycles", Json::Float(cycles)),
+            ("cycles_per_sec", Json::Float(cps)),
+        ]));
     }
 
     fn write(&self) {
-        let body = format!(
-            "{{\n  \"bench\": \"perf-hotpath-cycles\",\n  \"quick\": {},\n  \
-             \"results\": [\n{}\n  ]\n}}\n",
-            quick(),
-            self.rows.join(",\n")
-        );
-        match std::fs::write("BENCH_cycles.json", body) {
+        let doc = Json::obj([
+            ("bench", Json::Str("perf-hotpath-cycles".into())),
+            ("quick", Json::Bool(quick())),
+            ("results", Json::arr(self.rows.iter().cloned())),
+        ]);
+        match std::fs::write("BENCH_cycles.json", format!("{doc}\n")) {
             Ok(()) => println!("wrote BENCH_cycles.json ({} rows)", self.rows.len()),
             Err(e) => println!("could not write BENCH_cycles.json: {e}"),
         }

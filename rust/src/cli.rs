@@ -1,41 +1,631 @@
-//! Hand-rolled CLI argument parsing (clap is not in the offline crate set).
+//! Typed, declarative CLI parsing (clap is not in the offline crate set).
 //!
-//! Grammar: `tera-net <command> [--flag value]... [--switch]...`
+//! Every command declares its flags once — name, value type, default and
+//! help line — in [`COMMANDS`]. Parsing validates argv against that
+//! declaration: an unknown or misspelled flag fails with an error naming
+//! the command's accepted flags (`--seeed 7` used to be silently
+//! ignored), a value flag must receive a value of its declared type, and
+//! a switch must not receive one. `tera-net help <command>` and
+//! `tera-net <command> --help` render the same declarations, so the help
+//! text cannot drift from the parser.
 
 use std::collections::BTreeMap;
 
-/// Parsed command line.
-#[derive(Clone, Debug, Default)]
+/// Value type a flag accepts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Free-form string.
+    Str,
+    /// Non-negative integer.
+    Int,
+    /// Floating-point number.
+    Float,
+    /// Present-or-absent switch; never takes a value.
+    Switch,
+}
+
+impl Kind {
+    fn placeholder(self) -> &'static str {
+        match self {
+            Kind::Str => " <str>",
+            Kind::Int => " <int>",
+            Kind::Float => " <float>",
+            Kind::Switch => "",
+        }
+    }
+
+    fn value_name(self) -> &'static str {
+        match self {
+            Kind::Str => "string",
+            Kind::Int => "integer",
+            Kind::Float => "number",
+            Kind::Switch => "switch",
+        }
+    }
+}
+
+/// One declared flag of a command.
+#[derive(Debug)]
+pub struct Flag {
+    pub name: &'static str,
+    pub kind: Kind,
+    /// Value used when the flag is absent. `None` means the flag is
+    /// optional with no default ([`Args::get`] returns `None`); switches
+    /// are simply off when absent.
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+const fn flag(
+    name: &'static str,
+    kind: Kind,
+    default: Option<&'static str>,
+    help: &'static str,
+) -> Flag {
+    Flag {
+        name,
+        kind,
+        default,
+        help,
+    }
+}
+
+/// A reusable group of flags (e.g. every figure command shares one set).
+pub type FlagSet = &'static [Flag];
+
+/// One declared command. The [`COMMANDS`] registry is the single source
+/// of truth for parsing *and* for the generated help text.
+#[derive(Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub flag_sets: &'static [FlagSet],
+}
+
+impl Command {
+    fn flag(&self, name: &str) -> Option<&'static Flag> {
+        self.flags().find(|f| f.name == name)
+    }
+
+    /// All declared flags, in declaration order.
+    pub fn flags(&self) -> impl Iterator<Item = &'static Flag> {
+        self.flag_sets.iter().copied().flat_map(|s| s.iter())
+    }
+}
+
+const RUN_CORE: FlagSet = &[
+    flag(
+        "topology",
+        Kind::Str,
+        Some("fm16"),
+        "host topology: fm<N>, hx<A>x<B>, or df<G>x<A>x<H> (palmtree Dragonfly)",
+    ),
+    flag(
+        "host",
+        Kind::Str,
+        None,
+        "override --topology: run a tera-<svc> routing on any host containing the service edges",
+    ),
+    flag("spc", Kind::Int, Some("4"), "servers per switch"),
+    flag(
+        "routing",
+        Kind::Str,
+        Some("tera-hx2"),
+        "min|valiant|ugal|omniwar|brinr|srinr|tera-<svc>|dor-tera|o1turn-tera|dimwar|omniwar-hx",
+    ),
+    flag("q", Kind::Int, Some("54"), "TERA escape threshold Q, in flits"),
+    flag(
+        "seed",
+        Kind::Int,
+        Some("1"),
+        "RNG seed (replicas use seed, seed+1, ...)",
+    ),
+    flag(
+        "replicas",
+        Kind::Int,
+        Some("1"),
+        "multi-seed replicas, aggregated in the report",
+    ),
+    flag(
+        "threads",
+        Kind::Int,
+        None,
+        "engine worker threads (default: cores-1, widened to --shards)",
+    ),
+    flag(
+        "shards",
+        Kind::Int,
+        Some("1"),
+        "phase-parallel simulator shards per replica (bit-identical at any N)",
+    ),
+    flag(
+        "warmup",
+        Kind::Int,
+        Some("2000"),
+        "cycles excluded from steady-state statistics",
+    ),
+    flag(
+        "max-cycles",
+        Kind::Int,
+        Some("10000000"),
+        "hard cycle budget for drain-bound runs",
+    ),
+    flag(
+        "stop-rel-ci",
+        Kind::Float,
+        None,
+        "stop once the steady-state relative CI half-width <= X (bernoulli); \
+         with --replicas, also prunes replicas beyond convergence",
+    ),
+];
+
+const RUN_TRAFFIC: FlagSet = &[
+    flag(
+        "mode",
+        Kind::Str,
+        None,
+        "bernoulli|fixed|kernel|flows (default: bernoulli, or flows when --workload is given)",
+    ),
+    flag(
+        "pattern",
+        Kind::Str,
+        Some("uniform"),
+        "uniform|rsp|fr|shift|complement (bernoulli/fixed)",
+    ),
+    flag(
+        "load",
+        Kind::Float,
+        Some("0.5"),
+        "offered load, flits/cycle/server (bernoulli)",
+    ),
+    flag(
+        "horizon",
+        Kind::Int,
+        Some("20000"),
+        "injection horizon, cycles (bernoulli)",
+    ),
+    flag("packets", Kind::Int, Some("100"), "packets per server (fixed)"),
+    flag(
+        "kernel",
+        Kind::Str,
+        Some("all2all"),
+        "all2all|stencil2d|stencil3d|fft3d|allreduce (kernel)",
+    ),
+    flag("iters", Kind::Int, Some("2"), "kernel iterations"),
+    flag(
+        "pkts-per-msg",
+        Kind::Int,
+        Some("1"),
+        "packets per kernel message",
+    ),
+    flag(
+        "mapping",
+        Kind::Str,
+        Some("linear"),
+        "rank placement: linear|random (kernel)",
+    ),
+];
+
+const RUN_FLOWS: FlagSet = &[
+    flag(
+        "workload",
+        Kind::Str,
+        None,
+        "incast|hotspot|closedloop|multitenant message scenario (implies --mode flows; \
+         reports FCT percentiles and slowdown-vs-ideal)",
+    ),
+    flag("fan-in", Kind::Int, Some("32"), "incast: senders per sink"),
+    flag(
+        "msg-pkts",
+        Kind::Int,
+        Some("8"),
+        "incast/hotspot: packets per message",
+    ),
+    flag("waves", Kind::Int, Some("1"), "incast: synchronized waves"),
+    flag(
+        "spacing",
+        Kind::Int,
+        Some("1000"),
+        "incast: cycles between waves",
+    ),
+    flag("flows", Kind::Int, Some("256"), "hotspot: number of flows"),
+    flag(
+        "hot-frac",
+        Kind::Float,
+        Some("0.5"),
+        "hotspot: fraction of flows aimed at the hot switch",
+    ),
+    flag(
+        "rate",
+        Kind::Float,
+        Some("0.05"),
+        "hotspot: per-flow arrival rate",
+    ),
+    flag(
+        "pairs",
+        Kind::Int,
+        Some("16"),
+        "closedloop: request/response pairs",
+    ),
+    flag(
+        "req-pkts",
+        Kind::Int,
+        Some("1"),
+        "closedloop: request size, packets",
+    ),
+    flag(
+        "resp-pkts",
+        Kind::Int,
+        Some("8"),
+        "closedloop: response size, packets",
+    ),
+    flag("think", Kind::Int, Some("200"), "closedloop: think time, cycles"),
+    flag("rounds", Kind::Int, Some("4"), "closedloop: rounds per pair"),
+    flag(
+        "bg-pattern",
+        Kind::Str,
+        Some("uniform"),
+        "multitenant: background traffic pattern",
+    ),
+    flag(
+        "bg-load",
+        Kind::Float,
+        Some("0.1"),
+        "multitenant: background load",
+    ),
+    flag(
+        "flow-horizon",
+        Kind::Int,
+        Some("4000"),
+        "multitenant: burst-injection horizon, cycles",
+    ),
+    flag(
+        "burst-flows",
+        Kind::Int,
+        Some("32"),
+        "multitenant: flows per burst",
+    ),
+    flag(
+        "burst-pkts",
+        Kind::Int,
+        Some("16"),
+        "multitenant: packets per burst flow",
+    ),
+];
+
+const RUN_TOGGLES: FlagSet = &[
+    flag(
+        "fixed-tick",
+        Kind::Switch,
+        None,
+        "disable the exact next-event time advance (bit-identical; a debugging/benchmark knob)",
+    ),
+    flag(
+        "scalar-compute",
+        Kind::Switch,
+        None,
+        "scalar reference compute loops instead of the batched path (bit-identical)",
+    ),
+    flag(
+        "global-wheel",
+        Kind::Switch,
+        None,
+        "home all timing-wheel events to shard 0 (bit-identical A/B baseline)",
+    ),
+    flag(
+        "phase-timings",
+        Kind::Switch,
+        None,
+        "report per-phase wall times (wheel/compute/exchange/commit) to stderr",
+    ),
+];
+
+const FAULT_FLAGS: FlagSet = &[
+    flag(
+        "fail-links",
+        Kind::Str,
+        None,
+        "comma list of A-B@FAIL[:RECOVER] link faults and/or one P%@CYCLE failure-rate process",
+    ),
+    flag(
+        "fail-switches",
+        Kind::Str,
+        None,
+        "comma list of SW@FAIL[:RECOVER] switch faults",
+    ),
+    flag(
+        "fault-rebuild",
+        Kind::Str,
+        None,
+        "table rebuild on fault: recompile (stop-the-world, default) | patch (incremental)",
+    ),
+];
+
+const RUN_OUTPUT: FlagSet = &[
+    flag(
+        "store",
+        Kind::Str,
+        None,
+        "content-addressed result store directory; warm points are read back, not re-simulated",
+    ),
+    flag(
+        "format",
+        Kind::Str,
+        Some("human"),
+        "report format: human | json (one schema-versioned result object per point on stdout)",
+    ),
+];
+
+const CONFIG_FLAGS: FlagSet = &[
+    flag(
+        "file",
+        Kind::Str,
+        None,
+        "TOML file whose [experiment] table defines the run (required)",
+    ),
+    flag(
+        "threads",
+        Kind::Int,
+        None,
+        "engine worker threads (default: cores-1)",
+    ),
+];
+
+const TABLE1_FLAGS: FlagSet = &[flag(
+    "n",
+    Kind::Int,
+    Some("64"),
+    "Full-mesh radix for the service-topology table",
+)];
+
+const PJRT_FLAGS: FlagSet = &[flag(
+    "pjrt",
+    Kind::Switch,
+    None,
+    "evaluate the analytic model through the PJRT artifact",
+)];
+
+/// Shared by every figure command: scale, seed, and the result store that
+/// makes interrupted sweeps resumable.
+const FIG_FLAGS: FlagSet = &[
+    flag(
+        "full",
+        Kind::Switch,
+        None,
+        "paper-scale point sets (also: FULL=1 in the environment)",
+    ),
+    flag("seed", Kind::Int, Some("1"), "base RNG seed for every point"),
+    flag(
+        "threads",
+        Kind::Int,
+        None,
+        "engine worker threads (default: cores-1)",
+    ),
+    flag(
+        "store",
+        Kind::Str,
+        Some("results"),
+        "result store directory; already-stored points are not re-simulated",
+    ),
+    flag(
+        "no-store",
+        Kind::Switch,
+        None,
+        "disable the result store: simulate every point, persist nothing",
+    ),
+];
+
+/// Every command the binary accepts, with its full flag declaration.
+pub static COMMANDS: &[Command] = &[
+    Command {
+        name: "run",
+        summary: "run one experiment (or a multi-seed replica batch)",
+        flag_sets: &[
+            RUN_CORE,
+            RUN_TRAFFIC,
+            RUN_FLOWS,
+            RUN_TOGGLES,
+            FAULT_FLAGS,
+            RUN_OUTPUT,
+        ],
+    },
+    Command {
+        name: "config",
+        summary: "run the [experiment] table of a TOML config file",
+        flag_sets: &[CONFIG_FLAGS, RUN_OUTPUT],
+    },
+    Command {
+        name: "table1",
+        summary: "Table 1: service-topology properties",
+        flag_sets: &[TABLE1_FLAGS],
+    },
+    Command {
+        name: "fig4",
+        summary: "analytic throughput estimate (optionally via the PJRT artifact)",
+        flag_sets: &[PJRT_FLAGS],
+    },
+    Command {
+        name: "fig5",
+        summary: "Fig 5: throughput vs offered load, FM routers",
+        flag_sets: &[FIG_FLAGS],
+    },
+    Command {
+        name: "fig6",
+        summary: "Fig 6: latency/throughput across Full-mesh sizes",
+        flag_sets: &[FIG_FLAGS],
+    },
+    Command {
+        name: "fig7",
+        summary: "Fig 7: adversarial-pattern comparison",
+        flag_sets: &[FIG_FLAGS],
+    },
+    Command {
+        name: "fig8",
+        summary: "Fig 8: Q-threshold sensitivity",
+        flag_sets: &[FIG_FLAGS],
+    },
+    Command {
+        name: "fig9",
+        summary: "Fig 9: latency distributions",
+        flag_sets: &[FIG_FLAGS],
+    },
+    Command {
+        name: "fig10",
+        summary: "Fig 10: collective workloads on 2D-HyperX",
+        flag_sets: &[FIG_FLAGS],
+    },
+    Command {
+        name: "linkutil",
+        summary: "§6.3 service/main link utilization",
+        flag_sets: &[FIG_FLAGS],
+    },
+    Command {
+        name: "ablation-q",
+        summary: "Q ablation under adversarial traffic",
+        flag_sets: &[FIG_FLAGS],
+    },
+    Command {
+        name: "early-stop",
+        summary: "fixed-budget vs --stop-rel-ci sweep comparison",
+        flag_sets: &[FIG_FLAGS],
+    },
+    Command {
+        name: "fct",
+        summary: "flow-completion-time comparison of all FM routers (incast + hotspot)",
+        flag_sets: &[FIG_FLAGS],
+    },
+    Command {
+        name: "faults",
+        summary: "throughput + FCT-p99 vs link-failure rate, with rebuild latency",
+        flag_sets: &[FIG_FLAGS],
+    },
+    Command {
+        name: "figs",
+        summary: "all tables + figures in paper order (resumable via the store)",
+        flag_sets: &[FIG_FLAGS, PJRT_FLAGS],
+    },
+    Command {
+        name: "validate-artifacts",
+        summary: "cross-check AOT artifacts against pure-Rust references",
+        flag_sets: &[],
+    },
+    Command {
+        name: "help",
+        summary: "this overview, or `help <command>` for a command's flags",
+        flag_sets: &[],
+    },
+];
+
+/// Look a command declaration up by name.
+pub fn command(name: &str) -> Option<&'static Command> {
+    COMMANDS.iter().find(|c| c.name == name)
+}
+
+fn accepted(cmd: &Command) -> String {
+    let names: Vec<String> = cmd.flags().map(|f| format!("--{}", f.name)).collect();
+    names.join(", ")
+}
+
+/// Parsed and validated command line.
+#[derive(Debug, Default)]
 pub struct Args {
     pub command: String,
+    /// `--help` / `-h` was given after the command.
+    pub help: bool,
+    /// The positional topic of `tera-net help <command>`.
+    pub topic: Option<String>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
+    cmd: Option<&'static Command>,
 }
 
 impl Args {
-    /// Parse from an iterator of argument strings (without argv[0]).
-    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Self> {
+    /// Parse from an iterator of argument strings (without argv[0]),
+    /// validating against the [`COMMANDS`] declaration.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> anyhow::Result<Self> {
         let mut out = Args::default();
-        let mut it = args.into_iter().peekable();
-        if let Some(cmd) = it.next() {
-            anyhow::ensure!(
-                !cmd.starts_with('-'),
-                "expected a command before flags, got '{cmd}'"
-            );
-            out.command = cmd;
+        let mut it = argv.into_iter();
+        let Some(first) = it.next() else {
+            return Ok(out); // bare `tera-net` prints the overview
+        };
+        if first == "--help" || first == "-h" {
+            out.command = "help".into();
+            out.topic = it.next();
+            return Ok(out);
         }
+        anyhow::ensure!(
+            !first.starts_with('-'),
+            "expected a command before flags, got '{first}' (try `tera-net help`)"
+        );
+        out.command = first;
+        if out.command == "help" {
+            out.topic = it.next();
+            return Ok(out);
+        }
+        let cmd = command(&out.command).ok_or_else(|| {
+            let names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
+            anyhow::anyhow!(
+                "unknown command '{}' (commands: {})",
+                out.command,
+                names.join(", ")
+            )
+        })?;
+        out.cmd = Some(cmd);
         while let Some(arg) = it.next() {
-            let Some(name) = arg.strip_prefix("--") else {
-                anyhow::bail!("unexpected positional argument '{arg}'");
-            };
-            // `--key=value` or `--key value` or bare switch.
-            if let Some((k, v)) = name.split_once('=') {
-                out.flags.insert(k.to_string(), v.to_string());
-            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
-                out.flags.insert(name.to_string(), it.next().unwrap());
-            } else {
-                out.switches.push(name.to_string());
+            if arg == "--help" || arg == "-h" {
+                out.help = true;
+                return Ok(out);
             }
+            let Some(name) = arg.strip_prefix("--") else {
+                anyhow::bail!(
+                    "unexpected positional argument '{arg}' (flags are --name value or --switch)"
+                );
+            };
+            let (name, inline) = match name.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name, None),
+            };
+            let Some(f) = cmd.flag(name) else {
+                anyhow::bail!(
+                    "unknown flag '--{name}' for '{}' (accepted: {})",
+                    cmd.name,
+                    accepted(cmd)
+                );
+            };
+            if f.kind == Kind::Switch {
+                anyhow::ensure!(
+                    inline.is_none(),
+                    "switch '--{name}' does not take a value"
+                );
+                out.switches.push(name.to_string());
+                continue;
+            }
+            let value = match inline {
+                Some(v) => v,
+                None => match it.next() {
+                    Some(v) if !v.starts_with("--") => v,
+                    _ => anyhow::bail!(
+                        "flag '--{name}' requires a {} value",
+                        f.kind.value_name()
+                    ),
+                },
+            };
+            match f.kind {
+                Kind::Int => {
+                    anyhow::ensure!(
+                        value.parse::<u64>().is_ok(),
+                        "flag '--{name}' expects an integer, got '{value}'"
+                    );
+                }
+                Kind::Float => {
+                    anyhow::ensure!(
+                        value.parse::<f64>().is_ok(),
+                        "flag '--{name}' expects a number, got '{value}'"
+                    );
+                }
+                Kind::Str | Kind::Switch => {}
+            }
+            out.flags.insert(name.to_string(), value);
         }
         Ok(out)
     }
@@ -44,33 +634,37 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Value of a flag: what the command line gave, else the declared
+    /// default, else `None` (optional flag).
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(String::as_str)
-    }
-
-    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
-        self.get(key).unwrap_or(default)
-    }
-
-    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
-        match self.get(key) {
-            Some(v) => Ok(v.parse()?),
-            None => Ok(default),
+        debug_assert!(
+            self.cmd.map_or(true, |c| c.flag(key).is_some()),
+            "flag '--{key}' is not declared for '{}'",
+            self.command
+        );
+        if let Some(v) = self.flags.get(key) {
+            return Some(v);
         }
+        self.cmd.and_then(|c| c.flag(key)).and_then(|f| f.default)
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
-        match self.get(key) {
-            Some(v) => Ok(v.parse()?),
-            None => Ok(default),
-        }
+    /// Like [`get`](Args::get) but an absent optional flag is an error
+    /// (used where the command cannot proceed without it).
+    pub fn str_of(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("'{}' requires --{key} <value>", self.command))
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
-        match self.get(key) {
-            Some(v) => Ok(v.parse()?),
-            None => Ok(default),
-        }
+    pub fn usize_of(&self, key: &str) -> anyhow::Result<usize> {
+        Ok(self.str_of(key)?.parse()?)
+    }
+
+    pub fn u64_of(&self, key: &str) -> anyhow::Result<u64> {
+        Ok(self.str_of(key)?.parse()?)
+    }
+
+    pub fn f64_of(&self, key: &str) -> anyhow::Result<f64> {
+        Ok(self.str_of(key)?.parse()?)
     }
 
     pub fn has(&self, switch: &str) -> bool {
@@ -78,40 +672,143 @@ impl Args {
     }
 }
 
+/// The `tera-net help` overview, generated from [`COMMANDS`].
+pub fn overview() -> String {
+    let mut s = String::from(
+        "tera-net — TERA (HOTI'25) reproduction: VC-less deadlock-free routing on Full-mesh\n\n\
+         USAGE: tera-net <command> [--flag value]... [--switch]...\n\nCOMMANDS:\n",
+    );
+    let width = COMMANDS.iter().map(|c| c.name.len()).max().unwrap_or(0);
+    for c in COMMANDS {
+        s.push_str(&format!("  {:width$}  {}\n", c.name, c.summary));
+    }
+    s.push_str(
+        "\nRun `tera-net help <command>` (or `tera-net <command> --help`) for its flags.\n",
+    );
+    s
+}
+
+/// The per-command flag reference, generated from the same declaration
+/// the parser validates against.
+pub fn help_for(name: &str) -> anyhow::Result<String> {
+    let cmd = command(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown command '{name}' (try `tera-net help`)"))?;
+    let mut s = format!("tera-net {} — {}\n", cmd.name, cmd.summary);
+    let heads: Vec<(String, &'static Flag)> = cmd
+        .flags()
+        .map(|f| (format!("--{}{}", f.name, f.kind.placeholder()), f))
+        .collect();
+    if heads.is_empty() {
+        s.push_str("\n(no flags)\n");
+        return Ok(s);
+    }
+    s.push_str("\nFLAGS:\n");
+    let width = heads.iter().map(|(h, _)| h.len()).max().unwrap_or(0);
+    for (head, f) in &heads {
+        s.push_str(&format!("  {head:width$}  {}", f.help));
+        if let Some(d) = f.default {
+            s.push_str(&format!(" [default: {d}]"));
+        }
+        s.push('\n');
+    }
+    Ok(s)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn parse(s: &str) -> Args {
-        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    fn parse(s: &str) -> anyhow::Result<Args> {
+        Args::parse(s.split_whitespace().map(str::to_string))
     }
 
     #[test]
     fn parses_command_flags_switches() {
-        let a = parse("run --topology fm64 --load 0.5 --full");
+        let a = parse("run --topology fm64 --load 0.5 --fixed-tick").unwrap();
         assert_eq!(a.command, "run");
         assert_eq!(a.get("topology"), Some("fm64"));
-        assert_eq!(a.get_f64("load", 0.0).unwrap(), 0.5);
-        assert!(a.has("full"));
-        assert!(!a.has("quick"));
+        assert_eq!(a.f64_of("load").unwrap(), 0.5);
+        assert!(a.has("fixed-tick"));
+        assert!(!a.has("global-wheel"));
     }
 
     #[test]
     fn parses_equals_form() {
-        let a = parse("fig7 --seed=42 --full");
-        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+        let a = parse("fig7 --seed=42 --full").unwrap();
+        assert_eq!(a.u64_of("seed").unwrap(), 42);
         assert!(a.has("full"));
     }
 
     #[test]
-    fn rejects_positional_after_command() {
-        assert!(Args::parse(["run".into(), "oops".into()]).is_err());
+    fn declared_defaults_apply() {
+        let a = parse("run").unwrap();
+        assert_eq!(a.get("routing"), Some("tera-hx2"));
+        assert_eq!(a.usize_of("spc").unwrap(), 4);
+        assert_eq!(a.get("host"), None); // optional: no default
+        let a = parse("fig5").unwrap();
+        assert_eq!(a.get("store"), Some("results"));
     }
 
     #[test]
-    fn defaults_apply() {
-        let a = parse("run");
-        assert_eq!(a.get_or("routing", "tera-hx2"), "tera-hx2");
-        assert_eq!(a.get_usize("spc", 4).unwrap(), 4);
+    fn rejects_unknown_flag_naming_accepted_ones() {
+        let err = parse("fig7 --seeed 7").unwrap_err().to_string();
+        assert!(err.contains("unknown flag '--seeed' for 'fig7'"), "{err}");
+        assert!(err.contains("--seed"), "{err}");
+        assert!(err.contains("--no-store"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_command() {
+        let err = parse("fig11").unwrap_err().to_string();
+        assert!(err.contains("unknown command 'fig11'"), "{err}");
+        assert!(err.contains("fig10"), "{err}");
+    }
+
+    #[test]
+    fn rejects_positional_missing_and_mistyped_values() {
+        assert!(parse("run oops").is_err());
+        assert!(parse("run --load").is_err()); // value missing at end
+        assert!(parse("run --load --fixed-tick").is_err()); // value missing
+        assert!(parse("run --spc four").is_err()); // not an integer
+        assert!(parse("run --load x").is_err()); // not a number
+        assert!(parse("run --fixed-tick=1").is_err()); // switch with value
+    }
+
+    #[test]
+    fn help_routing_and_generation() {
+        let a = parse("help fct").unwrap();
+        assert_eq!(a.command, "help");
+        assert_eq!(a.topic.as_deref(), Some("fct"));
+        let a = parse("fig5 --help").unwrap();
+        assert!(a.help);
+        assert!(help_for("fig5").unwrap().contains("--no-store"));
+        assert!(help_for("run").unwrap().contains("[default: tera-hx2]"));
+        assert!(overview().contains("validate-artifacts"));
+        assert!(help_for("nope").is_err());
+    }
+
+    /// The declared `run` defaults for flow workloads are the same values
+    /// `FlowSpec::default()` carries — one source of truth, checked.
+    #[test]
+    fn run_flag_defaults_match_flowspec_defaults() {
+        let a = parse("run").unwrap();
+        let d = crate::traffic::FlowSpec::default();
+        assert_eq!(a.usize_of("fan-in").unwrap(), d.fan_in);
+        assert_eq!(a.usize_of("msg-pkts").unwrap() as u32, d.msg_pkts);
+        assert_eq!(a.usize_of("waves").unwrap(), d.waves);
+        assert_eq!(a.u64_of("spacing").unwrap(), d.spacing);
+        assert_eq!(a.usize_of("flows").unwrap(), d.flows);
+        assert_eq!(a.f64_of("hot-frac").unwrap(), d.hot_frac);
+        assert_eq!(a.f64_of("rate").unwrap(), d.rate);
+        assert_eq!(a.usize_of("pairs").unwrap(), d.pairs);
+        assert_eq!(a.usize_of("req-pkts").unwrap() as u32, d.req_pkts);
+        assert_eq!(a.usize_of("resp-pkts").unwrap() as u32, d.resp_pkts);
+        assert_eq!(a.u64_of("think").unwrap(), d.think);
+        assert_eq!(a.usize_of("rounds").unwrap(), d.rounds);
+        assert_eq!(a.get("bg-pattern"), Some(d.bg_pattern.as_str()));
+        assert_eq!(a.f64_of("bg-load").unwrap(), d.bg_load);
+        assert_eq!(a.u64_of("flow-horizon").unwrap(), d.horizon);
+        assert_eq!(a.usize_of("burst-flows").unwrap(), d.burst_flows);
+        assert_eq!(a.usize_of("burst-pkts").unwrap() as u32, d.burst_pkts);
     }
 }

@@ -88,6 +88,41 @@ impl FaultSpec {
         self.events.is_empty() && self.link_rate.is_none()
     }
 
+    /// Canonical JSON for the store's content-addressed key. `rebuild` is
+    /// **excluded**: Patch and Recompile produce byte-equal tables by
+    /// construction (property-tested), so the strategy is a wall-clock
+    /// knob, not part of the experiment's identity. Link endpoints are
+    /// normalized to `min-max` — the link is undirected, so `1-0` and
+    /// `0-1` name the same schedule.
+    pub fn canonical_json(&self) -> crate::store::json::Json {
+        use crate::store::json::Json;
+        let events = self.events.iter().map(|ev| {
+            let target = match ev.target {
+                FaultTarget::Link(a, b) => {
+                    format!("link:{}-{}", a.min(b), a.max(b))
+                }
+                FaultTarget::Switch(s) => format!("switch:{s}"),
+            };
+            Json::obj([
+                ("target", Json::Str(target)),
+                ("fail_at", Json::UInt(ev.fail_at)),
+                (
+                    "recover_at",
+                    Json::opt(ev.recover_at.map(Json::UInt)),
+                ),
+            ])
+        });
+        Json::obj([
+            ("events", Json::arr(events)),
+            (
+                "link_rate",
+                Json::opt(self.link_rate.map(|(p, at)| {
+                    Json::arr([Json::Float(p), Json::UInt(at)])
+                })),
+            ),
+        ])
+    }
+
     /// Parse a `--fail-links` item list into this spec.
     pub fn parse_links(&mut self, src: &str) -> anyhow::Result<()> {
         for item in split_items(src) {

@@ -274,12 +274,127 @@ fn sub_service(a: usize) -> anyhow::Result<Arc<dyn crate::service::ServiceTopolo
     }
 }
 
+impl TrafficSpec {
+    /// Canonical JSON for the store key, tagged by mode so two modes with
+    /// coincidentally equal fields can never collide.
+    pub fn canonical_json(&self) -> crate::store::json::Json {
+        use crate::store::json::Json;
+        match self {
+            TrafficSpec::Fixed {
+                pattern,
+                packets_per_server,
+            } => Json::obj([
+                ("mode", Json::Str("fixed".into())),
+                ("pattern", Json::Str(pattern.clone())),
+                ("packets_per_server", Json::UInt(*packets_per_server as u64)),
+            ]),
+            TrafficSpec::Bernoulli {
+                pattern,
+                load,
+                horizon,
+            } => Json::obj([
+                ("mode", Json::Str("bernoulli".into())),
+                ("pattern", Json::Str(pattern.clone())),
+                ("load", Json::Float(*load)),
+                ("horizon", Json::UInt(*horizon)),
+            ]),
+            TrafficSpec::Kernel {
+                kernel,
+                iters,
+                pkts_per_msg,
+                mapping,
+            } => Json::obj([
+                ("mode", Json::Str("kernel".into())),
+                ("kernel", Json::Str(kernel.clone())),
+                ("iters", Json::UInt(*iters as u64)),
+                ("pkts_per_msg", Json::UInt(*pkts_per_msg as u64)),
+                (
+                    "mapping",
+                    Json::Str(
+                        match mapping {
+                            Mapping::Linear => "linear",
+                            Mapping::Random => "random",
+                        }
+                        .into(),
+                    ),
+                ),
+            ]),
+            TrafficSpec::Flows(fs) => Json::obj([
+                ("mode", Json::Str("flows".into())),
+                ("scenario", Json::Str(fs.scenario.clone())),
+                ("fan_in", Json::UInt(fs.fan_in as u64)),
+                ("msg_pkts", Json::UInt(fs.msg_pkts as u64)),
+                ("waves", Json::UInt(fs.waves as u64)),
+                ("spacing", Json::UInt(fs.spacing)),
+                ("flows", Json::UInt(fs.flows as u64)),
+                ("hot_frac", Json::Float(fs.hot_frac)),
+                ("rate", Json::Float(fs.rate)),
+                ("pairs", Json::UInt(fs.pairs as u64)),
+                ("req_pkts", Json::UInt(fs.req_pkts as u64)),
+                ("resp_pkts", Json::UInt(fs.resp_pkts as u64)),
+                ("think", Json::UInt(fs.think)),
+                ("rounds", Json::UInt(fs.rounds as u64)),
+                ("bg_pattern", Json::Str(fs.bg_pattern.clone())),
+                ("bg_load", Json::Float(fs.bg_load)),
+                ("horizon", Json::UInt(fs.horizon)),
+                ("burst_flows", Json::UInt(fs.burst_flows as u64)),
+                ("burst_pkts", Json::UInt(fs.burst_pkts as u64)),
+            ]),
+        }
+    }
+}
+
 impl ExperimentSpec {
     /// The topology name this run actually simulates: the `host` override
     /// when present, else `topology`. Everything that builds or caches
     /// per-topology state (engine, `build_network`) must go through this.
     pub fn effective_topology(&self) -> &str {
         self.host.as_deref().unwrap_or(&self.topology)
+    }
+
+    /// The **normalized identity** of this experiment: the canonical JSON
+    /// object the store hashes into a content-addressed key
+    /// (`store::spec_key`).
+    ///
+    /// Included: everything that can change the resulting `SimStats` —
+    /// topology/host/routing (case-normalized, exactly as the engine's
+    /// table cache keys them), `servers_per_switch`, `q`, the full traffic
+    /// description, `seed`, `warmup`, `max_cycles`, `stop_rel_ci` and the
+    /// fault schedule.
+    ///
+    /// Excluded — the bit-identity-neutral knobs, per the determinism
+    /// contracts in DESIGN.md: `name` (a label), `shards`, `time_skip`,
+    /// `batched_compute`, `global_wheel`, `phase_timings` (wall-clock
+    /// only) and `faults.rebuild` (Patch ≡ Recompile by property). A
+    /// result computed at any shard/thread count answers for all of them.
+    pub fn canonical_json(&self) -> crate::store::json::Json {
+        use crate::store::json::Json;
+        Json::obj([
+            ("topology", Json::Str(self.topology.to_ascii_lowercase())),
+            (
+                "host",
+                Json::opt(
+                    self.host
+                        .as_deref()
+                        .map(|h| Json::Str(h.to_ascii_lowercase())),
+                ),
+            ),
+            (
+                "servers_per_switch",
+                Json::UInt(self.servers_per_switch as u64),
+            ),
+            ("routing", Json::Str(self.routing.to_ascii_lowercase())),
+            ("q", Json::UInt(self.q as u64)),
+            ("traffic", self.traffic.canonical_json()),
+            ("seed", Json::UInt(self.seed)),
+            ("warmup", Json::UInt(self.warmup)),
+            ("max_cycles", Json::UInt(self.max_cycles)),
+            (
+                "stop_rel_ci",
+                Json::opt(self.stop_rel_ci.map(Json::Float)),
+            ),
+            ("faults", self.faults.canonical_json()),
+        ])
     }
 
     /// Construct the workload for this spec (delegates to the engine).

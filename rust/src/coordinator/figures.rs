@@ -2,26 +2,40 @@
 //! Figures 4–10), shared by the CLI (`tera-net fig7 …`) and the bench
 //! binaries (`cargo bench --bench fig7_bernoulli`).
 //!
+//! Every simulation-backed runner is **declarative**: it enumerates its
+//! [`ExperimentSpec`] point set, executes it through [`FigEnv::run`] —
+//! the store-aware engine path — and renders the table from the results.
+//! With a store attached, points already on disk are decoded instead of
+//! simulated, so an interrupted `tera-net figs` resumes exactly where it
+//! died and a warm rerun executes zero points while producing
+//! byte-identical output (store keys exclude exactly the
+//! bit-identity-neutral knobs; see `store::spec_key`).
+//!
 //! Scale: the paper simulates FM64 × 64 servers (4096 endpoints, 80K-cycle
 //! horizons, 1250-packet bursts). `Scale::Paper` reproduces that;
 //! `Scale::Quick` (default) shrinks the network and horizons so the whole
 //! suite completes in minutes while preserving every qualitative
-//! relationship (crossover shapes are scale-stable — see EXPERIMENTS.md).
+//! relationship (crossover shapes are scale-stable — see EXPERIMENTS.md);
+//! `Scale::Tiny` shrinks further still — seconds in debug builds — for the
+//! figure-level resume tests, and is not reachable from the CLI.
 
 use crate::analytic;
-use crate::config::spec::{ExperimentSpec, TrafficSpec};
+use crate::config::spec::{topology_by_name, ExperimentSpec, TrafficSpec};
 use crate::config::{FaultSpec, RebuildStrategy};
 use crate::coordinator::report::{ascii_bars, write_csv, Table};
-use crate::coordinator::sweep::SweepResult;
-use crate::engine::Engine;
+use crate::engine::{Engine, RunResult};
 use crate::metrics::jain_index;
 use crate::service;
+use crate::store::ResultStore;
 use crate::traffic::kernels::Mapping;
 use crate::traffic::FlowSpec;
 
 /// Experiment scale.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scale {
+    /// Test scale: smallest networks/budgets that still exercise every
+    /// code path. Used by the resume tests; not exposed on the CLI.
+    Tiny,
     Quick,
     Paper,
 }
@@ -37,6 +51,46 @@ impl Scale {
     }
 }
 
+/// The execution environment figure runners share: one engine (so compiled
+/// tables are reused across figures), an optional result store (so reruns
+/// resume), and the scale/seed of the point sets.
+pub struct FigEnv {
+    pub engine: Engine,
+    pub store: Option<ResultStore>,
+    pub scale: Scale,
+    pub seed: u64,
+}
+
+impl FigEnv {
+    pub fn new(engine: Engine, store: Option<ResultStore>, scale: Scale, seed: u64) -> Self {
+        Self {
+            engine,
+            store,
+            scale,
+            seed,
+        }
+    }
+
+    /// Store-less environment (benches, tests that measure simulation).
+    pub fn ephemeral(scale: Scale, seed: u64) -> Self {
+        Self::new(Engine::new(), None, scale, seed)
+    }
+
+    /// Execute a figure's point set through the store-aware engine path,
+    /// reporting the cache split to stderr (the CI resume smoke greps the
+    /// `0 executed` form of this line).
+    pub fn run(&self, label: &str, specs: Vec<ExperimentSpec>) -> Vec<RunResult> {
+        let results = self.engine.run_batch_store(specs, self.store.as_ref());
+        let cached = results.iter().filter(|r| r.cached).count();
+        eprintln!(
+            "[store] {label}: {} points ({cached} cached, {} executed)",
+            results.len(),
+            results.len() - cached
+        );
+        results
+    }
+}
+
 fn fm(scale: Scale) -> (String, usize) {
     // Quick keeps the paper's 64-switch Full-mesh (service topologies need
     // n to factor as a square/cube/power-of-two; 64 is all three) but
@@ -44,6 +98,7 @@ fn fm(scale: Scale) -> (String, usize) {
     // stay comparable to the switch degree (the paper uses 64 servers vs
     // 63 links) or adversarial patterns stop stressing the network.
     match scale {
+        Scale::Tiny => ("fm16".into(), 4),
         Scale::Quick => ("fm64".into(), 32),
         Scale::Paper => ("fm64".into(), 64),
     }
@@ -51,6 +106,7 @@ fn fm(scale: Scale) -> (String, usize) {
 
 fn burst(scale: Scale) -> usize {
     match scale {
+        Scale::Tiny => 10,
         Scale::Quick => 100,
         Scale::Paper => 1250,
     }
@@ -58,12 +114,13 @@ fn burst(scale: Scale) -> usize {
 
 fn horizon(scale: Scale) -> u64 {
     match scale {
+        Scale::Tiny => 2_000,
         Scale::Quick => 12_000,
         Scale::Paper => 80_000,
     }
 }
 
-fn fmt_err(r: &SweepResult) -> String {
+fn fmt_err(r: &RunResult) -> String {
     match &r.stats {
         Ok(_) => unreachable!(),
         Err(e) => format!("FAILED({e})"),
@@ -157,9 +214,9 @@ pub fn fig4(use_pjrt: bool) -> anyhow::Result<String> {
 // Figure 5 — link-ordering schemes, fixed generation
 // ---------------------------------------------------------------------
 
-pub fn fig5(scale: Scale, seed: u64) -> anyhow::Result<String> {
-    let (topo, spc) = fm(scale);
-    let pkts = burst(scale);
+pub fn fig5(env: &FigEnv) -> anyhow::Result<String> {
+    let (topo, spc) = fm(env.scale);
+    let pkts = burst(env.scale);
     let routings = ["min", "brinr", "srinr", "valiant"];
     let patterns = ["shift", "complement", "rsp"];
     let mut specs = Vec::new();
@@ -174,13 +231,13 @@ pub fn fig5(scale: Scale, seed: u64) -> anyhow::Result<String> {
                     pattern: pat.into(),
                     packets_per_server: pkts,
                 },
-                seed,
+                seed: env.seed,
                 max_cycles: 80_000_000,
                 ..Default::default()
             });
         }
     }
-    let results = Engine::new().run_batch(specs);
+    let results = env.run("fig5", specs);
     let mut t = Table::new(
         &format!("Figure 5 — cycles to consume {pkts} pkts/server ({topo}, {spc} srv/sw)"),
         &["pattern", "routing", "cycles", "mean hops"],
@@ -218,12 +275,13 @@ pub fn fig5(scale: Scale, seed: u64) -> anyhow::Result<String> {
 // Figure 6 — service topology selection (RSP + FR, FM size sweep)
 // ---------------------------------------------------------------------
 
-pub fn fig6(scale: Scale, seed: u64) -> anyhow::Result<String> {
-    let sizes: &[usize] = match scale {
+pub fn fig6(env: &FigEnv) -> anyhow::Result<String> {
+    let sizes: &[usize] = match env.scale {
+        Scale::Tiny => &[16],
         Scale::Quick => &[16, 64],
         Scale::Paper => &[16, 64, 256],
     };
-    let pkts = burst(scale);
+    let pkts = burst(env.scale);
     let services = ["path", "tree4", "hypercube", "hx2", "hx3"];
     let patterns = ["rsp", "fr"];
     let mut specs = Vec::new();
@@ -240,7 +298,8 @@ pub fn fig6(scale: Scale, seed: u64) -> anyhow::Result<String> {
                     topology: format!("fm{n}"),
                     // Concentration must track the switch degree or the
                     // burst is absorbable by any routing (§5 uses spc = n).
-                    servers_per_switch: match scale {
+                    servers_per_switch: match env.scale {
+                        Scale::Tiny => 4,
                         Scale::Quick => (n / 2).max(4),
                         Scale::Paper => n.min(64),
                     },
@@ -249,14 +308,14 @@ pub fn fig6(scale: Scale, seed: u64) -> anyhow::Result<String> {
                         pattern: pat.into(),
                         packets_per_server: pkts,
                     },
-                    seed,
+                    seed: env.seed,
                     max_cycles: 80_000_000,
                     ..Default::default()
                 });
             }
         }
     }
-    let results = Engine::new().run_batch(specs);
+    let results = env.run("fig6", specs);
     let mut t = Table::new(
         &format!("Figure 6 — TERA service-topology comparison ({pkts} pkts/server burst)"),
         &["pattern", "FM size", "service", "cycles", "mean hops"],
@@ -287,13 +346,14 @@ pub fn fig6(scale: Scale, seed: u64) -> anyhow::Result<String> {
 // Figure 7 — Bernoulli generation: throughput / latency vs offered load
 // ---------------------------------------------------------------------
 
-pub fn fig7(scale: Scale, seed: u64) -> anyhow::Result<String> {
-    let (topo, spc) = fm(scale);
-    let hz = horizon(scale);
+pub fn fig7(env: &FigEnv) -> anyhow::Result<String> {
+    let (topo, spc) = fm(env.scale);
+    let hz = horizon(env.scale);
     let routings = [
         "min", "srinr", "tera-hx2", "tera-hx3", "ugal", "omniwar", "valiant",
     ];
-    let loads: &[f64] = match scale {
+    let loads: &[f64] = match env.scale {
+        Scale::Tiny => &[0.5],
         Scale::Quick => &[0.2, 0.4, 0.6, 0.8, 1.0],
         Scale::Paper => &[0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0],
     };
@@ -315,13 +375,13 @@ pub fn fig7(scale: Scale, seed: u64) -> anyhow::Result<String> {
                         horizon: hz,
                     },
                     warmup: hz / 4,
-                    seed,
+                    seed: env.seed,
                     ..Default::default()
                 });
             }
         }
     }
-    let results = Engine::new().run_batch(specs);
+    let results = env.run("fig7", specs);
     let mut t = Table::new(
         &format!("Figure 7 — Bernoulli traffic on {topo} ({spc} srv/sw, horizon {hz})"),
         &[
@@ -376,12 +436,17 @@ fn kernel_specs(
 ) -> (Vec<(String, String)>, Vec<ExperimentSpec>) {
     // Rank-count requirements: square (stencil2d/fft3d), cube (stencil3d),
     // power of two (allreduce). Quick: FM16×4 = 64 ranks; paper: FM64×64 =
-    // 4096 ranks. Both satisfy all three.
+    // 4096 ranks. Both satisfy all three. Tiny shares the quick network
+    // but runs a single all2all iteration.
     let (topo, spc) = match scale {
+        Scale::Tiny => ("fm16".to_string(), 4usize),
         Scale::Quick => ("fm16".to_string(), 4usize),
         Scale::Paper => ("fm64".to_string(), 64usize),
     };
-    let kernels = ["all2all", "stencil2d", "stencil3d", "fft3d", "allreduce"];
+    let kernels: &[&str] = match scale {
+        Scale::Tiny => &["all2all"],
+        _ => &["all2all", "stencil2d", "stencil3d", "fft3d", "allreduce"],
+    };
     let n_switches: usize = if topo == "fm16" { 16 } else { 64 };
     let mut specs = Vec::new();
     let mut labels = Vec::new();
@@ -401,8 +466,9 @@ fn kernel_specs(
                 servers_per_switch: spc,
                 routing: (*r).into(),
                 traffic: TrafficSpec::Kernel {
-                    kernel: k.into(),
+                    kernel: (*k).into(),
                     iters: match scale {
+                        Scale::Tiny => 1,
                         Scale::Quick => 2,
                         Scale::Paper => 4,
                     },
@@ -418,10 +484,10 @@ fn kernel_specs(
     (labels, specs)
 }
 
-pub fn fig8(scale: Scale, seed: u64) -> anyhow::Result<String> {
+pub fn fig8(env: &FigEnv) -> anyhow::Result<String> {
     let routings = ["min", "valiant", "ugal", "omniwar", "tera-hx2", "tera-hx3"];
-    let (labels, specs) = kernel_specs(scale, seed, &routings, Mapping::Linear);
-    let results = Engine::new().run_batch(specs);
+    let (labels, specs) = kernel_specs(env.scale, env.seed, &routings, Mapping::Linear);
+    let results = env.run("fig8", specs);
     let mut t = Table::new(
         "Figure 8 — application kernel completion (cycles, linear mapping)",
         &["kernel", "routing", "cycles", "mean hops"],
@@ -441,10 +507,10 @@ pub fn fig8(scale: Scale, seed: u64) -> anyhow::Result<String> {
     Ok(t.render())
 }
 
-pub fn fig9(scale: Scale, seed: u64) -> anyhow::Result<String> {
+pub fn fig9(env: &FigEnv) -> anyhow::Result<String> {
     let routings = ["ugal", "omniwar", "tera-hx2", "tera-hx3"];
-    let (labels, specs) = kernel_specs(scale, seed, &routings, Mapping::Linear);
-    let results = Engine::new().run_batch(specs);
+    let (labels, specs) = kernel_specs(env.scale, env.seed, &routings, Mapping::Linear);
+    let results = env.run("fig9", specs);
     let mut t = Table::new(
         "Figure 9 — packet latency distribution per kernel (linear mapping)",
         &["kernel", "routing", "mean", "p99", "p99.9", "p99.99", "max"],
@@ -486,36 +552,43 @@ pub fn fig9(scale: Scale, seed: u64) -> anyhow::Result<String> {
 // Figure 10 — 2D-HyperX evaluation
 // ---------------------------------------------------------------------
 
-pub fn fig10(scale: Scale, seed: u64) -> anyhow::Result<String> {
-    let (topo, spc) = match scale {
+pub fn fig10(env: &FigEnv) -> anyhow::Result<String> {
+    let (topo, spc) = match env.scale {
+        Scale::Tiny => ("hx4x4".to_string(), 2usize),
         Scale::Quick => ("hx4x4".to_string(), 4usize),
         Scale::Paper => ("hx8x8".to_string(), 8usize),
     };
     let routings = ["dor-tera", "o1turn-tera", "dimwar", "omniwar-hx"];
-    let kernels = ["all2all", "allreduce"];
+    let kernels: &[&str] = match env.scale {
+        Scale::Tiny => &["all2all"],
+        _ => &["all2all", "allreduce"],
+    };
     let mut specs = Vec::new();
     let mut labels = Vec::new();
     for k in kernels {
         for r in routings {
-            labels.push((k, r));
+            labels.push((*k, r));
             specs.push(ExperimentSpec {
                 name: format!("fig10-{k}-{r}"),
                 topology: topo.clone(),
                 servers_per_switch: spc,
                 routing: (*r).into(),
                 traffic: TrafficSpec::Kernel {
-                    kernel: k.into(),
-                    iters: 2,
+                    kernel: (*k).into(),
+                    iters: match env.scale {
+                        Scale::Tiny => 1,
+                        _ => 2,
+                    },
                     pkts_per_msg: 2,
                     mapping: Mapping::Linear,
                 },
-                seed,
+                seed: env.seed,
                 max_cycles: 80_000_000,
                 ..Default::default()
             });
         }
     }
-    let results = Engine::new().run_batch(specs);
+    let results = env.run("fig10", specs);
     let mut t = Table::new(
         &format!("Figure 10 — 2D-HyperX {topo} ({spc} srv/sw): kernel completion"),
         &["kernel", "routing", "VCs", "cycles", "mean hops"],
@@ -555,14 +628,17 @@ pub fn fig10(scale: Scale, seed: u64) -> anyhow::Result<String> {
 /// The paper's q = 54 (≈3.4 packets) should sit on the plateau: far lower
 /// q over-deroutes under benign traffic, far higher q under-adapts under
 /// adversarial traffic.
-pub fn ablation_q(scale: Scale, seed: u64) -> anyhow::Result<String> {
-    let (topo, spc) = fm(scale);
-    let hz = horizon(scale);
-    let qs = [0u32, 8, 16, 32, 54, 96, 160, 256];
+pub fn ablation_q(env: &FigEnv) -> anyhow::Result<String> {
+    let (topo, spc) = fm(env.scale);
+    let hz = horizon(env.scale);
+    let qs: &[u32] = match env.scale {
+        Scale::Tiny => &[0, 54],
+        _ => &[0, 8, 16, 32, 54, 96, 160, 256],
+    };
     let mut specs = Vec::new();
     let mut labels = Vec::new();
     for pat in ["uniform", "rsp"] {
-        for &q in &qs {
+        for &q in qs {
             labels.push((pat, q));
             specs.push(ExperimentSpec {
                 name: format!("ablation-q{q}-{pat}"),
@@ -576,12 +652,12 @@ pub fn ablation_q(scale: Scale, seed: u64) -> anyhow::Result<String> {
                     horizon: hz,
                 },
                 warmup: hz / 4,
-                seed,
+                seed: env.seed,
                 ..Default::default()
             });
         }
     }
-    let results = Engine::new().run_batch(specs);
+    let results = env.run("ablation-q", specs);
     let mut t = Table::new(
         "Ablation — TERA-HX2 non-minimal penalty q (load 0.7)",
         &["pattern", "q", "accepted", "latency", "2hop%"],
@@ -618,11 +694,12 @@ pub fn ablation_q(scale: Scale, seed: u64) -> anyhow::Result<String> {
 /// point. This is the sweep-pipeline view of `metrics::steady`: the
 /// estimator's value is measured in simulated cycles avoided, with the
 /// metric drift it costs printed next to it.
-pub fn early_stop(scale: Scale, seed: u64) -> anyhow::Result<String> {
-    let (topo, spc) = fm(scale);
-    let hz = horizon(scale);
+pub fn early_stop(env: &FigEnv) -> anyhow::Result<String> {
+    let (topo, spc) = fm(env.scale);
+    let hz = horizon(env.scale);
     let target = 0.05;
-    let loads: &[f64] = match scale {
+    let loads: &[f64] = match env.scale {
+        Scale::Tiny => &[0.5],
         Scale::Quick => &[0.3, 0.5, 0.7],
         Scale::Paper => &[0.1, 0.3, 0.5, 0.7, 0.9],
     };
@@ -640,13 +717,13 @@ pub fn early_stop(scale: Scale, seed: u64) -> anyhow::Result<String> {
                     horizon: hz,
                 },
                 warmup: hz / 4,
-                seed,
+                seed: env.seed,
                 stop_rel_ci: adaptive.then_some(target),
                 ..Default::default()
             });
         }
     }
-    let results = Engine::new().run_batch(specs);
+    let results = env.run("early-stop", specs);
     let mut t = Table::new(
         &format!(
             "Adaptive length — fixed {hz}-cycle budget vs stop-rel-ci {target} \
@@ -699,13 +776,21 @@ pub fn early_stop(scale: Scale, seed: u64) -> anyhow::Result<String> {
 /// (`traffic::flows`, `metrics::fct`). This is the figure the ROADMAP's
 /// "heavy traffic" north star asks for: completion time of *messages*,
 /// not per-packet latency, is what a serving workload observes.
-pub fn fct(scale: Scale, seed: u64) -> anyhow::Result<String> {
-    let (topo, spc) = fm(scale);
-    let routings = [
-        "min", "valiant", "ugal", "omniwar", "brinr", "srinr", "tera-hx2", "tera-hx3",
-    ];
-    let (fan_in, msg_pkts, flows) = match scale {
-        Scale::Quick => (32usize, 4u32, 128usize),
+pub fn fct(env: &FigEnv) -> anyhow::Result<String> {
+    let (topo, spc) = fm(env.scale);
+    // Tiny's fm16 hosts no hx3 service (16 is not a cube); every point
+    // must succeed so the warm-store resume contract holds at test scale.
+    let routings: &[&str] = match env.scale {
+        Scale::Tiny => &[
+            "min", "valiant", "ugal", "omniwar", "brinr", "srinr", "tera-hx2",
+        ],
+        _ => &[
+            "min", "valiant", "ugal", "omniwar", "brinr", "srinr", "tera-hx2", "tera-hx3",
+        ],
+    };
+    let (fan_in, msg_pkts, flows) = match env.scale {
+        Scale::Tiny => (8usize, 2u32, 32usize),
+        Scale::Quick => (32, 4, 128),
         Scale::Paper => (32, 16, 1024),
     };
     let scenarios = [
@@ -732,7 +817,7 @@ pub fn fct(scale: Scale, seed: u64) -> anyhow::Result<String> {
     let mut specs = Vec::new();
     let mut labels = Vec::new();
     for (name, fs) in &scenarios {
-        for r in routings {
+        for &r in routings {
             labels.push((*name, r));
             specs.push(ExperimentSpec {
                 name: format!("fct-{name}-{r}"),
@@ -740,13 +825,13 @@ pub fn fct(scale: Scale, seed: u64) -> anyhow::Result<String> {
                 servers_per_switch: spc,
                 routing: r.into(),
                 traffic: TrafficSpec::Flows(fs.clone()),
-                seed,
+                seed: env.seed,
                 max_cycles: 80_000_000,
                 ..Default::default()
             });
         }
     }
-    let results = Engine::new().run_batch(specs);
+    let results = env.run("fct", specs);
     let mut t = Table::new(
         &format!(
             "Flow completion time — incast {fan_in}→1 and hotspot ({topo}, \
@@ -816,14 +901,21 @@ fn run_with_rebuild_log(
 /// incremental patch at the highest rate. Links fail permanently at cycle
 /// 200, mid-flight, so every point exercises drop/requeue and the online
 /// table swap.
-pub fn faults(scale: Scale, seed: u64) -> anyhow::Result<String> {
-    let (topo, spc) = fm(scale);
-    let rates: &[f64] = match scale {
+///
+/// Not store-backed: the rebuild-latency annotations need the live
+/// network's `RebuildRecord` log (wall times, not part of `SimStats`), so
+/// each point is executed directly. Everything a `SimStats` can carry is
+/// resumable; wall-clock observations by definition are not.
+pub fn faults(env: &FigEnv) -> anyhow::Result<String> {
+    let (topo, spc) = fm(env.scale);
+    let rates: &[f64] = match env.scale {
+        Scale::Tiny => &[0.0, 2.0],
         Scale::Quick => &[0.0, 1.0, 2.0, 5.0],
         Scale::Paper => &[0.0, 1.0, 2.0, 5.0, 10.0],
     };
-    let (flows, msg_pkts) = match scale {
-        Scale::Quick => (128usize, 4u32),
+    let (flows, msg_pkts) = match env.scale {
+        Scale::Tiny => (32usize, 2u32),
+        Scale::Quick => (128, 4),
         Scale::Paper => (1024, 16),
     };
     let fail_at = 200u64;
@@ -856,7 +948,7 @@ pub fn faults(scale: Scale, seed: u64) -> anyhow::Result<String> {
                 hot_frac: 0.5,
                 ..FlowSpec::default()
             }),
-            seed,
+            seed: env.seed,
             max_cycles: 80_000_000,
             faults,
             ..Default::default()
@@ -929,35 +1021,53 @@ pub fn faults(scale: Scale, seed: u64) -> anyhow::Result<String> {
 // Service/main link utilization (§6.3, last paragraph)
 // ---------------------------------------------------------------------
 
-pub fn link_utilization(scale: Scale, seed: u64) -> anyhow::Result<String> {
-    let (topo, spc) = fm(scale);
-    let hz = horizon(scale);
-    let mut out = String::new();
-    for pat in ["uniform", "rsp"] {
-        let spec = ExperimentSpec {
+pub fn link_utilization(env: &FigEnv) -> anyhow::Result<String> {
+    let (topo, spc) = fm(env.scale);
+    // The service/main split needs an hx3 embedding, which FM16 (tiny)
+    // cannot host — keep the quick-scale network there.
+    let (topo, spc) = if env.scale == Scale::Tiny {
+        ("fm64".to_string(), 8)
+    } else {
+        (topo, spc)
+    };
+    let hz = horizon(env.scale);
+    let patterns = ["uniform", "rsp"];
+    let specs: Vec<ExperimentSpec> = patterns
+        .iter()
+        .map(|pat| ExperimentSpec {
             name: format!("util-{pat}"),
             topology: topo.clone(),
             servers_per_switch: spc,
             routing: "tera-hx3".into(),
             traffic: TrafficSpec::Bernoulli {
-                pattern: pat.into(),
+                pattern: (*pat).into(),
                 load: 0.7,
                 horizon: hz,
             },
             warmup: hz / 4,
-            seed,
+            seed: env.seed,
             ..Default::default()
-        };
-        let net = spec.build_network()?;
-        let n = net.topo.n;
-        let svc = service::by_name("hx3", n)?;
-        let emb = crate::service::Embedding::new(&net.topo, svc.as_ref());
-        let stats = spec.run()?;
-        let maxdeg = net.topo.max_degree();
+        })
+        .collect();
+    let results = env.run("linkutil", specs);
+    // The per-arc flit counters live in `SimStats.link_flits`, so this
+    // figure renders from stored results too; only the (static) embedding
+    // is rebuilt here to classify arcs.
+    let phys = topology_by_name(&topo)?;
+    let n = phys.n;
+    let svc = service::by_name("hx3", n)?;
+    let emb = crate::service::Embedding::new(&phys, svc.as_ref());
+    let maxdeg = phys.max_degree();
+    let mut out = String::new();
+    for (pat, res) in patterns.iter().zip(&results) {
+        let stats = res
+            .stats
+            .as_ref()
+            .map_err(|e| anyhow::anyhow!("linkutil {pat}: {e}"))?;
         let (mut svc_flits, mut svc_arcs, mut main_flits, mut main_arcs) = (0u64, 0u64, 0u64, 0u64);
         for s in 0..n {
-            for p in 0..net.topo.degree(s) {
-                let d = net.topo.neighbor(s, p);
+            for p in 0..phys.degree(s) {
+                let d = phys.neighbor(s, p);
                 let f = stats.link_flits[s * maxdeg + p];
                 if emb.is_service(s, d) {
                     svc_flits += f;

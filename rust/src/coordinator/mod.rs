@@ -1,11 +1,15 @@
-//! Experiment coordinator: fans a set of [`ExperimentSpec`]s out over
-//! worker threads (tokio is not in the offline crate set; std threads are a
-//! perfect fit for CPU-bound simulation), collects the results in
-//! submission order, and renders figure-shaped reports.
+//! Experiment coordinator: declares the paper's tables and figures as
+//! point sets of [`ExperimentSpec`](crate::config::ExperimentSpec)s,
+//! executes them through the store-aware engine entry points
+//! ([`crate::engine::Engine::run_batch_store`]) so reruns resume from the
+//! result store, and renders figure-shaped reports.
+//!
+//! Batch execution itself lives in [`crate::engine`] (the old
+//! `coordinator::sweep` alias layer — `run_sweep`, `SweepResult`,
+//! `default_threads` — was folded into it); this module keeps only the
+//! figure definitions and the report renderers.
 
 pub mod figures;
 pub mod report;
-pub mod sweep;
 
 pub use report::{ascii_bars, ascii_curve, write_csv, Table};
-pub use sweep::{run_sweep, SweepResult};

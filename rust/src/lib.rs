@@ -30,8 +30,12 @@
 //! * the unified experiment engine ([`engine`]): the single
 //!   spec→topology→router→workload construction path, threaded batch
 //!   execution and multi-seed replica aggregation;
+//! * a content-addressed experiment result store ([`store`]): canonical
+//!   JSON encoding of specs and results, atomic per-point files, and the
+//!   resume machinery that lets sweeps and figures re-execute only
+//!   missing points;
 //! * an experiment coordinator ([`coordinator`]) that renders the paper's
-//!   tables and figures as a thin client of the engine.
+//!   tables and figures as a thin client of the engine and the store.
 //!
 //! See `DESIGN.md` for the substitution notes, the engine architecture and
 //! the active-set invariants.
@@ -46,6 +50,7 @@ pub mod routing;
 pub mod runtime;
 pub mod service;
 pub mod sim;
+pub mod store;
 pub mod testing;
 pub mod topology;
 pub mod traffic;

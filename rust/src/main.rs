@@ -2,24 +2,20 @@
 //! [`tera_net::engine`]: argument parsing and report printing happen here,
 //! every build/run decision happens in the engine.
 //!
-//! ```text
-//! tera-net run        --topology fm64 --routing tera-hx2 --pattern rsp
-//!                     [--mode bernoulli|fixed|kernel] [--load 0.5]
-//!                     [--spc 16] [--seed 1] [--q 54]
-//!                     [--replicas 1] [--threads N] ...
-//! tera-net table1     [--n 64]
-//! tera-net fig4       [--pjrt]
-//! tera-net fig5..fig10  [--full] [--seed 1]
-//! tera-net linkutil   [--full]           # §6.3 service/main utilization
-//! tera-net fct        [--full]           # incast/hotspot FCT per FM router
-//! tera-net validate-artifacts            # PJRT vs pure-Rust cross-check
-//! tera-net config     --file exp.toml    # run an experiment from a file
-//! ```
+//! Flags are declared per command in [`tera_net::cli`] (name, type,
+//! default, help); `tera-net help <command>` renders the declaration the
+//! parser validates against. Figure commands run against the
+//! content-addressed result store (`results/` by default), so an
+//! interrupted sweep resumes by re-running the same command: warm points
+//! are read back, only the missing ones simulate. `--format json` on
+//! `run`/`config` emits the store's schema-versioned result envelope to
+//! stdout instead of the human report.
 
-use tera_net::cli::Args;
+use tera_net::cli::{self, Args};
 use tera_net::config::spec::{ExperimentSpec, TrafficSpec};
-use tera_net::coordinator::figures::{self, Scale};
-use tera_net::engine::Engine;
+use tera_net::coordinator::figures::{self, FigEnv, Scale};
+use tera_net::engine::{Engine, ReplicaSummary};
+use tera_net::store::{self, ResultStore};
 use tera_net::traffic::kernels::Mapping;
 use tera_net::traffic::FlowSpec;
 
@@ -32,43 +28,81 @@ fn main() {
 
 fn real_main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
-    let scale = Scale::from_env(args.has("full"));
-    let seed = args.get_u64("seed", 1)?;
+    if args.help {
+        print!("{}", cli::help_for(&args.command)?);
+        return Ok(());
+    }
     match args.command.as_str() {
-        "" | "help" | "--help" => {
-            print!("{}", HELP);
-        }
+        "" => print!("{}", cli::overview()),
+        "help" => match &args.topic {
+            Some(topic) => print!("{}", cli::help_for(topic)?),
+            None => print!("{}", cli::overview()),
+        },
         "run" => cmd_run(&args)?,
         "config" => cmd_config(&args)?,
-        "table1" => print!("{}", figures::table1(args.get_usize("n", 64)?)?),
+        "table1" => print!("{}", figures::table1(args.usize_of("n")?)?),
         "fig4" => print!("{}", figures::fig4(args.has("pjrt"))?),
-        "fig5" => print!("{}", figures::fig5(scale, seed)?),
-        "fig6" => print!("{}", figures::fig6(scale, seed)?),
-        "fig7" => print!("{}", figures::fig7(scale, seed)?),
-        "fig8" => print!("{}", figures::fig8(scale, seed)?),
-        "fig9" => print!("{}", figures::fig9(scale, seed)?),
-        "fig10" => print!("{}", figures::fig10(scale, seed)?),
-        "linkutil" => print!("{}", figures::link_utilization(scale, seed)?),
-        "ablation-q" => print!("{}", figures::ablation_q(scale, seed)?),
-        "early-stop" => print!("{}", figures::early_stop(scale, seed)?),
-        "fct" => print!("{}", figures::fct(scale, seed)?),
-        "faults" => print!("{}", figures::faults(scale, seed)?),
+        "fig5" => print!("{}", figures::fig5(&fig_env(&args)?)?),
+        "fig6" => print!("{}", figures::fig6(&fig_env(&args)?)?),
+        "fig7" => print!("{}", figures::fig7(&fig_env(&args)?)?),
+        "fig8" => print!("{}", figures::fig8(&fig_env(&args)?)?),
+        "fig9" => print!("{}", figures::fig9(&fig_env(&args)?)?),
+        "fig10" => print!("{}", figures::fig10(&fig_env(&args)?)?),
+        "linkutil" => print!("{}", figures::link_utilization(&fig_env(&args)?)?),
+        "ablation-q" => print!("{}", figures::ablation_q(&fig_env(&args)?)?),
+        "early-stop" => print!("{}", figures::early_stop(&fig_env(&args)?)?),
+        "fct" => print!("{}", figures::fct(&fig_env(&args)?)?),
+        "faults" => print!("{}", figures::faults(&fig_env(&args)?)?),
         "figs" => {
-            // Everything, in paper order.
+            // Everything, in paper order, sharing one engine + store so
+            // a rerun after an interrupt only simulates what is missing.
+            let env = fig_env(&args)?;
             print!("{}", figures::table1(64)?);
             print!("{}", figures::fig4(args.has("pjrt"))?);
-            print!("{}", figures::fig5(scale, seed)?);
-            print!("{}", figures::fig6(scale, seed)?);
-            print!("{}", figures::fig7(scale, seed)?);
-            print!("{}", figures::fig8(scale, seed)?);
-            print!("{}", figures::fig9(scale, seed)?);
-            print!("{}", figures::fig10(scale, seed)?);
-            print!("{}", figures::link_utilization(scale, seed)?);
+            print!("{}", figures::fig5(&env)?);
+            print!("{}", figures::fig6(&env)?);
+            print!("{}", figures::fig7(&env)?);
+            print!("{}", figures::fig8(&env)?);
+            print!("{}", figures::fig9(&env)?);
+            print!("{}", figures::fig10(&env)?);
+            print!("{}", figures::link_utilization(&env)?);
         }
         "validate-artifacts" => cmd_validate()?,
         other => anyhow::bail!("unknown command '{other}' (try `tera-net help`)"),
     }
     Ok(())
+}
+
+/// Build the environment a figure command runs in: scale (`--full` /
+/// `FULL=1`), base seed, engine, and the result store (`--store DIR`,
+/// default `results/`; `--no-store` opts out).
+fn fig_env(args: &Args) -> anyhow::Result<FigEnv> {
+    let scale = Scale::from_env(args.has("full"));
+    let seed = args.u64_of("seed")?;
+    let engine = engine_from(args, 1)?;
+    Ok(FigEnv::new(engine, store_from(args)?, scale, seed))
+}
+
+/// Open the result store the flags ask for. `--no-store` disables it; so
+/// does an absent `--store` on the commands where it has no default
+/// (`run`, `config`).
+fn store_from(args: &Args) -> anyhow::Result<Option<ResultStore>> {
+    if args.has("no-store") {
+        return Ok(None);
+    }
+    match args.get("store") {
+        Some(dir) => Ok(Some(ResultStore::open(dir)?)),
+        None => Ok(None),
+    }
+}
+
+/// `--format human | json`; true means JSON envelopes on stdout.
+fn json_format(args: &Args) -> anyhow::Result<bool> {
+    match args.str_of("format")? {
+        "human" => Ok(false),
+        "json" => Ok(true),
+        other => anyhow::bail!("unknown --format '{other}' (accepted: human, json)"),
+    }
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
@@ -85,47 +119,44 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     };
     let traffic = match mode {
         "bernoulli" => TrafficSpec::Bernoulli {
-            pattern: args.get_or("pattern", "uniform").into(),
-            load: args.get_f64("load", 0.5)?,
-            horizon: args.get_u64("horizon", 20_000)?,
+            pattern: args.str_of("pattern")?.into(),
+            load: args.f64_of("load")?,
+            horizon: args.u64_of("horizon")?,
         },
         "fixed" => TrafficSpec::Fixed {
-            pattern: args.get_or("pattern", "uniform").into(),
-            packets_per_server: args.get_usize("packets", 100)?,
+            pattern: args.str_of("pattern")?.into(),
+            packets_per_server: args.usize_of("packets")?,
         },
         "kernel" => TrafficSpec::Kernel {
-            kernel: args.get_or("kernel", "all2all").into(),
-            iters: args.get_usize("iters", 2)?,
-            pkts_per_msg: args.get_usize("pkts-per-msg", 1)? as u16,
-            mapping: if args.get_or("mapping", "linear") == "random" {
+            kernel: args.str_of("kernel")?.into(),
+            iters: args.usize_of("iters")?,
+            pkts_per_msg: args.usize_of("pkts-per-msg")? as u16,
+            mapping: if args.str_of("mapping")? == "random" {
                 Mapping::Random
             } else {
                 Mapping::Linear
             },
         },
-        "flows" => {
-            let d = FlowSpec::default();
-            TrafficSpec::Flows(FlowSpec {
-                scenario: args.get_or("workload", "incast").into(),
-                fan_in: args.get_usize("fan-in", d.fan_in)?,
-                msg_pkts: args.get_usize("msg-pkts", d.msg_pkts as usize)? as u32,
-                waves: args.get_usize("waves", d.waves)?,
-                spacing: args.get_u64("spacing", d.spacing)?,
-                flows: args.get_usize("flows", d.flows)?,
-                hot_frac: args.get_f64("hot-frac", d.hot_frac)?,
-                rate: args.get_f64("rate", d.rate)?,
-                pairs: args.get_usize("pairs", d.pairs)?,
-                req_pkts: args.get_usize("req-pkts", d.req_pkts as usize)? as u32,
-                resp_pkts: args.get_usize("resp-pkts", d.resp_pkts as usize)? as u32,
-                think: args.get_u64("think", d.think)?,
-                rounds: args.get_usize("rounds", d.rounds)?,
-                bg_pattern: args.get_or("bg-pattern", &d.bg_pattern).into(),
-                bg_load: args.get_f64("bg-load", d.bg_load)?,
-                horizon: args.get_u64("flow-horizon", d.horizon)?,
-                burst_flows: args.get_usize("burst-flows", d.burst_flows)?,
-                burst_pkts: args.get_usize("burst-pkts", d.burst_pkts as usize)? as u32,
-            })
-        }
+        "flows" => TrafficSpec::Flows(FlowSpec {
+            scenario: args.get("workload").unwrap_or("incast").into(),
+            fan_in: args.usize_of("fan-in")?,
+            msg_pkts: args.usize_of("msg-pkts")? as u32,
+            waves: args.usize_of("waves")?,
+            spacing: args.u64_of("spacing")?,
+            flows: args.usize_of("flows")?,
+            hot_frac: args.f64_of("hot-frac")?,
+            rate: args.f64_of("rate")?,
+            pairs: args.usize_of("pairs")?,
+            req_pkts: args.usize_of("req-pkts")? as u32,
+            resp_pkts: args.usize_of("resp-pkts")? as u32,
+            think: args.u64_of("think")?,
+            rounds: args.usize_of("rounds")?,
+            bg_pattern: args.str_of("bg-pattern")?.into(),
+            bg_load: args.f64_of("bg-load")?,
+            horizon: args.u64_of("flow-horizon")?,
+            burst_flows: args.usize_of("burst-flows")?,
+            burst_pkts: args.usize_of("burst-pkts")? as u32,
+        }),
         other => anyhow::bail!("unknown mode '{other}'"),
     };
     let spec = ExperimentSpec {
@@ -134,16 +165,16 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         // scenarios (`--routing tera-hx2 --host hx8x8`). It is carried as
         // its own spec field so the engine's compiled-table cache keys on
         // the topology the run actually uses.
-        topology: args.get_or("topology", "fm16").into(),
+        topology: args.str_of("topology")?.into(),
         host: args.get("host").map(str::to_string),
-        servers_per_switch: args.get_usize("spc", 4)?,
-        routing: args.get_or("routing", "tera-hx2").into(),
-        q: args.get_usize("q", 54)? as u32,
+        servers_per_switch: args.usize_of("spc")?,
+        routing: args.str_of("routing")?.into(),
+        q: args.usize_of("q")? as u32,
         traffic,
-        seed: args.get_u64("seed", 1)?,
-        warmup: args.get_u64("warmup", 2_000)?,
-        max_cycles: args.get_u64("max-cycles", 10_000_000)?,
-        shards: args.get_usize("shards", 1)?,
+        seed: args.u64_of("seed")?,
+        warmup: args.u64_of("warmup")?,
+        max_cycles: args.u64_of("max-cycles")?,
+        shards: args.usize_of("shards")?,
         // Both adaptive-length knobs are safe by construction: time skip is
         // bit-identical, and CI stopping defaults to off (fixed budget).
         time_skip: !args.has("fixed-tick"),
@@ -156,8 +187,8 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         global_wheel: args.has("global-wheel"),
         phase_timings: args.has("phase-timings"),
         stop_rel_ci: match args.get("stop-rel-ci") {
-            Some(v) => {
-                let target: f64 = v.parse()?;
+            Some(_) => {
+                let target = args.f64_of("stop-rel-ci")?;
                 // Same validation as the spec-file path (`from_value`):
                 // NaN/zero/negative targets can never converge.
                 anyhow::ensure!(target > 0.0, "--stop-rel-ci must be positive");
@@ -171,16 +202,18 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     // sharded core actually runs that wide (results are bit-identical
     // either way; see DESIGN.md, "Phase-parallel invariants").
     let engine = engine_from(args, spec.shards)?;
-    let replicas = args.get_usize("replicas", 1)?;
+    let replicas = args.usize_of("replicas")?;
+    let store = store_from(args)?;
+    let json = json_format(args)?;
     if replicas > 1 {
         // With a CI target, the replica budget is adaptive too: replicas
         // beyond convergence are pruned (`Engine::run_replicas_ci`).
         match spec.stop_rel_ci {
-            Some(target) => report_replicas_ci(&engine, &spec, replicas, target),
-            None => report_replicas(&engine, &spec, replicas),
+            Some(target) => report_replicas_ci(&engine, &spec, replicas, target, json),
+            None => report_replicas(&engine, &spec, replicas, store.as_ref(), json),
         }
     } else {
-        report_one(&engine, &spec)
+        report_one(&engine, &spec, store.as_ref(), json)
     }
 }
 
@@ -215,18 +248,24 @@ fn engine_from(args: &Args, min_threads: usize) -> anyhow::Result<Engine> {
 }
 
 fn cmd_config(args: &Args) -> anyhow::Result<()> {
-    let path = args
-        .get("file")
-        .ok_or_else(|| anyhow::anyhow!("config requires --file <path>"))?;
+    let path = args.str_of("file")?;
     let src = std::fs::read_to_string(path)?;
     let value = tera_net::config::parse(&src)?;
     let root = value.get("experiment").unwrap_or(&value);
     let spec = ExperimentSpec::from_value(root)?;
     let shards = spec.shards;
-    report_one(&engine_from(args, shards)?, &spec)
+    let store = store_from(args)?;
+    let json = json_format(args)?;
+    report_one(&engine_from(args, shards)?, &spec, store.as_ref(), json)
 }
 
-fn report_replicas(engine: &Engine, spec: &ExperimentSpec, replicas: usize) -> anyhow::Result<()> {
+fn report_replicas(
+    engine: &Engine,
+    spec: &ExperimentSpec,
+    replicas: usize,
+    store: Option<&ResultStore>,
+    json: bool,
+) -> anyhow::Result<()> {
     eprintln!(
         "running {} × {replicas} replicas on {} ({} srv/sw, routing {}, seeds {}..{})",
         spec.name,
@@ -237,8 +276,12 @@ fn report_replicas(engine: &Engine, spec: &ExperimentSpec, replicas: usize) -> a
         spec.seed + replicas as u64 - 1
     );
     let t0 = std::time::Instant::now();
-    let summary = engine.run_replicas(spec, replicas)?;
+    let summary = engine.run_replicas_store(spec, replicas, store)?;
     let wall = t0.elapsed().as_secs_f64();
+    if json {
+        print_replicas_json(spec, &summary);
+        return Ok(());
+    }
     let (thr, thr_sd) = summary.throughput();
     let (fin, fin_sd) = summary.finish_cycle();
     let (lat, lat_sd) = summary.mean_latency();
@@ -253,8 +296,31 @@ fn report_replicas(engine: &Engine, spec: &ExperimentSpec, replicas: usize) -> a
     Ok(())
 }
 
+/// JSON replica report: one store envelope per replica (keyed exactly as
+/// the store would key it) and one summary object, one per line.
+fn print_replicas_json(spec: &ExperimentSpec, summary: &ReplicaSummary) {
+    for (&seed, stats) in summary.seeds.iter().zip(&summary.stats) {
+        let rspec = ExperimentSpec {
+            name: format!("{}#s{seed}", spec.name),
+            seed,
+            ..spec.clone()
+        };
+        println!("{}", store::encode_result(&rspec, stats));
+    }
+    println!(
+        "{}",
+        store::json::Json::obj([
+            (
+                "schema",
+                store::json::Json::UInt(store::SCHEMA_VERSION as u64)
+            ),
+            ("summary", store::codec::encode_replica_summary(summary)),
+        ])
+    );
+}
+
 /// Merged flow-completion lines of a replica summary (flow workloads only).
-fn report_replica_fct(summary: &tera_net::engine::ReplicaSummary) {
+fn report_replica_fct(summary: &ReplicaSummary) {
     if let Some(f) = &summary.fct {
         println!("messages_completed  {} (all replicas)", f.completed);
         println!("fct_p50(all)        {} cycles", f.fct_percentile(50.0));
@@ -268,6 +334,7 @@ fn report_replicas_ci(
     spec: &ExperimentSpec,
     max_replicas: usize,
     target: f64,
+    json: bool,
 ) -> anyhow::Result<()> {
     eprintln!(
         "running {} on {} ({} srv/sw, routing {}): up to {max_replicas} replicas, \
@@ -277,6 +344,12 @@ fn report_replicas_ci(
     let t0 = std::time::Instant::now();
     let summary = engine.run_replicas_ci(spec, max_replicas, target)?;
     let wall = t0.elapsed().as_secs_f64();
+    if json {
+        // The CI-pruned mode is store-less by design (its point set is
+        // adaptive), but the envelopes are the same schema.
+        print_replicas_json(spec, &summary);
+        return Ok(());
+    }
     let (thr, thr_sd) = summary.throughput();
     let (lat, lat_sd) = summary.mean_latency();
     println!(
@@ -295,14 +368,28 @@ fn report_replicas_ci(
     Ok(())
 }
 
-fn report_one(engine: &Engine, spec: &ExperimentSpec) -> anyhow::Result<()> {
+fn report_one(
+    engine: &Engine,
+    spec: &ExperimentSpec,
+    store: Option<&ResultStore>,
+    json: bool,
+) -> anyhow::Result<()> {
     eprintln!(
         "running {} on {} ({} srv/sw, routing {}, seed {})",
         spec.name, spec.topology, spec.servers_per_switch, spec.routing, spec.seed
     );
     let t0 = std::time::Instant::now();
-    let stats = engine.run_one(spec)?;
+    let mut results = engine.run_batch_store(vec![spec.clone()], store);
+    let res = results.pop().expect("one spec in, one result out");
+    let stats = res.stats?;
     let wall = t0.elapsed().as_secs_f64();
+    if json {
+        println!("{}", store::encode_result(&res.spec, &stats));
+        return Ok(());
+    }
+    if res.cached {
+        eprintln!("(read back from the store, not re-simulated)");
+    }
     println!("finish_cycle        {}", stats.finish_cycle);
     if let Some(rel) = stats.achieved_rel_ci {
         println!("achieved_rel_ci     {rel:.4}");
@@ -412,79 +499,3 @@ fn cmd_validate() -> anyhow::Result<()> {
     println!("all artifacts validated");
     Ok(())
 }
-
-const HELP: &str = "\
-tera-net — TERA (HOTI'25) reproduction: VC-less deadlock-free routing on Full-mesh
-
-USAGE: tera-net <command> [flags]
-
-COMMANDS:
-  run                 single experiment (see flags below)
-  config --file F     run the [experiment] table of a TOML config
-  table1              Table 1 (service topology properties)
-  fig4 [--pjrt]       analytic throughput estimate (optionally via PJRT artifact)
-  fig5 .. fig10       reproduce each evaluation figure   [--full] [--seed N]
-  figs                all tables + figures in paper order
-  linkutil            §6.3 service/main link utilization
-  early-stop          fixed-budget vs --stop-rel-ci sweep comparison
-  fct                 flow-completion-time comparison of all FM routers
-                      under incast + hotspot message workloads
-  faults              throughput + FCT-p99 vs link-failure rate (TERA vs
-                      link-order), with table-rebuild latency annotations
-  validate-artifacts  cross-check AOT artifacts against pure-Rust references
-  help                this text
-
-RUN FLAGS:
-  --topology fm64|hx8x8|df9x4x2   --routing min|valiant|ugal|omniwar|brinr|
-                          srinr|tera-<svc>|dor-tera|o1turn-tera|dimwar|
-                          omniwar-hx  (df<G>x<A>x<H> = palmtree Dragonfly;
-                          tera-<svc> there takes a *tree* group service,
-                          e.g. tera-tree4, and compiles compressed tables)
-  --host fm64|hx8x8       overrides --topology: run a TERA variant on any
-                          host, e.g. --routing tera-mesh2 --host hx8x8
-                          (any tera-<svc> whose edges the host contains)
-  --mode bernoulli|fixed|kernel|flows  --pattern uniform|rsp|fr|shift|complement
-  --load 0.5 --horizon 20000       (bernoulli)
-  --packets 100                    (fixed)
-  --kernel all2all|stencil2d|stencil3d|fft3d|allreduce --mapping linear|random
-  --workload incast|hotspot|closedloop|multitenant   message/flow scenario
-                          (implies --mode flows; reports FCT percentiles and
-                          slowdown-vs-ideal). Scenario knobs:
-                          incast:     --fan-in 32 --msg-pkts 8 --waves 1 --spacing 1000
-                          hotspot:    --flows 256 --hot-frac 0.5 --rate 0.05 --msg-pkts 8
-                          closedloop: --pairs 16 --req-pkts 1 --resp-pkts 8
-                                      --think 200 --rounds 4
-                          multitenant: --bg-pattern uniform --bg-load 0.1
-                                      --flow-horizon 4000 --burst-flows 32 --burst-pkts 16
-  --spc N (servers/switch)  --q 54  --seed 1
-  --replicas N (multi-seed batch, aggregated)  --threads N (sweep width)
-  --shards N              phase-parallel simulator shards per replica
-                          (bit-identical results at any N; wall-clock knob.
-                          The engine caps replica-workers × shards at the
-                          --threads budget)
-  --fixed-tick            disable the exact next-event time advance (the
-                          adaptive clock is bit-identical; this is a
-                          debugging/benchmark knob)
-  --scalar-compute        use the scalar reference compute loops instead
-                          of the batched gather/score/commit path (also
-                          bit-identical; the A/B perf_hotpath measures)
-  --global-wheel          home all timing-wheel events to shard 0 instead
-                          of the per-shard wheels (also bit-identical;
-                          re-serializes event pop/commit — the A/B
-                          baseline of the shard-scaling bench)
-  --phase-timings         report a per-phase wall-time breakdown (wheel /
-                          compute / exchange / commit) to stderr when the
-                          run ends
-  --stop-rel-ci X         stop a bernoulli point once the steady-state
-                          estimator's relative CI half-width <= X (e.g.
-                          0.05); with --replicas N, also prunes replicas
-                          beyond convergence. Default: fixed budget.
-  --max-cycles N          hard cycle budget for drain-bound runs
-  --fail-links SPEC       fault injection: comma list of A-B@FAIL[:RECOVER]
-                          link items (switch ids + cycles) and/or one
-                          P%@CYCLE failure-rate process, e.g.
-                          \"0-1@500, 2-3@100:900\" or \"2%@1000\"
-  --fail-switches SPEC    comma list of SW@FAIL[:RECOVER] switch items
-  --fault-rebuild MODE    recompile (stop-the-world, default) | patch
-                          (incremental; byte-equal tables, lower latency)
-";

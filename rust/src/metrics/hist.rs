@@ -133,6 +133,33 @@ impl LatencyHist {
         self.max = self.max.max(other.max);
     }
 
+    /// Raw internal state `(counts, total, sum, min, max)` for the store
+    /// codec. `min` is returned unclamped (`u64::MAX` when empty, unlike
+    /// [`min`]) so [`from_parts`] reconstructs a `PartialEq`-identical
+    /// histogram.
+    ///
+    /// [`min`]: LatencyHist::min
+    /// [`from_parts`]: LatencyHist::from_parts
+    pub fn parts(&self) -> (&[u64], u64, f64, u64, u64) {
+        (&self.counts, self.total, self.sum, self.min, self.max)
+    }
+
+    /// Rebuild a histogram from [`parts`] output (store decode). The raw
+    /// fields are trusted as-is; feeding back exactly what `parts`
+    /// returned yields a histogram equal under the field-exact
+    /// `PartialEq`.
+    ///
+    /// [`parts`]: LatencyHist::parts
+    pub fn from_parts(counts: Vec<u64>, total: u64, sum: f64, min: u64, max: u64) -> Self {
+        Self {
+            counts,
+            total,
+            sum,
+            min,
+            max,
+        }
+    }
+
     /// Density samples for violin plots: (latency, weight) per non-empty
     /// bucket.
     pub fn density(&self) -> Vec<(u64, f64)> {

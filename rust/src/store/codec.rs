@@ -1,0 +1,222 @@
+//! Versioned JSON codec for result types: `SimStats`, `LatencyHist`,
+//! `FctStats` and `ReplicaSummary`.
+//!
+//! The encoding is *lossless under the crate's determinism contract*:
+//! `decode_stats(encode_stats(s)) == s` under the field-exact `PartialEq`
+//! (histograms included, via `LatencyHist::parts`/`from_parts`), which is
+//! what lets a warm store reproduce byte-identical figure output. Field
+//! order is fixed — the encoder's output is the canonical form of the
+//! public result schema (`DESIGN.md`, "Experiment store"); any shape
+//! change must bump [`super::SCHEMA_VERSION`].
+
+use super::json::Json;
+use crate::engine::ReplicaSummary;
+use crate::metrics::{FctStats, LatencyHist, SimStats};
+
+/// Encode a histogram as its raw parts (unclamped `min`, so an empty
+/// histogram round-trips to `PartialEq`-equality).
+pub fn encode_hist(h: &LatencyHist) -> Json {
+    let (counts, total, sum, min, max) = h.parts();
+    Json::obj([
+        ("counts", Json::arr(counts.iter().map(|&c| Json::UInt(c)))),
+        ("total", Json::UInt(total)),
+        ("sum", Json::Float(sum)),
+        ("min", Json::UInt(min)),
+        ("max", Json::UInt(max)),
+    ])
+}
+
+pub fn decode_hist(v: &Json) -> anyhow::Result<LatencyHist> {
+    Ok(LatencyHist::from_parts(
+        u64_vec(v.arr_field("counts")?, "counts")?,
+        v.u64_field("total")?,
+        v.f64_field("sum")?,
+        v.u64_field("min")?,
+        v.u64_field("max")?,
+    ))
+}
+
+pub fn encode_fct(f: &FctStats) -> Json {
+    Json::obj([
+        ("offered", Json::UInt(f.offered)),
+        ("completed", Json::UInt(f.completed)),
+        ("fct", encode_hist(&f.fct)),
+        ("slowdown_x100", encode_hist(&f.slowdown_x100)),
+    ])
+}
+
+pub fn decode_fct(v: &Json) -> anyhow::Result<FctStats> {
+    Ok(FctStats {
+        offered: v.u64_field("offered")?,
+        completed: v.u64_field("completed")?,
+        fct: decode_hist(v.field("fct")?)?,
+        slowdown_x100: decode_hist(v.field("slowdown_x100")?)?,
+    })
+}
+
+pub fn encode_stats(s: &SimStats) -> Json {
+    Json::obj([
+        ("delivered_flits", Json::UInt(s.delivered_flits)),
+        ("delivered_packets", Json::UInt(s.delivered_packets)),
+        (
+            "injected_per_server",
+            Json::arr(s.injected_per_server.iter().map(|&c| Json::UInt(c))),
+        ),
+        ("latency", encode_hist(&s.latency)),
+        ("hops", Json::arr(s.hops.iter().map(|&c| Json::UInt(c)))),
+        (
+            "link_flits",
+            Json::arr(s.link_flits.iter().map(|&c| Json::UInt(c))),
+        ),
+        ("window_cycles", Json::UInt(s.window_cycles)),
+        ("finish_cycle", Json::UInt(s.finish_cycle)),
+        (
+            "achieved_rel_ci",
+            Json::opt(s.achieved_rel_ci.map(Json::Float)),
+        ),
+        ("fct", Json::opt(s.fct.as_ref().map(encode_fct))),
+        ("dropped_packets", Json::UInt(s.dropped_packets)),
+        ("retransmitted_packets", Json::UInt(s.retransmitted_packets)),
+    ])
+}
+
+pub fn decode_stats(v: &Json) -> anyhow::Result<SimStats> {
+    let opt = |key: &str| v.get(key).filter(|j| !j.is_null());
+    Ok(SimStats {
+        delivered_flits: v.u64_field("delivered_flits")?,
+        delivered_packets: v.u64_field("delivered_packets")?,
+        injected_per_server: u64_vec(
+            v.arr_field("injected_per_server")?,
+            "injected_per_server",
+        )?,
+        latency: decode_hist(v.field("latency")?)?,
+        hops: u64_vec(v.arr_field("hops")?, "hops")?,
+        link_flits: u64_vec(v.arr_field("link_flits")?, "link_flits")?,
+        window_cycles: v.u64_field("window_cycles")?,
+        finish_cycle: v.u64_field("finish_cycle")?,
+        achieved_rel_ci: opt("achieved_rel_ci")
+            .map(|j| {
+                j.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("achieved_rel_ci is not a number"))
+            })
+            .transpose()?,
+        fct: opt("fct").map(decode_fct).transpose()?,
+        dropped_packets: v.u64_field("dropped_packets")?,
+        retransmitted_packets: v.u64_field("retransmitted_packets")?,
+    })
+}
+
+/// Encode a replica aggregate. One-way (reporting/`--format json` only):
+/// the store persists the *per-replica* points individually — that is what
+/// makes replica sweeps resumable — and a summary is re-derivable from
+/// them, so a decoder would only invite drift.
+pub fn encode_replica_summary(r: &ReplicaSummary) -> Json {
+    let (thr_mean, thr_sd) = r.throughput();
+    let (fin_mean, fin_sd) = r.finish_cycle();
+    let (lat_mean, lat_sd) = r.mean_latency();
+    Json::obj([
+        ("seeds", Json::arr(r.seeds.iter().map(|&s| Json::UInt(s)))),
+        (
+            "replicas",
+            Json::arr(r.stats.iter().map(encode_stats)),
+        ),
+        ("latency", encode_hist(&r.latency)),
+        ("fct", Json::opt(r.fct.as_ref().map(encode_fct))),
+        (
+            "throughput",
+            Json::arr([Json::Float(thr_mean), Json::Float(thr_sd)]),
+        ),
+        (
+            "finish_cycle",
+            Json::arr([Json::Float(fin_mean), Json::Float(fin_sd)]),
+        ),
+        (
+            "mean_latency",
+            Json::arr([Json::Float(lat_mean), Json::Float(lat_sd)]),
+        ),
+        (
+            "throughput_rel_ci",
+            Json::opt(r.throughput_rel_ci().map(Json::Float)),
+        ),
+    ])
+}
+
+fn u64_vec(items: &[Json], what: &str) -> anyhow::Result<Vec<u64>> {
+    items
+        .iter()
+        .map(|j| {
+            j.as_u64()
+                .ok_or_else(|| anyhow::anyhow!("non-integer element in '{what}'"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_hist(values: &[u64]) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        for &v in values {
+            h.record(v);
+        }
+        h
+    }
+
+    #[test]
+    fn hist_round_trips_exactly_including_empty() {
+        for h in [
+            LatencyHist::new(), // min = u64::MAX internally — must survive
+            sample_hist(&[1]),
+            sample_hist(&[3, 3000, 17, 999_999]),
+        ] {
+            let back = decode_hist(&Json::parse(&encode_hist(&h).to_string()).unwrap())
+                .unwrap();
+            assert_eq!(back, h);
+        }
+    }
+
+    #[test]
+    fn stats_round_trip_is_partial_eq_exact() {
+        let mut s = SimStats::new(4, 6);
+        s.delivered_flits = 1234;
+        s.delivered_packets = 77;
+        s.injected_per_server = vec![10, 20, 30, 17];
+        for v in [12u64, 900, 14, 15] {
+            s.latency.record(v);
+        }
+        s.hops[2] = 40;
+        s.link_flits[5] = 999;
+        s.window_cycles = 10_000;
+        s.finish_cycle = 12_345;
+        s.achieved_rel_ci = Some(0.042);
+        s.dropped_packets = 3;
+        s.retransmitted_packets = 3;
+        let mut fct = FctStats::new();
+        fct.offered = 5;
+        fct.record(100, 80);
+        fct.record(260, 80);
+        s.fct = Some(fct);
+        let text = encode_stats(&s).to_string();
+        let back = decode_stats(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+
+        // And without the optional parts (the per-packet default shape).
+        let bare = SimStats::new(2, 0);
+        let back =
+            decode_stats(&Json::parse(&encode_stats(&bare).to_string()).unwrap()).unwrap();
+        assert_eq!(back, bare);
+        assert!(back.fct.is_none());
+        assert!(back.achieved_rel_ci.is_none());
+    }
+
+    #[test]
+    fn decode_rejects_malformed_documents() {
+        // A truncated object (missing fields) and a type mismatch both
+        // fail loudly — the store treats decode errors as cache misses.
+        let v = Json::parse(r#"{"delivered_flits":1}"#).unwrap();
+        assert!(decode_stats(&v).is_err());
+        let v = Json::parse(r#"{"counts":[1],"total":"x","sum":0,"min":0,"max":0}"#).unwrap();
+        assert!(decode_hist(&v).is_err());
+    }
+}

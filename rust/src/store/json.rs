@@ -1,0 +1,516 @@
+//! Hand-rolled canonical JSON (serde is not in the offline crate set —
+//! see DESIGN.md, Substitution 5; the benches used to hand-format their
+//! `BENCH_*.json` strings, which is exactly the pattern this module lifts
+//! into a real encoder/decoder).
+//!
+//! The store's durability format, the `--format json` CLI output and the
+//! bench JSON artifacts share this one value type. Encoding is
+//! **canonical**: object keys are emitted in the order the caller inserted
+//! them (the codecs use a fixed field order), numbers print in their
+//! shortest round-trip form (Rust's float `Display` contract), and there
+//! is no insignificant whitespace — equal values encode to equal bytes,
+//! which is what makes content-addressed keys and byte-identical resume
+//! output possible. The parser accepts arbitrary JSON whitespace, so store
+//! files stay hand-inspectable.
+
+use std::fmt;
+
+/// A JSON value. Integers are kept exact and separate from floats:
+/// `u64::MAX` (the empty histogram's `min`) must round-trip, and a
+/// `f64`-only number type would silently lose it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Non-negative integers — the common case (counters, cycles, keys).
+    UInt(u64),
+    /// Negative integers (none in the current schema; the parser is total
+    /// over JSON numbers anyway).
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Insertion-ordered object — ordering is part of the canonical form.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object from `(key, value)` pairs, preserving order.
+    pub fn obj<const N: usize>(pairs: [(&str, Json); N]) -> Json {
+        Json::Obj(pairs.map(|(k, v)| (k.to_string(), v)).into())
+    }
+
+    /// Array from values.
+    pub fn arr(items: impl IntoIterator<Item = Json>) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    /// Option mapping: `None` encodes as `null`.
+    pub fn opt(v: Option<Json>) -> Json {
+        v.unwrap_or(Json::Null)
+    }
+
+    /// Look up a key in an object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Required object field (decode-side convenience with a named error).
+    pub fn field(&self, key: &str) -> anyhow::Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing field '{key}'"))
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Exact non-negative integer (accepts `Int` when it is ≥ 0).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::UInt(u) => Some(*u),
+            Json::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    /// Numeric coercion: integers widen to `f64` (a canonical encoder
+    /// prints `2.0` as `"2"`, which parses back as `UInt(2)` — float
+    /// consumers must accept that).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::UInt(u) => Some(*u as f64),
+            Json::Int(i) => Some(*i as f64),
+            Json::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    /// Decode-side typed accessors with named errors.
+    pub fn u64_field(&self, key: &str) -> anyhow::Result<u64> {
+        self.field(key)?
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a non-negative integer"))
+    }
+
+    pub fn f64_field(&self, key: &str) -> anyhow::Result<f64> {
+        self.field(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a number"))
+    }
+
+    pub fn str_field(&self, key: &str) -> anyhow::Result<&str> {
+        self.field(key)?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a string"))
+    }
+
+    pub fn arr_field(&self, key: &str) -> anyhow::Result<&[Json]> {
+        self.field(key)?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' is not an array"))
+    }
+
+    /// Parse a JSON document (the whole input must be one value, modulo
+    /// surrounding whitespace).
+    pub fn parse(src: &str) -> anyhow::Result<Json> {
+        let mut p = Parser {
+            bytes: src.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        anyhow::ensure!(
+            p.pos == p.bytes.len(),
+            "trailing data after JSON value at byte {}",
+            p.pos
+        );
+        Ok(v)
+    }
+}
+
+impl fmt::Display for Json {
+    /// Canonical compact encoding: no insignificant whitespace, shortest
+    /// round-trip numbers, insertion-ordered keys.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::UInt(u) => write!(f, "{u}"),
+            Json::Int(i) => write!(f, "{i}"),
+            // Rust's float Display is the shortest string that parses back
+            // to the same bits; non-finite values have no JSON spelling and
+            // never occur in the schema — encode defensively as null.
+            Json::Float(x) if x.is_finite() => write!(f, "{x}"),
+            Json::Float(_) => f.write_str("null"),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(pairs) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+/// Recursive-descent parser over the raw bytes.
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.peek() == Some(b),
+            "expected '{}' at byte {}",
+            b as char,
+            self.pos
+        );
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn eat_lit(&mut self, lit: &str) -> bool {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'n') if self.eat_lit("null") => Ok(Json::Null),
+            Some(b't') if self.eat_lit("true") => Ok(Json::Bool(true)),
+            Some(b'f') if self.eat_lit("false") => Ok(Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            other => anyhow::bail!(
+                "unexpected {} at byte {}",
+                other.map_or("end of input".into(), |b| format!("'{}'", b as char)),
+                self.pos
+            ),
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => anyhow::bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            pairs.push((key, self.value()?));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => anyhow::bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            // Fast path: copy the longest escape-free ASCII/UTF-8 run.
+            while let Some(&b) = self.bytes.get(self.pos) {
+                if b == b'"' || b == b'\\' {
+                    break;
+                }
+                self.pos += 1;
+            }
+            out.push_str(
+                std::str::from_utf8(&self.bytes[start..self.pos])
+                    .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string"))?,
+            );
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self
+                        .peek()
+                        .ok_or_else(|| anyhow::anyhow!("unterminated escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            // Combine UTF-16 surrogate pairs.
+                            let c = if (0xD800..0xDC00).contains(&hi) {
+                                anyhow::ensure!(
+                                    self.eat_lit("\\u"),
+                                    "unpaired surrogate at byte {}",
+                                    self.pos
+                                );
+                                let lo = self.hex4()?;
+                                anyhow::ensure!(
+                                    (0xDC00..0xE000).contains(&lo),
+                                    "invalid low surrogate at byte {}",
+                                    self.pos
+                                );
+                                let n =
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(n)
+                            } else {
+                                char::from_u32(hi)
+                            };
+                            out.push(
+                                c.ok_or_else(|| anyhow::anyhow!("invalid \\u escape"))?,
+                            );
+                        }
+                        other => anyhow::bail!("unknown escape '\\{}'", other as char),
+                    }
+                }
+                _ => anyhow::bail!("unterminated string at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> anyhow::Result<u32> {
+        anyhow::ensure!(
+            self.pos + 4 <= self.bytes.len(),
+            "truncated \\u escape at byte {}",
+            self.pos
+        );
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| anyhow::anyhow!("invalid \\u escape"))?;
+        let n = u32::from_str_radix(s, 16)
+            .map_err(|_| anyhow::anyhow!("invalid \\u escape '{s}'"))?;
+        self.pos += 4;
+        Ok(n)
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut is_float = false;
+        while let Some(b) = self.peek() {
+            match b {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_float = true;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii");
+        if !is_float {
+            if let Ok(u) = text.parse::<u64>() {
+                return Ok(Json::UInt(u));
+            }
+            if let Ok(i) = text.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
+        Ok(Json::Float(text.parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("bad number '{text}' at byte {start}")
+        })?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(v: &Json) -> Json {
+        Json::parse(&v.to_string()).unwrap()
+    }
+
+    #[test]
+    fn scalars_round_trip_exactly() {
+        for v in [
+            Json::Null,
+            Json::Bool(true),
+            Json::Bool(false),
+            Json::UInt(0),
+            Json::UInt(u64::MAX),
+            Json::Int(-42),
+            Json::Str("plain".into()),
+            Json::Str("quo\"te \\ back\nnewline\ttab \u{1}ctl €uro 𝄞clef".into()),
+        ] {
+            assert_eq!(round_trip(&v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn floats_round_trip_bit_exact() {
+        for x in [0.5, 1.0 / 3.0, 1e-300, 2.5e17, f64::MIN_POSITIVE, -17.25] {
+            let back = round_trip(&Json::Float(x));
+            assert_eq!(back.as_f64().unwrap().to_bits(), x.to_bits(), "{x}");
+        }
+        // Integral floats canonicalize to integer spellings; consumers read
+        // them back through the coercing accessor.
+        assert_eq!(Json::Float(2.0).to_string(), "2");
+        assert_eq!(round_trip(&Json::Float(2.0)), Json::UInt(2));
+    }
+
+    #[test]
+    fn containers_preserve_order() {
+        let v = Json::obj([
+            ("b", Json::UInt(1)),
+            ("a", Json::arr([Json::Null, Json::Bool(true), Json::Float(0.25)])),
+            ("nested", Json::obj([("x", Json::Str("y".into()))])),
+        ]);
+        assert_eq!(v.to_string(), r#"{"b":1,"a":[null,true,0.25],"nested":{"x":"y"}}"#);
+        assert_eq!(round_trip(&v), v);
+    }
+
+    #[test]
+    fn parser_accepts_whitespace_and_rejects_garbage() {
+        let v = Json::parse(" {\n \"a\" : [ 1 , 2 ] ,\t\"b\": null }\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
+        assert!(v.get("b").unwrap().is_null());
+        assert!(Json::parse("{\"a\":}").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("\"open").is_err());
+        assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        assert_eq!(
+            Json::parse(r#""𝄞""#).unwrap(),
+            Json::Str("𝄞".into())
+        );
+        assert_eq!(
+            Json::parse("\"\\ud834\\udd1e\"").unwrap(),
+            Json::Str("𝄞".into())
+        );
+        assert!(Json::parse(r#""\ud834""#).is_err());
+    }
+
+    #[test]
+    fn typed_field_accessors_name_the_field() {
+        let v = Json::obj([("n", Json::UInt(3)), ("s", Json::Str("x".into()))]);
+        assert_eq!(v.u64_field("n").unwrap(), 3);
+        assert_eq!(v.str_field("s").unwrap(), "x");
+        let err = v.u64_field("missing").unwrap_err().to_string();
+        assert!(err.contains("missing"), "{err}");
+        let err = v.u64_field("s").unwrap_err().to_string();
+        assert!(err.contains("'s'"), "{err}");
+    }
+}

@@ -1,0 +1,153 @@
+//! Content-addressed experiment result store.
+//!
+//! A completed simulation point is persisted as one JSON file named by the
+//! **content-addressed key** of its spec — a stable 64-bit hash over the
+//! normalized [`ExperimentSpec`] ([`ExperimentSpec::canonical_json`]:
+//! everything that can change the `SimStats`, nothing that can't) plus
+//! [`SCHEMA_VERSION`]. Figures and sweeps are then *views* over the store:
+//! a rerun looks each point up by key, decodes hits instantly, and only
+//! simulates the misses — so an interrupted overnight `figs` run resumes
+//! from where it died, and CI carries the warm store across runs as a
+//! cache artifact.
+//!
+//! Writes are atomic (`.tmp` in the same directory, then `rename`), so any
+//! number of processes — or machines sharing the directory — can fan out
+//! over one sweep without coordination: the worst case is two workers
+//! computing the same point and one rename winning, which is harmless
+//! because results are deterministic. Reads verify the stored canonical
+//! spec against the queried one (a 64-bit hash can collide; a collision
+//! must degrade to a miss, never a wrong result), and any decode failure
+//! is also just a miss — a corrupt or stale-schema file costs one re-run,
+//! never an error.
+//!
+//! [`ExperimentSpec`]: crate::config::spec::ExperimentSpec
+//! [`ExperimentSpec::canonical_json`]: crate::config::spec::ExperimentSpec::canonical_json
+
+pub mod codec;
+pub mod json;
+
+use std::path::{Path, PathBuf};
+
+use crate::config::spec::ExperimentSpec;
+use crate::metrics::SimStats;
+use json::Json;
+
+/// Version of the result schema: the canonical spec normalization
+/// (`ExperimentSpec::canonical_json`), the stats encoding (`codec`) and
+/// the file envelope below. Bump it whenever any of those change shape or
+/// meaning — old store files then key differently and simply miss, which
+/// is the entire migration story (re-simulate; never reinterpret).
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Default store directory (relative to the working directory).
+pub const DEFAULT_DIR: &str = "results";
+
+/// Content-addressed key of a spec: FNV-1a 64-bit over the canonical JSON
+/// bytes, with [`SCHEMA_VERSION`] folded in first, printed as 16 hex
+/// digits. Two specs differing only in bit-identity-neutral knobs (name,
+/// shards, time-advance/batching toggles, rebuild strategy) hash equal;
+/// anything that can change the result hashes differently.
+pub fn spec_key(spec: &ExperimentSpec) -> String {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    };
+    eat(&SCHEMA_VERSION.to_le_bytes());
+    eat(spec.canonical_json().to_string().as_bytes());
+    format!("{h:016x}")
+}
+
+/// Encode one completed point as the store's file envelope — also the
+/// schema-versioned object `--format json` emits per point, so external
+/// tooling reads one format everywhere.
+pub fn encode_result(spec: &ExperimentSpec, stats: &SimStats) -> Json {
+    Json::obj([
+        ("schema", Json::UInt(SCHEMA_VERSION as u64)),
+        ("key", Json::Str(spec_key(spec))),
+        ("name", Json::Str(spec.name.clone())),
+        ("spec", spec.canonical_json()),
+        ("stats", codec::encode_stats(stats)),
+    ])
+}
+
+/// A directory of content-addressed result files.
+pub struct ResultStore {
+    dir: PathBuf,
+}
+
+impl ResultStore {
+    /// Open (creating if needed) a store at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> anyhow::Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("cannot create store dir {}: {e}", dir.display()))?;
+        Ok(Self { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_of(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.json"))
+    }
+
+    /// Look a spec up. `Some` only when the file exists, decodes, carries
+    /// the current schema version *and* its stored canonical spec matches
+    /// the query byte-for-byte (hash-collision safety). Everything else —
+    /// missing, corrupt, stale schema — is a miss.
+    pub fn get(&self, spec: &ExperimentSpec) -> Option<SimStats> {
+        let text = std::fs::read_to_string(self.path_of(&spec_key(spec))).ok()?;
+        let doc = Json::parse(&text).ok()?;
+        if doc.get("schema")?.as_u64()? != SCHEMA_VERSION as u64 {
+            return None;
+        }
+        if *doc.get("spec")? != spec.canonical_json() {
+            return None;
+        }
+        codec::decode_stats(doc.get("stats")?).ok()
+    }
+
+    /// Persist a completed point: write the envelope to a tmp file in the
+    /// store directory, then atomically rename it over `<key>.json`. The
+    /// tmp name carries the pid so concurrent writers of the *same* key
+    /// never clobber each other's half-written file; the final rename is
+    /// last-writer-wins, which is sound because results are deterministic.
+    pub fn put(&self, spec: &ExperimentSpec, stats: &SimStats) -> anyhow::Result<()> {
+        let key = spec_key(spec);
+        let tmp = self
+            .dir
+            .join(format!(".{key}.{}.tmp", std::process::id()));
+        let text = format!("{}\n", encode_result(spec, stats));
+        std::fs::write(&tmp, text)
+            .map_err(|e| anyhow::anyhow!("store write {} failed: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, self.path_of(&key)).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            anyhow::anyhow!("store rename to {key}.json failed: {e}")
+        })
+    }
+
+    /// Number of result files currently in the store (diagnostics/tests).
+    pub fn len(&self) -> usize {
+        std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(Result::ok)
+                    .filter(|e| {
+                        let name = e.file_name();
+                        let name = name.to_string_lossy();
+                        name.ends_with(".json") && !name.starts_with('.')
+                    })
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

@@ -1,0 +1,173 @@
+//! Integration tests for the content-addressed result store: file-level
+//! round-trip, key stability/sensitivity of the canonical spec
+//! normalization, and the figure-level resume contract (a second run over
+//! a warm store executes zero simulations and renders byte-identically).
+
+use std::path::PathBuf;
+
+use tera_net::config::spec::{ExperimentSpec, TrafficSpec};
+use tera_net::config::RebuildStrategy;
+use tera_net::coordinator::figures::{self, FigEnv, Scale};
+use tera_net::engine::Engine;
+use tera_net::store::{json::Json, spec_key, ResultStore, SCHEMA_VERSION};
+
+/// A fresh per-test store directory under the OS temp dir.
+fn temp_store(tag: &str) -> (PathBuf, ResultStore) {
+    let name = format!("tera-net-store-it-{}-{tag}", std::process::id());
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = ResultStore::open(&dir).expect("open temp store");
+    (dir, store)
+}
+
+/// A small, fast point (fm16 default topology, short horizon).
+fn base_spec() -> ExperimentSpec {
+    ExperimentSpec {
+        name: "store-it".into(),
+        traffic: TrafficSpec::Bernoulli {
+            pattern: "uniform".into(),
+            load: 0.3,
+            horizon: 800,
+        },
+        warmup: 100,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn put_get_round_trips_and_files_are_keyed() {
+    let (dir, store) = temp_store("roundtrip");
+    let spec = base_spec();
+    let stats = Engine::with_threads(2).run_one(&spec).expect("run");
+    assert!(store.get(&spec).is_none(), "cold store must miss");
+    assert!(store.is_empty());
+    store.put(&spec, &stats).expect("persist");
+    assert_eq!(store.len(), 1);
+
+    let back = store.get(&spec).expect("warm store must hit");
+    assert_eq!(back.delivered_flits, stats.delivered_flits);
+    assert_eq!(back.delivered_packets, stats.delivered_packets);
+    assert_eq!(back.finish_cycle, stats.finish_cycle);
+    assert_eq!(back.injected_per_server, stats.injected_per_server);
+    assert_eq!(back.latency.percentile(99.0), stats.latency.percentile(99.0));
+
+    // The file is named by the content-addressed key and carries the
+    // schema-versioned envelope `--format json` also emits.
+    let path = dir.join(format!("{}.json", spec_key(&spec)));
+    assert!(path.is_file(), "store file is named by the spec key");
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("schema").and_then(Json::as_u64), Some(SCHEMA_VERSION as u64));
+    assert_eq!(doc.get("key").and_then(Json::as_str), Some(spec_key(&spec).as_str()));
+    assert_eq!(doc.get("spec"), Some(&spec.canonical_json()));
+
+    // A result-affecting change misses even with the file present.
+    let mut other = spec.clone();
+    other.seed += 1;
+    assert!(store.get(&other).is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Knobs that cannot change the simulation result (bit-identical by
+/// construction, or pure labels/wall-clock controls) must not change the
+/// key — otherwise a sweep re-run with different parallelism would never
+/// hit its own warm store.
+#[test]
+fn key_ignores_identity_neutral_knobs() {
+    let base = base_spec();
+    let mut b = base.clone();
+    b.name = "renamed".into();
+    b.shards = 4;
+    b.time_skip = !b.time_skip;
+    b.batched_compute = !b.batched_compute;
+    b.global_wheel = true;
+    b.phase_timings = true;
+    b.faults.rebuild = RebuildStrategy::Patch;
+    assert_eq!(spec_key(&base), spec_key(&b));
+}
+
+/// Topology/host/routing names are ascii-lowercased in the canonical
+/// form, so cosmetic case differences share one store entry.
+#[test]
+fn key_normalizes_name_case() {
+    let base = base_spec();
+    let mut b = base.clone();
+    b.topology = "FM16".into();
+    b.routing = "TERA-HX2".into();
+    assert_eq!(spec_key(&base), spec_key(&b));
+}
+
+/// Every field that can change `SimStats` must change the key.
+#[test]
+fn key_tracks_result_affecting_fields() {
+    let base = base_spec();
+    let k = spec_key(&base);
+    let mut cases: Vec<(&str, ExperimentSpec)> = Vec::new();
+    let mut m = base.clone();
+    m.routing = "srinr".into();
+    cases.push(("routing", m));
+    let mut m = base.clone();
+    m.host = Some("hx4x4".into());
+    cases.push(("host", m));
+    let mut m = base.clone();
+    m.seed = 2;
+    cases.push(("seed", m));
+    let mut m = base.clone();
+    m.q += 1;
+    cases.push(("q", m));
+    let mut m = base.clone();
+    m.servers_per_switch = 8;
+    cases.push(("servers_per_switch", m));
+    let mut m = base.clone();
+    m.warmup += 1;
+    cases.push(("warmup", m));
+    let mut m = base.clone();
+    m.max_cycles += 1;
+    cases.push(("max_cycles", m));
+    let mut m = base.clone();
+    m.stop_rel_ci = Some(0.05);
+    cases.push(("stop_rel_ci", m));
+    let mut m = base.clone();
+    m.traffic = TrafficSpec::Bernoulli {
+        pattern: "rsp".into(),
+        load: 0.3,
+        horizon: 800,
+    };
+    cases.push(("traffic.pattern", m));
+    let mut m = base.clone();
+    m.traffic = TrafficSpec::Bernoulli {
+        pattern: "uniform".into(),
+        load: 0.4,
+        horizon: 800,
+    };
+    cases.push(("traffic.load", m));
+    let mut m = base.clone();
+    m.faults.parse_links("0-1@500").expect("fault spec");
+    cases.push(("faults", m));
+    for (label, m) in cases {
+        assert_ne!(k, spec_key(&m), "{label} must change the key");
+    }
+}
+
+/// The resume contract, at figure granularity: run `fct` at test scale
+/// against a cold store, then again with a fresh engine over the same
+/// directory. The second run must execute zero simulations (every point
+/// is a store hit) and must render exactly the same report.
+#[test]
+fn figure_rerun_over_warm_store_executes_zero_points() {
+    let (dir, store) = temp_store("fct-resume");
+    let env = FigEnv::new(Engine::with_threads(2), Some(store), Scale::Tiny, 1);
+    let out1 = figures::fct(&env).expect("cold fct run");
+    let executed = env.engine.points_executed();
+    assert!(executed > 0, "cold run must simulate its points");
+
+    let store2 = ResultStore::open(&dir).expect("reopen store");
+    let env2 = FigEnv::new(Engine::with_threads(2), Some(store2), Scale::Tiny, 1);
+    let out2 = figures::fct(&env2).expect("warm fct run");
+    assert_eq!(
+        env2.engine.points_executed(),
+        0,
+        "warm store must satisfy every point without simulating"
+    );
+    assert_eq!(out1, out2, "resumed figure must render byte-identically");
+    let _ = std::fs::remove_dir_all(&dir);
+}
